@@ -1,0 +1,132 @@
+//! Microbenchmarks over the hot paths (custom harness; see DESIGN.md SSPerf):
+//! kvcached page/block operations, Moore-Hodgson arbitration, Algorithm 1
+//! placement, trace generation, and simulator event throughput.
+
+use prism::bench::harness::{black_box, run};
+use prism::kvcached::Kvcached;
+use prism::model::spec::{table3_catalog, ModelId};
+use prism::sched::arbitration::{moore_hodgson, Candidate};
+use prism::sched::kvpr::ModelDemand;
+use prism::sched::placement::{place, PlacementInput};
+use prism::request::RequestId;
+use prism::sim::{PolicyKind, SimConfig, Simulator};
+use prism::trace::gen::{generate, TraceGenConfig};
+use prism::util::rng::Rng;
+
+fn bench_kvcached() {
+    let mb = 1024 * 1024;
+    // Sustained alloc/free churn with partial-page reuse.
+    run("kvcached/alloc_free_1k_blocks", 3, 30, |_| {
+        let mut kvc = Kvcached::new(1024 * mb, 2 * mb, 16);
+        kvc.register_kv(ModelId(0), 512 * 1024, u32::MAX);
+        let mut live = Vec::with_capacity(1000);
+        for _ in 0..1000 {
+            live.push(kvc.alloc_block(ModelId(0)).unwrap());
+        }
+        for b in live {
+            kvc.free_block(b).unwrap();
+        }
+        black_box(kvc.stats())
+    });
+
+    run("kvcached/balloon_shrink_grow", 3, 100, |_| {
+        let mut kvc = Kvcached::new(256 * mb, 2 * mb, 8);
+        kvc.register_kv(ModelId(0), mb, u32::MAX);
+        for _ in 0..128 {
+            let _ = kvc.alloc_block(ModelId(0));
+        }
+        black_box(kvc.set_kv_limit(ModelId(0), 16).unwrap());
+        black_box(kvc.set_kv_limit(ModelId(0), u32::MAX).unwrap())
+    });
+
+    run("kvcached/weights_load_unload", 3, 200, |i| {
+        let mut kvc = Kvcached::new(256 * mb, 2 * mb, 8);
+        kvc.load_weights(ModelId(0), (64 + i as u64 % 32) * mb).unwrap();
+        black_box(kvc.unload_weights(ModelId(0)))
+    });
+}
+
+fn bench_arbitration() {
+    let mut rng = Rng::new(1);
+    for n in [100usize, 1000] {
+        let cands: Vec<Candidate> = (0..n)
+            .map(|i| Candidate {
+                id: RequestId(i as u64),
+                arrival: 0.0,
+                deadline: rng.range_f64(0.1, 10.0),
+                exec: rng.range_f64(0.01, 1.0),
+            })
+            .collect();
+        run(&format!("arbitration/moore_hodgson_{n}"), 3, 100, |_| {
+            black_box(moore_hodgson(0.0, &cands))
+        });
+    }
+}
+
+fn bench_placement() {
+    let cat = table3_catalog();
+    let inputs: Vec<PlacementInput> = cat
+        .iter()
+        .map(|m| PlacementInput {
+            demand: ModelDemand {
+                model: m.id,
+                token_rate: 100.0,
+                token_size: m.kv_bytes_per_token() as f64,
+                slo: 0.03,
+                weight_bytes_per_gpu: m.weight_bytes_per_gpu(),
+                tp: m.tp,
+            },
+            current: vec![],
+        })
+        .collect();
+    let caps = vec![80e9; 32];
+    run("placement/alg1_58_models_32_gpus", 3, 200, |_| {
+        black_box(place(&inputs, &caps, 0.2))
+    });
+}
+
+fn bench_trace_and_sim() {
+    run("trace/generate_novita_1h_16models", 1, 10, |i| {
+        black_box(generate(&TraceGenConfig::novita_like(16, 3600.0, i as u64)).events.len())
+    });
+
+    let trace = generate(&TraceGenConfig::novita_like(8, 300.0, 3)).scale_rate(2.0);
+    let specs = prism::experiments::e2e::assign_ids(
+        table3_catalog()
+            .into_iter()
+            .filter(|m| m.name.contains("8b") || m.name.contains("7b"))
+            .take(8)
+            .collect(),
+    );
+    let n_events = trace.events.len();
+    run(
+        &format!("sim/prism_8models_2gpus_5min_{n_events}reqs"),
+        1,
+        8,
+        |_| {
+            let cfg = SimConfig::new(PolicyKind::Prism, 2);
+            let (m, _) = Simulator::new(cfg, specs.clone()).run(&trace);
+            black_box(m.completions.len())
+        },
+    );
+}
+
+fn main() {
+    let filter = std::env::args()
+        .skip(1)
+        .find(|a| !a.starts_with('-'))
+        .unwrap_or_default();
+    println!("== prism microbenches ==");
+    if filter.is_empty() || "kvcached".contains(&filter) {
+        bench_kvcached();
+    }
+    if filter.is_empty() || "arbitration".contains(&filter) {
+        bench_arbitration();
+    }
+    if filter.is_empty() || "placement".contains(&filter) {
+        bench_placement();
+    }
+    if filter.is_empty() || "trace_sim".contains(&filter) {
+        bench_trace_and_sim();
+    }
+}

@@ -1,0 +1,29 @@
+//! `cargo bench` target regenerating every paper table and figure at quick
+//! scale (full scale via `prism exp <id>`), plus wall-clock timing per
+//! experiment. Custom harness: criterion is not in the offline vendor set.
+
+use std::time::Instant;
+
+fn main() {
+    let filter = std::env::args()
+        .skip(1)
+        .find(|a| !a.starts_with('-'))
+        .unwrap_or_default();
+    println!("== paper experiment bench (quick scale) ==");
+    let mut total = 0.0;
+    for id in prism::experiments::ids() {
+        if !filter.is_empty() && !id.contains(&filter) {
+            continue;
+        }
+        let t0 = Instant::now();
+        match prism::experiments::run(id, true) {
+            Ok(tables) => {
+                let dt = t0.elapsed().as_secs_f64();
+                total += dt;
+                println!("{id:<10} {dt:>8.2}s  ({} tables)", tables.len());
+            }
+            Err(e) => println!("{id:<10} FAILED: {e}"),
+        }
+    }
+    println!("total: {total:.1}s");
+}

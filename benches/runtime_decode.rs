@@ -1,0 +1,63 @@
+//! Real-path benchmark: PJRT prefill/decode step latency for the PrismNano
+//! artifacts, plus the L3 bookkeeping overhead share (router + kvcached vs
+//! raw PJRT execute) - the Fig 14 analog for the real stack.
+
+use prism::bench::harness::{black_box, run};
+use prism::runtime::exec::ModelRuntime;
+use prism::serve::{RealServer, ServeRequest, ServerConfig};
+
+fn main() {
+    let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let nano = root.join("prism-nano");
+    if !nano.join("manifest.json").is_file() {
+        eprintln!("artifacts missing - run `make artifacts` first; skipping");
+        return;
+    }
+    let client = xla::PjRtClient::cpu().expect("pjrt cpu client");
+    let rt = ModelRuntime::load(&client, &nano).expect("load artifacts");
+    println!(
+        "weights uploaded in {:.1} ms",
+        rt.weight_upload_seconds * 1e3
+    );
+
+    let m = &rt.manifest;
+    let prompt: Vec<i32> = (0..16).map(|i| (i * 7 % 255) as i32).collect();
+    run("runtime/prefill_16tok", 3, 30, |_| black_box(rt.prefill(&prompt).unwrap()));
+
+    // Decode at each batch bucket.
+    let pool = vec![0f32; m.pool_pages * m.slot_elems()];
+    for &b in &[1usize, 4, 8] {
+        let toks = vec![1i32; b];
+        let pos = vec![8i32; b];
+        let mut bt = vec![0i32; b * m.max_pages];
+        for (j, v) in bt.iter_mut().enumerate().take(b * m.max_pages) {
+            if j % m.max_pages == 0 {
+                *v = 1;
+            }
+        }
+        let lens = vec![8i32; b];
+        run(&format!("runtime/decode_b{b}"), 3, 30, |_| {
+            black_box(rt.decode(&toks, &pos, &pool, &bt, &lens).unwrap())
+        });
+    }
+
+    // End-to-end served tokens/s through the full coordinator.
+    let mut srv = RealServer::new(ServerConfig::default(), &[nano.as_path()], &[]).unwrap();
+    let reqs: Vec<ServeRequest> = (0..8)
+        .map(|i| ServeRequest {
+            model: "prism-nano".into(),
+            prompt: (0..16).map(|t| ((t + i) % 255) as i32).collect(),
+            max_new_tokens: 8,
+            arrival: 0.0,
+            ttft_slo: None,
+        })
+        .collect();
+    let t0 = std::time::Instant::now();
+    let results = srv.serve(&reqs).unwrap();
+    let wall = t0.elapsed().as_secs_f64();
+    let tokens: usize = results.iter().flatten().map(|r| r.generated.len()).sum();
+    println!(
+        "serve/e2e_8reqs_8newtok: {tokens} tokens in {wall:.2}s -> {:.1} tok/s",
+        tokens as f64 / wall
+    );
+}

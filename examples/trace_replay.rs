@@ -1,0 +1,56 @@
+//! Trace replay: the Fig 5-style comparison at example scale.
+//!
+//! Replays a novita-like synthetic trace (bursty groups, heavy-tailed idles,
+//! volatile rates - SS3 statistics) over a simulated 4-GPU cluster under
+//! Prism and all four baselines, printing the attainment table.
+//!
+//! Run: `cargo run --release --example trace_replay`
+
+use prism::bench::harness::Table;
+use prism::experiments::e2e::assign_ids;
+use prism::model::spec::table3_catalog;
+use prism::sim::{PolicyKind, SimConfig, Simulator};
+use prism::trace::gen::{generate, TraceGenConfig};
+
+fn main() {
+    let cat = table3_catalog();
+    let specs = assign_ids(
+        cat.iter()
+            .filter(|m| m.name.contains("8b") || m.name.contains("7b"))
+            .take(8)
+            .cloned()
+            .collect(),
+    );
+    let trace = generate(&TraceGenConfig::novita_like(specs.len(), 600.0, 3)).scale_rate(2.0);
+    println!(
+        "trace: {} requests over {:.0}s across {} models",
+        trace.events.len(),
+        trace.duration,
+        trace.n_models
+    );
+
+    let mut t = Table::new(
+        "Prism vs baselines: novita-like trace, 8x7-8B models, 4 GPUs",
+        &["system", "ttft_att", "tpot_att", "mean_ttft_s", "p95_ttft_s",
+          "tok_tput_busy", "activ", "evict", "migr"],
+    );
+    for p in PolicyKind::all() {
+        let mut cfg = SimConfig::new(p, 4);
+        cfg.slo_scale = 8.0;
+        let t0 = std::time::Instant::now();
+        let (m, _) = Simulator::new(cfg, specs.clone()).run(&trace);
+        eprintln!("  {} simulated in {:.2}s", p.name(), t0.elapsed().as_secs_f64());
+        t.row(vec![
+            p.name().into(),
+            format!("{:.3}", m.ttft_attainment()),
+            format!("{:.3}", m.tpot_attainment()),
+            format!("{:.3}", m.mean_ttft()),
+            format!("{:.3}", m.p95_ttft()),
+            format!("{:.0}", m.token_throughput()),
+            m.activations.to_string(),
+            m.evictions.to_string(),
+            m.migrations.to_string(),
+        ]);
+    }
+    t.print();
+}

@@ -1,0 +1,166 @@
+"""AOT compile path: lower PrismNano prefill/decode to HLO **text** + export weights.
+
+Run once by `make artifacts`; python never runs on the request path.
+
+Interchange is HLO text, NOT serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids that the xla crate's xla_extension 0.5.1
+rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md). Lowered with
+return_tuple=True; the Rust side unwraps the tuple.
+
+Artifact layout (artifacts/<model>/):
+  manifest.json                 - config, weight arg order/shapes, buckets
+  weights.bin                   - all weights, little-endian f32, manifest order
+  prefill_b{B}_t{T}.hlo.txt     - prefill executables per (batch, seq) bucket
+  decode_b{B}.hlo.txt           - decode executables per batch bucket
+
+Static shapes per bucket mirror production CUDA-graph practice: the Rust
+coordinator picks the nearest bucket and pads.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+# Batch buckets compiled for each phase. Prefill runs one request at a time
+# (chunked prefill admits requests individually); decode batches grow with load.
+PREFILL_T_BUCKETS = [16, 64, 256]
+DECODE_B_BUCKETS = [1, 2, 4, 8]
+POOL_PAGES = 256  # pages in the compiled pool view (per-engine virtual slice)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_prefill(cfg: M.ModelConfig, b: int, t: int) -> str:
+    w_specs = [
+        jax.ShapeDtypeStruct(cfg.weight_shape(n), jnp.float32)
+        for n in cfg.weight_names()
+    ]
+    tok = jax.ShapeDtypeStruct((b, t), jnp.int32)
+    lens = jax.ShapeDtypeStruct((b,), jnp.int32)
+
+    def fn(*args):
+        nw = len(w_specs)
+        return M.prefill(cfg, list(args[:nw]), args[nw], args[nw + 1])
+
+    return to_hlo_text(jax.jit(fn).lower(*w_specs, tok, lens))
+
+
+def lower_decode(cfg: M.ModelConfig, b: int) -> str:
+    w_specs = [
+        jax.ShapeDtypeStruct(cfg.weight_shape(n), jnp.float32)
+        for n in cfg.weight_names()
+    ]
+    tok = jax.ShapeDtypeStruct((b,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((b,), jnp.int32)
+    pool = jax.ShapeDtypeStruct(
+        (POOL_PAGES, cfg.page_tokens, cfg.n_layers, 2, cfg.n_kv_heads, cfg.d_head),
+        jnp.float32,
+    )
+    bt = jax.ShapeDtypeStruct((b, cfg.max_pages), jnp.int32)
+    lens = jax.ShapeDtypeStruct((b,), jnp.int32)
+
+    def fn(*args):
+        nw = len(w_specs)
+        return M.decode(
+            cfg, list(args[:nw]), args[nw], args[nw + 1], args[nw + 2],
+            args[nw + 3], args[nw + 4],
+        )
+
+    return to_hlo_text(jax.jit(fn).lower(*w_specs, tok, pos, pool, bt, lens))
+
+
+def export_model(cfg: M.ModelConfig, out_dir: str, seed: int = 0) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    weights = M.init_weights(cfg, seed)
+    names = cfg.weight_names()
+
+    blob_path = os.path.join(out_dir, "weights.bin")
+    offset = 0
+    entries = []
+    with open(blob_path, "wb") as f:
+        for n in names:
+            arr = np.ascontiguousarray(weights[n], dtype="<f4")
+            f.write(arr.tobytes())
+            entries.append({
+                "name": n,
+                "shape": list(arr.shape),
+                "offset": offset,
+                "bytes": arr.nbytes,
+            })
+            offset += arr.nbytes
+
+    artifacts = {"prefill": [], "decode": []}
+    for t in PREFILL_T_BUCKETS:
+        if t > cfg.max_seq:
+            continue
+        fname = f"prefill_b1_t{t}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(lower_prefill(cfg, 1, t))
+        artifacts["prefill"].append({"batch": 1, "tokens": t, "file": fname})
+        print(f"  {cfg.name}: {fname}")
+    for b in DECODE_B_BUCKETS:
+        fname = f"decode_b{b}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(lower_decode(cfg, b))
+        artifacts["decode"].append({"batch": b, "file": fname})
+        print(f"  {cfg.name}: {fname}")
+
+    manifest = {
+        "name": cfg.name,
+        "vocab": cfg.vocab,
+        "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads,
+        "n_kv_heads": cfg.n_kv_heads,
+        "d_head": cfg.d_head,
+        "d_ff": cfg.d_ff,
+        "max_seq": cfg.max_seq,
+        "page_tokens": cfg.page_tokens,
+        "max_pages": cfg.max_pages,
+        "pool_pages": POOL_PAGES,
+        "kv_bytes_per_token": cfg.kv_bytes_per_token,
+        "weights_bin": "weights.bin",
+        "weights": entries,
+        "artifacts": artifacts,
+        "seed": seed,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts root dir")
+    ap.add_argument("--models", nargs="*", default=list(M.CONFIGS.keys()))
+    args = ap.parse_args()
+    root = args.out
+    os.makedirs(root, exist_ok=True)
+    for name in args.models:
+        cfg = M.CONFIGS[name]
+        print(f"exporting {name} ...")
+        export_model(cfg, os.path.join(root, name))
+    # Stamp: lets `make artifacts` skip when inputs are unchanged.
+    with open(os.path.join(root, "STAMP"), "w") as f:
+        f.write("ok\n")
+    print("artifacts complete")
+
+
+if __name__ == "__main__":
+    main()

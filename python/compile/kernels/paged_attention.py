@@ -1,0 +1,164 @@
+"""L1 Pallas kernel: paged attention for one decode step.
+
+This is the compute hot-spot the paper's memory mechanism protects: attention
+over a KV cache that lives in a *paged pool* shared by all co-located models
+(kvcached, paper SS5). The pool layout follows the paper's D3 optimization -
+all layers' K and V vectors of a token are contiguous within a page
+([P, Tp, L, 2, Hkv, Dh]), so the Rust coordinator maps one physical page per
+Tp tokens regardless of layer count.
+
+TPU adaptation of the GPU original (PagedAttention CUDA kernel):
+  * the block table drives an HBM->VMEM gather of one KV page per loop step
+    (the role CUDA threadblock scheduling plays on GPU),
+  * q.kT and p.v products per page are MXU-shaped [Tp, Dh] matmuls,
+  * an online-softmax accumulator (m, l, acc) lives in registers/VMEM scratch,
+  * grid = (B, H): each program owns one (sequence, query-head) pair.
+
+Lowered with interpret=True: the CPU PJRT plugin cannot run Mosaic
+custom-calls, so interpret mode turns the kernel into plain HLO (while-loops
+and dynamic-slices) which executes anywhere. Real-TPU VMEM/MXU estimates are
+documented in DESIGN.md SSPerf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    bt_ref,  # [1, MAXP] int32 block table row for this sequence
+    len_ref,  # [1] int32 seq length (past tokens in pool)
+    q_ref,  # [1, 1, Dh] query for this (b, h)
+    pool_ref,  # [P, Tp, L, 2, Hkv, Dh] full pool (no blocking)
+    o_ref,  # [1, 1, Dh] out
+    lse_ref,  # [1, 1] out log-sum-exp
+    *,
+    layer: int,
+    kv_head: int,  # which kv head this q head reads (GQA), static per-h? no: computed
+    tp: int,
+    maxp: int,
+    group: int,
+):
+    h = pl.program_id(1)
+    kvh = h // group
+    dh = q_ref.shape[-1]
+    q = q_ref[0, 0, :].astype(jnp.float32)  # [Dh]
+    seq_len = len_ref[0]
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+
+    # Number of pages that actually hold tokens.
+    n_pages = (seq_len + tp - 1) // tp
+
+    def body(i, carry):
+        m_prev, l_prev, acc_prev = carry
+        page = bt_ref[0, i]
+        # Gather one KV page: K,V [Tp, Dh] for (layer, kvh).
+        k = pl.load(
+            pool_ref,
+            (page, pl.dslice(0, tp), layer, 0, kvh, pl.dslice(0, dh)),
+        ).astype(jnp.float32)
+        v = pl.load(
+            pool_ref,
+            (page, pl.dslice(0, tp), layer, 1, kvh, pl.dslice(0, dh)),
+        ).astype(jnp.float32)
+        s = jnp.dot(k, q) * scale  # [Tp]  (MXU-shaped on real TPU)
+        pos = i * tp + jax.lax.iota(jnp.int32, tp)
+        s = jnp.where(pos < seq_len, s, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(pos < seq_len, p, 0.0)
+        l_new = l_prev * alpha + jnp.sum(p)
+        acc_new = acc_prev * alpha + jnp.dot(p, v)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.float32(NEG_INF)
+    l0 = jnp.float32(0.0)
+    acc0 = jnp.zeros((dh,), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_pages, body, (m0, l0, acc0))
+
+    has = l > 0.0
+    out = jnp.where(has, acc / jnp.maximum(l, 1e-30), 0.0)
+    lse = jnp.where(has, m + jnp.log(jnp.maximum(l, 1e-30)), NEG_INF)
+    o_ref[0, 0, :] = out.astype(o_ref.dtype)
+    lse_ref[0, 0] = lse
+
+
+def paged_attention(
+    q: jnp.ndarray,  # [B, H, Dh]
+    pool: jnp.ndarray,  # [P, Tp, L, 2, Hkv, Dh]
+    block_tables: jnp.ndarray,  # [B, MAXP] int32
+    seq_lens: jnp.ndarray,  # [B] int32
+    layer: int,
+    *,
+    interpret: bool = True,
+):
+    """Pallas paged attention over past tokens; returns (out [B,H,Dh], lse [B,H])."""
+    B, H, Dh = q.shape
+    P, Tp, L, two, Hkv, Dh2 = pool.shape
+    assert two == 2 and Dh2 == Dh and H % Hkv == 0, (pool.shape, q.shape)
+    maxp = block_tables.shape[1]
+    group = H // Hkv
+
+    kernel = functools.partial(
+        _decode_kernel,
+        layer=layer,
+        kv_head=0,
+        tp=Tp,
+        maxp=maxp,
+        group=group,
+    )
+    out, lse = pl.pallas_call(
+        kernel,
+        grid=(B, H),
+        in_specs=[
+            pl.BlockSpec((1, maxp), lambda b, h: (b, 0)),  # block table row
+            pl.BlockSpec((1,), lambda b, h: (b,)),  # seq len
+            pl.BlockSpec((1, 1, Dh), lambda b, h: (b, h, 0)),  # q
+            pl.BlockSpec((P, Tp, L, 2, Hkv, Dh), lambda b, h: (0, 0, 0, 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Dh), lambda b, h: (b, h, 0)),
+            pl.BlockSpec((1, 1), lambda b, h: (b, h)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, Dh), q.dtype),
+            jax.ShapeDtypeStruct((B, H), jnp.float32),
+        ],
+        interpret=interpret,
+    )(block_tables, seq_lens, q, pool)
+    return out, lse
+
+
+def merge_with_current(
+    out_past: jnp.ndarray,  # [B, H, Dh] normalized attention over past tokens
+    lse_past: jnp.ndarray,  # [B, H]
+    q: jnp.ndarray,  # [B, H, Dh]
+    k_cur: jnp.ndarray,  # [B, Hkv, Dh] current token's key
+    v_cur: jnp.ndarray,  # [B, Hkv, Dh] current token's value
+) -> jnp.ndarray:
+    """Online-softmax merge of the past attention with the current token.
+
+    The decode step computes the current token's K/V *inside* the step, but
+    the Rust coordinator only writes them into the paged pool afterwards, so
+    the kernel sees past tokens only. This closed-form merge is exact.
+    """
+    B, H, Dh = q.shape
+    Hkv = k_cur.shape[1]
+    group = H // Hkv
+    kq = jnp.repeat(k_cur.astype(jnp.float32), group, axis=1)  # [B, H, Dh]
+    vq = jnp.repeat(v_cur.astype(jnp.float32), group, axis=1)
+    scale = 1.0 / jnp.sqrt(jnp.float32(Dh))
+    s_cur = jnp.sum(q.astype(jnp.float32) * kq, axis=-1) * scale  # [B, H]
+    m = jnp.maximum(lse_past, s_cur)
+    w_past = jnp.exp(lse_past - m)
+    w_cur = jnp.exp(s_cur - m)
+    denom = w_past + w_cur
+    out = (out_past.astype(jnp.float32) * w_past[..., None] + vq * w_cur[..., None]) / denom[..., None]
+    return out.astype(q.dtype)

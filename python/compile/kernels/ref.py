@@ -1,0 +1,94 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references: every Pallas kernel in this package
+must match its oracle to float tolerance under pytest/hypothesis sweeps
+(python/tests/test_kernel.py). They are also used to build a kernel-free
+reference model for end-to-end equivalence tests.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """RMSNorm over the last axis: x / rms(x) * w."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf / jnp.sqrt(var + eps) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def paged_attention_ref(
+    q: jnp.ndarray,  # [B, H, Dh]
+    pool: jnp.ndarray,  # [P, Tp, L, 2, Hkv, Dh] - the paged KV pool
+    block_tables: jnp.ndarray,  # [B, MAXP] int32 page ids
+    seq_lens: jnp.ndarray,  # [B] int32 tokens already in the pool
+    layer: int,
+):
+    """Reference paged attention for one decode step over PAST tokens only.
+
+    Returns (out, lse):
+      out [B, H, Dh] - softmax(q.kT/sqrt(Dh)) @ v over the first seq_lens[b]
+                       tokens addressed through block_tables.
+      lse [B, H]     - log-sum-exp of the scaled scores (natural log), used by
+                       the caller to merge the current token's contribution.
+    Slots with seq_lens[b] == 0 return out = 0, lse = -1e30 (quasi -inf).
+    """
+    B, H, Dh = q.shape
+    _, Tp, _, _, Hkv, _ = pool.shape
+    maxp = block_tables.shape[1]
+    group = H // Hkv
+
+    # Gather the per-request K/V through the block table: [B, MAXP, Tp, Hkv, Dh]
+    k = pool[block_tables, :, layer, 0]
+    v = pool[block_tables, :, layer, 1]
+    k = k.reshape(B, maxp * Tp, Hkv, Dh).astype(jnp.float32)
+    v = v.reshape(B, maxp * Tp, Hkv, Dh).astype(jnp.float32)
+
+    # Broadcast kv heads to q heads (GQA).
+    kq = jnp.repeat(k, group, axis=2)  # [B, T, H, Dh]
+    vq = jnp.repeat(v, group, axis=2)
+
+    scale = 1.0 / jnp.sqrt(jnp.float32(Dh))
+    scores = jnp.einsum("bhd,bthd->bht", q.astype(jnp.float32), kq) * scale
+    pos = jnp.arange(maxp * Tp)[None, None, :]
+    mask = pos < seq_lens[:, None, None]
+    neg = jnp.float32(-1e30)
+    scores = jnp.where(mask, scores, neg)
+
+    m = jnp.max(scores, axis=-1)  # [B, H]
+    safe_m = jnp.where(m <= neg / 2, 0.0, m)  # guard all-masked rows
+    e = jnp.exp(scores - safe_m[..., None]) * mask
+    denom = jnp.sum(e, axis=-1)  # [B, H]
+    out = jnp.einsum("bht,bthd->bhd", e, vq)
+    out = out / jnp.maximum(denom, 1e-30)[..., None]
+    lse = jnp.where(denom > 0, safe_m + jnp.log(jnp.maximum(denom, 1e-30)), neg)
+    out = jnp.where((denom > 0)[..., None], out, 0.0)
+    return out.astype(q.dtype), lse.astype(jnp.float32)
+
+
+def attention_prefill_ref(
+    q: jnp.ndarray,  # [B, T, H, Dh]
+    k: jnp.ndarray,  # [B, T, Hkv, Dh]
+    v: jnp.ndarray,  # [B, T, Hkv, Dh]
+    lens: jnp.ndarray,  # [B] int32 valid prompt lengths (<= T)
+) -> jnp.ndarray:
+    """Causal full attention with right-padding masks, GQA-aware. [B,T,H,Dh]."""
+    B, T, H, Dh = q.shape
+    Hkv = k.shape[2]
+    group = H // Hkv
+    kq = jnp.repeat(k.astype(jnp.float32), group, axis=2)
+    vq = jnp.repeat(v.astype(jnp.float32), group, axis=2)
+    scale = 1.0 / jnp.sqrt(jnp.float32(Dh))
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kq) * scale
+    qpos = jnp.arange(T)[None, :, None]
+    kpos = jnp.arange(T)[None, None, :]
+    causal = kpos <= qpos  # [1, T, T]
+    valid = kpos < lens[:, None, None]  # padded keys masked out
+    mask = (causal & valid)[:, None, :, :]
+    scores = jnp.where(mask, scores, jnp.float32(-1e30))
+    probs = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    probs = probs * mask
+    probs = probs / jnp.maximum(jnp.sum(probs, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vq)
+    return out.astype(q.dtype)

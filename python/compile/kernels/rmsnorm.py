@@ -1,0 +1,43 @@
+"""L1 Pallas kernel: RMSNorm over the hidden axis.
+
+Small second kernel exercised by both the prefill and decode graphs; on real
+TPU this is a pure-VPU kernel with one row of the activation per program.
+Interpret mode (plain HLO) is used for CPU-PJRT execution.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[0, :].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    var = jnp.mean(jnp.square(x))
+    o_ref[0, :] = (x / jnp.sqrt(var + eps) * w).astype(o_ref.dtype)
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6, *, interpret: bool = True):
+    """RMSNorm along the last axis for x of shape [..., D]; w is [D]."""
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    rows = 1
+    for s in orig_shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, d)
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(rows,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda r: (r, 0)),
+            pl.BlockSpec((d,), lambda r: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=interpret,
+    )(x2, w)
+    return out.reshape(orig_shape)

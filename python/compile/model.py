@@ -1,0 +1,191 @@
+"""L2: PrismNano - a small decoder-only transformer served by the Rust stack.
+
+Two entry points are AOT-lowered to HLO text (aot.py) and executed by the
+Rust coordinator through PJRT:
+
+  prefill(weights, tokens[B,T], lens[B])
+      -> (last_logits[B,V], kv[B,T,L,2,Hkv,Dh])
+     Full causal attention over the (right-padded) prompt. The Rust side
+     scatters the returned contiguous KV into kvcached-managed 2MB pages.
+
+  decode(weights, tokens[B], positions[B], pool[P,Tp,L,2,Hkv,Dh],
+         block_tables[B,MAXP], seq_lens[B])
+      -> (logits[B,V], new_kv[B,L,2,Hkv,Dh])
+     One autoregressive step. Attention over past tokens goes through the
+     Pallas paged-attention kernel (L1); the current token's contribution is
+     merged in closed form; the Rust side writes new_kv into the pool slot
+     chosen by kvcached.
+
+Weights are *arguments*, not constants: the Rust runtime owns weight
+residency (upload once per activation as PJRT device buffers), which is
+exactly the paper's ballooning story - weights can be evicted to host DRAM
+and re-uploaded on activation. Architecture: RMSNorm, GQA attention with
+learned absolute position embeddings, SiLU-gated FFN.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.paged_attention import paged_attention, merge_with_current
+from .kernels.rmsnorm import rmsnorm
+from .kernels import ref as kref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int = 256  # byte-level
+    d_model: int = 64
+    n_layers: int = 2
+    n_heads: int = 4
+    n_kv_heads: int = 2
+    d_head: int = 16
+    d_ff: int = 128
+    max_seq: int = 256
+    page_tokens: int = 16  # tokens per KV page (Tp)
+
+    @property
+    def max_pages(self) -> int:
+        return self.max_seq // self.page_tokens
+
+    @property
+    def kv_bytes_per_token(self) -> int:
+        # f32 K+V across all layers - matches the paper's token_size.
+        return self.n_layers * 2 * self.n_kv_heads * self.d_head * 4
+
+    def weight_names(self) -> List[str]:
+        """Stable flat ordering of weight tensors (the AOT argument order)."""
+        names = ["embed", "pos_embed", "final_norm", "lm_head"]
+        for i in range(self.n_layers):
+            for p in ("attn_norm", "wq", "wk", "wv", "wo", "ffn_norm", "w_gate", "w_up", "w_down"):
+                names.append(f"layer{i}.{p}")
+        return names
+
+    def weight_shape(self, name: str) -> Tuple[int, ...]:
+        c = self
+        if name == "embed":
+            return (c.vocab, c.d_model)
+        if name == "pos_embed":
+            return (c.max_seq, c.d_model)
+        if name == "final_norm":
+            return (c.d_model,)
+        if name == "lm_head":
+            return (c.d_model, c.vocab)
+        p = name.split(".", 1)[1]
+        return {
+            "attn_norm": (c.d_model,),
+            "ffn_norm": (c.d_model,),
+            "wq": (c.d_model, c.n_heads * c.d_head),
+            "wk": (c.d_model, c.n_kv_heads * c.d_head),
+            "wv": (c.d_model, c.n_kv_heads * c.d_head),
+            "wo": (c.n_heads * c.d_head, c.d_model),
+            "w_gate": (c.d_model, c.d_ff),
+            "w_up": (c.d_model, c.d_ff),
+            "w_down": (c.d_ff, c.d_model),
+        }[p]
+
+
+# The model family used across examples/benches; the Rust catalog mirrors it.
+CONFIGS: Dict[str, ModelConfig] = {
+    "prism-nano": ModelConfig(name="prism-nano"),
+    "prism-micro": ModelConfig(
+        name="prism-micro", d_model=128, n_layers=4, n_heads=8,
+        n_kv_heads=4, d_head=16, d_ff=256,
+    ),
+}
+
+
+def init_weights(cfg: ModelConfig, seed: int = 0) -> Dict[str, np.ndarray]:
+    """Deterministic scaled-gaussian init (serving fidelity, not quality)."""
+    rng = np.random.default_rng(seed)
+    out: Dict[str, np.ndarray] = {}
+    for name in cfg.weight_names():
+        shape = cfg.weight_shape(name)
+        if name.endswith("norm"):
+            w = np.ones(shape, np.float32)
+        else:
+            fan_in = shape[0] if len(shape) > 1 else 1
+            w = rng.normal(0.0, 1.0 / np.sqrt(max(fan_in, 1)), size=shape).astype(np.float32)
+        out[name] = w
+    return out
+
+
+def weights_list(cfg: ModelConfig, w: Dict[str, np.ndarray]) -> List[np.ndarray]:
+    return [w[n] for n in cfg.weight_names()]
+
+
+def _unflatten(cfg: ModelConfig, flat) -> Dict[str, jnp.ndarray]:
+    return dict(zip(cfg.weight_names(), flat))
+
+
+def _norm(x, w, use_kernel):
+    return rmsnorm(x, w) if use_kernel else kref.rmsnorm_ref(x, w)
+
+
+def _ffn(w, i, x, use_kernel):
+    h = _norm(x, w[f"layer{i}.ffn_norm"], use_kernel)
+    g = jax.nn.silu(h @ w[f"layer{i}.w_gate"]) * (h @ w[f"layer{i}.w_up"])
+    return x + g @ w[f"layer{i}.w_down"]
+
+
+def prefill(cfg: ModelConfig, flat_weights, tokens, lens, *, use_kernel: bool = True):
+    """Prompt pass. tokens [B,T] int32 right-padded, lens [B] int32.
+
+    Returns (last_logits [B,V], kv [B,T,L,2,Hkv,Dh]).
+    """
+    w = _unflatten(cfg, flat_weights)
+    B, T = tokens.shape
+    x = w["embed"][tokens] + w["pos_embed"][:T][None, :, :]
+    kv_layers = []
+    for i in range(cfg.n_layers):
+        h = _norm(x, w[f"layer{i}.attn_norm"], use_kernel)
+        q = (h @ w[f"layer{i}.wq"]).reshape(B, T, cfg.n_heads, cfg.d_head)
+        k = (h @ w[f"layer{i}.wk"]).reshape(B, T, cfg.n_kv_heads, cfg.d_head)
+        v = (h @ w[f"layer{i}.wv"]).reshape(B, T, cfg.n_kv_heads, cfg.d_head)
+        o = kref.attention_prefill_ref(q, k, v, lens)
+        x = x + o.reshape(B, T, -1) @ w[f"layer{i}.wo"]
+        x = _ffn(w, i, x, use_kernel)
+        kv_layers.append(jnp.stack([k, v], axis=2))  # [B,T,2,Hkv,Dh]
+    kv = jnp.stack(kv_layers, axis=2)  # [B,T,L,2,Hkv,Dh]
+    x = _norm(x, w["final_norm"], use_kernel)
+    # Logits at each request's last valid token.
+    idx = jnp.maximum(lens - 1, 0)
+    last = jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0, :]
+    logits = last @ w["lm_head"]
+    return logits, kv
+
+
+def decode(cfg: ModelConfig, flat_weights, tokens, positions, pool, block_tables,
+           seq_lens, *, use_kernel: bool = True):
+    """One decode step. tokens/positions [B] int32; pool is the paged KV pool.
+
+    Returns (logits [B,V], new_kv [B,L,2,Hkv,Dh]) - the caller (Rust) writes
+    new_kv into the pool at the slot for position `positions[b]`.
+    """
+    w = _unflatten(cfg, flat_weights)
+    B = tokens.shape[0]
+    x = w["embed"][tokens] + w["pos_embed"][positions]  # [B, D]
+    new_kv_layers = []
+    for i in range(cfg.n_layers):
+        h = _norm(x, w[f"layer{i}.attn_norm"], use_kernel)
+        q = (h @ w[f"layer{i}.wq"]).reshape(B, cfg.n_heads, cfg.d_head)
+        k = (h @ w[f"layer{i}.wk"]).reshape(B, cfg.n_kv_heads, cfg.d_head)
+        v = (h @ w[f"layer{i}.wv"]).reshape(B, cfg.n_kv_heads, cfg.d_head)
+        if use_kernel:
+            o_past, lse = paged_attention(q, pool, block_tables, seq_lens, i)
+        else:
+            o_past, lse = kref.paged_attention_ref(q, pool, block_tables, seq_lens, i)
+        o = merge_with_current(o_past, lse, q, k, v)
+        x = x + o.reshape(B, -1) @ w[f"layer{i}.wo"]
+        x = _ffn(w, i, x, use_kernel)
+        new_kv_layers.append(jnp.stack([k, v], axis=1))  # [B,2,Hkv,Dh]
+    new_kv = jnp.stack(new_kv_layers, axis=1)  # [B,L,2,Hkv,Dh]
+    x = _norm(x, w["final_norm"], use_kernel)
+    logits = x @ w["lm_head"]
+    return logits, new_kv

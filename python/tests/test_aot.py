@@ -1,0 +1,85 @@
+"""AOT export path: HLO text well-formedness + manifest/weights consistency."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def entry_param_count(text: str) -> int:
+    """Count parameters of the ENTRY computation only (nested computations
+    introduced by while-loops also contain `parameter(` instructions).
+    The ENTRY computation is the last block in the HLO text dump."""
+    entry = text[text.index("ENTRY"):]
+    return entry.count(" parameter(")
+
+
+def test_lower_prefill_produces_hlo_text():
+    cfg = M.CONFIGS["prism-nano"]
+    text = aot.lower_prefill(cfg, 1, 16)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # One parameter per weight + tokens + lens.
+    assert entry_param_count(text) == len(cfg.weight_names()) + 2
+
+
+def test_lower_decode_produces_hlo_text():
+    cfg = M.CONFIGS["prism-nano"]
+    text = aot.lower_decode(cfg, 2)
+    assert "HloModule" in text
+    assert entry_param_count(text) == len(cfg.weight_names()) + 5  # tok, pos, pool, bt, lens
+    # interpret-mode pallas must lower to plain HLO: no custom-call to mosaic
+    assert "tpu_custom_call" not in text
+
+
+@pytest.mark.skipif(not os.path.isdir(ART), reason="run `make artifacts` first")
+@pytest.mark.parametrize("name", list(M.CONFIGS.keys()))
+def test_exported_manifest_matches_weights(name):
+    d = os.path.join(ART, name)
+    if not os.path.isdir(d):
+        pytest.skip("model not exported")
+    with open(os.path.join(d, "manifest.json")) as f:
+        man = json.load(f)
+    cfg = M.CONFIGS[name]
+    assert man["n_layers"] == cfg.n_layers
+    assert man["kv_bytes_per_token"] == cfg.kv_bytes_per_token
+    names = [e["name"] for e in man["weights"]]
+    assert names == cfg.weight_names()
+    size = os.path.getsize(os.path.join(d, man["weights_bin"]))
+    assert size == sum(e["bytes"] for e in man["weights"])
+    # offsets are contiguous and ordered
+    off = 0
+    for e in man["weights"]:
+        assert e["offset"] == off
+        expect = int(np.prod(e["shape"])) * 4
+        assert e["bytes"] == expect
+        off += e["bytes"]
+    # every artifact file exists
+    for ph in ("prefill", "decode"):
+        for a in man["artifacts"][ph]:
+            assert os.path.isfile(os.path.join(d, a["file"]))
+
+
+@pytest.mark.skipif(not os.path.isdir(ART), reason="run `make artifacts` first")
+def test_exported_weights_match_seeded_init():
+    """weights.bin must be exactly init_weights(seed) in manifest order."""
+    name = "prism-nano"
+    d = os.path.join(ART, name)
+    if not os.path.isdir(d):
+        pytest.skip("model not exported")
+    with open(os.path.join(d, "manifest.json")) as f:
+        man = json.load(f)
+    cfg = M.CONFIGS[name]
+    w = M.init_weights(cfg, man["seed"])
+    blob = np.fromfile(os.path.join(d, man["weights_bin"]), dtype="<f4")
+    for e in man["weights"]:
+        lo = e["offset"] // 4
+        hi = lo + e["bytes"] // 4
+        got = blob[lo:hi].reshape(e["shape"])
+        np.testing.assert_array_equal(got, w[e["name"]])

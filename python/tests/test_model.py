@@ -1,0 +1,142 @@
+"""L2 correctness: PrismNano model semantics.
+
+The core signal is teacher-forcing equivalence: running prefill over N
+tokens, paging the KV, then decoding token N must produce exactly the logits
+of a monolithic prefill over N+1 tokens. This proves the paged decode path
+(kernel + merge + pool layout + block tables) is semantically identical to
+dense attention.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+
+
+def scatter_kv_to_pool(cfg, kv, lens, pool_pages):
+    """Mimic the Rust coordinator: write prefill KV into pool pages."""
+    B = kv.shape[0]
+    Tp = cfg.page_tokens
+    pool = np.zeros(
+        (pool_pages, Tp, cfg.n_layers, 2, cfg.n_kv_heads, cfg.d_head), np.float32
+    )
+    bt = np.zeros((B, cfg.max_pages), np.int32)
+    nxt = 1  # page 0 kept as scratch so id 0 is never a real mapping
+    for b in range(B):
+        n = max(1, int(np.ceil(lens[b] / Tp)))
+        for p in range(n):
+            bt[b, p] = nxt
+            lo, hi = p * Tp, min((p + 1) * Tp, int(lens[b]))
+            if hi > lo:
+                pool[nxt, : hi - lo] = kv[b, lo:hi]
+            nxt += 1
+    return pool, bt
+
+
+@pytest.mark.parametrize("name", list(M.CONFIGS.keys()))
+@pytest.mark.parametrize("use_kernel", [True, False])
+def test_teacher_forcing_equivalence(name, use_kernel):
+    cfg = M.CONFIGS[name]
+    w = M.weights_list(cfg, M.init_weights(cfg, 0))
+    rng = np.random.default_rng(7)
+    B, T = 2, 20
+    toks = rng.integers(0, cfg.vocab, size=(B, T + 1)).astype(np.int32)
+    lens = np.array([T, 9], np.int32)
+
+    logits_ref, _ = M.prefill(
+        cfg, w, jnp.array(toks), jnp.array(lens + 1), use_kernel=False
+    )
+    _, kv = M.prefill(cfg, w, jnp.array(toks[:, :T]), jnp.array(lens),
+                      use_kernel=use_kernel)
+    pool, bt = scatter_kv_to_pool(cfg, np.array(kv), lens, pool_pages=32)
+    nxt_tok = np.array([toks[b, lens[b]] for b in range(B)], np.int32)
+    logits_dec, new_kv = M.decode(
+        cfg, w, jnp.array(nxt_tok), jnp.array(lens), jnp.array(pool),
+        jnp.array(bt), jnp.array(lens), use_kernel=use_kernel,
+    )
+    np.testing.assert_allclose(
+        np.array(logits_dec), np.array(logits_ref), atol=5e-4, rtol=1e-3
+    )
+    assert new_kv.shape == (B, cfg.n_layers, 2, cfg.n_kv_heads, cfg.d_head)
+
+
+def test_multi_step_decode_chain():
+    """Decode 4 tokens sequentially writing new_kv into the pool each step;
+    compare against monolithic prefill logits at each position."""
+    cfg = M.CONFIGS["prism-nano"]
+    w = M.weights_list(cfg, M.init_weights(cfg, 1))
+    rng = np.random.default_rng(11)
+    T0, steps = 6, 4
+    toks = rng.integers(0, cfg.vocab, size=(1, T0 + steps)).astype(np.int32)
+    lens0 = np.array([T0], np.int32)
+
+    _, kv = M.prefill(cfg, w, jnp.array(toks[:, :T0]), jnp.array(lens0))
+    pool, bt = scatter_kv_to_pool(cfg, np.array(kv), lens0, pool_pages=16)
+    Tp = cfg.page_tokens
+    cur = int(lens0[0])
+    next_free_page = int(bt[0].max()) + 1
+    for s in range(steps):
+        tok = np.array([toks[0, cur]], np.int32)
+        logits, new_kv = M.decode(
+            cfg, w, jnp.array(tok), jnp.array([cur], np.int32), jnp.array(pool),
+            jnp.array(bt), jnp.array([cur], np.int32),
+        )
+        ref_logits, _ = M.prefill(
+            cfg, w, jnp.array(toks[:, : cur + 1]),
+            jnp.array([cur + 1], np.int32), use_kernel=False,
+        )
+        np.testing.assert_allclose(
+            np.array(logits), np.array(ref_logits), atol=5e-4, rtol=1e-3
+        )
+        # Rust-side bookkeeping: write new kv into the pool.
+        page_idx, slot = cur // Tp, cur % Tp
+        if bt[0, page_idx] == 0:
+            bt[0, page_idx] = next_free_page
+            next_free_page += 1
+        pool[bt[0, page_idx], slot] = np.array(new_kv)[0]
+        cur += 1
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 24), st.integers(0, 2**31 - 1))
+def test_prefill_shapes_and_padding_invariance(B, T, seed):
+    """Padded tail tokens must not affect last-valid-token logits."""
+    cfg = M.CONFIGS["prism-nano"]
+    w = M.weights_list(cfg, M.init_weights(cfg, 0))
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, cfg.vocab, size=(B, T)).astype(np.int32)
+    lens = rng.integers(1, T + 1, size=(B,)).astype(np.int32)
+    lg1, kv1 = M.prefill(cfg, w, jnp.array(toks), jnp.array(lens), use_kernel=False)
+    # Scramble padding region.
+    toks2 = toks.copy()
+    for b in range(B):
+        toks2[b, lens[b]:] = rng.integers(0, cfg.vocab, size=(T - lens[b],))
+    lg2, _ = M.prefill(cfg, w, jnp.array(toks2), jnp.array(lens), use_kernel=False)
+    np.testing.assert_allclose(np.array(lg1), np.array(lg2), atol=1e-4, rtol=1e-3)
+    assert lg1.shape == (B, cfg.vocab)
+    assert kv1.shape == (B, T, cfg.n_layers, 2, cfg.n_kv_heads, cfg.d_head)
+
+
+def test_weight_catalog_consistency():
+    for cfg in M.CONFIGS.values():
+        names = cfg.weight_names()
+        assert len(names) == len(set(names))
+        w = M.init_weights(cfg)
+        assert set(w.keys()) == set(names)
+        for n in names:
+            assert w[n].shape == cfg.weight_shape(n)
+        # kv_bytes_per_token matches the physical pool slice size
+        assert cfg.kv_bytes_per_token == cfg.n_layers * 2 * cfg.n_kv_heads * cfg.d_head * 4
+        assert cfg.max_seq % cfg.page_tokens == 0
+
+
+def test_init_deterministic():
+    cfg = M.CONFIGS["prism-nano"]
+    a = M.init_weights(cfg, 42)
+    b = M.init_weights(cfg, 42)
+    c = M.init_weights(cfg, 43)
+    for n in cfg.weight_names():
+        np.testing.assert_array_equal(a[n], b[n])
+    assert any(not np.array_equal(a[n], c[n]) for n in cfg.weight_names())

@@ -1,0 +1,214 @@
+//! Benchmark harness (no criterion in the offline vendor set).
+//!
+//! Two layers:
+//!  * micro: `Bench::run(name, iters, f)` - wall-clock timing with warmup,
+//!    reporting mean/p50/p95/min per iteration.
+//!  * macro: `Table` - paper-style result tables (rows = sweep points,
+//!    columns = systems/metrics), printed aligned and optionally dumped as
+//!    CSV under results/.
+
+use std::fmt::Write as _;
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+/// One timed micro-benchmark result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>10} iters  mean {:>12}  p50 {:>12}  p95 {:>12}  min {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns),
+            fmt_ns(self.min_ns),
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.1} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Run `f` for `iters` timed iterations after `warmup` untimed ones.
+/// `f` receives the iteration index and returns a value that is black-boxed.
+pub fn run<T, F: FnMut(usize) -> T>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for i in 0..warmup {
+        black_box(f(i));
+    }
+    let mut s = Summary::new();
+    for i in 0..iters {
+        let t0 = Instant::now();
+        black_box(f(i));
+        s.add(t0.elapsed().as_nanos() as f64);
+    }
+    let mut s2 = s.clone();
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: s.mean(),
+        p50_ns: s2.p(50.0),
+        p95_ns: s2.p(95.0),
+        min_ns: s2.min(),
+    };
+    println!("{}", r.line());
+    r
+}
+
+/// Prevent the optimizer from eliding the computation.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Paper-style result table: named columns, push rows, aligned print + CSV.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn rowf(&mut self, cells: &[f64], fmt_digits: usize) {
+        self.row(cells.iter().map(|v| format!("{v:.*}", fmt_digits)).collect());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "## {}", self.title);
+        let header: Vec<String> = self
+            .columns
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+            .collect();
+        let _ = writeln!(out, "{}", header.join("  "));
+        let _ = writeln!(out, "{}", widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("  "));
+        for r in &self.rows {
+            let line: Vec<String> = r
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect();
+            let _ = writeln!(out, "{}", line.join("  "));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let _ = writeln!(out, "{}", self.columns.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+        for r in &self.rows {
+            let _ = writeln!(out, "{}", r.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+        }
+        out
+    }
+
+    /// Write CSV under results/<file>; creates the directory.
+    pub fn save_csv(&self, file: &str) -> std::io::Result<std::path::PathBuf> {
+        let dir = std::path::Path::new("results");
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(file);
+        std::fs::write(&path, self.to_csv())?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_run_reports_sane_numbers() {
+        let r = run("noop-sum", 2, 20, |i| (0..100).map(|x| x * i).sum::<usize>());
+        assert_eq!(r.iters, 20);
+        assert!(r.min_ns <= r.p50_ns && r.p50_ns <= r.p95_ns);
+        assert!(r.mean_ns > 0.0);
+    }
+
+    #[test]
+    fn table_render_and_csv() {
+        let mut t = Table::new("Demo", &["x", "prism", "baseline"]);
+        t.row(vec!["1".into(), "0.99".into(), "0.50".into()]);
+        t.rowf(&[2.0, 0.98, 0.40], 2);
+        let s = t.render();
+        assert!(s.contains("Demo") && s.contains("prism"));
+        let csv = t.to_csv();
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.starts_with("x,prism,baseline"));
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new("q", &["a,b"]);
+        t.row(vec!["x\"y".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"a,b\""));
+        assert!(csv.contains("\"x\"\"y\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(5.0).ends_with("ns"));
+        assert!(fmt_ns(5_000.0).ends_with("µs"));
+        assert!(fmt_ns(5_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with("s"));
+    }
+}

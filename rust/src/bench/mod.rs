@@ -1,0 +1,3 @@
+//! Benchmark infrastructure: timing harness + paper-style result tables.
+
+pub mod harness;

@@ -1,0 +1,337 @@
+//! GPU devices, engine pools, and cluster-level model residency.
+//!
+//! A `GpuDevice` owns one `Kvcached` (the balloon driver instance for its
+//! physical memory) and a reusable engine pool (paper SS5.3: engines are
+//! pre-initialized with virtual address space; model activation draws one
+//! from the pool and only pays weight loading + a one-time realignment).
+//!
+//! Model instances may span multiple GPUs (TP groups); the group is the
+//! strict scheduling boundary (paper SS4). `Cluster` tracks residency and
+//! performs the activation / eviction / migration mechanics whose latencies
+//! come from `engine::loading`.
+
+use std::collections::BTreeMap;
+
+use crate::engine::engine::{SimEngine, BLOCK_TOKENS};
+use crate::engine::loading::{activation_seconds, LoadStrategy};
+use crate::engine::perf::GpuPerf;
+use crate::kvcached::Kvcached;
+use crate::model::spec::{ModelId, ModelSpec};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct GpuId(pub u32);
+
+impl std::fmt::Display for GpuId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "gpu{}", self.0)
+    }
+}
+
+/// Where a model instance currently lives.
+#[derive(Debug, Clone)]
+pub struct Residency {
+    pub model: ModelId,
+    /// GPUs of the (TP) group; length = spec.tp.
+    pub gpus: Vec<GpuId>,
+    /// Engine serving it (index into Cluster::engines).
+    pub engine_idx: usize,
+    /// Simulation time at which activation completes (requests wait until then).
+    pub ready_at: f64,
+    pub last_active: f64,
+}
+
+#[derive(Debug)]
+pub struct GpuDevice {
+    pub id: GpuId,
+    pub kvc: Kvcached,
+    /// Pre-initialized engines available on this GPU (paper SS5.3).
+    pub engine_pool_free: u32,
+    /// Node this GPU belongs to (parallel loading uses node-local lanes).
+    pub node: u32,
+}
+
+#[derive(Debug)]
+pub struct Cluster {
+    pub gpus: Vec<GpuDevice>,
+    /// Reusable engine pool per NODE (paper SS5.3): engines are processes
+    /// with pre-reserved virtual address space; any GPU on the node can
+    /// adopt one, so migrations on a node never deplete a single GPU's pool.
+    pub node_pools: Vec<u32>,
+    pub engines: Vec<SimEngine>,
+    pub residency: BTreeMap<ModelId, Residency>,
+    pub perf: GpuPerf,
+    pub gpus_per_node: u32,
+    pub load_strategy: LoadStrategy,
+    /// Counters for SS7.5-style reporting.
+    pub activations: u64,
+    pub evictions: u64,
+    pub migrations: u64,
+}
+
+impl Cluster {
+    pub fn new(n_gpus: u32, gpu_bytes: u64, gpus_per_node: u32, perf: GpuPerf) -> Self {
+        let gpus = (0..n_gpus)
+            .map(|i| GpuDevice {
+                id: GpuId(i),
+                kvc: Kvcached::new(gpu_bytes, crate::kvcached::DEFAULT_PAGE_BYTES, 64),
+                engine_pool_free: 8,
+                node: i / gpus_per_node.max(1),
+            })
+            .collect();
+        let n_nodes = n_gpus.div_ceil(gpus_per_node.max(1));
+        Cluster {
+            gpus,
+            node_pools: vec![8 * gpus_per_node.max(1); n_nodes as usize],
+            engines: Vec::new(),
+            residency: BTreeMap::new(),
+            perf,
+            gpus_per_node,
+            load_strategy: LoadStrategy::Parallel,
+            activations: 0,
+            evictions: 0,
+            migrations: 0,
+        }
+    }
+
+    pub fn n_gpus(&self) -> usize {
+        self.gpus.len()
+    }
+
+    pub fn is_resident(&self, m: ModelId) -> bool {
+        self.residency.contains_key(&m)
+    }
+
+    /// Activate `spec` on the given GPU group at time `now`.
+    /// Returns the residency ready time, or an error if memory is short.
+    pub fn activate(
+        &mut self,
+        spec: &ModelSpec,
+        gpus: Vec<GpuId>,
+        now: f64,
+    ) -> Result<f64, crate::kvcached::KvError> {
+        assert_eq!(gpus.len(), spec.tp as usize, "group size must equal TP degree");
+        assert!(!self.is_resident(spec.id), "{} already resident", spec.id);
+
+        // Map weights on every GPU of the group.
+        let per_gpu = spec.weight_bytes_per_gpu();
+        let block_bytes = spec.kv_bytes_per_token() * BLOCK_TOKENS as u64;
+        for (i, g) in gpus.iter().enumerate() {
+            let dev = &mut self.gpus[g.0 as usize];
+            if let Err(e) = dev.kvc.load_weights(spec.id, per_gpu) {
+                // Roll back prior GPUs.
+                for g2 in &gpus[..i] {
+                    self.gpus[g2.0 as usize].kvc.unload_weights(spec.id);
+                    self.gpus[g2.0 as usize].kvc.unregister_kv(spec.id);
+                }
+                return Err(e);
+            }
+            dev.kvc.register_kv(spec.id, block_bytes, u32::MAX);
+        }
+
+        // Engine from the node pool if available; else pay full init.
+        let node = self.gpus[gpus[0].0 as usize].node as usize;
+        let strategy = if self.node_pools[node] > 0 {
+            self.node_pools[node] -= 1;
+            self.load_strategy
+        } else {
+            LoadStrategy::Naive
+        };
+        let node_gpus = self.gpus_per_node;
+        let latency = activation_seconds(&self.perf, strategy, spec.weight_bytes(), node_gpus);
+
+        let engine_idx = self.engines.len();
+        self.engines.push(SimEngine::new(spec.clone()));
+        self.residency.insert(
+            spec.id,
+            Residency {
+                model: spec.id,
+                gpus,
+                engine_idx,
+                ready_at: now + latency,
+                last_active: now,
+            },
+        );
+        self.activations += 1;
+        Ok(now + latency)
+    }
+
+    /// Evict a model: drain its engine, unmap weights + KV, return the engine
+    /// to the pool. Returns the drained (re-queueable) requests.
+    pub fn evict(&mut self, m: ModelId) -> Vec<crate::request::Request> {
+        let Some(res) = self.residency.remove(&m) else {
+            return Vec::new();
+        };
+        let engine = &mut self.engines[res.engine_idx];
+        // Free all KV blocks via a group allocator view.
+        let mut reqs = {
+            let mut ga = GroupAlloc { gpus: &mut self.gpus, group: &res.gpus, model: m };
+            engine.drain(&mut ga)
+        };
+        for g in &res.gpus {
+            let dev = &mut self.gpus[g.0 as usize];
+            dev.kvc.unload_weights(m);
+            dev.kvc.unregister_kv(m);
+        }
+        let node = self.gpus[res.gpus[0].0 as usize].node as usize;
+        self.node_pools[node] += 1;
+        self.evictions += 1;
+        for r in &mut reqs {
+            r.phase = crate::request::Phase::Queued;
+        }
+        reqs
+    }
+
+    /// Migrate a resident single-GPU model to another GPU (paper SS6.1):
+    /// overlapped with serving, only the switch-over is exposed. Returns the
+    /// drained in-flight requests (they resume on the target) + ready time.
+    pub fn migrate(
+        &mut self,
+        spec: &ModelSpec,
+        to: GpuId,
+        now: f64,
+        nvlink: bool,
+    ) -> Result<(Vec<crate::request::Request>, f64), crate::kvcached::KvError> {
+        let res = self.residency.get(&spec.id).expect("model resident").clone();
+        assert_eq!(spec.tp, 1, "migration modelled for single-GPU models");
+        let kv_bytes = self.engines[res.engine_idx].active_kv_bytes();
+        let reqs = self.evict(spec.id);
+        let ready = match self.activate(spec, vec![to], now) {
+            Ok(_) => {
+                // Overlapped migration: the exposed latency is the switch-over,
+                // not the full reload (paper SS7.5: ~tens of ms over NVLink).
+                let sw = crate::engine::loading::migration_switchover_seconds(
+                    &self.perf,
+                    spec.weight_bytes() + kv_bytes,
+                    nvlink,
+                );
+                let r = self.residency.get_mut(&spec.id).unwrap();
+                r.ready_at = now + sw;
+                self.migrations += 1;
+                self.activations -= 1; // counted as migration, not activation
+                now + sw
+            }
+            Err(e) => return Err(e),
+        };
+        Ok((reqs, ready))
+    }
+
+}
+
+/// Allocates one KV block on every GPU of a TP group, atomically.
+pub struct GroupAlloc<'a> {
+    pub gpus: &'a mut Vec<GpuDevice>,
+    pub group: &'a [GpuId],
+    pub model: ModelId,
+}
+
+impl<'a> crate::engine::engine::KvAlloc for GroupAlloc<'a> {
+    fn alloc(&mut self) -> Result<crate::engine::engine::GroupBlock, crate::kvcached::KvError> {
+        let mut out = Vec::with_capacity(self.group.len());
+        for (i, g) in self.group.iter().enumerate() {
+            match self.gpus[g.0 as usize].kvc.alloc_block(self.model) {
+                Ok(b) => out.push(b),
+                Err(e) => {
+                    // Roll back the partial group allocation.
+                    for (j, b) in out.into_iter().enumerate() {
+                        let gj = self.group[j];
+                        let _ = self.gpus[gj.0 as usize].kvc.free_block(b);
+                    }
+                    debug_assert!(i > 0 || true);
+                    return Err(e);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    fn free(&mut self, b: crate::engine::engine::GroupBlock) {
+        for (i, r) in b.into_iter().enumerate() {
+            let g = self.group[i];
+            self.gpus[g.0 as usize].kvc.free_block(r).expect("group free");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::engine::KvAlloc;
+    use crate::model::spec::{catalog_subset, GB};
+
+    fn cluster(n: u32) -> Cluster {
+        Cluster::new(n, 80 * GB, 8, GpuPerf::default())
+    }
+
+    #[test]
+    fn activate_and_evict_roundtrip() {
+        let mut c = cluster(2);
+        let spec = &catalog_subset(8)[2]; // an 8B model
+        assert_eq!(spec.tp, 1);
+        let ready = c.activate(spec, vec![GpuId(0)], 100.0).unwrap();
+        assert!(ready > 100.0 && ready < 101.0, "pooled parallel load is sub-second");
+        assert!(c.is_resident(spec.id));
+        let w = c.gpus[0].kvc.stats().weight_bytes;
+        assert!(w >= spec.weight_bytes_per_gpu());
+        let reqs = c.evict(spec.id);
+        assert!(reqs.is_empty());
+        assert!(!c.is_resident(spec.id));
+        assert_eq!(c.gpus[0].kvc.stats().weight_bytes, 0);
+        assert!(c.gpus[0].kvc.check_conservation());
+    }
+
+    #[test]
+    fn tp_group_spans_gpus() {
+        let mut c = cluster(4);
+        let cat = catalog_subset(8);
+        let tp_model = cat.iter().find(|m| m.is_tp()).unwrap();
+        let gpus: Vec<GpuId> = (0..tp_model.tp).map(GpuId).collect();
+        c.activate(tp_model, gpus.clone(), 0.0).unwrap();
+        for g in &gpus {
+            assert!(c.gpus[g.0 as usize].kvc.stats().weight_bytes > 0);
+        }
+        // Group-wide block allocation touches all shards.
+        let res = c.residency.get(&tp_model.id).unwrap().clone();
+        let mut ga = GroupAlloc { gpus: &mut c.gpus, group: &res.gpus, model: tp_model.id };
+        let b = ga.alloc().unwrap();
+        assert_eq!(b.len(), tp_model.tp as usize);
+        ga.free(b);
+    }
+
+    #[test]
+    fn engine_pool_exhaustion_forces_cold_start() {
+        let mut c = cluster(1);
+        c.node_pools[0] = 1;
+        let cat = catalog_subset(8);
+        let m1 = cat.iter().find(|m| m.name.contains("1b-ft00")).unwrap();
+        let m2 = cat.iter().find(|m| m.name.contains("1b-ft01")).unwrap();
+        let r1 = c.activate(m1, vec![GpuId(0)], 0.0).unwrap();
+        let r2 = c.activate(m2, vec![GpuId(0)], 0.0).unwrap();
+        assert!(r1 < 1.0, "pooled activation fast: {r1}");
+        assert!(r2 > 5.0, "cold start pays engine init: {r2}");
+    }
+
+    #[test]
+    fn oom_on_activation_rolls_back() {
+        let mut c = Cluster::new(1, 4 * GB, 8, GpuPerf::default());
+        let cat = catalog_subset(8);
+        let big = cat.iter().find(|m| m.name.contains("8b")).unwrap(); // 16 GB > 4 GB
+        assert!(c.activate(big, vec![GpuId(0)], 0.0).is_err());
+        assert!(!c.is_resident(big.id));
+        assert!(c.gpus[0].kvc.check_conservation());
+        assert_eq!(c.gpus[0].kvc.stats().weight_bytes, 0);
+    }
+
+    #[test]
+    fn migration_exposes_only_switchover() {
+        let mut c = cluster(2);
+        let cat = catalog_subset(8);
+        let m = cat.iter().find(|m| m.name.contains("1b-ft00")).unwrap();
+        c.activate(m, vec![GpuId(0)], 0.0).unwrap();
+        let (reqs, ready) = c.migrate(m, GpuId(1), 50.0, true).unwrap();
+        assert!(reqs.is_empty());
+        assert!(ready - 50.0 < 0.05, "switch-over must be tens of ms: {}", ready - 50.0);
+        assert_eq!(c.residency.get(&m.id).unwrap().gpus, vec![GpuId(1)]);
+        assert_eq!(c.migrations, 1);
+        assert_eq!(c.gpus[0].kvc.stats().weight_bytes, 0);
+    }
+}

@@ -1,0 +1,7 @@
+//! Cluster state: GPUs with kvcached instances, engine pools, model
+//! residency, TP GPU groups, and activation/eviction/migration mechanics
+//! (paper SS4, SS5.3, SS6.1).
+
+pub mod gpu;
+
+pub use gpu::{Cluster, GpuDevice, GpuId, Residency};

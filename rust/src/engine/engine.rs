@@ -1,0 +1,564 @@
+//! Simulated serving engine: chunked prefill + continuous batching over
+//! kvcached-managed KV blocks (SGLang/vLLM-style iteration loop).
+//!
+//! One `SimEngine` serves one model instance on one GPU group. Each call to
+//! `step` executes one engine iteration: a chunk of prefill for the head of
+//! the admitted queue plus one decode token per running request, allocating
+//! KV blocks on demand through the caller-supplied group allocator. When
+//! allocation fails (pool exhausted or balloon limit), the engine preempts
+//! the longest-running decode request (recompute-style, matching SGLang's
+//! policy the paper builds on) and retries once.
+
+use std::collections::HashMap;
+
+use crate::engine::perf::GpuPerf;
+use crate::kvcached::{BlockRef, KvError};
+use crate::model::spec::ModelSpec;
+use crate::request::{Completion, Phase, Request, RequestId};
+
+/// Tokens per KV block (SGLang default page size is 16-64 tokens).
+pub const BLOCK_TOKENS: u32 = 16;
+/// Prefill chunk per iteration (chunked prefill, paper SS6.2).
+pub const CHUNK_TOKENS: u32 = 512;
+/// Maximum concurrent decode batch per engine.
+pub const MAX_BATCH: u32 = 64;
+
+/// One block replicated across the engine's TP group (one BlockRef per GPU).
+pub type GroupBlock = Vec<BlockRef>;
+
+/// Group-wide KV allocation interface provided by the cluster: allocates one
+/// block on EVERY GPU of the engine's group or fails atomically.
+pub trait KvAlloc {
+    fn alloc(&mut self) -> Result<GroupBlock, KvError>;
+    fn free(&mut self, b: GroupBlock);
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct StepOutcome {
+    /// Wall-clock duration of this iteration (0 if the engine was idle).
+    pub duration: f64,
+    pub completions: Vec<Completion>,
+    pub preempted: u32,
+    /// True if any request made progress (engine should be rescheduled).
+    pub active: bool,
+}
+
+#[derive(Debug)]
+pub struct SimEngine {
+    pub spec: ModelSpec,
+    /// Admitted requests awaiting (or mid-) prefill, in admission order.
+    queue: Vec<Request>,
+    /// Requests in decode.
+    running: Vec<Request>,
+    blocks: HashMap<RequestId, Vec<GroupBlock>>,
+    pub chunk_tokens: u32,
+    pub max_batch: u32,
+    /// Total iterations and busy seconds (throughput accounting excl. idle).
+    pub iterations: u64,
+    pub busy_seconds: f64,
+    pub preemptions: u64,
+}
+
+impl SimEngine {
+    pub fn new(spec: ModelSpec) -> Self {
+        SimEngine {
+            spec,
+            queue: Vec::new(),
+            running: Vec::new(),
+            blocks: HashMap::new(),
+            chunk_tokens: CHUNK_TOKENS,
+            max_batch: MAX_BATCH,
+            iterations: 0,
+            busy_seconds: 0.0,
+            preemptions: 0,
+        }
+    }
+
+    /// Admit a request (arbitration has already decided it should run here).
+    pub fn admit(&mut self, mut r: Request) {
+        r.phase = Phase::Prefill;
+        self.queue.push(r);
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.queue.is_empty() || !self.running.is_empty()
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn running_len(&self) -> usize {
+        self.running.len()
+    }
+
+    /// Tokens of KV currently resident (for KVPR / memory plots).
+    pub fn active_kv_tokens(&self) -> u64 {
+        let q: u64 = self.queue.iter().map(|r| r.prefill_done_tokens as u64).sum();
+        let d: u64 = self
+            .running
+            .iter()
+            .map(|r| (r.prompt_tokens + r.decoded_tokens) as u64)
+            .sum();
+        q + d
+    }
+
+    pub fn active_kv_bytes(&self) -> u64 {
+        self.active_kv_tokens() * self.spec.kv_bytes_per_token() * self.spec.tp as u64
+    }
+
+    /// Blocks held per request (used by drains/migration).
+    pub fn held_blocks(&self) -> usize {
+        self.blocks.values().map(|v| v.len()).sum()
+    }
+
+    fn ensure_blocks(
+        &mut self,
+        id: RequestId,
+        tokens_needed: u32,
+        kv: &mut dyn KvAlloc,
+    ) -> Result<(), KvError> {
+        let have = self.blocks.get(&id).map(|v| v.len() as u32).unwrap_or(0);
+        let need = tokens_needed.div_ceil(BLOCK_TOKENS);
+        for _ in have..need {
+            let b = kv.alloc()?;
+            self.blocks.entry(id).or_default().push(b);
+        }
+        Ok(())
+    }
+
+    fn release_blocks(&mut self, id: RequestId, kv: &mut dyn KvAlloc) {
+        if let Some(bs) = self.blocks.remove(&id) {
+            for b in bs {
+                kv.free(b);
+            }
+        }
+    }
+
+    /// Preempt a decode request *promoted after* `requester` (LIFO,
+    /// recompute-style - the vLLM/SGLang discipline). The age ordering is
+    /// what makes this livelock-free: a request may only evict strictly
+    /// younger ones, so the oldest running request always progresses,
+    /// finishes, and releases memory. (Both "preempt the longest-decoded"
+    /// and plain "preempt anyone but me" livelock: the victim re-prefills,
+    /// gets promoted, and immediately preempts its preemptor.)
+    fn preempt_younger(&mut self, kv: &mut dyn KvAlloc, requester: RequestId) -> bool {
+        let Some(pos) = self.running.iter().position(|r| r.id == requester) else {
+            return false;
+        };
+        if pos + 1 >= self.running.len() {
+            return false; // requester is the youngest: it must wait instead
+        }
+        let mut r = self.running.pop().expect("younger victim exists");
+        self.release_blocks(r.id, kv);
+        r.preemptions += 1;
+        r.preemptions_apply();
+        self.queue.insert(0, r);
+        self.preemptions += 1;
+        true
+    }
+
+    /// Steal partial-prefill KV from the back of the queue (only safe when
+    /// nothing is running; used so the queue head can make progress).
+    fn steal_from_queue_tail(&mut self, kv: &mut dyn KvAlloc, protect: RequestId) -> bool {
+        let qv = self
+            .queue
+            .iter()
+            .enumerate()
+            .rev()
+            .find(|(_, r)| r.id != protect && self.blocks.contains_key(&r.id))
+            .map(|(i, _)| i);
+        if let Some(i) = qv {
+            let id = self.queue[i].id;
+            self.release_blocks(id, kv);
+            let mut r = self.queue.remove(i);
+            r.preemptions += 1;
+            r.preemptions_apply();
+            self.queue.push(r);
+            self.preemptions += 1;
+            return true;
+        }
+        false
+    }
+
+    /// Drain everything (engine eviction): frees all KV; returns the requests
+    /// (callers re-queue them elsewhere). Completed stats are preserved.
+    pub fn drain(&mut self, kv: &mut dyn KvAlloc) -> Vec<Request> {
+        let ids: Vec<RequestId> = self.blocks.keys().copied().collect();
+        for id in ids {
+            self.release_blocks(id, kv);
+        }
+        let mut out: Vec<Request> = Vec::new();
+        for mut r in self.queue.drain(..) {
+            r.phase = Phase::Queued;
+            r.prefill_done_tokens = 0;
+            out.push(r);
+        }
+        for mut r in self.running.drain(..) {
+            r.phase = Phase::Queued;
+            r.preemptions += 1;
+            r.preemptions_apply();
+            out.push(r);
+        }
+        out
+    }
+
+    /// Execute one iteration at simulation time `now`.
+    pub fn step(&mut self, now: f64, perf: &GpuPerf, kv: &mut dyn KvAlloc) -> StepOutcome {
+        if !self.has_work() {
+            return StepOutcome::default();
+        }
+        let mut out = StepOutcome { active: true, ..Default::default() };
+
+        // ---- Phase 1: one decode token per running request --------------
+        // Decode runs BEFORE prefill: running requests must get their KV
+        // first, or prefill of waiting requests consumes every block that a
+        // preemption frees and decode livelocks (vLLM/SGLang likewise give
+        // the running batch priority over admission).
+        // Iterate by id: preemption removes entries from `running` mid-scan.
+        let mut finished: Vec<RequestId> = Vec::new();
+        // Set when decode hit memory pressure this iteration: prefill
+        // admission is then suppressed so it cannot re-consume the blocks
+        // that preemption just freed (that re-consumption livelocks).
+        let mut pressure = false;
+        let ids: Vec<RequestId> = self.running.iter().map(|r| r.id).collect();
+        for id in ids {
+            let Some(idx) = self.running.iter().position(|r| r.id == id) else {
+                continue; // preempted earlier this iteration
+            };
+            let tokens_after =
+                self.running[idx].prompt_tokens + self.running[idx].decoded_tokens + 1;
+            let mut attempts = 0;
+            loop {
+                match self.ensure_blocks(id, tokens_after, kv) {
+                    Ok(()) => {
+                        let r = self.running.iter_mut().find(|r| r.id == id).unwrap();
+                        r.decoded_tokens += 1;
+                        if r.decoded_tokens >= r.output_tokens {
+                            finished.push(id);
+                        }
+                        break;
+                    }
+                    Err(KvError::OutOfPages(_)) | Err(KvError::LimitReached { .. }) => {
+                        pressure = true;
+                        // Victim order: a younger runner, else a queued
+                        // partial prefill (not yet served, so younger in
+                        // service order by definition). Retry after a
+                        // successful preemption.
+                        if attempts < 4
+                            && (self.preempt_younger(kv, id)
+                                || self.steal_from_queue_tail(kv, id))
+                        {
+                            out.preempted += 1;
+                            attempts += 1;
+                            continue;
+                        }
+                        // This (youngest) request stalls one iteration;
+                        // older requests keep decoding and release memory.
+                        break;
+                    }
+                    Err(e) => panic!("unexpected kv error: {e}"),
+                }
+            }
+        }
+
+        // ---- Phase 2: chunked prefill for the queue head(s) -------------
+        // Suppressed entirely under decode memory pressure (see above).
+        let mut chunk_left = if pressure { 0 } else { self.chunk_tokens };
+        let mut prefill_tokens_done = 0u32;
+        let mut qi = 0usize;
+        while chunk_left > 0
+            && qi < self.queue.len()
+            && (self.running.len() as u32) < self.max_batch
+        {
+            let id = self.queue[qi].id;
+            let total_prefill =
+                self.queue[qi].prompt_tokens + self.queue[qi].decoded_tokens;
+            let done = self.queue[qi].prefill_done_tokens;
+            let take = chunk_left.min(total_prefill - done);
+            // KV for the newly prefetched tokens.
+            match self.ensure_blocks(id, done + take, kv) {
+                Ok(()) => {}
+                Err(KvError::OutOfPages(_)) | Err(KvError::LimitReached { .. }) => {
+                    // Memory pressure. Prefill never preempts active decodes
+                    // (decode progress guarantees memory is eventually freed;
+                    // preempting it would allow prefill/decode livelock).
+                    // With nothing running, steal partial-prefill KV from the
+                    // queue tail so the head can make progress.
+                    if self.running.is_empty() && self.steal_from_queue_tail(kv, id) {
+                        out.preempted += 1;
+                        continue;
+                    }
+                    break;
+                }
+                Err(e) => panic!("unexpected kv error: {e}"),
+            }
+            let r = &mut self.queue[qi];
+            r.prefill_done_tokens += take;
+            chunk_left -= take;
+            prefill_tokens_done += take;
+            if r.prefill_done_tokens >= total_prefill {
+                qi += 1; // completed prefill; promoted below
+            }
+        }
+
+        // ---- Iteration timing -------------------------------------------
+        let decode_batch = self.running.len() as u32;
+        let duration = perf.iteration_seconds(
+            &self.spec,
+            prefill_tokens_done,
+            decode_batch,
+            self.active_kv_bytes() / self.spec.tp as u64,
+        );
+        let end = now + duration;
+        self.iterations += 1;
+        self.busy_seconds += duration;
+        out.duration = duration;
+
+        // Decode latency accounting: every running request that decoded this
+        // iteration accrues the iteration duration.
+        for r in self.running.iter_mut() {
+            if r.decoded_tokens > 0 {
+                r.decode_time_accum += duration;
+            }
+        }
+
+        // Completions.
+        for id in finished {
+            let Some(i) = self.running.iter().position(|r| r.id == id) else {
+                continue; // finished request preempted later in the scan
+            };
+            let mut r = self.running.remove(i);
+            r.phase = Phase::Finished;
+            r.finish_time = Some(end);
+            if r.first_token_time.is_none() {
+                r.first_token_time = Some(end);
+            }
+            self.release_blocks(r.id, kv);
+            out.completions.push(Completion::from_request(&r));
+        }
+
+        // Promote queue heads whose prefill completed: first token emitted at
+        // the end of this iteration.
+        let mut i = 0;
+        while i < self.queue.len() {
+            let total_prefill = self.queue[i].prompt_tokens + self.queue[i].decoded_tokens;
+            if self.queue[i].prefill_done_tokens >= total_prefill
+                && (self.running.len() as u32) < self.max_batch
+            {
+                let mut r = self.queue.remove(i);
+                if r.first_token_time.is_none() {
+                    r.first_token_time = Some(end);
+                }
+                // The first generated token is produced by the prefill pass.
+                if r.decoded_tokens == 0 {
+                    r.decoded_tokens = 1;
+                }
+                if r.decoded_tokens >= r.output_tokens {
+                    r.phase = Phase::Finished;
+                    r.finish_time = Some(end);
+                    self.release_blocks(r.id, kv);
+                    out.completions.push(Completion::from_request(&r));
+                } else {
+                    r.phase = Phase::Decode;
+                    self.running.push(r);
+                }
+            } else {
+                i += 1;
+            }
+        }
+
+        out
+    }
+}
+
+impl Request {
+    /// After a recompute-style preemption, generated tokens must be
+    /// re-prefetched: reset prefill progress (prompt + decoded become the new
+    /// prefill span) but keep decode stats.
+    pub fn preemptions_apply(&mut self) {
+        self.phase = Phase::Prefill;
+        self.prefill_done_tokens = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcached::Kvcached;
+    use crate::model::spec::{ModelId, ModelSpec, SizeClass};
+
+    fn nano_spec() -> ModelSpec {
+        ModelSpec {
+            id: ModelId(0),
+            name: "test-1b".into(),
+            class: SizeClass::B1to3,
+            params: 1_000_000_000,
+            n_layers: 16,
+            n_heads: 32,
+            n_kv_heads: 8,
+            d_head: 64,
+            dtype_bytes: 2,
+            tp: 1,
+        }
+    }
+
+    /// Single-GPU allocator over one Kvcached.
+    struct OneGpu<'a> {
+        kvc: &'a mut Kvcached,
+        model: ModelId,
+    }
+
+    impl<'a> KvAlloc for OneGpu<'a> {
+        fn alloc(&mut self) -> Result<GroupBlock, KvError> {
+            Ok(vec![self.kvc.alloc_block(self.model)?])
+        }
+        fn free(&mut self, b: GroupBlock) {
+            for r in b {
+                self.kvc.free_block(r).unwrap();
+            }
+        }
+    }
+
+    fn setup(capacity_mb: u64) -> (SimEngine, Kvcached) {
+        let spec = nano_spec();
+        let mut kvc = Kvcached::new(capacity_mb * 1024 * 1024, 2 * 1024 * 1024, 0);
+        let block_bytes = spec.kv_bytes_per_token() * BLOCK_TOKENS as u64;
+        kvc.register_kv(spec.id, block_bytes, u32::MAX);
+        (SimEngine::new(spec), kvc)
+    }
+
+    fn req(id: u64, prompt: u32, out: u32) -> Request {
+        Request::new(id, ModelId(0), 0.0, prompt, out, 5.0, 0.5)
+    }
+
+    #[test]
+    fn request_completes_with_correct_latencies() {
+        let (mut e, mut kvc) = setup(1024);
+        e.admit(req(1, 100, 5));
+        let perf = GpuPerf::default();
+        let mut now = 0.0;
+        let mut comps = Vec::new();
+        for _ in 0..50 {
+            let mut kv = OneGpu { kvc: &mut kvc, model: ModelId(0) };
+            let o = e.step(now, &perf, &mut kv);
+            now += o.duration;
+            comps.extend(o.completions);
+            if !e.has_work() {
+                break;
+            }
+        }
+        assert_eq!(comps.len(), 1);
+        let c = &comps[0];
+        assert!(c.ttft > 0.0 && c.ttft.is_finite());
+        assert!(c.tpot > 0.0 && c.tpot.is_finite());
+        assert_eq!(c.output_tokens, 5);
+        // All KV released.
+        assert_eq!(kvc.kv_used_blocks(ModelId(0)), 0);
+        assert_eq!(e.held_blocks(), 0);
+    }
+
+    #[test]
+    fn chunked_prefill_spreads_over_iterations() {
+        let (mut e, mut kvc) = setup(1024);
+        e.admit(req(1, CHUNK_TOKENS * 3, 2));
+        let perf = GpuPerf::default();
+        let mut iters = 0;
+        let mut now = 0.0;
+        while e.has_work() && iters < 20 {
+            let mut kv = OneGpu { kvc: &mut kvc, model: ModelId(0) };
+            let o = e.step(now, &perf, &mut kv);
+            now += o.duration;
+            iters += 1;
+        }
+        assert!(iters >= 4, "prefill must take >=3 chunks + decode, got {iters}");
+    }
+
+    #[test]
+    fn batch_of_requests_all_complete() {
+        let (mut e, mut kvc) = setup(2048);
+        for i in 0..10 {
+            e.admit(req(i, 64, 8));
+        }
+        let perf = GpuPerf::default();
+        let mut now = 0.0;
+        let mut done = 0;
+        for _ in 0..500 {
+            let mut kv = OneGpu { kvc: &mut kvc, model: ModelId(0) };
+            let o = e.step(now, &perf, &mut kv);
+            now += o.duration;
+            done += o.completions.len();
+            if !e.has_work() {
+                break;
+            }
+        }
+        assert_eq!(done, 10);
+        assert_eq!(kvc.kv_used_blocks(ModelId(0)), 0);
+    }
+
+    #[test]
+    fn memory_pressure_triggers_preemption_not_deadlock() {
+        // 24 MiB = 12 pages = 48 blocks = 768 tokens of KV capacity; demand is
+        // 4 requests x 320 tokens = 1280 tokens, so pressure is guaranteed.
+        let (mut e, mut kvc) = setup(24);
+        for i in 0..4 {
+            e.admit(req(i, 256, 64));
+        }
+        let perf = GpuPerf::default();
+        let mut now = 0.0;
+        let mut done = 0;
+        let mut preempted = 0;
+        for _ in 0..30_000 {
+            let mut kv = OneGpu { kvc: &mut kvc, model: ModelId(0) };
+            let o = e.step(now, &perf, &mut kv);
+            now += o.duration;
+            done += o.completions.len();
+            preempted += o.preempted;
+            if !e.has_work() {
+                break;
+            }
+        }
+        assert_eq!(done, 4, "all requests must eventually finish");
+        assert!(preempted > 0, "workload must have triggered preemption");
+        assert_eq!(kvc.kv_used_blocks(ModelId(0)), 0);
+    }
+
+    #[test]
+    fn drain_returns_requests_and_frees_kv() {
+        let (mut e, mut kvc) = setup(1024);
+        for i in 0..3 {
+            e.admit(req(i, 200, 10));
+        }
+        let perf = GpuPerf::default();
+        for _ in 0..3 {
+            let mut kv = OneGpu { kvc: &mut kvc, model: ModelId(0) };
+            e.step(0.0, &perf, &mut kv);
+        }
+        let mut kv = OneGpu { kvc: &mut kvc, model: ModelId(0) };
+        let reqs = e.drain(&mut kv);
+        assert_eq!(reqs.len(), 3);
+        assert_eq!(kvc.kv_used_blocks(ModelId(0)), 0);
+        assert!(!e.has_work());
+        // Drained requests restart prefill from zero.
+        assert!(reqs.iter().all(|r| r.prefill_done_tokens == 0));
+    }
+
+    #[test]
+    fn active_kv_accounting_matches_tokens() {
+        let (mut e, mut kvc) = setup(1024);
+        e.admit(req(1, 32, 4));
+        let perf = GpuPerf::default();
+        let mut kv = OneGpu { kvc: &mut kvc, model: ModelId(0) };
+        e.step(0.0, &perf, &mut kv);
+        // After one step: 32 prompt tokens + 1 decoded resident.
+        assert_eq!(e.active_kv_tokens(), 33);
+        assert!(e.active_kv_bytes() > 0);
+    }
+}
+
+impl SimEngine {
+    /// Debug helper: (id, decoded_tokens) of the oldest running request.
+    pub fn debug_oldest(&self) -> Option<(u64, u32)> {
+        self.running.first().map(|r| (r.id.0, r.decoded_tokens))
+    }
+}

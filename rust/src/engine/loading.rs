@@ -1,0 +1,124 @@
+//! Model weight loading / activation latency model (paper SS5.3, Fig 10).
+//!
+//! Three strategies:
+//!   * `Naive` - full cold start: engine init + single-stream pageable
+//!     cudaMemcpyAsync to one GPU (the "tens of seconds" path).
+//!   * `PooledNaive` - reusable engine pool (no init) but single-stream copy.
+//!   * `Parallel` - Prism: engine pool + weights chunked across all node
+//!     GPUs' PCIe links in parallel, aggregated to the target over NVLink in
+//!     a streaming fashion (per-tensor granularity, ~30 MB buffers), so the
+//!     NVLink hop overlaps with PCIe and adds only a small tail.
+
+use crate::engine::perf::GpuPerf;
+
+/// Full engine (re)initialization: process spawn, CUDA context, virtual
+/// address-space reservation, distributed init. Paper: "tens of seconds"
+/// dominated by this when done naively.
+pub const ENGINE_INIT_SECONDS: f64 = 8.0;
+/// One-time virtual-space realignment when an engine from the pool adopts a
+/// model with a different KV layout (paper SS5.3).
+pub const REALIGN_SECONDS: f64 = 0.050;
+/// Streaming buffer per GPU for parallel loading.
+pub const STREAM_BUFFER_BYTES: u64 = 30 << 20;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoadStrategy {
+    Naive,
+    PooledNaive,
+    Parallel,
+}
+
+/// Seconds to make a model with `weight_bytes` (per target GPU) serve-ready.
+/// `node_gpus` = GPUs on the node usable as parallel PCIe lanes.
+pub fn activation_seconds(
+    perf: &GpuPerf,
+    strategy: LoadStrategy,
+    weight_bytes: u64,
+    node_gpus: u32,
+) -> f64 {
+    let w = weight_bytes as f64;
+    match strategy {
+        LoadStrategy::Naive => ENGINE_INIT_SECONDS + w / perf.pcie_stream_bw,
+        LoadStrategy::PooledNaive => REALIGN_SECONDS + w / perf.pcie_stream_bw,
+        LoadStrategy::Parallel => {
+            let lanes = node_gpus.max(1) as f64;
+            let pcie = w / (perf.pcie_stream_bw * lanes);
+            // NVLink aggregation is streamed/overlapped; only the final
+            // buffer flush is exposed, plus the link time for the last chunk.
+            let nvlink_tail = (STREAM_BUFFER_BYTES as f64 * lanes) / perf.nvlink_bw;
+            REALIGN_SECONDS + pcie.max(w / perf.nvlink_bw) + nvlink_tail
+        }
+    }
+}
+
+/// Migration switch-over latency (paper SS6.1/SS7.5): the source instance
+/// keeps serving while the target warms, so only the hand-off is exposed.
+/// With NVLink, weights + resident KV move at link speed (~20 ms for 8B).
+pub fn migration_switchover_seconds(perf: &GpuPerf, moved_bytes: u64, nvlink: bool) -> f64 {
+    if nvlink {
+        1e-3 + moved_bytes as f64 / perf.nvlink_bw
+    } else {
+        // Fallback: staged eviction + reactivation, but off the critical path;
+        // exposed switch-over is one streaming buffer.
+        1e-3 + (2 * STREAM_BUFFER_BYTES) as f64 / perf.pcie_stream_bw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::{table3_catalog, GB};
+
+    fn perf() -> GpuPerf {
+        GpuPerf::default()
+    }
+
+    #[test]
+    fn fig10_shape_small_models_subsecond() {
+        // Paper Fig 10: 1B-8B activate < 0.7 s, 14B ~1.3 s, 70B ~1.5 s with
+        // parallel loading on an 8-GPU node.
+        let cat = table3_catalog();
+        let p = perf();
+        let b1 = cat.iter().find(|m| m.name.contains("1b")).unwrap();
+        let b8 = cat.iter().find(|m| m.name.contains("8b")).unwrap();
+        let b14 = cat.iter().find(|m| m.name.contains("14b")).unwrap();
+        let b70 = cat.iter().find(|m| m.name == "llama-3.3-70b").unwrap();
+        let t1 = activation_seconds(&p, LoadStrategy::Parallel, b1.weight_bytes(), 8);
+        let t8 = activation_seconds(&p, LoadStrategy::Parallel, b8.weight_bytes(), 8);
+        let t14 = activation_seconds(&p, LoadStrategy::Parallel, b14.weight_bytes(), 8);
+        let t70 = activation_seconds(&p, LoadStrategy::Parallel, b70.weight_bytes_per_gpu() * 8, 8);
+        assert!(t1 < 0.7, "t1={t1}");
+        assert!(t8 < 0.7, "t8={t8}");
+        assert!(t14 < 1.5, "t14={t14}");
+        assert!(t70 < 2.5, "t70={t70}");
+        assert!(t1 < t8 && t8 < t14 && t14 < t70);
+    }
+
+    #[test]
+    fn naive_dominated_by_engine_init() {
+        let p = perf();
+        let t = activation_seconds(&p, LoadStrategy::Naive, 16 * GB, 8);
+        assert!(t > ENGINE_INIT_SECONDS);
+        // Engine pool removes the init cost.
+        let tp = activation_seconds(&p, LoadStrategy::PooledNaive, 16 * GB, 8);
+        assert!(t - tp > 0.9 * ENGINE_INIT_SECONDS);
+    }
+
+    #[test]
+    fn parallel_beats_single_stream() {
+        let p = perf();
+        let naive = activation_seconds(&p, LoadStrategy::PooledNaive, 28 * GB, 8);
+        let par = activation_seconds(&p, LoadStrategy::Parallel, 28 * GB, 8);
+        assert!(par < naive / 3.0, "par={par} naive={naive}");
+    }
+
+    #[test]
+    fn migration_fast_over_nvlink() {
+        let p = perf();
+        // ~20 ms for an 8B model + small KV (paper SS7.5).
+        let t = migration_switchover_seconds(&p, 16 * GB / 2 + GB, true);
+        assert!(t < 0.03, "t={t}");
+        let t2 = migration_switchover_seconds(&p, 16 * GB, false);
+        assert!(t2 < 0.01); // only the exposed switch-over, not the full copy
+    }
+}

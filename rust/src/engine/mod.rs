@@ -1,0 +1,10 @@
+//! Serving engines: the iteration-level execution model (chunked prefill +
+//! continuous batching), the analytic GPU perf model, and the model
+//! activation latency model (engine pools + parallel weight loading).
+
+pub mod engine;
+pub mod loading;
+pub mod perf;
+
+pub use engine::{KvAlloc, SimEngine, StepOutcome, BLOCK_TOKENS, CHUNK_TOKENS};
+pub use perf::GpuPerf;

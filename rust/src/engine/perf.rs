@@ -1,0 +1,159 @@
+//! Analytic GPU performance model (H100-80G default).
+//!
+//! The paper's SLO dynamics are governed by queueing + memory contention, not
+//! kernel micro-detail, so a roofline model suffices (DESIGN.md SS2):
+//!   * prefill is compute-bound:   t = tokens * 2P / (eff_mxu * peak_flops)
+//!   * decode is bandwidth-bound:  t = (weights + active KV) / (eff * hbm_bw)
+//!     amortized over the batch, with a flops floor for large batches
+//!   * a fixed per-iteration framework overhead (kernel launch, scheduler)
+//!
+//! Calibrated so an 8B model yields ~2-6k prefill tok/s and ~15-40 ms TPOT at
+//! moderate batch - the regime the paper's SLO scales (0.04-0.13 s TTFT,
+//! 5-51 ms TPOT measured on dedicated H100s) imply.
+
+use crate::model::spec::ModelSpec;
+
+#[derive(Debug, Clone)]
+pub struct GpuPerf {
+    /// Peak dense bf16 throughput per GPU, FLOP/s.
+    pub peak_flops: f64,
+    /// HBM bandwidth per GPU, bytes/s.
+    pub hbm_bw: f64,
+    /// Achievable fraction of peak for prefill GEMMs.
+    pub eff_compute: f64,
+    /// Achievable fraction of HBM bandwidth for decode.
+    pub eff_mem: f64,
+    /// Fixed per-iteration overhead, seconds (launch + python/driver).
+    pub iter_overhead: f64,
+    /// Host->GPU copy bandwidth for one pageable stream, bytes/s.
+    pub pcie_stream_bw: f64,
+    /// Aggregate NVLink bandwidth, bytes/s.
+    pub nvlink_bw: f64,
+}
+
+impl Default for GpuPerf {
+    fn default() -> Self {
+        GpuPerf {
+            peak_flops: 990e12, // H100 SXM bf16 dense
+            hbm_bw: 3.35e12,
+            eff_compute: 0.45,
+            eff_mem: 0.65,
+            iter_overhead: 4e-3,
+            pcie_stream_bw: 25e9, // pageable cudaMemcpyAsync, single target GPU
+            nvlink_bw: 600e9,
+        }
+    }
+}
+
+impl GpuPerf {
+    /// A100-40G variant (used by the Fig 14 overhead experiment).
+    pub fn a100_40g() -> Self {
+        GpuPerf {
+            peak_flops: 312e12,
+            hbm_bw: 1.55e12,
+            ..Default::default()
+        }
+    }
+
+    /// Chunked-prefill speed in tokens/s for `m` (the paper's c_i).
+    /// TP splits the GEMMs across the group.
+    pub fn prefill_tokens_per_sec(&self, m: &ModelSpec) -> f64 {
+        let flops_per_token = 2.0 * m.params as f64;
+        self.eff_compute * self.peak_flops * m.tp as f64 / flops_per_token
+    }
+
+    /// Time for one engine iteration that prefills `chunk_tokens` and decodes
+    /// one token for each of `decode_batch` requests holding `kv_bytes` of
+    /// active KV on this GPU.
+    pub fn iteration_seconds(
+        &self,
+        m: &ModelSpec,
+        chunk_tokens: u32,
+        decode_batch: u32,
+        kv_bytes: u64,
+    ) -> f64 {
+        let mut t = self.iter_overhead;
+        if chunk_tokens > 0 {
+            t += chunk_tokens as f64 / self.prefill_tokens_per_sec(m);
+        }
+        if decode_batch > 0 {
+            // One pass over resident weights + active KV, amortized over batch.
+            let bytes = m.weight_bytes_per_gpu() as f64 + kv_bytes as f64;
+            let t_mem = bytes / (self.eff_mem * self.hbm_bw);
+            // Flops floor: batch x 2P / peak (per GPU of the TP group).
+            let t_flops = decode_batch as f64 * 2.0 * m.params as f64
+                / (self.eff_compute * self.peak_flops * m.tp as f64);
+            t += t_mem.max(t_flops);
+        }
+        t
+    }
+
+    /// Pure decode TPOT for a batch (convenience for SLO baseline setting).
+    pub fn decode_tpot(&self, m: &ModelSpec, batch: u32, kv_bytes: u64) -> f64 {
+        self.iteration_seconds(m, 0, batch, kv_bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::{table3_catalog, SizeClass};
+
+    fn model_8b() -> ModelSpec {
+        table3_catalog()
+            .into_iter()
+            .find(|m| m.name == "llama-3.1-8b-ft00")
+            .unwrap()
+    }
+
+    #[test]
+    fn prefill_speed_realistic_for_8b() {
+        let p = GpuPerf::default();
+        let c = p.prefill_tokens_per_sec(&model_8b());
+        // H100 8B prefill: ~20-30k tokens/s region.
+        assert!(c > 10_000.0 && c < 60_000.0, "c={c}");
+    }
+
+    #[test]
+    fn decode_tpot_realistic_for_8b() {
+        let p = GpuPerf::default();
+        let m = model_8b();
+        let t1 = p.decode_tpot(&m, 1, 0);
+        // Dedicated GPU, tiny batch: ~10-15ms (weights pass + overhead).
+        assert!(t1 > 0.005 && t1 < 0.03, "t1={t1}");
+        // Bigger batch with KV grows latency but sublinearly.
+        let t32 = p.decode_tpot(&m, 32, 8 << 30);
+        assert!(t32 > t1 && t32 < 10.0 * t1, "t32={t32}");
+    }
+
+    #[test]
+    fn tp_speeds_up_prefill_and_decode() {
+        let p = GpuPerf::default();
+        let cat = table3_catalog();
+        let b70 = cat.iter().find(|m| m.name == "llama-3.3-70b").unwrap();
+        let mut solo = b70.clone();
+        solo.tp = 1;
+        assert!(p.prefill_tokens_per_sec(b70) > 4.0 * p.prefill_tokens_per_sec(&solo));
+        assert!(p.decode_tpot(b70, 1, 0) < p.decode_tpot(&solo, 1, 0));
+    }
+
+    #[test]
+    fn iteration_combines_prefill_and_decode() {
+        let p = GpuPerf::default();
+        let m = model_8b();
+        let pre = p.iteration_seconds(&m, 512, 0, 0);
+        let dec = p.iteration_seconds(&m, 0, 4, 1 << 30);
+        let both = p.iteration_seconds(&m, 512, 4, 1 << 30);
+        assert!(both > pre.max(dec));
+        assert!(both < pre + dec); // overhead charged once
+    }
+
+    #[test]
+    fn small_models_much_faster() {
+        let p = GpuPerf::default();
+        let cat = table3_catalog();
+        let b1 = cat.iter().find(|m| m.class == SizeClass::B1to3).unwrap();
+        let b8 = model_8b();
+        assert!(p.decode_tpot(b1, 1, 0) < p.decode_tpot(&b8, 1, 0) / 2.0);
+    }
+}

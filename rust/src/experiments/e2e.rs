@@ -1,0 +1,438 @@
+//! End-to-end simulator experiments (Tab 2, Fig 5, 7, 8, 9, 11, 15, SS7.5).
+
+use crate::bench::harness::Table;
+use crate::metrics::RunMetrics;
+use crate::model::spec::{catalog_subset, table3_catalog, ModelId, ModelSpec};
+use crate::sim::{PolicyKind, SimConfig, Simulator};
+use crate::trace::gen::{generate, TraceGenConfig};
+use crate::trace::Trace;
+
+/// Remap a spec list so ids align with trace model indices.
+pub fn assign_ids(mut specs: Vec<ModelSpec>) -> Vec<ModelSpec> {
+    for (i, s) in specs.iter_mut().enumerate() {
+        s.id = ModelId(i as u32);
+    }
+    specs
+}
+
+/// The 8-models-on-2-GPUs setup of SS7.2. All 7-8B models (the paper's
+/// contended regime): 8 x ~15 GB of weights against 160 GB of GPU memory
+/// leaves real KV pressure, which is what differentiates the policies.
+fn eight_models() -> Vec<ModelSpec> {
+    let cat = table3_catalog();
+    let v: Vec<ModelSpec> = cat
+        .iter()
+        .filter(|m| m.name.contains("8b") || m.name.contains("7b"))
+        .take(8)
+        .cloned()
+        .collect();
+    assign_ids(v)
+}
+
+fn run_once(
+    policy: PolicyKind,
+    n_gpus: u32,
+    slo_scale: f64,
+    specs: &[ModelSpec],
+    trace: &Trace,
+) -> RunMetrics {
+    let mut cfg = SimConfig::new(policy, n_gpus);
+    cfg.slo_scale = slo_scale;
+    let sim = Simulator::new(cfg, specs.to_vec());
+    sim.run(trace).0
+}
+
+fn traces_for_e2e(quick: bool, n_models: usize) -> Vec<(&'static str, Trace)> {
+    let dur = if quick { 240.0 } else { 900.0 };
+    vec![
+        ("hyperbolic", generate(&TraceGenConfig::hyperbolic_like(n_models, dur, 21))),
+        ("arena-chat", generate(&TraceGenConfig::arena_chat_like(n_models, dur, 22))),
+    ]
+}
+
+/// Table 2: MuxServe vs MuxServe++ - the kvcached delta. "MuxServe" is
+/// modelled as space sharing with static per-model KV quotas (no elastic
+/// memory); MuxServe++ shares the KV pool through kvcached.
+pub fn tab2_muxserve(quick: bool) -> Vec<Table> {
+    let cat = table3_catalog();
+    let specs = assign_ids(
+        cat.iter().filter(|m| m.name.contains("8b")).take(3).cloned().collect(),
+    );
+    // Three 8B models at 199/262/22 req/min for 10 minutes (paper setup);
+    // long generations make the KV quota the binding constraint.
+    let dur = if quick { 120.0 } else { 600.0 };
+    let rates = [199.0 / 60.0, 262.0 / 60.0, 22.0 / 60.0];
+    let mut rng = crate::util::rng::Rng::new(5);
+    let mut events = Vec::new();
+    for (m, &rate) in rates.iter().enumerate() {
+        let mut t = 0.0;
+        loop {
+            t += rng.exp(rate);
+            if t >= dur {
+                break;
+            }
+            events.push(crate::trace::TraceEvent {
+                t,
+                model_idx: m,
+                prompt_tokens: 600 + rng.below(1400) as u32,
+                output_tokens: 300 + rng.below(900) as u32,
+            });
+        }
+    }
+    events.sort_by(|a, b| a.t.partial_cmp(&b.t).unwrap());
+    let trace = Trace { name: "tab2".into(), n_models: 3, events, duration: dur };
+
+    let mut t = Table::new(
+        "Table 2: MuxServe (static quotas) vs MuxServe++ (kvcached)",
+        &["system", "mean_e2e_s", "p95_e2e_s", "req_tput", "tok_tput",
+          "mean_ttft_s", "p95_ttft_s", "mean_tpot_ms", "p95_tpot_ms"],
+    );
+    for (name, policy) in [
+        ("muxserve", PolicyKind::StaticPartition),
+        ("muxserve++", PolicyKind::MuxServePlusPlus),
+    ] {
+        let m = run_once(policy, 1, 8.0, &specs, &trace);
+        t.row(vec![
+            name.into(),
+            format!("{:.2}", m.mean_e2e()),
+            format!("{:.2}", m.p95_e2e()),
+            format!("{:.2}", m.req_throughput()),
+            format!("{:.0}", m.token_throughput()),
+            format!("{:.3}", m.mean_ttft()),
+            format!("{:.3}", m.p95_ttft()),
+            format!("{:.1}", m.mean_tpot() * 1e3),
+            format!("{:.1}", m.p95_tpot() * 1e3),
+        ]);
+    }
+    vec![t]
+}
+
+/// Fig 5: SLO attainment vs rate scale / SLO scale / #GPUs, 2 traces, all
+/// five systems.
+pub fn fig5_end_to_end(quick: bool) -> Vec<Table> {
+    let specs = eight_models();
+    let mut out = Vec::new();
+
+    // Row 1: attainment vs rate scale (8 models, 2 GPUs).
+    let rate_scales: &[f64] = if quick { &[1.0, 4.0] } else { &[0.5, 1.0, 2.0, 4.0, 8.0] };
+    for (tname, trace) in traces_for_e2e(quick, specs.len()) {
+        let mut t = Table::new(
+            &format!("Fig 5 row1 ({tname}): attainment vs rate scale, 8 models / 2 GPUs"),
+            &["rate_scale", "system", "ttft_att", "tpot_att"],
+        );
+        for &rs in rate_scales {
+            let scaled = trace.scale_rate(rs);
+            for p in PolicyKind::all() {
+                let m = run_once(p, 2, 8.0, &specs, &scaled);
+                t.row(vec![
+                    format!("{rs}"),
+                    p.name().into(),
+                    format!("{:.3}", m.ttft_attainment()),
+                    format!("{:.3}", m.tpot_attainment()),
+                ]);
+            }
+        }
+        out.push(t);
+    }
+
+    // Row 2: attainment vs SLO scale.
+    let slo_scales: &[f64] = if quick { &[2.0, 16.0] } else { &[1.0, 2.0, 4.0, 8.0, 16.0, 32.0] };
+    for (tname, trace) in traces_for_e2e(quick, specs.len()) {
+        let scaled = trace.scale_rate(2.0);
+        let mut t = Table::new(
+            &format!("Fig 5 row2 ({tname}): attainment vs SLO scale, 8 models / 2 GPUs"),
+            &["slo_scale", "system", "ttft_att", "tpot_att"],
+        );
+        for &ss in slo_scales {
+            for p in PolicyKind::all() {
+                let m = run_once(p, 2, ss, &specs, &scaled);
+                t.row(vec![
+                    format!("{ss}"),
+                    p.name().into(),
+                    format!("{:.3}", m.ttft_attainment()),
+                    format!("{:.3}", m.tpot_attainment()),
+                ]);
+            }
+        }
+        out.push(t);
+    }
+
+    // Row 3: attainment vs #GPUs (18 models, 1B-8B).
+    let specs18 = assign_ids(
+        catalog_subset(30)
+            .into_iter()
+            .filter(|m| !m.is_tp() && m.params < 9_000_000_000)
+            .take(18)
+            .collect(),
+    );
+    let gpu_counts: &[u32] = if quick { &[2, 4] } else { &[1, 2, 3, 4, 5, 6, 7, 8] };
+    for (tname, trace) in traces_for_e2e(quick, specs18.len()) {
+        let mut t = Table::new(
+            &format!("Fig 5 row3 ({tname}): attainment vs #GPUs, 18 models"),
+            &["gpus", "system", "ttft_att", "tpot_att"],
+        );
+        for &g in gpu_counts {
+            for p in PolicyKind::all() {
+                let m = run_once(p, g, 8.0, &specs18, &trace);
+                t.row(vec![
+                    g.to_string(),
+                    p.name().into(),
+                    format!("{:.3}", m.ttft_attainment()),
+                    format!("{:.3}", m.tpot_attainment()),
+                ]);
+            }
+        }
+        out.push(t);
+    }
+    out
+}
+
+/// Fig 7: global placement ablation (8 models / 2 GPUs).
+pub fn fig7_placement_ablation(quick: bool) -> Vec<Table> {
+    let specs = eight_models();
+    let dur = if quick { 240.0 } else { 900.0 };
+    let trace = generate(&TraceGenConfig::arena_chat_like(specs.len(), dur, 33)).scale_rate(2.0);
+    let mut t = Table::new(
+        "Fig 7a: global placement scheduler on/off",
+        &["config", "ttft_att", "tpot_att", "migrations"],
+    );
+    let mut tl_tables = Vec::new();
+    for (name, tau) in [("global-sched-on", 0.2), ("global-sched-off", f64::INFINITY)] {
+        let mut cfg = SimConfig::new(PolicyKind::Prism, 2);
+        cfg.slo_scale = 8.0;
+        cfg.tau = tau; // infinite tau = never migrate = no global scheduling
+        cfg.sample_dt = 10.0;
+        let sim = Simulator::new(cfg, specs.clone());
+        let (m, tl) = sim.run(&trace);
+        t.row(vec![
+            name.into(),
+            format!("{:.3}", m.ttft_attainment()),
+            format!("{:.3}", m.tpot_attainment()),
+            m.migrations.to_string(),
+        ]);
+        let mut tt = Table::new(
+            &format!("Fig 7b ({name}): per-GPU free KV over time"),
+            &["t", "gpu0_free_gb", "gpu1_free_gb"],
+        );
+        for s in &tl {
+            tt.row(vec![
+                format!("{:.0}", s.t),
+                format!("{:.1}", s.gpus[0].3 as f64 / 1e9),
+                format!("{:.1}", s.gpus.get(1).map(|g| g.3).unwrap_or(0) as f64 / 1e9),
+            ]);
+        }
+        tl_tables.push(tt);
+    }
+    let mut out = vec![t];
+    out.extend(tl_tables);
+    out
+}
+
+/// Fig 8: GPU-local arbitration ablation - two models, model1 SLO scale
+/// fixed at 8, model2's scale swept; local scheduling on/off.
+pub fn fig8_arbitration_ablation(quick: bool) -> Vec<Table> {
+    let cat = table3_catalog();
+    // Model 0: an 8B with long prompts; model 1: a small 1B with strict SLOs.
+    let m0 = cat.iter().find(|m| m.name.contains("8b")).unwrap().clone();
+    let m1 = cat[0].clone();
+    let specs = assign_ids(vec![m0, m1]);
+    let dur = if quick { 180.0 } else { 600.0 };
+    // Model 0: long prompts, relaxed SLO. Model 1: short prompts, strict SLO.
+    let mut rng = crate::util::rng::Rng::new(9);
+    let mut events = Vec::new();
+    let mut t = 0.0;
+    while t < dur {
+        t += rng.exp(2.0);
+        events.push(crate::trace::TraceEvent {
+            t,
+            model_idx: 0,
+            prompt_tokens: 800 + rng.below(800) as u32,
+            output_tokens: 150 + rng.below(150) as u32,
+        });
+    }
+    t = 0.0;
+    while t < dur {
+        t += rng.exp(3.0);
+        events.push(crate::trace::TraceEvent {
+            t,
+            model_idx: 1,
+            prompt_tokens: 60 + rng.below(100) as u32,
+            output_tokens: 30 + rng.below(60) as u32,
+        });
+    }
+    events.sort_by(|a, b| a.t.partial_cmp(&b.t).unwrap());
+    let trace = Trace { name: "fig8".into(), n_models: 2, events, duration: dur };
+
+    let scales: &[f64] = if quick { &[1.0, 4.0] } else { &[1.0, 2.0, 4.0, 6.0, 8.0] };
+    let mut table = Table::new(
+        "Fig 8a: TTFT attainment vs model2 SLO scale (local sched on/off)",
+        &["m2_slo_scale", "config", "m1_ttft_att", "m2_ttft_att"],
+    );
+    for &s2 in scales {
+        for (name, policy) in [
+            ("local-on", PolicyKind::Prism),
+            ("local-off", PolicyKind::MuxServePlusPlus), // FCFS, no slack awareness
+        ] {
+            let mut cfg = SimConfig::new(policy, 1);
+            cfg.slo_scale = 1.0; // per-model scales set below via slos
+            let mut sim = Simulator::new(cfg, specs.clone());
+            // Override SLOs: model0 scale 8, model1 scale s2.
+            let (t0, p0) = sim.slo_of(0);
+            let (t1, p1) = sim.slo_of(1);
+            sim.set_slos(vec![(t0 * 8.0, p0 * 8.0), (t1 * s2, p1 * s2)]);
+            let (m, _) = sim.run(&trace);
+            table.row(vec![
+                format!("{s2}"),
+                name.into(),
+                format!("{:.3}", m.ttft_attainment_for(ModelId(0))),
+                format!("{:.3}", m.ttft_attainment_for(ModelId(1))),
+            ]);
+        }
+    }
+    vec![table]
+}
+
+/// Fig 9: large scale - 58 models, TP for big ones, up to 32 GPUs.
+pub fn fig9_large_scale(quick: bool) -> Vec<Table> {
+    let specs = assign_ids(if quick {
+        catalog_subset(16)
+    } else {
+        table3_catalog()
+    });
+    let dur = if quick { 180.0 } else { 600.0 };
+    let trace = generate(&TraceGenConfig::arena_chat_like(specs.len(), dur, 55));
+    let gpus: &[u32] = if quick { &[8] } else { &[8, 16, 24, 32] };
+    let policies = PolicyKind::all();
+
+    let mut a = Table::new(
+        "Fig 9a: attainment vs #GPUs (58 models, TP 32B/70B)",
+        &["gpus", "system", "ttft_att", "tpot_att"],
+    );
+    let mut best: std::collections::BTreeMap<&str, u32> = Default::default();
+    for &g in gpus {
+        for p in policies {
+            let m = run_once(p, g, 5.0, &specs, &trace);
+            let ta = m.ttft_attainment();
+            a.row(vec![
+                g.to_string(),
+                p.name().into(),
+                format!("{:.3}", ta),
+                format!("{:.3}", m.tpot_attainment()),
+            ]);
+            if ta >= 0.99 && !best.contains_key(p.name()) {
+                best.insert(p.name(), g);
+            }
+        }
+    }
+    let mut b = Table::new(
+        "Fig 9b: GPUs needed for 99% TTFT attainment",
+        &["system", "gpus_for_99pct"],
+    );
+    for p in policies {
+        b.row(vec![
+            p.name().into(),
+            best.get(p.name()).map(|g| g.to_string()).unwrap_or_else(|| format!(">{}", gpus.last().unwrap())),
+        ]);
+    }
+    vec![a, b]
+}
+
+/// Fig 11: production shadow replay - throughput and revenue per GPU,
+/// before (static partition) vs after (Prism).
+pub fn fig11_production(quick: bool) -> Vec<Table> {
+    let specs = assign_ids(
+        catalog_subset(30)
+            .into_iter()
+            .filter(|m| !m.is_tp())
+            .take(12)
+            .collect(),
+    );
+    let dur = if quick { 240.0 } else { 1200.0 };
+    let n_gpus = 4;
+    let mut t = Table::new(
+        "Fig 11: shadow replay - per-GPU throughput and revenue, before/after Prism",
+        &["company", "system", "tok_tput_per_gpu", "revenue_per_gpu", "ttft_att"],
+    );
+    for (company, seed, scale) in [("A", 61u64, 2.0), ("B", 62, 1.0)] {
+        let trace = generate(&TraceGenConfig::hyperbolic_like(specs.len(), dur, seed))
+            .scale_rate(scale);
+        for (label, p) in [("before", PolicyKind::StaticPartition), ("after", PolicyKind::Prism)] {
+            let m = run_once(p, n_gpus, 10.0, &specs, &trace);
+            t.row(vec![
+                company.into(),
+                label.into(),
+                format!("{:.0}", m.token_throughput() / n_gpus as f64),
+                // $0.5 in / $2 out per 1M tokens (typical published rates).
+                format!("{:.4}", m.revenue_per_gpu(0.0005, 0.002, n_gpus as usize)),
+                format!("{:.3}", m.ttft_attainment()),
+            ]);
+        }
+    }
+    vec![t]
+}
+
+/// Fig 15: sensitivity to the idle-eviction threshold and monitor window.
+pub fn fig15_sensitivity(quick: bool) -> Vec<Table> {
+    let specs = eight_models();
+    let dur = if quick { 240.0 } else { 900.0 };
+    let trace = generate(&TraceGenConfig::hyperbolic_like(specs.len(), dur, 71)).scale_rate(2.0);
+
+    let thresholds: &[f64] = if quick { &[10.0, 45.0, 120.0] } else { &[10.0, 20.0, 45.0, 60.0, 80.0, 120.0] };
+    let mut a = Table::new(
+        "Fig 15a: mean TTFT vs idle eviction threshold",
+        &["threshold_s", "mean_ttft_s", "evictions"],
+    );
+    for &th in thresholds {
+        let mut cfg = SimConfig::new(PolicyKind::Prism, 2);
+        cfg.slo_scale = 8.0;
+        cfg.eviction.idle_threshold = th;
+        let sim = Simulator::new(cfg, specs.clone());
+        let (m, _) = sim.run(&trace);
+        a.row(vec![
+            format!("{th}"),
+            format!("{:.3}", m.mean_ttft()),
+            m.evictions.to_string(),
+        ]);
+    }
+
+    let windows: &[f64] = if quick { &[10.0, 60.0, 300.0] } else { &[10.0, 30.0, 60.0, 120.0, 300.0] };
+    let mut b = Table::new(
+        "Fig 15b: mean TTFT vs monitoring window",
+        &["window_s", "mean_ttft_s", "migrations"],
+    );
+    for &w in windows {
+        let mut cfg = SimConfig::new(PolicyKind::Prism, 2);
+        cfg.slo_scale = 8.0;
+        cfg.monitor_window = w;
+        let sim = Simulator::new(cfg, specs.clone());
+        let (m, _) = sim.run(&trace);
+        b.row(vec![
+            format!("{w}"),
+            format!("{:.3}", m.mean_ttft()),
+            m.migrations.to_string(),
+        ]);
+    }
+    vec![a, b]
+}
+
+/// SS7.5: activation and migration frequency over a 10-minute window.
+pub fn overhead_frequency(quick: bool) -> Vec<Table> {
+    let specs = eight_models();
+    let dur = if quick { 240.0 } else { 600.0 };
+    let trace = generate(&TraceGenConfig::novita_like(specs.len(), dur, 81)).scale_rate(2.0);
+    let mut cfg = SimConfig::new(PolicyKind::Prism, 2);
+    cfg.slo_scale = 8.0;
+    let sim = Simulator::new(cfg, specs.clone());
+    let (m, _) = sim.run(&trace);
+    let mut t = Table::new(
+        "SS7.5: activation/migration frequency (8 models / 2 GPUs)",
+        &["metric", "value"],
+    );
+    t.row(vec!["window_s".into(), format!("{dur}")]);
+    t.row(vec!["activations".into(), m.activations.to_string()]);
+    t.row(vec!["evictions".into(), m.evictions.to_string()]);
+    t.row(vec!["migrations".into(), m.migrations.to_string()]);
+    t.row(vec!["preemptions".into(), m.preemptions.to_string()]);
+    t.row(vec!["ttft_att".into(), format!("{:.3}", m.ttft_attainment())]);
+    vec![t]
+}

@@ -1,0 +1,266 @@
+//! Trace-analysis figures (Tab 1, Fig 1, 2, 6, 12, 13).
+
+use crate::bench::harness::Table;
+use crate::model::spec::{ModelId, ModelSpec};
+use crate::sim::{PolicyKind, SimConfig, Simulator};
+use crate::trace::gen::{generate, TraceGenConfig};
+use crate::trace::{stats, Trace};
+use crate::util::stats::{mean, percentile};
+
+pub fn four_traces(quick: bool) -> Vec<(TraceGenConfig, Trace)> {
+    let dur = if quick { 1800.0 } else { 6.0 * 3600.0 };
+    let cfgs = vec![
+        TraceGenConfig::hyperbolic_like(24, dur, 10),
+        TraceGenConfig::novita_like(16, dur, 11),
+        TraceGenConfig::arena_battle_like(if quick { 32 } else { 129 }, dur, 12),
+        TraceGenConfig::arena_chat_like(if quick { 32 } else { 84 }, dur, 13),
+    ];
+    cfgs.into_iter()
+        .map(|c| {
+            let t = generate(&c);
+            (c, t)
+        })
+        .collect()
+}
+
+/// Table 1: trace summary (+ measured bursty-group statistics).
+pub fn tab1_trace_summary(quick: bool) -> Vec<Table> {
+    let mut t = Table::new(
+        "Table 1: synthetic production traces (paper: Hyperbolic/Novita/Arena)",
+        &["trace", "models", "hours", "requests", "active%", "switches/hr"],
+    );
+    for (cfg, tr) in four_traces(quick) {
+        t.row(vec![
+            cfg.name.clone(),
+            tr.n_models.to_string(),
+            format!("{:.1}", tr.duration / 3600.0),
+            tr.events.len().to_string(),
+            format!("{:.0}", 100.0 * stats::mean_active_fraction(&tr, 120.0)),
+            format!("{:.0}", stats::switches_per_hour(&tr, 120.0)),
+        ]);
+    }
+    vec![t]
+}
+
+/// Fig 1: model-level activity heatmap + request-level dynamics (data rows).
+pub fn fig1_dynamics(quick: bool) -> Vec<Table> {
+    let dur = if quick { 3600.0 } else { 6.0 * 3600.0 };
+    let tr = generate(&TraceGenConfig::novita_like(16, dur, 42));
+
+    // (a) activity matrix, 3-minute cells.
+    let cells = stats::activity_matrix(&tr, 180.0);
+    let mut a = Table::new(
+        "Fig 1a: active-model cells (3-min, 1=active)",
+        &["model", "cells"],
+    );
+    for (m, row) in cells.iter().enumerate() {
+        a.row(vec![
+            format!("m{m}"),
+            row.iter().map(|&b| if b { '1' } else { '0' }).collect(),
+        ]);
+    }
+
+    // (b) normalized per-model rates over a 2-hour window, 2-min buckets.
+    let zoom = tr.window(0.0, dur.min(7200.0));
+    let rows = stats::normalized_rate_rows(&zoom, 120.0);
+    let mut b = Table::new(
+        "Fig 1b: normalized request rates (2-min buckets)",
+        &["model", "series"],
+    );
+    for (m, row) in rows.iter().enumerate() {
+        b.row(vec![
+            format!("m{m}"),
+            row.iter().map(|v| format!("{v:.2}")).collect::<Vec<_>>().join("|"),
+        ]);
+    }
+
+    // (c) 5-minute zoom of the two most bursty models.
+    let cvs = stats::per_model_rate_cv(&tr, 60.0);
+    let mut order: Vec<usize> = (0..cvs.len()).collect();
+    order.sort_by(|&x, &y| cvs[y].partial_cmp(&cvs[x]).unwrap());
+    let m1 = order.first().copied().unwrap_or(0);
+    let m2 = order.get(1).copied().unwrap_or(1);
+    let mut c = Table::new(
+        "Fig 1c: 5-min zoom, two bursty models (10-s buckets, shared norm)",
+        &["bucket_t", "model_a", "model_b"],
+    );
+    let z = tr.window(0.0, f64::min(300.0, dur));
+    let mut ra = vec![0.0; 30];
+    let mut rb = vec![0.0; 30];
+    for e in &z.events {
+        let b_ = ((e.t / 10.0) as usize).min(29);
+        if e.model_idx == m1 {
+            ra[b_] += 1.0;
+        } else if e.model_idx == m2 {
+            rb[b_] += 1.0;
+        }
+    }
+    let mx = ra.iter().chain(rb.iter()).cloned().fold(1.0, f64::max);
+    for i in 0..30 {
+        c.row(vec![
+            format!("{}", i * 10),
+            format!("{:.2}", ra[i] / mx),
+            format!("{:.2}", rb[i] / mx),
+        ]);
+    }
+    vec![a, b, c]
+}
+
+/// Two-model burst/interleave segment used by Fig 2 and Fig 6.
+pub fn two_model_segment(quick: bool) -> (Trace, Vec<ModelSpec>) {
+    let dur = if quick { 120.0 } else { 300.0 };
+    // Interleaved phase then a concentrated burst from model 0 (Fig 1c shape).
+    let mut events = Vec::new();
+    let mut rng = crate::util::rng::Rng::new(77);
+    let mut t = 0.0;
+    while t < dur * 0.6 {
+        t += rng.exp(1.2);
+        let m = if rng.bool(0.5) { 0 } else { 1 };
+        events.push(crate::trace::TraceEvent {
+            t,
+            model_idx: m,
+            prompt_tokens: 150 + rng.below(400) as u32,
+            output_tokens: 60 + rng.below(200) as u32,
+        });
+    }
+    while t < dur {
+        t += rng.exp(6.0); // model-0 burst
+        events.push(crate::trace::TraceEvent {
+            t,
+            model_idx: 0,
+            prompt_tokens: 200 + rng.below(600) as u32,
+            output_tokens: 100 + rng.below(300) as u32,
+        });
+    }
+    events.retain(|e| e.t < dur);
+    let trace = Trace { name: "fig1c-seg".into(), n_models: 2, events, duration: dur };
+    let cat = crate::model::spec::table3_catalog();
+    let eights: Vec<ModelSpec> = cat.iter().filter(|m| m.name.contains("8b")).take(2).cloned().collect();
+    let mut specs: Vec<ModelSpec> = eights; // two 8B models on one GPU
+    specs[0].id = ModelId(0);
+    specs[1].id = ModelId(1);
+    (trace, specs)
+}
+
+/// Fig 2: pure time sharing vs pure space sharing on the Fig 1(c) segment -
+/// memory usage and cumulative SLO violations over time.
+pub fn fig2_pure_sharing(quick: bool) -> Vec<Table> {
+    let (trace, specs) = two_model_segment(quick);
+    let mut out = Vec::new();
+    for policy in [PolicyKind::Qlm, PolicyKind::StaticPartition] {
+        let mut cfg = SimConfig::new(policy, 1);
+        cfg.sample_dt = 2.0;
+        cfg.slo_scale = 5.0;
+        cfg.control_epoch = 1.0;
+        let sim = Simulator::new(cfg, specs.clone());
+        let (m, tl) = sim.run(&trace);
+        let mut t = Table::new(
+            &format!(
+                "Fig 2 ({}): memory + cumulative TTFT violations (final attainment {:.2})",
+                policy.name(),
+                m.ttft_attainment()
+            ),
+            &["t", "weights_gb", "kv_used_gb", "cum_violations"],
+        );
+        for s in &tl {
+            let (w, _, used, _) = s.gpus[0];
+            t.row(vec![
+                format!("{:.0}", s.t),
+                format!("{:.1}", w as f64 / 1e9),
+                format!("{:.2}", used as f64 / 1e9),
+                s.cum_violations.to_string(),
+            ]);
+        }
+        out.push(t);
+    }
+    out
+}
+
+/// Fig 6: cross-model memory coordination - total KV and throughput under
+/// Prism vs static partition.
+pub fn fig6_memory_coordination(quick: bool) -> Vec<Table> {
+    let (trace, specs) = two_model_segment(quick);
+    let mut out = Vec::new();
+    for policy in [PolicyKind::Prism, PolicyKind::StaticPartition] {
+        let mut cfg = SimConfig::new(policy, 1);
+        cfg.sample_dt = 2.0;
+        cfg.slo_scale = 6.0;
+        cfg.control_epoch = 1.0;
+        let sim = Simulator::new(cfg, specs.clone());
+        let (m, tl) = sim.run(&trace);
+        let mut t = Table::new(
+            &format!(
+                "Fig 6 ({}): KV memory + throughput (token tput {:.0} tok/s busy)",
+                policy.name(),
+                m.token_throughput()
+            ),
+            &["t", "kv_used_gb", "inst_tok_tput"],
+        );
+        for s in &tl {
+            let used: u64 = s.gpus.iter().map(|g| g.2).sum();
+            t.row(vec![
+                format!("{:.0}", s.t),
+                format!("{:.2}", used as f64 / 1e9),
+                format!("{:.0}", s.inst_token_tput),
+            ]);
+        }
+        out.push(t);
+    }
+    out
+}
+
+/// Fig 12: switches/hour + day-over-day Pearson for the four traces.
+pub fn fig12_switches_pearson(quick: bool) -> Vec<Table> {
+    let mut a = Table::new("Fig 12a: model switches per hour", &["trace", "switches/hr"]);
+    let mut b = Table::new(
+        "Fig 12b: day-over-day Pearson correlation",
+        &["trace", "mean_r", "p90_|r|"],
+    );
+    for (cfg, tr) in four_traces(quick) {
+        a.row(vec![
+            cfg.name.clone(),
+            format!("{:.0}", stats::switches_per_hour(&tr, 120.0)),
+        ]);
+        let mut cfg2 = cfg.clone();
+        cfg2.seed += 1000; // "next day"
+        let tr2 = generate(&cfg2);
+        let cors = stats::day_over_day_pearson(&tr, &tr2, 600.0);
+        let abs: Vec<f64> = cors.iter().map(|c| c.abs()).collect();
+        b.row(vec![
+            cfg.name.clone(),
+            format!("{:.3}", mean(&cors)),
+            format!("{:.3}", percentile(&abs, 90.0)),
+        ]);
+    }
+    vec![a, b]
+}
+
+/// Fig 13: idle intervals/hour and request-rate CV per trace.
+pub fn fig13_volatility(quick: bool) -> Vec<Table> {
+    let mut a = Table::new(
+        "Fig 13a: idle intervals per hour (>10s), per-model distribution",
+        &["trace", "p50", "p90", "max"],
+    );
+    let mut b = Table::new(
+        "Fig 13b: CV of requests/min, per-model distribution",
+        &["trace", "p50", "p90", "frac_cv>1"],
+    );
+    for (cfg, tr) in four_traces(quick) {
+        let idles = stats::per_model_idle_intervals_per_hour(&tr, 10.0);
+        a.row(vec![
+            cfg.name.clone(),
+            format!("{:.1}", percentile(&idles, 50.0)),
+            format!("{:.1}", percentile(&idles, 90.0)),
+            format!("{:.1}", idles.iter().cloned().fold(0.0, f64::max)),
+        ]);
+        let cvs = stats::per_model_rate_cv(&tr, 60.0);
+        let frac = cvs.iter().filter(|&&c| c > 1.0).count() as f64 / cvs.len().max(1) as f64;
+        b.row(vec![
+            cfg.name.clone(),
+            format!("{:.2}", percentile(&cvs, 50.0)),
+            format!("{:.2}", percentile(&cvs, 90.0)),
+            format!("{:.2}", frac),
+        ]);
+    }
+    vec![a, b]
+}

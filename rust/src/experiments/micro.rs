@@ -1,0 +1,93 @@
+//! Micro experiments: Fig 10 (activation latency) and Fig 14 (elastic
+//! memory worst-case overhead).
+
+use crate::bench::harness::Table;
+use crate::engine::loading::{activation_seconds, LoadStrategy};
+use crate::engine::perf::GpuPerf;
+use crate::experiments::e2e::assign_ids;
+use crate::model::spec::table3_catalog;
+use crate::sim::{PolicyKind, SimConfig, Simulator};
+use crate::trace::Trace;
+
+/// Fig 10: model activation latency by size, for the three loading paths.
+pub fn fig10_activation_latency() -> Vec<Table> {
+    let perf = GpuPerf::default();
+    let cat = table3_catalog();
+    let picks = [
+        ("1B", "llama-3.2-1b-ft00"),
+        ("3B", "llama-3.2-3b-ft00"),
+        ("8B", "llama-3.1-8b-ft00"),
+        ("14B", "ds-r1-distill-qwen-14b"),
+        ("32B", "qwen-2.5-32b"),
+        ("70B", "llama-3.3-70b"),
+    ];
+    let mut t = Table::new(
+        "Fig 10: activation latency (s) vs model size",
+        &["model", "naive_cold", "engine_pool", "prism_parallel"],
+    );
+    for (label, name) in picks {
+        let m = cat.iter().find(|m| m.name == name).unwrap();
+        let w = m.weight_bytes();
+        t.row(vec![
+            label.into(),
+            format!("{:.2}", activation_seconds(&perf, LoadStrategy::Naive, w, 8)),
+            format!("{:.2}", activation_seconds(&perf, LoadStrategy::PooledNaive, w, 8)),
+            format!("{:.2}", activation_seconds(&perf, LoadStrategy::Parallel, w, 8)),
+        ]);
+    }
+    vec![t]
+}
+
+/// Fig 14: elastic memory overhead in the worst case - constant request
+/// rate, two 3B models on an A100-40G, Prism vs static partitioning. The
+/// only Prism cost here is kvcached map/unmap churn.
+pub fn fig14_elastic_overhead(quick: bool) -> Vec<Table> {
+    let cat = table3_catalog();
+    let m3b: Vec<_> = cat.iter().filter(|m| m.name.contains("3b")).take(2).cloned().collect();
+    let specs = assign_ids(m3b);
+    let dur = if quick { 120.0 } else { 600.0 };
+
+    let mut tables = Vec::new();
+    let mut t = Table::new(
+        "Fig 14: worst-case elastic overhead, 2x3B on A100-40G, constant load",
+        &["req_per_s", "system", "mean_ttft_ms", "mean_tpot_ms", "kvcached_map_ms_total"],
+    );
+    for rate in [28.0, 32.0] {
+        // Constant-rate trace, equal split.
+        let mut rng = crate::util::rng::Rng::new(rate as u64);
+        let mut events = Vec::new();
+        let mut time = 0.0;
+        loop {
+            time += 1.0 / rate;
+            if time >= dur {
+                break;
+            }
+            events.push(crate::trace::TraceEvent {
+                t: time,
+                model_idx: (rng.below(2)) as usize,
+                prompt_tokens: 200,
+                output_tokens: 100,
+            });
+        }
+        let trace = Trace { name: "fig14".into(), n_models: 2, events, duration: dur };
+        for (name, p) in [("prism", PolicyKind::Prism), ("s-partition", PolicyKind::StaticPartition)] {
+            let mut cfg = SimConfig::new(p, 1);
+            cfg.gpu_bytes = 40 * (1 << 30);
+            cfg.perf = GpuPerf::a100_40g();
+            cfg.slo_scale = 10.0;
+            let sim = Simulator::new(cfg, specs.clone());
+            let (m, _) = sim.run(&trace);
+            t.row(vec![
+                format!("{rate}"),
+                name.into(),
+                format!("{:.1}", m.mean_ttft() * 1e3),
+                format!("{:.2}", m.mean_tpot() * 1e3),
+                // kvcached cost is recorded inside the engines' iteration
+                // time already; report preemptions as the churn proxy.
+                m.preemptions.to_string(),
+            ]);
+        }
+    }
+    tables.push(t);
+    tables
+}

@@ -1,0 +1,73 @@
+//! Paper experiment drivers: one function per table/figure (DESIGN.md SS5).
+//! Each returns `Table`s (printed + saved as CSV under results/) so benches,
+//! the CLI, and EXPERIMENTS.md all regenerate the same artifacts.
+
+pub mod e2e;
+pub mod figures;
+pub mod micro;
+
+use crate::bench::harness::Table;
+
+/// Run an experiment by id ("tab1", "fig5", ... or "all"); returns tables.
+pub fn run(id: &str, quick: bool) -> anyhow::Result<Vec<Table>> {
+    let mut out = Vec::new();
+    let all = id == "all";
+    let mut hit = false;
+    macro_rules! exp {
+        ($name:expr, $f:expr) => {
+            if all || id == $name {
+                hit = true;
+                eprintln!("== running {} {}", $name, if quick { "(quick)" } else { "" });
+                let tables: Vec<Table> = $f;
+                for t in &tables {
+                    t.print();
+                    let fname = format!("{}_{}.csv", $name, slug(&t.title));
+                    if let Ok(p) = t.save_csv(&fname) {
+                        eprintln!("   saved {}", p.display());
+                    }
+                }
+                out.extend(tables);
+            }
+        };
+    }
+    exp!("tab1", figures::tab1_trace_summary(quick));
+    exp!("fig1", figures::fig1_dynamics(quick));
+    exp!("fig2", figures::fig2_pure_sharing(quick));
+    exp!("tab2", e2e::tab2_muxserve(quick));
+    exp!("fig5", e2e::fig5_end_to_end(quick));
+    exp!("fig6", figures::fig6_memory_coordination(quick));
+    exp!("fig7", e2e::fig7_placement_ablation(quick));
+    exp!("fig8", e2e::fig8_arbitration_ablation(quick));
+    exp!("fig9", e2e::fig9_large_scale(quick));
+    exp!("fig10", micro::fig10_activation_latency());
+    exp!("fig11", e2e::fig11_production(quick));
+    exp!("fig12", figures::fig12_switches_pearson(quick));
+    exp!("fig13", figures::fig13_volatility(quick));
+    exp!("fig14", micro::fig14_elastic_overhead(quick));
+    exp!("fig15", e2e::fig15_sensitivity(quick));
+    exp!("overhead", e2e::overhead_frequency(quick));
+    if !hit {
+        anyhow::bail!("unknown experiment id '{id}'");
+    }
+    Ok(out)
+}
+
+pub fn ids() -> &'static [&'static str] {
+    &[
+        "tab1", "fig1", "fig2", "tab2", "fig5", "fig6", "fig7", "fig8", "fig9",
+        "fig10", "fig11", "fig12", "fig13", "fig14", "fig15", "overhead",
+    ]
+}
+
+fn slug(s: &str) -> String {
+    s.chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c.to_ascii_lowercase() } else { '_' })
+        .collect::<String>()
+        .split('_')
+        .filter(|p| !p.is_empty())
+        .collect::<Vec<_>>()
+        .join("_")
+        .chars()
+        .take(48)
+        .collect()
+}

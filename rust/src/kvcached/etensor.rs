@@ -1,0 +1,179 @@
+//! Elastic tensor (paper D4): the serving-side facade over kvcached.
+//!
+//! The real PJRT serving path passes the paged KV pool to the decode
+//! executable as a dense `[P, Tp, L, 2, Hkv, Dh]` f32 array. `ElasticTensor`
+//! reserves that full *virtual* extent up front (one contiguous host buffer,
+//! the "large virtual address space") while *physical* commitment is governed
+//! by a `Kvcached` instance: a pool slot may only be written after
+//! `alloc_slot` maps a block for it, and `free_slot` returns the backing.
+//!
+//! The serving engine uses slot ids directly as page ids in block tables, so
+//! the attention kernel is untouched by any of this - exactly the paper's
+//! transparency requirement (R4/D4).
+
+use crate::kvcached::manager::{BlockRef, Kvcached, KvError};
+use crate::model::spec::ModelId;
+
+#[derive(Debug)]
+pub struct ElasticTensor {
+    model: ModelId,
+    /// Elements per pool slot (= Tp * L * 2 * Hkv * Dh).
+    slot_elems: usize,
+    /// The full virtual extent; physical commitment tracked via kvcached.
+    data: Vec<f32>,
+    /// slot -> backing block (None = virtual only, not writable).
+    backing: Vec<Option<BlockRef>>,
+    free_slots: Vec<u32>, // stack of unmapped slot ids
+}
+
+impl ElasticTensor {
+    /// Reserve `pool_slots` virtual slots; registers the model's KV geometry
+    /// with `kvc` using one block per slot (block_bytes = slot bytes).
+    pub fn reserve(
+        kvc: &mut Kvcached,
+        model: ModelId,
+        pool_slots: u32,
+        slot_elems: usize,
+        limit_pages: u32,
+    ) -> Self {
+        kvc.register_kv(model, (slot_elems * 4) as u64, limit_pages);
+        ElasticTensor {
+            model,
+            slot_elems,
+            data: vec![0.0; pool_slots as usize * slot_elems],
+            backing: vec![None; pool_slots as usize],
+            free_slots: (0..pool_slots).rev().collect(),
+        }
+    }
+
+    pub fn pool_slots(&self) -> u32 {
+        self.backing.len() as u32
+    }
+
+    pub fn mapped_slots(&self) -> u32 {
+        self.backing.iter().filter(|b| b.is_some()).count() as u32
+    }
+
+    /// Commit physical backing for one slot; returns the slot id to use as a
+    /// page id in block tables.
+    pub fn alloc_slot(&mut self, kvc: &mut Kvcached) -> Result<u32, KvError> {
+        let slot = match self.free_slots.pop() {
+            Some(s) => s,
+            None => {
+                return Err(KvError::OutOfPages(crate::kvcached::pool::OutOfPages {
+                    requested: 1,
+                    available: 0,
+                }))
+            }
+        };
+        match kvc.alloc_block(self.model) {
+            Ok(b) => {
+                self.backing[slot as usize] = Some(b);
+                Ok(slot)
+            }
+            Err(e) => {
+                self.free_slots.push(slot);
+                Err(e)
+            }
+        }
+    }
+
+    /// Release a slot's physical backing; the virtual slot is reusable.
+    pub fn free_slot(&mut self, kvc: &mut Kvcached, slot: u32) -> Result<(), KvError> {
+        let b = self.backing[slot as usize]
+            .take()
+            .ok_or(KvError::UnknownModel(self.model))?;
+        kvc.free_block(b)?;
+        // Zero for hygiene: evicted tenants must not leak KV to later reads.
+        let lo = slot as usize * self.slot_elems;
+        self.data[lo..lo + self.slot_elems].fill(0.0);
+        self.free_slots.push(slot);
+        Ok(())
+    }
+
+    /// Write one token's KV vectors into `slot` at `tok_in_slot`.
+    /// `kv` is the token's [L, 2, Hkv, Dh] flattened; `tp` = tokens per slot.
+    pub fn write_token(&mut self, slot: u32, tok_in_slot: usize, tp: usize, kv: &[f32]) {
+        assert!(
+            self.backing[slot as usize].is_some(),
+            "write to unmapped slot {slot} (virtual-only memory)"
+        );
+        let per_tok = self.slot_elems / tp;
+        assert_eq!(kv.len(), per_tok);
+        let lo = slot as usize * self.slot_elems + tok_in_slot * per_tok;
+        self.data[lo..lo + per_tok].copy_from_slice(kv);
+    }
+
+    /// The dense pool view handed to PJRT as the decode pool argument.
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn slot_elems(&self) -> usize {
+        self.slot_elems
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (Kvcached, ElasticTensor) {
+        // Page = slot bytes so 1 block per page; 8 physical pages available.
+        let slot_elems = 64;
+        let mut kvc = Kvcached::new(8 * 64 * 4, 64 * 4, 0);
+        let et = ElasticTensor::reserve(&mut kvc, ModelId(1), 16, slot_elems, u32::MAX);
+        (kvc, et)
+    }
+
+    #[test]
+    fn virtual_exceeds_physical() {
+        let (mut kvc, mut et) = setup();
+        assert_eq!(et.pool_slots(), 16); // virtual
+        let mut slots = Vec::new();
+        loop {
+            match et.alloc_slot(&mut kvc) {
+                Ok(s) => slots.push(s),
+                Err(_) => break,
+            }
+        }
+        assert_eq!(slots.len(), 8); // physical bound
+        assert_eq!(et.mapped_slots(), 8);
+        // Freeing one re-enables allocation.
+        et.free_slot(&mut kvc, slots[0]).unwrap();
+        assert!(et.alloc_slot(&mut kvc).is_ok());
+    }
+
+    #[test]
+    fn write_and_zero_on_free() {
+        let (mut kvc, mut et) = setup();
+        let s = et.alloc_slot(&mut kvc).unwrap();
+        let tp = 4;
+        let per_tok = 64 / tp;
+        et.write_token(s, 1, tp, &vec![2.5; per_tok]);
+        let lo = s as usize * 64 + per_tok;
+        assert!(et.as_slice()[lo..lo + per_tok].iter().all(|&x| x == 2.5));
+        et.free_slot(&mut kvc, s).unwrap();
+        assert!(et.as_slice()[lo..lo + per_tok].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "unmapped slot")]
+    fn write_to_unmapped_slot_panics() {
+        let (_kvc, mut et) = setup();
+        et.write_token(3, 0, 4, &vec![1.0; 16]);
+    }
+
+    #[test]
+    fn limit_bounds_mapping() {
+        let slot_elems = 64;
+        let mut kvc = Kvcached::new(8 * 64 * 4, 64 * 4, 0);
+        let mut et = ElasticTensor::reserve(&mut kvc, ModelId(7), 16, slot_elems, 2);
+        assert!(et.alloc_slot(&mut kvc).is_ok());
+        assert!(et.alloc_slot(&mut kvc).is_ok());
+        assert!(matches!(et.alloc_slot(&mut kvc), Err(KvError::LimitReached { .. })));
+        // Balloon up.
+        kvc.set_kv_limit(ModelId(7), 4).unwrap();
+        assert!(et.alloc_slot(&mut kvc).is_ok());
+    }
+}

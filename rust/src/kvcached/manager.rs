@@ -1,0 +1,509 @@
+//! The kvcached device manager: unified weight + KV memory for one GPU.
+//!
+//! Implements the paper's SS5.2 designs over `PagePool`:
+//!   D1 unified weights/KV - both draw from the same physical pool, so
+//!      releasing one immediately funds the other;
+//!   D2 automatic token-block mapping - per-model block geometry (token size
+//!      differs per architecture), pages never shared across models;
+//!   D3 overhead/fragmentation optimizations - contiguous-layer layout means
+//!      ONE page allocation covers all 2L per-layer tensors of a token block
+//!      (the 2Lx speedup), the pool's prealloc buffer absorbs map cost, and
+//!      partially-filled pages are preferred for new blocks;
+//!   D4 transparency - the serving side sees only opaque `BlockRef`s
+//!      (virtual KV block handles); geometry changes never touch kernels.
+//!
+//! Ballooning: `set_kv_limit` bounds a model's mapped KV pages; shrinking a
+//! limit makes the manager release free pages immediately and report how many
+//! *used* pages must be vacated by the engine (via preemption) before the
+//! target is met.
+
+use std::collections::BTreeMap;
+
+use crate::kvcached::pool::{OutOfPages, PagePool, PhysPage};
+use crate::model::spec::ModelId;
+
+/// Handle to one mapped token block (Tp tokens x all layers' K+V).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct BlockRef {
+    pub model: ModelId,
+    pub page_idx: u32, // index into the model's page list
+    pub slot: u32,     // block slot within the page
+}
+
+#[derive(Debug, Clone)]
+struct PageState {
+    phys: PhysPage,
+    used: Vec<bool>, // slot occupancy
+    used_count: u32,
+}
+
+/// Per-model KV state: geometry + mapped pages.
+#[derive(Debug)]
+struct ModelKv {
+    block_bytes: u64,
+    slots_per_page: u32,
+    pages: Vec<Option<PageState>>, // index = page_idx; None = unmapped slot reuse
+    free_page_indices: Vec<u32>,   // reusable page_idx values
+    /// page indices with at least one free slot (partial-page priority).
+    partial: Vec<u32>,
+    limit_pages: u32,
+    mapped_pages: u32,
+    used_blocks: u64,
+}
+
+/// GPU-level memory statistics (drives KVPR's `shared_kv` and Fig 6/14).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemStats {
+    pub total_bytes: u64,
+    pub weight_bytes: u64,
+    pub kv_mapped_bytes: u64,
+    pub kv_used_bytes: u64,
+    pub free_bytes: u64,
+    /// Mapped-but-unused KV bytes (internal fragmentation the balloon can reclaim).
+    pub kv_fragmented_bytes: u64,
+}
+
+#[derive(Debug)]
+pub struct Kvcached {
+    pool: PagePool,
+    weights: BTreeMap<ModelId, Vec<PhysPage>>,
+    kv: BTreeMap<ModelId, ModelKv>,
+    /// Microseconds of map/unmap work performed (timing model output).
+    pub accrued_cost_us: f64,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum KvError {
+    OutOfPages(OutOfPages),
+    LimitReached { model: ModelId, limit_pages: u32 },
+    UnknownModel(ModelId),
+}
+
+impl std::fmt::Display for KvError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            KvError::OutOfPages(e) => write!(f, "{e}"),
+            KvError::LimitReached { model, limit_pages } => {
+                write!(f, "{model} at kv limit ({limit_pages} pages)")
+            }
+            KvError::UnknownModel(m) => write!(f, "unknown model {m}"),
+        }
+    }
+}
+
+impl std::error::Error for KvError {}
+
+impl Kvcached {
+    pub fn new(capacity_bytes: u64, page_bytes: u64, prealloc_target: u32) -> Self {
+        Kvcached {
+            pool: PagePool::new(capacity_bytes, page_bytes, prealloc_target),
+            weights: BTreeMap::new(),
+            kv: BTreeMap::new(),
+            accrued_cost_us: 0.0,
+        }
+    }
+
+    pub fn page_bytes(&self) -> u64 {
+        self.pool.page_bytes()
+    }
+
+    pub fn pool_counters(&self) -> &crate::kvcached::pool::PoolCounters {
+        &self.pool.counters
+    }
+
+    fn pages_for(&self, bytes: u64) -> u32 {
+        bytes.div_ceil(self.pool.page_bytes()) as u32
+    }
+
+    // ------------------------------------------------------------- weights
+
+    /// Map a model's weights (on activation). D1: weights and KV share the pool.
+    /// Re-loading an already-resident model first releases the old mapping
+    /// (weights may be a different size after a quantization/variant switch).
+    pub fn load_weights(&mut self, model: ModelId, bytes: u64) -> Result<(), KvError> {
+        if self.weights.contains_key(&model) {
+            self.unload_weights(model);
+        }
+        let need = self.pages_for(bytes);
+        if (self.pool.free_pages()) < need {
+            // Weights may also cannibalize the prealloc buffer.
+            self.pool.drain_prealloc();
+        }
+        let (pages, cost) = self.pool.alloc(need).map_err(KvError::OutOfPages)?;
+        self.accrued_cost_us += cost;
+        self.weights.insert(model, pages);
+        Ok(())
+    }
+
+    /// Unmap a model's weights (on eviction); frees pages for other tenants.
+    pub fn unload_weights(&mut self, model: ModelId) -> u64 {
+        if let Some(pages) = self.weights.remove(&model) {
+            let n = pages.len() as u64;
+            self.accrued_cost_us += self.pool.free(&pages);
+            n * self.pool.page_bytes()
+        } else {
+            0
+        }
+    }
+
+    pub fn has_weights(&self, model: ModelId) -> bool {
+        self.weights.contains_key(&model)
+    }
+
+    // ------------------------------------------------------------------ kv
+
+    /// Register a model's KV geometry. `block_bytes` = token_size x block_tokens
+    /// across ALL layers (contiguous-layer layout, D3). `limit_pages` = u32::MAX
+    /// means unlimited (bounded by the pool).
+    pub fn register_kv(&mut self, model: ModelId, block_bytes: u64, limit_pages: u32) {
+        let slots = (self.pool.page_bytes() / block_bytes).max(1) as u32;
+        self.kv.insert(
+            model,
+            ModelKv {
+                block_bytes,
+                slots_per_page: slots,
+                pages: Vec::new(),
+                free_page_indices: Vec::new(),
+                partial: Vec::new(),
+                limit_pages,
+                mapped_pages: 0,
+                used_blocks: 0,
+            },
+        );
+    }
+
+    pub fn unregister_kv(&mut self, model: ModelId) {
+        if let Some(mk) = self.kv.remove(&model) {
+            let pages: Vec<PhysPage> =
+                mk.pages.iter().flatten().map(|p| p.phys).collect();
+            self.accrued_cost_us += self.pool.free(&pages);
+        }
+    }
+
+    /// Allocate one token block for `model`. Prefers partially-filled pages
+    /// (D3); maps a new physical page only when no partial page has room and
+    /// the model is under its limit.
+    pub fn alloc_block(&mut self, model: ModelId) -> Result<BlockRef, KvError> {
+        let mk = self.kv.get_mut(&model).ok_or(KvError::UnknownModel(model))?;
+
+        // Partial-page priority.
+        while let Some(&pi) = mk.partial.last() {
+            let page = mk.pages[pi as usize].as_mut().expect("partial page exists");
+            if page.used_count < mk.slots_per_page {
+                let slot = page.used.iter().position(|u| !u).expect("slot free") as u32;
+                page.used[slot as usize] = true;
+                page.used_count += 1;
+                mk.used_blocks += 1;
+                if page.used_count == mk.slots_per_page {
+                    mk.partial.pop();
+                }
+                return Ok(BlockRef { model, page_idx: pi, slot });
+            }
+            mk.partial.pop();
+        }
+
+        // Need a fresh page.
+        if mk.mapped_pages >= mk.limit_pages {
+            return Err(KvError::LimitReached { model, limit_pages: mk.limit_pages });
+        }
+        let (pages, cost) = self.pool.alloc(1).map_err(KvError::OutOfPages)?;
+        self.accrued_cost_us += cost;
+        let phys = pages[0];
+        let slots = mk.slots_per_page;
+        let mut used = vec![false; slots as usize];
+        used[0] = true;
+        let state = PageState { phys, used, used_count: 1 };
+        let pi = match mk.free_page_indices.pop() {
+            Some(i) => {
+                mk.pages[i as usize] = Some(state);
+                i
+            }
+            None => {
+                mk.pages.push(Some(state));
+                (mk.pages.len() - 1) as u32
+            }
+        };
+        mk.mapped_pages += 1;
+        mk.used_blocks += 1;
+        if slots > 1 {
+            mk.partial.push(pi);
+        }
+        Ok(BlockRef { model, page_idx: pi, slot: 0 })
+    }
+
+    /// Free one token block; a page whose last block is freed is unmapped
+    /// immediately only if the model is over its limit, otherwise kept mapped
+    /// (and preferred for reuse) to avoid map churn.
+    pub fn free_block(&mut self, r: BlockRef) -> Result<(), KvError> {
+        let mk = self.kv.get_mut(&r.model).ok_or(KvError::UnknownModel(r.model))?;
+        let page = mk.pages[r.page_idx as usize]
+            .as_mut()
+            .ok_or(KvError::UnknownModel(r.model))?;
+        assert!(page.used[r.slot as usize], "double free of {r:?}");
+        page.used[r.slot as usize] = false;
+        let was_full = page.used_count == mk.slots_per_page;
+        page.used_count -= 1;
+        mk.used_blocks -= 1;
+        if page.used_count == 0 {
+            // Unmap empty pages eagerly when over limit; else keep for reuse.
+            if mk.mapped_pages > mk.limit_pages {
+                let phys = page.phys;
+                mk.pages[r.page_idx as usize] = None;
+                mk.free_page_indices.push(r.page_idx);
+                mk.partial.retain(|&pi| pi != r.page_idx);
+                mk.mapped_pages -= 1;
+                self.accrued_cost_us += self.pool.free(&[phys]);
+                return Ok(());
+            }
+        }
+        if was_full {
+            mk.partial.push(r.page_idx);
+        }
+        Ok(())
+    }
+
+    /// Balloon: bound a model's mapped KV pages. Frees empty pages now;
+    /// returns how many pages are still over target (engine must shed load).
+    pub fn set_kv_limit(&mut self, model: ModelId, limit_pages: u32) -> Result<u32, KvError> {
+        let mk = self.kv.get_mut(&model).ok_or(KvError::UnknownModel(model))?;
+        mk.limit_pages = limit_pages;
+        // Release empty pages until at/below the limit.
+        let mut to_free: Vec<PhysPage> = Vec::new();
+        if mk.mapped_pages > limit_pages {
+            for i in 0..mk.pages.len() {
+                if mk.mapped_pages.saturating_sub(to_free.len() as u32) <= limit_pages {
+                    break;
+                }
+                if let Some(p) = &mk.pages[i] {
+                    if p.used_count == 0 {
+                        to_free.push(p.phys);
+                        mk.pages[i] = None;
+                        mk.free_page_indices.push(i as u32);
+                        mk.partial.retain(|&pi| pi != i as u32);
+                    }
+                }
+            }
+            mk.mapped_pages -= to_free.len() as u32;
+        }
+        let over = mk.mapped_pages.saturating_sub(limit_pages);
+        if !to_free.is_empty() {
+            self.accrued_cost_us += self.pool.free(&to_free);
+        }
+        Ok(over)
+    }
+
+    pub fn kv_limit(&self, model: ModelId) -> Option<u32> {
+        self.kv.get(&model).map(|m| m.limit_pages)
+    }
+
+    pub fn kv_mapped_pages(&self, model: ModelId) -> u32 {
+        self.kv.get(&model).map(|m| m.mapped_pages).unwrap_or(0)
+    }
+
+    pub fn kv_used_blocks(&self, model: ModelId) -> u64 {
+        self.kv.get(&model).map(|m| m.used_blocks).unwrap_or(0)
+    }
+
+    /// Background prealloc refill; returns pages prepared.
+    pub fn tick_prealloc(&mut self) -> u32 {
+        self.pool.refill_prealloc()
+    }
+
+    // --------------------------------------------------------------- stats
+
+    pub fn stats(&self) -> MemStats {
+        let pb = self.pool.page_bytes();
+        let weight_pages: u64 = self.weights.values().map(|v| v.len() as u64).sum();
+        let kv_mapped: u64 = self.kv.values().map(|m| m.mapped_pages as u64).sum();
+        let kv_used: u64 = self
+            .kv
+            .values()
+            .map(|m| m.used_blocks * m.block_bytes)
+            .sum();
+        let total = self.pool.total_pages() as u64 * pb;
+        MemStats {
+            total_bytes: total,
+            weight_bytes: weight_pages * pb,
+            kv_mapped_bytes: kv_mapped * pb,
+            kv_used_bytes: kv_used,
+            free_bytes: self.pool.free_bytes(),
+            kv_fragmented_bytes: kv_mapped * pb - kv_used,
+        }
+    }
+
+    /// Memory available for KV growth on this GPU - the paper's `shared_kv`:
+    /// free pool pages plus mapped-but-unused KV capacity.
+    pub fn shared_kv_bytes(&self) -> u64 {
+        let s = self.stats();
+        s.free_bytes + s.kv_fragmented_bytes
+    }
+
+    /// Invariant check used by tests and debug assertions.
+    pub fn check_conservation(&self) -> bool {
+        let s = self.stats();
+        s.weight_bytes + s.kv_mapped_bytes + s.free_bytes == s.total_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcached::pool::DEFAULT_PAGE_BYTES;
+
+    const MB: u64 = 1024 * 1024;
+
+    fn kvc() -> Kvcached {
+        // 128 MiB / 2 MiB pages = 64 pages, prealloc 4.
+        Kvcached::new(128 * MB, DEFAULT_PAGE_BYTES, 4)
+    }
+
+    #[test]
+    fn weights_and_kv_share_pool_d1() {
+        let mut k = kvc();
+        let m1 = ModelId(1);
+        let m2 = ModelId(2);
+        k.load_weights(m1, 60 * MB).unwrap(); // 30 pages
+        k.register_kv(m2, 512 * 1024, u32::MAX); // 4 blocks/page
+        // Fill KV until pool exhausted.
+        let mut blocks = Vec::new();
+        loop {
+            match k.alloc_block(m2) {
+                Ok(b) => blocks.push(b),
+                Err(KvError::OutOfPages(_)) => break,
+                Err(e) => panic!("{e}"),
+            }
+        }
+        assert_eq!(k.kv_mapped_pages(m2), 34);
+        // Evicting m1's weights immediately funds more KV.
+        assert!(k.unload_weights(m1) > 0);
+        assert!(k.alloc_block(m2).is_ok());
+        assert!(k.check_conservation());
+    }
+
+    #[test]
+    fn per_model_page_segregation_d2() {
+        let mut k = kvc();
+        let (a, b) = (ModelId(1), ModelId(2));
+        k.register_kv(a, 512 * 1024, u32::MAX);
+        k.register_kv(b, 256 * 1024, u32::MAX);
+        let ba = k.alloc_block(a).unwrap();
+        let bb = k.alloc_block(b).unwrap();
+        // Different models never share a page: each gets its own page 0.
+        assert_eq!(ba.page_idx, 0);
+        assert_eq!(bb.page_idx, 0);
+        assert_eq!(k.kv_mapped_pages(a), 1);
+        assert_eq!(k.kv_mapped_pages(b), 1);
+        assert!(k.check_conservation());
+    }
+
+    #[test]
+    fn partial_page_priority_d3() {
+        let mut k = kvc();
+        let m = ModelId(1);
+        k.register_kv(m, 512 * 1024, u32::MAX); // 4 slots/page
+        let blocks: Vec<BlockRef> = (0..6).map(|_| k.alloc_block(m).unwrap()).collect();
+        assert_eq!(k.kv_mapped_pages(m), 2);
+        // Free one block on page 0 -> next alloc must reuse page 0, not map page 2.
+        k.free_block(blocks[1]).unwrap();
+        let nb = k.alloc_block(m).unwrap();
+        assert_eq!(nb.page_idx, 0);
+        assert_eq!(k.kv_mapped_pages(m), 2);
+    }
+
+    #[test]
+    fn limit_enforced_and_ballooning() {
+        let mut k = kvc();
+        let m = ModelId(1);
+        k.register_kv(m, DEFAULT_PAGE_BYTES, 2); // 1 slot/page, limit 2 pages
+        let b1 = k.alloc_block(m).unwrap();
+        let _b2 = k.alloc_block(m).unwrap();
+        match k.alloc_block(m) {
+            Err(KvError::LimitReached { limit_pages: 2, .. }) => {}
+            other => panic!("expected limit, got {other:?}"),
+        }
+        // Raise the limit -> allocation proceeds.
+        k.set_kv_limit(m, 3).unwrap();
+        let _b3 = k.alloc_block(m).unwrap();
+        // Shrink below mapped: empty pages freed, over-target reported.
+        k.free_block(b1).unwrap();
+        let over = k.set_kv_limit(m, 1).unwrap();
+        assert_eq!(k.kv_mapped_pages(m), 2); // freed the empty one
+        assert_eq!(over, 1); // one used page still over target
+    }
+
+    #[test]
+    fn free_block_over_limit_unmaps_eagerly() {
+        let mut k = kvc();
+        let m = ModelId(1);
+        k.register_kv(m, DEFAULT_PAGE_BYTES, u32::MAX);
+        let blocks: Vec<BlockRef> = (0..4).map(|_| k.alloc_block(m).unwrap()).collect();
+        k.set_kv_limit(m, 1).unwrap();
+        // All 4 pages used; freeing now unmaps because mapped > limit.
+        for b in blocks {
+            k.free_block(b).unwrap();
+        }
+        assert_eq!(k.kv_mapped_pages(m), 1); // kept at most limit
+        assert!(k.check_conservation());
+    }
+
+    #[test]
+    fn stats_and_shared_kv() {
+        let mut k = kvc();
+        let m = ModelId(1);
+        k.load_weights(m, 20 * MB).unwrap(); // 10 pages
+        k.register_kv(m, MB, u32::MAX); // 2 slots/page
+        let _b = k.alloc_block(m).unwrap();
+        let s = k.stats();
+        assert_eq!(s.weight_bytes, 20 * MB);
+        assert_eq!(s.kv_mapped_bytes, 2 * MB);
+        assert_eq!(s.kv_used_bytes, MB);
+        assert_eq!(s.kv_fragmented_bytes, MB);
+        assert_eq!(s.total_bytes, 128 * MB);
+        assert_eq!(k.shared_kv_bytes(), s.free_bytes + MB);
+        assert!(k.check_conservation());
+    }
+
+    #[test]
+    fn unregister_returns_pages() {
+        let mut k = kvc();
+        let m = ModelId(1);
+        k.register_kv(m, MB, u32::MAX);
+        for _ in 0..8 {
+            k.alloc_block(m).unwrap();
+        }
+        let free_before = k.stats().free_bytes;
+        k.unregister_kv(m);
+        assert!(k.stats().free_bytes > free_before);
+        assert_eq!(k.kv_mapped_pages(m), 0);
+        assert!(k.check_conservation());
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_detected() {
+        let mut k = kvc();
+        let m = ModelId(1);
+        k.register_kv(m, MB, u32::MAX);
+        let b = k.alloc_block(m).unwrap();
+        k.free_block(b).unwrap();
+        let _ = k.free_block(b);
+    }
+}
+
+impl Kvcached {
+    /// Debug: (partial-stack length, free slots actually present) for a model.
+    pub fn debug_partial(&self, model: ModelId) -> (usize, u64) {
+        match self.kv.get(&model) {
+            Some(mk) => {
+                let free_slots: u64 = mk
+                    .pages
+                    .iter()
+                    .flatten()
+                    .map(|p| (mk.slots_per_page - p.used_count) as u64)
+                    .sum();
+                (mk.partial.len(), free_slots)
+            }
+            None => (0, 0),
+        }
+    }
+}

@@ -1,0 +1,169 @@
+//! kvcached: the GPU memory balloon driver (paper SS5).
+//!
+//! Decouples virtual and physical GPU memory for multi-LLM serving: engines
+//! see large static reservations (elastic tensors); physical 2 MB pages are
+//! mapped on demand and can be reclaimed *across models*, unifying space- and
+//! time-sharing under one mechanism.
+
+pub mod etensor;
+pub mod manager;
+pub mod pool;
+
+pub use etensor::ElasticTensor;
+pub use manager::{BlockRef, Kvcached, KvError, MemStats};
+pub use pool::{PagePool, PhysPage, DEFAULT_PAGE_BYTES};
+
+#[cfg(test)]
+mod prop_tests {
+    //! Property tests over the balloon driver's invariants.
+    use super::*;
+    use crate::model::spec::ModelId;
+    use crate::util::prop::{check, Shrink};
+    use crate::util::rng::Rng;
+
+    /// A random workload script: per-step ops over a small set of models.
+    #[derive(Debug, Clone)]
+    struct Script {
+        ops: Vec<Op>,
+    }
+
+    #[derive(Debug, Clone)]
+    enum Op {
+        Alloc(u8),
+        FreeOldest(u8),
+        SetLimit(u8, u32),
+        LoadWeights(u8, u64),
+        UnloadWeights(u8),
+        Tick,
+    }
+
+    impl Shrink for Script {
+        fn shrink(&self) -> Vec<Self> {
+            let mut out = Vec::new();
+            if self.ops.len() > 1 {
+                out.push(Script { ops: self.ops[..self.ops.len() / 2].to_vec() });
+                out.push(Script { ops: self.ops[self.ops.len() / 2..].to_vec() });
+                let mut v = self.ops.clone();
+                v.pop();
+                out.push(Script { ops: v });
+            }
+            out
+        }
+    }
+
+    fn gen_script(r: &mut Rng) -> Script {
+        let n = r.range_usize(1, 120);
+        let ops = (0..n)
+            .map(|_| match r.below(12) {
+                0..=4 => Op::Alloc(r.below(3) as u8),
+                5..=7 => Op::FreeOldest(r.below(3) as u8),
+                8 => Op::SetLimit(r.below(3) as u8, r.below(40) as u32),
+                9 => Op::LoadWeights(r.below(3) as u8, (1 + r.below(20)) as u64 * 1024 * 1024),
+                10 => Op::UnloadWeights(r.below(3) as u8),
+                _ => Op::Tick,
+            })
+            .collect();
+        Script { ops }
+    }
+
+    fn run_script(s: &Script) -> Result<(), String> {
+        let mb = 1024 * 1024;
+        let mut kvc = Kvcached::new(64 * mb, 2 * mb, 2);
+        let models = [ModelId(0), ModelId(1), ModelId(2)];
+        // Distinct block geometries per model (R2: heterogeneous layouts).
+        kvc.register_kv(models[0], 512 * 1024, u32::MAX);
+        kvc.register_kv(models[1], 256 * 1024, u32::MAX);
+        kvc.register_kv(models[2], 2 * mb, u32::MAX);
+        let mut live: Vec<Vec<BlockRef>> = vec![Vec::new(); 3];
+
+        for op in &s.ops {
+            match op {
+                Op::Alloc(m) => {
+                    if let Ok(b) = kvc.alloc_block(models[*m as usize]) {
+                        live[*m as usize].push(b);
+                    }
+                }
+                Op::FreeOldest(m) => {
+                    if !live[*m as usize].is_empty() {
+                        let b = live[*m as usize].remove(0);
+                        kvc.free_block(b).map_err(|e| e.to_string())?;
+                    }
+                }
+                Op::SetLimit(m, l) => {
+                    kvc.set_kv_limit(models[*m as usize], *l).map_err(|e| e.to_string())?;
+                }
+                Op::LoadWeights(m, bytes) => {
+                    let _ = kvc.load_weights(models[*m as usize], *bytes);
+                }
+                Op::UnloadWeights(m) => {
+                    let _ = kvc.unload_weights(models[*m as usize]);
+                }
+                Op::Tick => {
+                    kvc.tick_prealloc();
+                }
+            }
+            // Invariant 1: conservation of physical pages.
+            if !kvc.check_conservation() {
+                return Err(format!("conservation violated after {op:?}: {:?}", kvc.stats()));
+            }
+            // Invariant 2: used KV never exceeds mapped KV.
+            let st = kvc.stats();
+            if st.kv_used_bytes > st.kv_mapped_bytes {
+                return Err(format!("used > mapped after {op:?}: {st:?}"));
+            }
+            // Invariant 3: live block count matches manager accounting.
+            for (i, m) in models.iter().enumerate() {
+                if kvc.kv_used_blocks(*m) != live[i].len() as u64 {
+                    return Err(format!(
+                        "block accounting drift for {m}: kvc={} live={}",
+                        kvc.kv_used_blocks(*m),
+                        live[i].len()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn balloon_driver_invariants_hold_under_random_workloads() {
+        check(60, 0xB411_00, gen_script, run_script);
+    }
+
+    #[test]
+    fn shared_kv_never_exceeds_capacity() {
+        check(
+            30,
+            0xB411_01,
+            |r| {
+                let n = r.range_usize(1, 60);
+                (0..n).map(|_| r.below(6) as u8).collect::<Vec<u8>>()
+            },
+            |ops| {
+                let mb = 1024 * 1024;
+                let mut kvc = Kvcached::new(32 * mb, 2 * mb, 1);
+                let m = ModelId(0);
+                kvc.register_kv(m, mb, u32::MAX);
+                let mut live = Vec::new();
+                for op in ops {
+                    match op {
+                        0..=3 => {
+                            if let Ok(b) = kvc.alloc_block(m) {
+                                live.push(b);
+                            }
+                        }
+                        _ => {
+                            if let Some(b) = live.pop() {
+                                kvc.free_block(b).map_err(|e| e.to_string())?;
+                            }
+                        }
+                    }
+                    if kvc.shared_kv_bytes() > 32 * mb {
+                        return Err("shared_kv exceeds capacity".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,244 @@
+//! Physical GPU page pool - the bottom of the kvcached balloon driver.
+//!
+//! Models one GPU's physical memory as an array of fixed-size pages (2 MB by
+//! default, matching CUDA VMM granularity and the paper's D3). Supports the
+//! prealloc buffer optimization: an asynchronously-refilled stash of ready
+//! pages so the hot path rarely pays the full map cost (paper SS5.2 D3).
+//!
+//! The pool is pure bookkeeping plus a timing model; the simulator charges
+//! `alloc_cost`/`free_cost` to its clock, and the real serving path uses the
+//! same pool (with small pages) to govern its PJRT-backed KV tensor.
+
+/// Default physical page size: 2 MiB (CUDA VMM minimum granularity).
+pub const DEFAULT_PAGE_BYTES: u64 = 2 * 1024 * 1024;
+
+/// Per-page map/unmap latency in microseconds (CUDA VMM map + TLB update;
+/// the paper reports millisecond-level redistribution for GB-scale moves,
+/// i.e. ~thousands of pages per ms-scale operation).
+pub const MAP_US_PER_PAGE: f64 = 2.0;
+/// Fixed per-batch syscall/driver overhead in microseconds.
+pub const MAP_US_BATCH: f64 = 10.0;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PhysPage(pub u32);
+
+/// Counters for overhead accounting (Fig 14 analysis).
+#[derive(Debug, Default, Clone)]
+pub struct PoolCounters {
+    pub map_batches: u64,
+    pub pages_mapped: u64,
+    pub pages_unmapped: u64,
+    pub prealloc_hits: u64,
+    pub prealloc_misses: u64,
+}
+
+#[derive(Debug)]
+pub struct PagePool {
+    page_bytes: u64,
+    total: u32,
+    free: Vec<u32>,
+    /// Prealloc buffer: pages already prepared by the background thread.
+    prealloc: Vec<u32>,
+    prealloc_target: u32,
+    pub counters: PoolCounters,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OutOfPages {
+    pub requested: u32,
+    pub available: u32,
+}
+
+impl std::fmt::Display for OutOfPages {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "out of GPU pages: requested {}, available {}", self.requested, self.available)
+    }
+}
+
+impl std::error::Error for OutOfPages {}
+
+impl PagePool {
+    pub fn new(capacity_bytes: u64, page_bytes: u64, prealloc_target: u32) -> Self {
+        let total = (capacity_bytes / page_bytes) as u32;
+        PagePool {
+            page_bytes,
+            total,
+            free: (0..total).rev().collect(),
+            prealloc: Vec::new(),
+            prealloc_target,
+            counters: PoolCounters::default(),
+        }
+    }
+
+    pub fn page_bytes(&self) -> u64 {
+        self.page_bytes
+    }
+
+    pub fn total_pages(&self) -> u32 {
+        self.total
+    }
+
+    pub fn free_pages(&self) -> u32 {
+        (self.free.len() + self.prealloc.len()) as u32
+    }
+
+    pub fn used_pages(&self) -> u32 {
+        self.total - self.free_pages()
+    }
+
+    pub fn free_bytes(&self) -> u64 {
+        self.free_pages() as u64 * self.page_bytes
+    }
+
+    /// Allocate `n` physical pages, drawing from the prealloc buffer first.
+    /// Returns the pages and the modelled latency in microseconds.
+    pub fn alloc(&mut self, n: u32) -> Result<(Vec<PhysPage>, f64), OutOfPages> {
+        if n == 0 {
+            return Ok((Vec::new(), 0.0));
+        }
+        if self.free_pages() < n {
+            return Err(OutOfPages { requested: n, available: self.free_pages() });
+        }
+        let mut out = Vec::with_capacity(n as usize);
+        let from_buf = (n as usize).min(self.prealloc.len());
+        for _ in 0..from_buf {
+            out.push(PhysPage(self.prealloc.pop().unwrap()));
+        }
+        self.counters.prealloc_hits += from_buf as u64;
+        let remaining = n as usize - from_buf;
+        let mut cost = 0.0;
+        if remaining > 0 {
+            self.counters.prealloc_misses += remaining as u64;
+            self.counters.map_batches += 1;
+            cost = MAP_US_BATCH + MAP_US_PER_PAGE * remaining as f64;
+            for _ in 0..remaining {
+                out.push(PhysPage(self.free.pop().unwrap()));
+            }
+        }
+        self.counters.pages_mapped += n as u64;
+        Ok((out, cost))
+    }
+
+    /// Return pages; they land in the prealloc buffer up to its target, the
+    /// rest are physically freed (paper D3: released pages are buffered).
+    pub fn free(&mut self, pages: &[PhysPage]) -> f64 {
+        let mut to_release = 0usize;
+        for p in pages {
+            debug_assert!(p.0 < self.total);
+            if (self.prealloc.len() as u32) < self.prealloc_target {
+                self.prealloc.push(p.0);
+            } else {
+                self.free.push(p.0);
+                to_release += 1;
+            }
+        }
+        self.counters.pages_unmapped += pages.len() as u64;
+        if to_release > 0 {
+            MAP_US_BATCH + MAP_US_PER_PAGE * to_release as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Background refill of the prealloc buffer (the paper's prep thread).
+    /// Call from the idle loop; returns refilled count.
+    pub fn refill_prealloc(&mut self) -> u32 {
+        let mut n = 0;
+        while (self.prealloc.len() as u32) < self.prealloc_target {
+            match self.free.pop() {
+                Some(p) => {
+                    self.prealloc.push(p);
+                    n += 1;
+                }
+                None => break,
+            }
+        }
+        n
+    }
+
+    /// Drain the prealloc buffer back to the free list (memory reclaim for a
+    /// new model's weights - "only physically freed if ... memory must be
+    /// reclaimed", paper D3).
+    pub fn drain_prealloc(&mut self) -> u32 {
+        let n = self.prealloc.len() as u32;
+        self.free.append(&mut self.prealloc);
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool() -> PagePool {
+        // 64 MiB with 2 MiB pages = 32 pages, prealloc target 4.
+        PagePool::new(64 * 1024 * 1024, DEFAULT_PAGE_BYTES, 4)
+    }
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let mut p = pool();
+        assert_eq!(p.total_pages(), 32);
+        let (pages, cost) = p.alloc(10).unwrap();
+        assert_eq!(pages.len(), 10);
+        assert!(cost > 0.0);
+        assert_eq!(p.free_pages(), 22);
+        p.free(&pages);
+        assert_eq!(p.free_pages(), 32);
+    }
+
+    #[test]
+    fn oom_reports_availability() {
+        let mut p = pool();
+        let (a, _) = p.alloc(30).unwrap();
+        let err = p.alloc(5).unwrap_err();
+        assert_eq!(err, OutOfPages { requested: 5, available: 2 });
+        p.free(&a);
+    }
+
+    #[test]
+    fn prealloc_hit_is_cheap() {
+        let mut p = pool();
+        p.refill_prealloc();
+        let (pages, cost) = p.alloc(3).unwrap();
+        assert_eq!(cost, 0.0); // fully served from buffer
+        assert_eq!(p.counters.prealloc_hits, 3);
+        p.free(&pages);
+        // Freed pages replenish the buffer first.
+        assert!(p.counters.pages_unmapped == 3);
+    }
+
+    #[test]
+    fn prealloc_miss_charges_batch_cost() {
+        let mut p = pool();
+        let (_, cost) = p.alloc(5).unwrap();
+        assert!((cost - (MAP_US_BATCH + 5.0 * MAP_US_PER_PAGE)).abs() < 1e-9);
+        assert_eq!(p.counters.map_batches, 1);
+    }
+
+    #[test]
+    fn unique_pages_across_allocs() {
+        let mut p = pool();
+        let (a, _) = p.alloc(16).unwrap();
+        let (b, _) = p.alloc(16).unwrap();
+        let mut all: Vec<u32> = a.iter().chain(b.iter()).map(|x| x.0).collect();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), 32);
+    }
+
+    #[test]
+    fn drain_prealloc_reclaims() {
+        let mut p = pool();
+        p.refill_prealloc();
+        assert_eq!(p.drain_prealloc(), 4);
+        assert_eq!(p.free_pages(), 32);
+    }
+
+    #[test]
+    fn zero_alloc_is_free() {
+        let mut p = pool();
+        let (pages, cost) = p.alloc(0).unwrap();
+        assert!(pages.is_empty() && cost == 0.0);
+    }
+}

@@ -1,0 +1,30 @@
+//! Prism: cost-efficient multi-LLM serving via GPU memory ballooning.
+//!
+//! Reproduction of Yu et al. 2025. Three-layer architecture: this Rust crate
+//! is Layer 3 (the coordinator: kvcached balloon driver, KVPR placement,
+//! slack-aware arbitration, cluster simulator, real PJRT serving path);
+//! Layer 2/1 (JAX model + Pallas kernels) live under python/ and are AOT
+//! compiled to HLO-text artifacts that `runtime` loads via PJRT.
+
+pub mod bench;
+pub mod util;
+
+pub mod kvcached;
+pub mod model;
+
+pub mod cluster;
+pub mod engine;
+pub mod request;
+
+pub mod sched;
+
+pub mod trace;
+
+pub mod metrics;
+pub mod sim;
+
+pub mod runtime;
+
+pub mod serve;
+
+pub mod experiments;

@@ -1,0 +1,256 @@
+//! `prism` CLI - the Layer-3 coordinator entrypoint.
+//!
+//! Subcommands:
+//!   serve      - real PJRT serving of the PrismNano artifacts
+//!   sim        - run one simulator experiment (policy x trace x GPUs)
+//!   trace      - generate a synthetic trace and print its SS3 statistics
+//!   exp <id>   - regenerate a paper table/figure (tab1, fig1..fig15, all)
+//!   models     - print the Table-3 model catalog
+
+use anyhow::Result;
+use prism::bench::harness::Table;
+use prism::experiments;
+use prism::model::spec::{catalog_subset, table3_catalog};
+use prism::sim::{PolicyKind, SimConfig, Simulator};
+use prism::trace::gen::{generate, TraceGenConfig};
+use prism::util::cli::Cli;
+
+fn main() {
+    prism::util::logger::init();
+    let mut args = std::env::args().skip(1);
+    let cmd = args.next().unwrap_or_else(|| "help".to_string());
+    let code = match cmd.as_str() {
+        "serve" => cmd_serve(),
+        "sim" => cmd_sim(),
+        "trace" => cmd_trace(),
+        "exp" => cmd_exp(),
+        "models" => cmd_models(),
+        _ => {
+            eprintln!(
+                "prism - cost-efficient multi-LLM serving via GPU memory ballooning\n\n\
+                 usage: prism <serve|sim|trace|exp|models> [options]\n\
+                 \n  prism serve --models prism-nano,prism-micro --requests 12\
+                 \n  prism sim --policy prism --gpus 4 --trace novita --minutes 10\
+                 \n  prism trace --kind novita --hours 2\
+                 \n  prism exp fig5 [--quick]\
+                 \n  prism exp all --quick\n"
+            );
+            Ok(())
+        }
+    }
+    .map(|_| 0)
+    .unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        1
+    });
+    std::process::exit(code);
+}
+
+fn cmd_serve() -> Result<()> {
+    let cli = Cli::new("prism serve", "real PJRT serving of AOT artifacts")
+        .opt("models", "prism-nano,prism-micro", "comma-separated artifact names")
+        .opt("requests", "12", "number of synthetic requests")
+        .opt("new-tokens", "8", "tokens to generate per request")
+        .opt("artifacts", "artifacts", "artifacts root dir")
+        .flag("fcfs", "disable slack-aware admission");
+    let a = cli.parse_env(1).map_err(anyhow::Error::msg)?;
+    let root = std::path::PathBuf::from(a.get_or("artifacts", "artifacts"));
+    let names: Vec<String> =
+        a.get_or("models", "").split(',').map(|s| s.trim().to_string()).collect();
+    let dirs: Vec<std::path::PathBuf> = names.iter().map(|n| root.join(n)).collect();
+    let dir_refs: Vec<&std::path::Path> = dirs.iter().map(|p| p.as_path()).collect();
+    let cfg = prism::serve::ServerConfig {
+        slack_aware: !a.has_flag("fcfs"),
+        ..Default::default()
+    };
+    let mut srv = prism::serve::RealServer::new(cfg, &dir_refs, &[])?;
+
+    let n = a.get_usize("requests", 12);
+    let new_tokens = a.get_usize("new-tokens", 8);
+    let mut rng = prism::util::rng::Rng::new(1);
+    let reqs: Vec<prism::serve::ServeRequest> = (0..n)
+        .map(|i| prism::serve::ServeRequest {
+            model: names[i % names.len()].clone(),
+            prompt: (0..(8 + rng.below(24))).map(|_| rng.below(255) as i32).collect(),
+            max_new_tokens: new_tokens,
+            arrival: i as f64 * 0.01,
+            ttft_slo: Some(2.0),
+        })
+        .collect();
+    let t0 = std::time::Instant::now();
+    let results = srv.serve(&reqs)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut t = Table::new(
+        "Real serving results (PJRT CPU, interpret-mode Pallas)",
+        &["req", "model", "ttft_ms", "tpot_ms", "e2e_ms", "tokens"],
+    );
+    let mut tokens = 0usize;
+    let mut ok = 0usize;
+    for (i, r) in results.iter().enumerate() {
+        if let Some(r) = r {
+            tokens += r.generated.len();
+            if r.ttft <= r.ttft_slo {
+                ok += 1;
+            }
+            t.row(vec![
+                i.to_string(),
+                r.model.clone(),
+                format!("{:.1}", r.ttft * 1e3),
+                format!("{:.1}", r.tpot * 1e3),
+                format!("{:.1}", r.e2e * 1e3),
+                r.generated.len().to_string(),
+            ]);
+        }
+    }
+    t.print();
+    println!(
+        "served {n} requests, {tokens} tokens in {wall:.2}s  ({:.1} tok/s, TTFT SLO attainment {:.0}%)",
+        tokens as f64 / wall,
+        100.0 * ok as f64 / n as f64
+    );
+    Ok(())
+}
+
+fn cmd_sim() -> Result<()> {
+    let cli = Cli::new("prism sim", "simulate a policy on a synthetic trace")
+        .opt("policy", "prism", "prism|s-partition|muxserve++|qlm|serverlessllm")
+        .opt("gpus", "2", "GPU count")
+        .opt("models", "8", "number of models")
+        .opt("trace", "novita", "novita|hyperbolic|arena-chat|arena-battle")
+        .opt("minutes", "10", "trace duration")
+        .opt("rate-scale", "1.0", "request-rate multiplier")
+        .opt("slo-scale", "8.0", "SLO scale factor")
+        .opt("seed", "1", "trace seed");
+    let a = cli.parse_env(1).map_err(anyhow::Error::msg)?;
+    let policy = match a.get_or("policy", "prism").as_str() {
+        "prism" => PolicyKind::Prism,
+        "s-partition" => PolicyKind::StaticPartition,
+        "muxserve++" => PolicyKind::MuxServePlusPlus,
+        "qlm" => PolicyKind::Qlm,
+        "serverlessllm" => PolicyKind::ServerlessLlm,
+        other => anyhow::bail!("unknown policy {other}"),
+    };
+    let n_models = a.get_usize("models", 8);
+    let dur = a.get_f64("minutes", 10.0) * 60.0;
+    let seed = a.get_u64("seed", 1);
+    let gen_cfg = match a.get_or("trace", "novita").as_str() {
+        "novita" => TraceGenConfig::novita_like(n_models, dur, seed),
+        "hyperbolic" => TraceGenConfig::hyperbolic_like(n_models, dur, seed),
+        "arena-chat" => TraceGenConfig::arena_chat_like(n_models, dur, seed),
+        "arena-battle" => TraceGenConfig::arena_battle_like(n_models, dur, seed),
+        other => anyhow::bail!("unknown trace {other}"),
+    };
+    let trace = generate(&gen_cfg).scale_rate(a.get_f64("rate-scale", 1.0));
+    let specs = prism::experiments::e2e::assign_ids(
+        catalog_subset(30)
+            .into_iter()
+            .filter(|m| !m.is_tp())
+            .take(n_models)
+            .collect(),
+    );
+    let mut cfg = SimConfig::new(policy, a.get_usize("gpus", 2) as u32);
+    cfg.slo_scale = a.get_f64("slo-scale", 8.0);
+    let t0 = std::time::Instant::now();
+    let (m, _) = Simulator::new(cfg, specs).run(&trace);
+    let mut t = Table::new(
+        &format!(
+            "Simulation: {} on {} ({} requests)",
+            policy.name(),
+            trace.name,
+            trace.events.len()
+        ),
+        &["metric", "value"],
+    );
+    t.row(vec!["ttft_attainment".into(), format!("{:.3}", m.ttft_attainment())]);
+    t.row(vec!["tpot_attainment".into(), format!("{:.3}", m.tpot_attainment())]);
+    t.row(vec!["mean_ttft_s".into(), format!("{:.3}", m.mean_ttft())]);
+    t.row(vec!["p95_ttft_s".into(), format!("{:.3}", m.p95_ttft())]);
+    t.row(vec!["mean_tpot_ms".into(), format!("{:.2}", m.mean_tpot() * 1e3)]);
+    t.row(vec!["req_tput_busy".into(), format!("{:.2}", m.req_throughput())]);
+    t.row(vec!["token_tput_busy".into(), format!("{:.0}", m.token_throughput())]);
+    t.row(vec!["activations".into(), m.activations.to_string()]);
+    t.row(vec!["evictions".into(), m.evictions.to_string()]);
+    t.row(vec!["migrations".into(), m.migrations.to_string()]);
+    t.row(vec!["preemptions".into(), m.preemptions.to_string()]);
+    t.row(vec!["sim_wall_s".into(), format!("{:.2}", t0.elapsed().as_secs_f64())]);
+    t.print();
+    Ok(())
+}
+
+fn cmd_trace() -> Result<()> {
+    let cli = Cli::new("prism trace", "generate + characterize a synthetic trace")
+        .opt("kind", "novita", "novita|hyperbolic|arena-chat|arena-battle")
+        .opt("models", "16", "number of models")
+        .opt("hours", "2", "duration in hours")
+        .opt("seed", "1", "seed");
+    let a = cli.parse_env(1).map_err(anyhow::Error::msg)?;
+    let n = a.get_usize("models", 16);
+    let dur = a.get_f64("hours", 2.0) * 3600.0;
+    let seed = a.get_u64("seed", 1);
+    let cfg = match a.get_or("kind", "novita").as_str() {
+        "novita" => TraceGenConfig::novita_like(n, dur, seed),
+        "hyperbolic" => TraceGenConfig::hyperbolic_like(n, dur, seed),
+        "arena-chat" => TraceGenConfig::arena_chat_like(n, dur, seed),
+        "arena-battle" => TraceGenConfig::arena_battle_like(n, dur, seed),
+        other => anyhow::bail!("unknown trace kind {other}"),
+    };
+    let tr = generate(&cfg);
+    use prism::trace::stats as ts;
+    let mut t = Table::new(&format!("Trace statistics: {}", cfg.name), &["metric", "value"]);
+    t.row(vec!["requests".into(), tr.events.len().to_string()]);
+    t.row(vec!["models".into(), tr.n_models.to_string()]);
+    t.row(vec![
+        "mean_active_frac".into(),
+        format!("{:.2}", ts::mean_active_fraction(&tr, 120.0)),
+    ]);
+    t.row(vec![
+        "switches_per_hour".into(),
+        format!("{:.0}", ts::switches_per_hour(&tr, 120.0)),
+    ]);
+    let cvs = ts::per_model_rate_cv(&tr, 60.0);
+    t.row(vec![
+        "frac_models_cv>1".into(),
+        format!(
+            "{:.2}",
+            cvs.iter().filter(|&&c| c > 1.0).count() as f64 / cvs.len().max(1) as f64
+        ),
+    ]);
+    let idles = ts::per_model_idle_intervals_per_hour(&tr, 10.0);
+    t.row(vec![
+        "p90_idle_intervals_hr".into(),
+        format!("{:.1}", prism::util::stats::percentile(&idles, 90.0)),
+    ]);
+    t.print();
+    Ok(())
+}
+
+fn cmd_exp() -> Result<()> {
+    let mut args: Vec<String> = std::env::args().skip(2).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    args.retain(|a| a != "--quick");
+    let id = args.first().cloned().unwrap_or_else(|| "all".to_string());
+    experiments::run(&id, quick)?;
+    eprintln!("valid experiment ids: {:?}", experiments::ids());
+    Ok(())
+}
+
+fn cmd_models() -> Result<()> {
+    let mut t = Table::new(
+        "Table 3 model catalog (58 LLMs)",
+        &["id", "name", "params_B", "layers", "kv_B/token", "weights_GB", "tp"],
+    );
+    for m in table3_catalog() {
+        t.row(vec![
+            m.id.to_string(),
+            m.name.clone(),
+            format!("{:.1}", m.params as f64 / 1e9),
+            m.n_layers.to_string(),
+            m.kv_bytes_per_token().to_string(),
+            format!("{:.1}", m.weight_bytes() as f64 / 1e9),
+            m.tp.to_string(),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,204 @@
+//! Metrics: SLO attainment, latency summaries, throughput (idle-excluded),
+//! and sampled timelines for the memory/queue plots (Figs 2, 6, 7, 8).
+
+use crate::model::spec::ModelId;
+use crate::request::Completion;
+use crate::util::stats::Summary;
+
+/// Aggregated results of one serving run.
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    pub completions: Vec<Completion>,
+    /// Sum of engine busy seconds (for idle-excluded throughput).
+    pub busy_seconds: f64,
+    pub wall_seconds: f64,
+    pub activations: u64,
+    pub evictions: u64,
+    pub migrations: u64,
+    pub preemptions: u64,
+}
+
+impl RunMetrics {
+    pub fn ttft_attainment(&self) -> f64 {
+        frac(&self.completions, |c| c.ttft_ok())
+    }
+
+    pub fn tpot_attainment(&self) -> f64 {
+        frac(&self.completions, |c| c.tpot_ok())
+    }
+
+    pub fn ttft_attainment_for(&self, m: ModelId) -> f64 {
+        let v: Vec<&Completion> = self.completions.iter().filter(|c| c.model == m).collect();
+        if v.is_empty() {
+            return 1.0;
+        }
+        v.iter().filter(|c| c.ttft_ok()).count() as f64 / v.len() as f64
+    }
+
+    pub fn mean_ttft(&self) -> f64 {
+        finite_mean(self.completions.iter().map(|c| c.ttft))
+    }
+
+    pub fn p95_ttft(&self) -> f64 {
+        let mut s = Summary::new();
+        for c in &self.completions {
+            if c.ttft.is_finite() {
+                s.add(c.ttft);
+            }
+        }
+        s.p(95.0)
+    }
+
+    pub fn mean_tpot(&self) -> f64 {
+        finite_mean(self.completions.iter().map(|c| c.tpot))
+    }
+
+    pub fn p95_tpot(&self) -> f64 {
+        let mut s = Summary::new();
+        for c in &self.completions {
+            if c.tpot.is_finite() {
+                s.add(c.tpot);
+            }
+        }
+        s.p(95.0)
+    }
+
+    pub fn mean_e2e(&self) -> f64 {
+        finite_mean(self.completions.iter().map(|c| c.finish - c.arrival))
+    }
+
+    pub fn p95_e2e(&self) -> f64 {
+        let mut s = Summary::new();
+        for c in &self.completions {
+            if c.finish.is_finite() {
+                s.add(c.finish - c.arrival);
+            }
+        }
+        s.p(95.0)
+    }
+
+    /// Requests per second of engine-busy time (the paper's idle-excluded
+    /// throughput accounting, SS7.1).
+    pub fn req_throughput(&self) -> f64 {
+        if self.busy_seconds <= 0.0 {
+            return 0.0;
+        }
+        self.completions.iter().filter(|c| !c.dropped).count() as f64 / self.busy_seconds
+    }
+
+    /// Tokens per second of engine-busy time (prefill + decode).
+    pub fn token_throughput(&self) -> f64 {
+        if self.busy_seconds <= 0.0 {
+            return 0.0;
+        }
+        let tokens: u64 = self
+            .completions
+            .iter()
+            .filter(|c| !c.dropped)
+            .map(|c| (c.prompt_tokens + c.output_tokens) as u64)
+            .sum();
+        tokens as f64 / self.busy_seconds
+    }
+
+    /// Revenue proxy (Fig 11b): prefill + decode tokens priced per 1k tokens,
+    /// normalized by GPU count.
+    pub fn revenue_per_gpu(&self, in_price: f64, out_price: f64, n_gpus: usize) -> f64 {
+        let rev: f64 = self
+            .completions
+            .iter()
+            .filter(|c| !c.dropped)
+            .map(|c| {
+                c.prompt_tokens as f64 / 1000.0 * in_price
+                    + c.output_tokens as f64 / 1000.0 * out_price
+            })
+            .sum();
+        rev / n_gpus.max(1) as f64
+    }
+}
+
+fn frac<F: Fn(&Completion) -> bool>(cs: &[Completion], f: F) -> f64 {
+    if cs.is_empty() {
+        return 1.0;
+    }
+    cs.iter().filter(|c| f(c)).count() as f64 / cs.len() as f64
+}
+
+fn finite_mean<I: Iterator<Item = f64>>(it: I) -> f64 {
+    let v: Vec<f64> = it.filter(|x| x.is_finite()).collect();
+    crate::util::stats::mean(&v)
+}
+
+/// One timeline sample (memory/queue plots).
+#[derive(Debug, Clone)]
+pub struct TimelineSample {
+    pub t: f64,
+    /// Per-GPU: (weight_bytes, kv_mapped, kv_used, free).
+    pub gpus: Vec<(u64, u64, u64, u64)>,
+    /// Per-GPU queue length.
+    pub queue_lens: Vec<usize>,
+    /// Cumulative TTFT SLO violations so far.
+    pub cum_violations: usize,
+    /// Completed-token throughput since the previous sample (tok/s).
+    pub inst_token_tput: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::request::RequestId;
+
+    fn comp(ttft: f64, slo: f64, tpot: f64, tpot_slo: f64) -> Completion {
+        Completion {
+            id: RequestId(0),
+            model: ModelId(0),
+            arrival: 0.0,
+            finish: 10.0,
+            prompt_tokens: 100,
+            output_tokens: 50,
+            ttft,
+            tpot,
+            ttft_slo: slo,
+            tpot_slo,
+            dropped: false,
+            preemptions: 0,
+        }
+    }
+
+    #[test]
+    fn attainment_counts() {
+        let m = RunMetrics {
+            completions: vec![
+                comp(0.1, 0.5, 0.01, 0.05),
+                comp(0.6, 0.5, 0.01, 0.05),
+                comp(0.2, 0.5, 0.10, 0.05),
+                comp(0.3, 0.5, 0.02, 0.05),
+            ],
+            busy_seconds: 10.0,
+            wall_seconds: 20.0,
+            ..Default::default()
+        };
+        assert!((m.ttft_attainment() - 0.75).abs() < 1e-12);
+        assert!((m.tpot_attainment() - 0.75).abs() < 1e-12);
+        assert!((m.req_throughput() - 0.4).abs() < 1e-12);
+        assert!((m.token_throughput() - 60.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_run_is_vacuously_perfect() {
+        let m = RunMetrics::default();
+        assert_eq!(m.ttft_attainment(), 1.0);
+        assert_eq!(m.req_throughput(), 0.0);
+    }
+
+    #[test]
+    fn revenue_normalizes_by_gpu() {
+        let m = RunMetrics {
+            completions: vec![comp(0.1, 0.5, 0.01, 0.05)],
+            ..Default::default()
+        };
+        let r1 = m.revenue_per_gpu(1.0, 3.0, 1);
+        let r2 = m.revenue_per_gpu(1.0, 3.0, 2);
+        assert!((r1 - (0.1 + 0.15)).abs() < 1e-12);
+        assert!((r1 / r2 - 2.0).abs() < 1e-12);
+    }
+}

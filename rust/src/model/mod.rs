@@ -1,0 +1,5 @@
+//! Model architecture catalog (Table 3 mix + PrismNano real-execution family).
+
+pub mod spec;
+
+pub use spec::{ModelId, ModelSpec, SizeClass};

@@ -1,0 +1,264 @@
+//! Model architecture catalog.
+//!
+//! Mirrors the paper's Table 3 evaluation mix (58 LLMs: 43x 1B-3B, 8x 4B-8B,
+//! 3x 9B-30B, 4x 31B-70B) with realistic per-architecture KV geometry, plus
+//! the PrismNano family actually executed through PJRT. The simulator only
+//! needs the quantities the paper's mechanisms act on: weight bytes, KV bytes
+//! per token (`token_size`), layer count, and TP degree.
+
+use std::fmt;
+
+pub const GB: u64 = 1 << 30;
+pub const MB: u64 = 1 << 20;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ModelId(pub u32);
+
+impl fmt::Display for ModelId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "m{}", self.0)
+    }
+}
+
+/// Size class buckets from Table 3.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SizeClass {
+    B1to3,
+    B4to8,
+    B9to30,
+    B31to70,
+    Nano, // real-execution PrismNano family
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub id: ModelId,
+    pub name: String,
+    pub class: SizeClass,
+    /// Total parameters.
+    pub params: u64,
+    pub n_layers: u32,
+    pub n_heads: u32,
+    pub n_kv_heads: u32,
+    pub d_head: u32,
+    /// Bytes per element for weights and KV (2 = fp16/bf16, 4 = fp32).
+    pub dtype_bytes: u32,
+    /// Tensor-parallel degree (1 for single-GPU models).
+    pub tp: u32,
+}
+
+impl ModelSpec {
+    /// Total weight bytes (all TP shards combined).
+    pub fn weight_bytes(&self) -> u64 {
+        self.params * self.dtype_bytes as u64
+    }
+
+    /// Weight bytes resident on ONE GPU of the TP group.
+    pub fn weight_bytes_per_gpu(&self) -> u64 {
+        self.weight_bytes() / self.tp as u64
+    }
+
+    /// KV-cache bytes per token per GPU - the paper's `token_size`.
+    /// K+V over all layers: L * 2 * Hkv * Dh * dtype, divided across TP.
+    pub fn kv_bytes_per_token(&self) -> u64 {
+        let full =
+            self.n_layers as u64 * 2 * self.n_kv_heads as u64 * self.d_head as u64 * self.dtype_bytes as u64;
+        full / self.tp as u64
+    }
+
+    pub fn is_tp(&self) -> bool {
+        self.tp > 1
+    }
+}
+
+/// Canonical architecture for a given parameter count (Llama/Qwen-like).
+fn arch_for(params_b: f64) -> (u32, u32, u32, u32) {
+    // (layers, heads, kv_heads, head_dim)
+    if params_b <= 1.5 {
+        (16, 32, 8, 64)
+    } else if params_b <= 3.5 {
+        (28, 24, 8, 128)
+    } else if params_b <= 8.5 {
+        (32, 32, 8, 128)
+    } else if params_b <= 15.0 {
+        (40, 40, 8, 128)
+    } else if params_b <= 34.0 {
+        (64, 40, 8, 128)
+    } else {
+        (80, 64, 8, 128)
+    }
+}
+
+fn mk(id: u32, name: &str, params_b: f64, tp: u32, class: SizeClass) -> ModelSpec {
+    let (l, h, kv, dh) = arch_for(params_b);
+    ModelSpec {
+        id: ModelId(id),
+        name: name.to_string(),
+        class,
+        params: (params_b * 1e9) as u64,
+        n_layers: l,
+        n_heads: h,
+        n_kv_heads: kv,
+        d_head: dh,
+        dtype_bytes: 2,
+        tp,
+    }
+}
+
+/// The 58-model Table 3 mix. Names are synthetic but size-faithful: a few
+/// popular base models plus many fine-tuned/distilled variants, matching the
+/// paper's observation that providers host long tails of low-volume models.
+pub fn table3_catalog() -> Vec<ModelSpec> {
+    let mut v = Vec::new();
+    let mut id = 0;
+    let mut push = |v: &mut Vec<ModelSpec>, name: String, p: f64, tp: u32, c: SizeClass| {
+        v.push(mk(id, &name, p, tp, c));
+        id += 1;
+    };
+
+    // 43 models in 1B-3B: fine-tuned/LoRA-merged small agents.
+    for i in 0..22 {
+        push(&mut v, format!("llama-3.2-1b-ft{i:02}"), 1.2, 1, SizeClass::B1to3);
+    }
+    for i in 0..13 {
+        push(&mut v, format!("qwen-2.5-1.5b-ft{i:02}"), 1.5, 1, SizeClass::B1to3);
+    }
+    for i in 0..8 {
+        push(&mut v, format!("llama-3.2-3b-ft{i:02}"), 3.0, 1, SizeClass::B1to3);
+    }
+    // 8 models in 4B-8B.
+    for i in 0..5 {
+        push(&mut v, format!("llama-3.1-8b-ft{i:02}"), 8.0, 1, SizeClass::B4to8);
+    }
+    for i in 0..3 {
+        push(&mut v, format!("qwen-2.5-7b-ft{i:02}"), 7.0, 1, SizeClass::B4to8);
+    }
+    // 3 models in 9B-30B.
+    push(&mut v, "ds-r1-distill-qwen-14b".into(), 14.0, 1, SizeClass::B9to30);
+    push(&mut v, "qwen-2.5-14b-inst".into(), 14.0, 1, SizeClass::B9to30);
+    push(&mut v, "gemma-2-27b".into(), 27.0, 1, SizeClass::B9to30);
+    // 4 models in 31B-70B (TP per the paper: TP=4 for 32B, TP=4/8 for 70B).
+    push(&mut v, "qwen-2.5-32b".into(), 32.0, 4, SizeClass::B31to70);
+    push(&mut v, "qwq-32b".into(), 32.0, 4, SizeClass::B31to70);
+    push(&mut v, "llama-3.3-70b".into(), 70.0, 8, SizeClass::B31to70);
+    push(&mut v, "llama-3.1-70b-ft00".into(), 70.0, 4, SizeClass::B31to70);
+
+    assert_eq!(v.len(), 58);
+    v
+}
+
+/// The PrismNano family actually executed via PJRT (see python/compile/model.py).
+pub fn nano_catalog() -> Vec<ModelSpec> {
+    vec![
+        ModelSpec {
+            id: ModelId(1000),
+            name: "prism-nano".into(),
+            class: SizeClass::Nano,
+            params: 100_000,
+            n_layers: 2,
+            n_heads: 4,
+            n_kv_heads: 2,
+            d_head: 16,
+            dtype_bytes: 4,
+            tp: 1,
+        },
+        ModelSpec {
+            id: ModelId(1001),
+            name: "prism-micro".into(),
+            class: SizeClass::Nano,
+            params: 600_000,
+            n_layers: 4,
+            n_heads: 8,
+            n_kv_heads: 4,
+            d_head: 16,
+            dtype_bytes: 4,
+            tp: 1,
+        },
+    ]
+}
+
+/// Subset selector used by experiments: `n` models with the same popularity
+/// mix shape as Table 3 (small models dominate).
+pub fn catalog_subset(n: usize) -> Vec<ModelSpec> {
+    let all = table3_catalog();
+    assert!(n <= all.len());
+    // Spread over classes: keep ordering stable but take proportionally.
+    let mut picked: Vec<ModelSpec> = Vec::new();
+    // Always include one large and one mid model when room allows.
+    let mut rest: Vec<ModelSpec> = all.clone();
+    if n >= 8 {
+        // one 70B (TP), one 14B, one 8B first
+        for name in ["llama-3.1-70b-ft00", "ds-r1-distill-qwen-14b", "llama-3.1-8b-ft00"] {
+            if let Some(pos) = rest.iter().position(|m| m.name == name) {
+                picked.push(rest.remove(pos));
+            }
+        }
+    }
+    for m in rest {
+        if picked.len() >= n {
+            break;
+        }
+        picked.push(m);
+    }
+    picked.truncate(n);
+    picked
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_matches_paper_counts() {
+        let cat = table3_catalog();
+        assert_eq!(cat.len(), 58);
+        let count = |c: SizeClass| cat.iter().filter(|m| m.class == c).count();
+        assert_eq!(count(SizeClass::B1to3), 43);
+        assert_eq!(count(SizeClass::B4to8), 8);
+        assert_eq!(count(SizeClass::B9to30), 3);
+        assert_eq!(count(SizeClass::B31to70), 4);
+        // Unique ids and names.
+        let mut ids: Vec<u32> = cat.iter().map(|m| m.id.0).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 58);
+    }
+
+    #[test]
+    fn weight_sizes_realistic() {
+        let cat = table3_catalog();
+        let b70 = cat.iter().find(|m| m.name == "llama-3.3-70b").unwrap();
+        // ~140 GB fp16, paper SS2.
+        assert!((b70.weight_bytes() as f64 / GB as f64 - 130.4).abs() < 5.0);
+        assert_eq!(b70.weight_bytes_per_gpu() * 8, b70.weight_bytes());
+        let b1 = &cat[0];
+        assert!(b1.weight_bytes() < 3 * GB);
+    }
+
+    #[test]
+    fn kv_token_size_realistic() {
+        // Llama-3-8B-like: 32 layers, 8 kv heads, 128 dh, fp16
+        let m = mk(0, "x", 8.0, 1, SizeClass::B4to8);
+        assert_eq!(m.kv_bytes_per_token(), 32 * 2 * 8 * 128 * 2); // 131072 = 128 KiB/token
+        // TP divides per-GPU token size: 8 shards recombine to the full size.
+        let t = mk(1, "y", 70.0, 8, SizeClass::B31to70);
+        assert_eq!(t.kv_bytes_per_token() * 8, 80 * 2 * 8 * 128 * 2);
+    }
+
+    #[test]
+    fn subset_includes_variety() {
+        let s = catalog_subset(18);
+        assert_eq!(s.len(), 18);
+        assert!(s.iter().any(|m| m.is_tp()));
+        assert!(s.iter().any(|m| m.class == SizeClass::B1to3));
+        let s2 = catalog_subset(8);
+        assert_eq!(s2.len(), 8);
+    }
+
+    #[test]
+    fn nano_matches_python_manifest_geometry() {
+        let nano = &nano_catalog()[0];
+        // Must agree with python/compile/model.py prism-nano: L=2, Hkv=2, Dh=16, f32.
+        assert_eq!(nano.kv_bytes_per_token(), 2 * 2 * 2 * 16 * 4);
+    }
+}

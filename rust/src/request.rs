@@ -1,0 +1,188 @@
+//! Request model: arrivals, SLOs, lifecycle states, and latency records.
+//!
+//! Times are simulation seconds (f64). TTFT is measured from arrival to
+//! first output token (queueing + any activation + prefill); TPOT is the
+//! mean inter-token latency over the decode phase (paper SS2).
+
+use crate::model::spec::ModelId;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RequestId(pub u64);
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Phase {
+    Queued,
+    Prefill,
+    Decode,
+    Finished,
+    Dropped,
+}
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: RequestId,
+    pub model: ModelId,
+    pub arrival: f64,
+    pub prompt_tokens: u32,
+    pub output_tokens: u32,
+    /// TTFT SLO in seconds; deadline = arrival + ttft_slo.
+    pub ttft_slo: f64,
+    /// TPOT SLO in seconds per output token.
+    pub tpot_slo: f64,
+
+    // ---- runtime state ----
+    pub phase: Phase,
+    pub prefill_done_tokens: u32,
+    pub decoded_tokens: u32,
+    pub first_token_time: Option<f64>,
+    pub finish_time: Option<f64>,
+    pub decode_time_accum: f64,
+    /// Times this request was preempted (memory pressure).
+    pub preemptions: u32,
+}
+
+impl Request {
+    pub fn new(
+        id: u64,
+        model: ModelId,
+        arrival: f64,
+        prompt_tokens: u32,
+        output_tokens: u32,
+        ttft_slo: f64,
+        tpot_slo: f64,
+    ) -> Self {
+        Request {
+            id: RequestId(id),
+            model,
+            arrival,
+            prompt_tokens: prompt_tokens.max(1),
+            output_tokens: output_tokens.max(1),
+            ttft_slo,
+            tpot_slo,
+            phase: Phase::Queued,
+            prefill_done_tokens: 0,
+            decoded_tokens: 0,
+            first_token_time: None,
+            finish_time: None,
+            decode_time_accum: 0.0,
+            preemptions: 0,
+        }
+    }
+
+    pub fn ttft_deadline(&self) -> f64 {
+        self.arrival + self.ttft_slo
+    }
+
+    /// Total tokens whose KV must be resident while decoding.
+    pub fn total_tokens(&self) -> u32 {
+        self.prompt_tokens + self.output_tokens
+    }
+
+    pub fn ttft(&self) -> Option<f64> {
+        self.first_token_time.map(|t| t - self.arrival)
+    }
+
+    /// Mean time per output token over the decode phase.
+    pub fn tpot(&self) -> Option<f64> {
+        if self.decoded_tokens > 1 {
+            Some(self.decode_time_accum / (self.decoded_tokens - 1) as f64)
+        } else if self.phase == Phase::Finished {
+            Some(0.0) // single-token outputs trivially meet TPOT
+        } else {
+            None
+        }
+    }
+
+    pub fn ttft_ok(&self) -> bool {
+        match self.ttft() {
+            Some(t) => t <= self.ttft_slo + 1e-9,
+            None => false,
+        }
+    }
+
+    pub fn tpot_ok(&self) -> bool {
+        match self.tpot() {
+            Some(t) => t <= self.tpot_slo + 1e-9,
+            None => false,
+        }
+    }
+}
+
+/// Finished-request record kept by the metrics collector.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: RequestId,
+    pub model: ModelId,
+    pub arrival: f64,
+    pub finish: f64,
+    pub prompt_tokens: u32,
+    pub output_tokens: u32,
+    pub ttft: f64,
+    pub tpot: f64,
+    pub ttft_slo: f64,
+    pub tpot_slo: f64,
+    pub dropped: bool,
+    pub preemptions: u32,
+}
+
+impl Completion {
+    pub fn from_request(r: &Request) -> Self {
+        Completion {
+            id: r.id,
+            model: r.model,
+            arrival: r.arrival,
+            finish: r.finish_time.unwrap_or(f64::INFINITY),
+            prompt_tokens: r.prompt_tokens,
+            output_tokens: r.decoded_tokens,
+            ttft: r.ttft().unwrap_or(f64::INFINITY),
+            tpot: r.tpot().unwrap_or(f64::INFINITY),
+            ttft_slo: r.ttft_slo,
+            tpot_slo: r.tpot_slo,
+            dropped: r.phase == Phase::Dropped,
+            preemptions: r.preemptions,
+        }
+    }
+
+    pub fn ttft_ok(&self) -> bool {
+        !self.dropped && self.ttft <= self.ttft_slo + 1e-9
+    }
+
+    pub fn tpot_ok(&self) -> bool {
+        !self.dropped && self.tpot <= self.tpot_slo + 1e-9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ttft_and_tpot_math() {
+        let mut r = Request::new(1, ModelId(0), 10.0, 100, 5, 0.5, 0.05);
+        assert_eq!(r.ttft(), None);
+        r.first_token_time = Some(10.4);
+        assert!((r.ttft().unwrap() - 0.4).abs() < 1e-12);
+        assert!(r.ttft_ok());
+        r.decoded_tokens = 5;
+        r.decode_time_accum = 0.16; // 4 inter-token gaps
+        assert!((r.tpot().unwrap() - 0.04).abs() < 1e-12);
+        assert!(r.tpot_ok());
+        r.decode_time_accum = 0.4;
+        assert!(!r.tpot_ok());
+    }
+
+    #[test]
+    fn completion_of_dropped_request_fails_slos() {
+        let mut r = Request::new(2, ModelId(0), 0.0, 10, 10, 1.0, 0.1);
+        r.phase = Phase::Dropped;
+        let c = Completion::from_request(&r);
+        assert!(c.dropped && !c.ttft_ok() && !c.tpot_ok());
+    }
+
+    #[test]
+    fn zero_token_requests_clamped() {
+        let r = Request::new(3, ModelId(0), 0.0, 0, 0, 1.0, 0.1);
+        assert_eq!(r.prompt_tokens, 1);
+        assert_eq!(r.output_tokens, 1);
+    }
+}

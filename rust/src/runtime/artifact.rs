@@ -1,0 +1,204 @@
+//! Artifact manifest + weight blob loading.
+//!
+//! Layout produced by python/compile/aot.py under artifacts/<model>/:
+//!   manifest.json, weights.bin (little-endian f32, manifest order),
+//!   prefill_b{B}_t{T}.hlo.txt, decode_b{B}.hlo.txt.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::{parse_file, Json};
+
+#[derive(Debug, Clone)]
+pub struct WeightEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub bytes: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct PrefillBucket {
+    pub batch: usize,
+    pub tokens: usize,
+    pub file: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct DecodeBucket {
+    pub batch: usize,
+    pub file: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_head: usize,
+    pub max_seq: usize,
+    pub page_tokens: usize,
+    pub max_pages: usize,
+    pub pool_pages: usize,
+    pub kv_bytes_per_token: usize,
+    pub weights: Vec<WeightEntry>,
+    pub prefill: Vec<PrefillBucket>,
+    pub decode: Vec<DecodeBucket>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let j = parse_file(&dir.join("manifest.json"))?;
+        let u = |k: &str| -> Result<usize> {
+            j.get(k).as_usize().ok_or_else(|| anyhow!("manifest missing {k}"))
+        };
+        let weights = j
+            .get("weights")
+            .as_arr()
+            .ok_or_else(|| anyhow!("manifest missing weights"))?
+            .iter()
+            .map(|w| {
+                Ok(WeightEntry {
+                    name: w.get("name").as_str().unwrap_or_default().to_string(),
+                    shape: w
+                        .get("shape")
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .map(|v| v.as_usize().unwrap_or(0))
+                        .collect(),
+                    offset: w.get("offset").as_usize().ok_or_else(|| anyhow!("offset"))?,
+                    bytes: w.get("bytes").as_usize().ok_or_else(|| anyhow!("bytes"))?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let parse_buckets = |key: &str| -> Vec<&Json> {
+            j.at(&["artifacts", key]).as_arr().map(|a| a.iter().collect()).unwrap_or_default()
+        };
+        let prefill = parse_buckets("prefill")
+            .into_iter()
+            .map(|a| PrefillBucket {
+                batch: a.get("batch").as_usize().unwrap_or(1),
+                tokens: a.get("tokens").as_usize().unwrap_or(0),
+                file: a.get("file").as_str().unwrap_or_default().to_string(),
+            })
+            .collect();
+        let decode = parse_buckets("decode")
+            .into_iter()
+            .map(|a| DecodeBucket {
+                batch: a.get("batch").as_usize().unwrap_or(1),
+                file: a.get("file").as_str().unwrap_or_default().to_string(),
+            })
+            .collect();
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            name: j.get("name").as_str().unwrap_or_default().to_string(),
+            vocab: u("vocab")?,
+            d_model: u("d_model")?,
+            n_layers: u("n_layers")?,
+            n_heads: u("n_heads")?,
+            n_kv_heads: u("n_kv_heads")?,
+            d_head: u("d_head")?,
+            max_seq: u("max_seq")?,
+            page_tokens: u("page_tokens")?,
+            max_pages: u("max_pages")?,
+            pool_pages: u("pool_pages")?,
+            kv_bytes_per_token: u("kv_bytes_per_token")?,
+            weights,
+            prefill,
+            decode,
+        })
+    }
+
+    /// Read weights.bin into per-tensor f32 vectors (manifest order).
+    pub fn load_weights(&self) -> Result<Vec<Vec<f32>>> {
+        let blob = std::fs::read(self.dir.join("weights.bin"))
+            .with_context(|| format!("reading weights for {}", self.name))?;
+        let mut out = Vec::with_capacity(self.weights.len());
+        for w in &self.weights {
+            let lo = w.offset;
+            let hi = w.offset + w.bytes;
+            if hi > blob.len() {
+                return Err(anyhow!("weight {} out of range", w.name));
+            }
+            let mut v = Vec::with_capacity(w.bytes / 4);
+            for chunk in blob[lo..hi].chunks_exact(4) {
+                v.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+            }
+            out.push(v);
+        }
+        Ok(out)
+    }
+
+    /// Elements per pool slot ([Tp, L, 2, Hkv, Dh]) - one kvcached block.
+    pub fn slot_elems(&self) -> usize {
+        self.page_tokens * self.n_layers * 2 * self.n_kv_heads * self.d_head
+    }
+
+    /// Elements of one token's KV across layers ([L, 2, Hkv, Dh]).
+    pub fn token_kv_elems(&self) -> usize {
+        self.n_layers * 2 * self.n_kv_heads * self.d_head
+    }
+}
+
+/// Discover all model artifact dirs under the artifacts root.
+pub fn discover(root: &Path) -> Vec<PathBuf> {
+    let mut out = Vec::new();
+    if let Ok(entries) = std::fs::read_dir(root) {
+        for e in entries.flatten() {
+            let p = e.path();
+            if p.is_dir() && p.join("manifest.json").is_file() {
+                out.push(p);
+            }
+        }
+    }
+    out.sort();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_root() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn manifest_loads_and_is_consistent() {
+        let root = artifacts_root();
+        if !root.join("prism-nano").is_dir() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&root.join("prism-nano")).unwrap();
+        assert_eq!(m.name, "prism-nano");
+        assert_eq!(m.n_layers, 2);
+        assert_eq!(m.kv_bytes_per_token, m.token_kv_elems() * 4);
+        assert!(!m.prefill.is_empty() && !m.decode.is_empty());
+        for b in &m.prefill {
+            assert!(m.dir.join(&b.file).is_file());
+        }
+        let w = m.load_weights().unwrap();
+        assert_eq!(w.len(), m.weights.len());
+        for (v, e) in w.iter().zip(&m.weights) {
+            assert_eq!(v.len() * 4, e.bytes);
+            assert_eq!(v.len(), e.shape.iter().product::<usize>());
+        }
+    }
+
+    #[test]
+    fn discover_finds_models() {
+        let root = artifacts_root();
+        if !root.is_dir() {
+            return;
+        }
+        let dirs = discover(&root);
+        assert!(dirs.len() >= 2, "expected nano+micro, got {dirs:?}");
+    }
+}

@@ -1,0 +1,279 @@
+//! PJRT execution: compile HLO-text artifacts once, upload weights once as
+//! device buffers, then run prefill/decode with per-call data arguments.
+//!
+//! Static shapes per bucket (CUDA-graph-style): decode is compiled for batch
+//! sizes {1,2,4,8} and prefill for a few prompt lengths; the runtime picks
+//! the smallest bucket that fits and pads. Padding slots use seq_len=0,
+//! which the kernel + merge treat as "attend to nothing".
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::runtime::artifact::Manifest;
+
+pub struct ModelRuntime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    weight_bufs: Vec<xla::PjRtBuffer>,
+    prefill: BTreeMap<usize, xla::PjRtLoadedExecutable>, // key: token bucket
+    decode: BTreeMap<usize, xla::PjRtLoadedExecutable>,  // key: batch bucket
+    /// Wall-clock seconds spent uploading weights (activation cost, SS5.3).
+    pub weight_upload_seconds: f64,
+}
+
+pub struct PrefillOut {
+    /// Logits at the last valid token, [vocab].
+    pub logits: Vec<f32>,
+    /// KV for the prompt: [T_bucket, L, 2, Hkv, Dh] flattened (only the
+    /// first `len` tokens are meaningful).
+    pub kv: Vec<f32>,
+    pub bucket_tokens: usize,
+}
+
+pub struct DecodeOut {
+    /// [B_bucket, vocab] flattened.
+    pub logits: Vec<f32>,
+    /// [B_bucket, L, 2, Hkv, Dh] flattened.
+    pub new_kv: Vec<f32>,
+    pub bucket_batch: usize,
+}
+
+impl ModelRuntime {
+    pub fn load(client: &xla::PjRtClient, dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let t0 = std::time::Instant::now();
+        // Upload weights once (the activation path: host DRAM -> device).
+        let weights = manifest.load_weights()?;
+        let mut weight_bufs = Vec::with_capacity(weights.len());
+        for (w, e) in weights.iter().zip(&manifest.weights) {
+            weight_bufs.push(
+                client
+                    .buffer_from_host_buffer::<f32>(w, &e.shape, None)
+                    .with_context(|| format!("uploading {}", e.name))?,
+            );
+        }
+        let weight_upload_seconds = t0.elapsed().as_secs_f64();
+
+        let compile = |file: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let proto = xla::HloModuleProto::from_text_file(
+                dir.join(file).to_str().ok_or_else(|| anyhow!("bad path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            Ok(client.compile(&comp)?)
+        };
+        let mut prefill = BTreeMap::new();
+        for b in &manifest.prefill {
+            prefill.insert(b.tokens, compile(&b.file)?);
+        }
+        let mut decode = BTreeMap::new();
+        for b in &manifest.decode {
+            decode.insert(b.batch, compile(&b.file)?);
+        }
+        Ok(ModelRuntime {
+            manifest,
+            client: client.clone(),
+            weight_bufs,
+            prefill,
+            decode,
+            weight_upload_seconds,
+        })
+    }
+
+    pub fn prefill_buckets(&self) -> Vec<usize> {
+        self.prefill.keys().copied().collect()
+    }
+
+    pub fn decode_buckets(&self) -> Vec<usize> {
+        self.decode.keys().copied().collect()
+    }
+
+    fn buf_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer::<i32>(data, dims, None)?)
+    }
+
+    fn buf_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer::<f32>(data, dims, None)?)
+    }
+
+    /// Run prefill for one prompt (batch 1). Picks the smallest bucket with
+    /// tokens >= prompt length (error if the prompt exceeds all buckets).
+    pub fn prefill(&self, prompt: &[i32]) -> Result<PrefillOut> {
+        let len = prompt.len();
+        let (&bucket, exe) = self
+            .prefill
+            .range(len..)
+            .next()
+            .ok_or_else(|| anyhow!("prompt of {len} tokens exceeds largest prefill bucket"))?;
+        let mut toks = vec![0i32; bucket];
+        toks[..len].copy_from_slice(prompt);
+        let mut args: Vec<&xla::PjRtBuffer> = self.weight_bufs.iter().collect();
+        let tok_buf = self.buf_i32(&toks, &[1, bucket])?;
+        let len_buf = self.buf_i32(&[len as i32], &[1])?;
+        args.push(&tok_buf);
+        args.push(&len_buf);
+        let result = exe.execute_b(&args)?[0][0].to_literal_sync()?;
+        let (logits, kv) = result.to_tuple2()?;
+        Ok(PrefillOut {
+            logits: logits.to_vec::<f32>()?,
+            kv: kv.to_vec::<f32>()?,
+            bucket_tokens: bucket,
+        })
+    }
+
+    /// Run one decode step for up to `batch` requests. Inputs are padded to
+    /// the bucket; padding rows use seq_len 0 and token/pos 0.
+    #[allow(clippy::too_many_arguments)]
+    pub fn decode(
+        &self,
+        tokens: &[i32],
+        positions: &[i32],
+        pool: &[f32],
+        block_tables: &[i32], // [b, max_pages] flattened
+        seq_lens: &[i32],
+    ) -> Result<DecodeOut> {
+        let b = tokens.len();
+        let (&bucket, exe) = self
+            .decode
+            .range(b..)
+            .next()
+            .ok_or_else(|| anyhow!("batch {b} exceeds largest decode bucket"))?;
+        let m = &self.manifest;
+        assert_eq!(positions.len(), b);
+        assert_eq!(seq_lens.len(), b);
+        assert_eq!(block_tables.len(), b * m.max_pages);
+        assert_eq!(pool.len(), m.pool_pages * m.slot_elems());
+
+        let mut toks = vec![0i32; bucket];
+        toks[..b].copy_from_slice(tokens);
+        let mut pos = vec![0i32; bucket];
+        pos[..b].copy_from_slice(positions);
+        let mut bt = vec![0i32; bucket * m.max_pages];
+        bt[..b * m.max_pages].copy_from_slice(block_tables);
+        let mut lens = vec![0i32; bucket];
+        lens[..b].copy_from_slice(seq_lens);
+
+        let pool_dims = [
+            m.pool_pages,
+            m.page_tokens,
+            m.n_layers,
+            2,
+            m.n_kv_heads,
+            m.d_head,
+        ];
+        let tok_buf = self.buf_i32(&toks, &[bucket])?;
+        let pos_buf = self.buf_i32(&pos, &[bucket])?;
+        let pool_buf = self.buf_f32(pool, &pool_dims)?;
+        let bt_buf = self.buf_i32(&bt, &[bucket, m.max_pages])?;
+        let len_buf = self.buf_i32(&lens, &[bucket])?;
+        let mut args: Vec<&xla::PjRtBuffer> = self.weight_bufs.iter().collect();
+        args.push(&tok_buf);
+        args.push(&pos_buf);
+        args.push(&pool_buf);
+        args.push(&bt_buf);
+        args.push(&len_buf);
+        let result = exe.execute_b(&args)?[0][0].to_literal_sync()?;
+        let (logits, new_kv) = result.to_tuple2()?;
+        Ok(DecodeOut {
+            logits: logits.to_vec::<f32>()?,
+            new_kv: new_kv.to_vec::<f32>()?,
+            bucket_batch: bucket,
+        })
+    }
+}
+
+/// Argmax over a logits row (greedy sampling; deterministic serving).
+pub fn argmax(row: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn nano_dir() -> Option<PathBuf> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/prism-nano");
+        d.join("manifest.json").is_file().then_some(d)
+    }
+
+    #[test]
+    fn prefill_then_decode_roundtrip() {
+        let Some(dir) = nano_dir() else {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        };
+        let client = xla::PjRtClient::cpu().unwrap();
+        let rt = ModelRuntime::load(&client, &dir).unwrap();
+        let m = &rt.manifest;
+
+        // Prefill a 10-token prompt.
+        let prompt: Vec<i32> = (1..=10).collect();
+        let out = rt.prefill(&prompt).unwrap();
+        assert_eq!(out.logits.len(), m.vocab);
+        assert!(out.logits.iter().all(|x| x.is_finite()));
+
+        // Scatter prompt KV into a pool (slots 1.. hold the prompt pages).
+        let slot_elems = m.slot_elems();
+        let tok_elems = m.token_kv_elems();
+        let mut pool = vec![0f32; m.pool_pages * slot_elems];
+        let n_pages = prompt.len().div_ceil(m.page_tokens);
+        let mut bt = vec![0i32; m.max_pages];
+        for p in 0..n_pages {
+            let slot = p + 1;
+            bt[p] = slot as i32;
+            let lo_tok = p * m.page_tokens;
+            let hi_tok = (lo_tok + m.page_tokens).min(prompt.len());
+            for t in lo_tok..hi_tok {
+                let src = t * tok_elems..(t + 1) * tok_elems;
+                let dst_base = slot * slot_elems + (t - lo_tok) * tok_elems;
+                pool[dst_base..dst_base + tok_elems].copy_from_slice(&out.kv[src]);
+            }
+        }
+
+        // Decode one token; batch of 1 padded into bucket.
+        let next = argmax(&out.logits) as i32;
+        let dec = rt
+            .decode(&[next], &[10], &pool, &bt, &[10])
+            .unwrap();
+        assert!(dec.bucket_batch >= 1);
+        assert_eq!(dec.logits.len(), dec.bucket_batch * m.vocab);
+        assert!(dec.logits[..m.vocab].iter().all(|x| x.is_finite()));
+        assert_eq!(
+            dec.new_kv.len(),
+            dec.bucket_batch * m.token_kv_elems()
+        );
+
+        // Teacher-forcing check against an 11-token prefill: decoding token
+        // `next` at position 10 must equal prefilling [prompt..next].
+        let mut prompt2 = prompt.clone();
+        prompt2.push(next);
+        let out2 = rt.prefill(&prompt2).unwrap();
+        let row = &dec.logits[..m.vocab];
+        for (a, b) in row.iter().zip(out2.logits.iter()) {
+            assert!((a - b).abs() < 2e-3, "decode logits diverge: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn decode_bucket_padding_is_inert() {
+        let Some(dir) = nano_dir() else {
+            return;
+        };
+        let client = xla::PjRtClient::cpu().unwrap();
+        let rt = ModelRuntime::load(&client, &dir).unwrap();
+        let m = &rt.manifest;
+        let pool = vec![0f32; m.pool_pages * m.slot_elems()];
+        let bt = vec![0i32; m.max_pages];
+        // seq_len 0: the merge path must still produce finite logits.
+        let dec = rt.decode(&[5], &[0], &pool, &bt, &[0]).unwrap();
+        assert!(dec.logits[..m.vocab].iter().all(|x| x.is_finite()));
+    }
+}

@@ -1,0 +1,9 @@
+//! PJRT runtime: loads the AOT artifacts (HLO text + weights) produced by
+//! `make artifacts` and executes prefill/decode on the PJRT CPU client.
+//! Python never runs here - this is the request path.
+
+pub mod artifact;
+pub mod exec;
+
+pub use artifact::{Manifest, WeightEntry};
+pub use exec::ModelRuntime;

@@ -1,0 +1,242 @@
+//! Algorithm 2: GPU-local slack-aware request arbitration (Moore-Hodgson).
+//!
+//! A shared per-GPU queue arbitrates admission across all models resident on
+//! the GPU. Given each request's prefill deadline d = arrival + TTFT_SLO and
+//! execution estimate e = prompt_len / chunked_prefill_speed, Moore-Hodgson
+//! selects a maximum-cardinality subset that can all meet their deadlines
+//! when run in EDF order; over-deadline candidates with the longest
+//! execution time are deferred (not dropped - they are admitted later or
+//! reported late). Optimality follows from the classic 1||sum U_j result
+//! [Moore'68, Cheriyan et al.'21].
+
+use crate::request::RequestId;
+
+/// One admission candidate.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub id: RequestId,
+    pub arrival: f64,
+    /// Prefill deadline = arrival + TTFT SLO.
+    pub deadline: f64,
+    /// Estimated prefill execution seconds (p_r / c_r).
+    pub exec: f64,
+}
+
+/// Result of one arbitration round.
+#[derive(Debug, Clone, Default)]
+pub struct Schedule {
+    /// Admitted ids in EDF execution order.
+    pub admitted: Vec<RequestId>,
+    /// Deferred ids (would cause deadline misses; retried next round).
+    pub deferred: Vec<RequestId>,
+}
+
+/// Moore-Hodgson over the candidate set, starting execution at `now`.
+pub fn moore_hodgson(now: f64, candidates: &[Candidate]) -> Schedule {
+    let mut sorted: Vec<&Candidate> = candidates.iter().collect();
+    // Line 1: ascending deadlines (EDF), stable tie-break by arrival then id.
+    sorted.sort_by(|a, b| {
+        a.deadline
+            .partial_cmp(&b.deadline)
+            .unwrap()
+            .then(a.arrival.partial_cmp(&b.arrival).unwrap())
+            .then(a.id.cmp(&b.id))
+    });
+
+    // Lines 2-11: greedy insert, evict the longest job on deadline miss.
+    // Track (exec, id) of scheduled jobs in a max-heap by exec.
+    let mut schedule: Vec<&Candidate> = Vec::new();
+    let mut deferred: Vec<RequestId> = Vec::new();
+    let mut t = now;
+    for c in sorted {
+        schedule.push(c);
+        t += c.exec;
+        if t > c.deadline + 1e-12 {
+            // Remove the scheduled job with the longest execution time.
+            let (imax, _) = schedule
+                .iter()
+                .enumerate()
+                .max_by(|(_, a), (_, b)| a.exec.partial_cmp(&b.exec).unwrap())
+                .unwrap();
+            let evicted = schedule.remove(imax);
+            t -= evicted.exec;
+            deferred.push(evicted.id);
+        }
+    }
+    Schedule {
+        admitted: schedule.iter().map(|c| c.id).collect(),
+        deferred,
+    }
+}
+
+/// Convenience: count how many of `candidates` meet their deadline when run
+/// in the given order starting at `now` (used by tests and benches).
+pub fn on_time_count(now: f64, order: &[RequestId], candidates: &[Candidate]) -> usize {
+    let mut t = now;
+    let mut ok = 0;
+    for id in order {
+        let c = candidates.iter().find(|c| c.id == *id).unwrap();
+        t += c.exec;
+        if t <= c.deadline + 1e-12 {
+            ok += 1;
+        }
+    }
+    ok
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    fn cand(id: u64, deadline: f64, exec: f64) -> Candidate {
+        Candidate { id: RequestId(id), arrival: 0.0, deadline, exec }
+    }
+
+    #[test]
+    fn all_feasible_all_admitted() {
+        let cs = vec![cand(1, 1.0, 0.2), cand(2, 2.0, 0.5), cand(3, 3.0, 0.5)];
+        let s = moore_hodgson(0.0, &cs);
+        assert_eq!(s.admitted.len(), 3);
+        assert!(s.deferred.is_empty());
+        // EDF order.
+        assert_eq!(s.admitted, vec![RequestId(1), RequestId(2), RequestId(3)]);
+    }
+
+    #[test]
+    fn textbook_example_evicts_longest() {
+        // Jobs: (exec, deadline): A(4,5) B(3,6) C(2,7). EDF: A,B,C.
+        // After B: t=7 > 6 -> evict A (longest). Final: B,C both on time.
+        let cs = vec![cand(1, 5.0, 4.0), cand(2, 6.0, 3.0), cand(3, 7.0, 2.0)];
+        let s = moore_hodgson(0.0, &cs);
+        assert_eq!(s.deferred, vec![RequestId(1)]);
+        assert_eq!(s.admitted, vec![RequestId(2), RequestId(3)]);
+        assert_eq!(on_time_count(0.0, &s.admitted, &cs), 2);
+    }
+
+    #[test]
+    fn respects_start_time() {
+        let cs = vec![cand(1, 1.0, 0.9)];
+        assert_eq!(moore_hodgson(0.0, &cs).admitted.len(), 1);
+        assert_eq!(moore_hodgson(0.5, &cs).admitted.len(), 0);
+    }
+
+    #[test]
+    fn strict_slo_short_job_preferred_over_long_relaxed() {
+        // The Fig 8 scenario: model2's short strict-SLO requests must win
+        // over model1's long relaxed ones.
+        let cs = vec![
+            cand(1, 10.0, 5.0), // long, relaxed
+            cand(2, 0.5, 0.2),  // short, strict
+            cand(3, 0.8, 0.2),  // short, strict
+        ];
+        let s = moore_hodgson(0.0, &cs);
+        assert!(s.admitted.contains(&RequestId(2)));
+        assert!(s.admitted.contains(&RequestId(3)));
+    }
+
+    /// Property: Moore-Hodgson admits at least as many on-time jobs as EDF
+    /// over the full set, and every admitted job is on time.
+    #[test]
+    fn prop_admitted_all_on_time_and_beats_edf() {
+        check(
+            120,
+            0xA1B2,
+            |r: &mut Rng| {
+                let n = r.range_usize(1, 25);
+                (0..n)
+                    .map(|i| {
+                        (
+                            i as u64,
+                            r.range_f64(0.1, 20.0), // deadline
+                            r.range_f64(0.05, 5.0), // exec
+                        )
+                    })
+                    .collect::<Vec<(u64, f64, f64)>>()
+            },
+            |jobs| {
+                let cs: Vec<Candidate> =
+                    jobs.iter().map(|&(id, d, e)| cand(id, d, e)).collect();
+                let s = moore_hodgson(0.0, &cs);
+                // 1. admitted + deferred = all.
+                if s.admitted.len() + s.deferred.len() != cs.len() {
+                    return Err("partition violated".into());
+                }
+                // 2. every admitted job is on time in schedule order.
+                if on_time_count(0.0, &s.admitted, &cs) != s.admitted.len() {
+                    return Err(format!(
+                        "admitted set has late jobs: {:?}",
+                        s.admitted
+                    ));
+                }
+                // 3. at least as good as plain EDF on the full set.
+                let mut edf: Vec<&Candidate> = cs.iter().collect();
+                edf.sort_by(|a, b| a.deadline.partial_cmp(&b.deadline).unwrap());
+                let edf_ids: Vec<RequestId> = edf.iter().map(|c| c.id).collect();
+                let edf_ok = on_time_count(0.0, &edf_ids, &cs);
+                if s.admitted.len() < edf_ok {
+                    return Err(format!(
+                        "MH admitted {} < EDF on-time {}",
+                        s.admitted.len(),
+                        edf_ok
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Property: brute-force optimality for small instances - no subset of
+    /// jobs larger than the admitted set can all be on time.
+    #[test]
+    fn prop_optimal_vs_bruteforce() {
+        check(
+            80,
+            0xC3D4,
+            |r: &mut Rng| {
+                let n = r.range_usize(1, 9);
+                (0..n)
+                    .map(|i| (i as u64, r.range_f64(0.1, 4.0), r.range_f64(0.1, 2.0)))
+                    .collect::<Vec<(u64, f64, f64)>>()
+            },
+            |jobs| {
+                let cs: Vec<Candidate> =
+                    jobs.iter().map(|&(id, d, e)| cand(id, d, e)).collect();
+                let s = moore_hodgson(0.0, &cs);
+                // Brute force: max feasible subset size (EDF order within a
+                // subset is optimal for feasibility).
+                let n = cs.len();
+                let mut best = 0usize;
+                for mask in 0u32..(1 << n) {
+                    let mut subset: Vec<&Candidate> = (0..n)
+                        .filter(|i| mask & (1 << i) != 0)
+                        .map(|i| &cs[i])
+                        .collect();
+                    subset.sort_by(|a, b| a.deadline.partial_cmp(&b.deadline).unwrap());
+                    let mut t = 0.0;
+                    let mut feasible = true;
+                    for c in &subset {
+                        t += c.exec;
+                        if t > c.deadline + 1e-12 {
+                            feasible = false;
+                            break;
+                        }
+                    }
+                    if feasible {
+                        best = best.max(subset.len());
+                    }
+                }
+                if s.admitted.len() != best {
+                    return Err(format!(
+                        "MH={} but optimal={} for {:?}",
+                        s.admitted.len(),
+                        best,
+                        jobs
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,140 @@
+//! KV Pressure Ratio (paper SS6.1) and the sliding-window token-rate monitor.
+//!
+//! KVPR = w_token_rate / shared_kv, where
+//!   w_token_rate = token_rate * token_size / SLO  (bytes of KV demand per
+//!   second, weighted by TPOT urgency - decoding dominates and is the
+//!   memory-sensitive phase), and shared_kv is the memory available for KV
+//!   on the GPU. High KVPR = ballooning headroom is likely to be stifled.
+
+use std::collections::VecDeque;
+
+/// Sliding-window token-rate estimator (Fig 15b: ~60 s window is robust).
+#[derive(Debug, Clone)]
+pub struct RateMonitor {
+    window: f64,
+    /// (time, tokens) events: input tokens of admitted requests + decode
+    /// tokens produced - both drive KV growth (paper SS6.1).
+    events: VecDeque<(f64, u64)>,
+    total: u64,
+}
+
+impl RateMonitor {
+    pub fn new(window_seconds: f64) -> Self {
+        RateMonitor { window: window_seconds, events: VecDeque::new(), total: 0 }
+    }
+
+    pub fn record(&mut self, now: f64, tokens: u64) {
+        self.events.push_back((now, tokens));
+        self.total += tokens;
+        self.expire(now);
+    }
+
+    fn expire(&mut self, now: f64) {
+        while let Some(&(t, n)) = self.events.front() {
+            if now - t > self.window {
+                self.events.pop_front();
+                self.total -= n;
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Tokens per second over the window ending at `now`.
+    pub fn rate(&mut self, now: f64) -> f64 {
+        self.expire(now);
+        if self.events.is_empty() {
+            return 0.0;
+        }
+        let span = (now - self.events.front().unwrap().0).max(1e-9).min(self.window);
+        // Use the configured window once enough history exists: smoother and
+        // matches a plain moving average.
+        let denom = if now - self.events.front().unwrap().0 >= self.window * 0.5 {
+            span
+        } else {
+            self.window * 0.5
+        };
+        self.total as f64 / denom
+    }
+
+    pub fn window_seconds(&self) -> f64 {
+        self.window
+    }
+}
+
+/// Per-model demand snapshot used by the placement algorithm.
+#[derive(Debug, Clone)]
+pub struct ModelDemand {
+    pub model: crate::model::spec::ModelId,
+    /// tokens/s over the monitoring window.
+    pub token_rate: f64,
+    /// bytes of KV per token (the paper's token_size), full model (all shards).
+    pub token_size: f64,
+    /// TPOT SLO seconds (the urgency weight).
+    pub slo: f64,
+    /// weight bytes per GPU shard.
+    pub weight_bytes_per_gpu: u64,
+    pub tp: u32,
+}
+
+impl ModelDemand {
+    /// The paper's w_token_rate = token_rate * token_size / SLO.
+    pub fn w_token_rate(&self) -> f64 {
+        self.token_rate * self.token_size / self.slo.max(1e-6)
+    }
+}
+
+/// KVPR of a GPU state.
+pub fn kvpr(w_token_rate_sum: f64, shared_kv_bytes: f64) -> f64 {
+    if shared_kv_bytes <= 0.0 {
+        return f64::INFINITY;
+    }
+    w_token_rate_sum / shared_kv_bytes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::ModelId;
+
+    #[test]
+    fn rate_monitor_windows_correctly() {
+        let mut m = RateMonitor::new(60.0);
+        for i in 0..60 {
+            m.record(i as f64, 100);
+        }
+        let r = m.rate(59.0);
+        assert!((r - 100.0).abs() < 5.0, "r={r}");
+        // Old events expire: after 120 s of silence the rate collapses.
+        assert_eq!(m.rate(200.0), 0.0);
+    }
+
+    #[test]
+    fn rate_monitor_early_estimates_not_inflated() {
+        let mut m = RateMonitor::new(60.0);
+        m.record(0.0, 3000);
+        // One burst at t=0 must not read as 3000 tok/s.
+        assert!(m.rate(0.1) <= 3000.0 / 30.0 + 1e-9);
+    }
+
+    #[test]
+    fn w_token_rate_weights_by_slo() {
+        let strict = ModelDemand {
+            model: ModelId(0),
+            token_rate: 100.0,
+            token_size: 1e5,
+            slo: 0.01,
+            weight_bytes_per_gpu: 0,
+            tp: 1,
+        };
+        let relaxed = ModelDemand { slo: 0.1, ..strict.clone() };
+        assert!((strict.w_token_rate() / relaxed.w_token_rate() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kvpr_edge_cases() {
+        assert_eq!(kvpr(10.0, 0.0), f64::INFINITY);
+        assert!((kvpr(10.0, 100.0) - 0.1).abs() < 1e-12);
+        assert_eq!(kvpr(0.0, 100.0), 0.0);
+    }
+}

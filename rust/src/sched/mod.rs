@@ -1,0 +1,11 @@
+//! The memory-centric control plane (paper SS6): KVPR monitoring, global
+//! load-aware placement (Algorithm 1), and GPU-local slack-aware request
+//! arbitration (Algorithm 2, Moore-Hodgson).
+
+pub mod arbitration;
+pub mod kvpr;
+pub mod placement;
+
+pub use arbitration::{moore_hodgson, Candidate, Schedule};
+pub use kvpr::{kvpr, ModelDemand, RateMonitor};
+pub use placement::{place, EvictionPolicy, Placement, PlacementInput, PlacementResult};

@@ -1,0 +1,267 @@
+//! Algorithm 1: load-aware model placement minimizing the maximum KVPR.
+//!
+//! Greedy: sort models by descending SLO-weighted token usage rate, place
+//! each on the GPU that minimizes the resulting KVPR, migrate only when the
+//! improvement over the current GPU exceeds a threshold tau. TP models are
+//! decomposed into tp_size parts with 1/tp of the weight and rate each;
+//! anti-affinity forces parts of one model onto distinct GPUs (Appendix A.2).
+
+use std::collections::BTreeMap;
+
+use crate::model::spec::ModelId;
+use crate::sched::kvpr::ModelDemand;
+
+#[derive(Debug, Clone)]
+pub struct PlacementInput {
+    pub demand: ModelDemand,
+    /// Current GPU indices of this model's shards (empty = not resident).
+    pub current: Vec<usize>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Placement {
+    pub model: ModelId,
+    /// Target GPU index per shard (len = tp).
+    pub gpus: Vec<usize>,
+    /// True if this differs from the model's current assignment.
+    pub migrated: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct PlacementResult {
+    pub placements: Vec<Placement>,
+    /// Final per-GPU KVPR after assignment.
+    pub kvpr: Vec<f64>,
+    /// Final per-GPU shared_kv (bytes) after subtracting placed weights.
+    pub shared_kv: Vec<f64>,
+}
+
+/// Algorithm 1. `gpu_capacity_bytes[i]` is the KV-usable capacity of GPU i
+/// (total minus framework reserves). `tau` is the migration threshold on the
+/// KVPR improvement.
+pub fn place(
+    inputs: &[PlacementInput],
+    gpu_capacity_bytes: &[f64],
+    tau: f64,
+) -> PlacementResult {
+    let n = gpu_capacity_bytes.len();
+    assert!(n > 0);
+    // Line 1: sort by w_token_rate descending; TP models are decomposed into
+    // tp parts which, sharing identical keys, stay adjacent after sorting.
+    #[derive(Clone)]
+    struct Part {
+        input_idx: usize,
+        shard_idx: usize,
+        w_rate: f64,     // per-shard SLO-weighted rate
+        weight: f64,     // per-shard weight bytes
+        current: Option<usize>,
+    }
+    let mut parts: Vec<Part> = Vec::new();
+    for (ii, inp) in inputs.iter().enumerate() {
+        let tp = inp.demand.tp.max(1) as usize;
+        let w_rate = inp.demand.w_token_rate() / tp as f64;
+        for s in 0..tp {
+            parts.push(Part {
+                input_idx: ii,
+                shard_idx: s,
+                w_rate,
+                weight: inp.demand.weight_bytes_per_gpu as f64,
+                current: inp.current.get(s).copied(),
+            });
+        }
+    }
+    parts.sort_by(|a, b| {
+        b.w_rate
+            .partial_cmp(&a.w_rate)
+            .unwrap()
+            .then(a.input_idx.cmp(&b.input_idx))
+            .then(a.shard_idx.cmp(&b.shard_idx))
+    });
+
+    // Lines 2-3: initialize GPU state.
+    let mut shared_kv: Vec<f64> = gpu_capacity_bytes.to_vec();
+    let mut w_rate: Vec<f64> = vec![0.0; n];
+    let ratio = |w: f64, s: f64| if s <= 0.0 { f64::INFINITY } else { w / s };
+
+    // Track per-model shard targets for anti-affinity.
+    let mut assigned: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+
+    // Lines 4-11.
+    for p in &parts {
+        let taken = assigned.entry(p.input_idx).or_default().clone();
+        // Find best (and second-best) GPU by resulting KVPR, excluding GPUs
+        // already holding a shard of this model (anti-affinity, A.2.2).
+        let mut best: Option<(f64, usize)> = None;
+        for g in 0..n {
+            if taken.contains(&g) {
+                continue;
+            }
+            let r = ratio(w_rate[g] + p.w_rate, shared_kv[g] - p.weight);
+            if best.map(|(br, _)| r < br).unwrap_or(true) {
+                best = Some((r, g));
+            }
+        }
+        let (best_r, best_idx) = best.expect("more GPUs than TP degree required");
+
+        // Line 7-8: keep the current GPU unless improvement exceeds tau.
+        let target = match p.current {
+            Some(cur) if !taken.contains(&cur) => {
+                let cur_r = ratio(w_rate[cur] + p.w_rate, shared_kv[cur] - p.weight);
+                if cur_r - best_r > tau {
+                    best_idx
+                } else {
+                    cur
+                }
+            }
+            _ => best_idx,
+        };
+
+        // Lines 9-11: assign and update state.
+        assigned.get_mut(&p.input_idx).unwrap().push(target);
+        w_rate[target] += p.w_rate;
+        shared_kv[target] -= p.weight;
+    }
+
+    let placements = inputs
+        .iter()
+        .enumerate()
+        .map(|(ii, inp)| {
+            let gpus = assigned.remove(&ii).unwrap_or_default();
+            let migrated = !inp.current.is_empty() && gpus != inp.current;
+            Placement { model: inp.demand.model, gpus, migrated }
+        })
+        .collect();
+    let kvpr: Vec<f64> = (0..n).map(|g| ratio(w_rate[g], shared_kv[g])).collect();
+    PlacementResult { placements, kvpr, shared_kv }
+}
+
+/// Eviction policy (paper SS6.1): a model is evicted when idle longer than
+/// the threshold AND GPU resources are constrained for others.
+#[derive(Debug, Clone)]
+pub struct EvictionPolicy {
+    /// Idle threshold in seconds (Fig 15a: ~45 s is the sweet spot).
+    pub idle_threshold: f64,
+    /// Free-memory fraction under which a GPU counts as constrained.
+    pub pressure_free_frac: f64,
+}
+
+impl Default for EvictionPolicy {
+    fn default() -> Self {
+        EvictionPolicy { idle_threshold: 45.0, pressure_free_frac: 0.05 }
+    }
+}
+
+impl EvictionPolicy {
+    /// Should `model` (idle since `last_active`) be evicted at `now` given
+    /// the free fraction of its least-free GPU?
+    pub fn should_evict(&self, now: f64, last_active: f64, min_free_frac: f64) -> bool {
+        now - last_active > self.idle_threshold && min_free_frac < self.pressure_free_frac
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::ModelId;
+
+    fn demand(id: u32, rate: f64, slo: f64, weight_gb: f64, tp: u32) -> ModelDemand {
+        ModelDemand {
+            model: ModelId(id),
+            token_rate: rate,
+            token_size: 1e5,
+            slo,
+            weight_bytes_per_gpu: (weight_gb * 1e9) as u64,
+            tp,
+        }
+    }
+
+    fn caps(n: usize) -> Vec<f64> {
+        vec![80e9; n]
+    }
+
+    #[test]
+    fn high_demand_models_spread_across_gpus() {
+        // Two hot models must not be colocated when two GPUs are available.
+        let inputs = vec![
+            PlacementInput { demand: demand(0, 5000.0, 0.02, 16.0, 1), current: vec![] },
+            PlacementInput { demand: demand(1, 5000.0, 0.02, 16.0, 1), current: vec![] },
+            PlacementInput { demand: demand(2, 10.0, 0.05, 2.0, 1), current: vec![] },
+            PlacementInput { demand: demand(3, 10.0, 0.05, 2.0, 1), current: vec![] },
+        ];
+        let r = place(&inputs, &caps(2), 0.1);
+        assert_ne!(r.placements[0].gpus, r.placements[1].gpus);
+        // Low-demand models fill in complementarily - every GPU hosts one hot
+        // and one cold model.
+        let g0: Vec<_> = r.placements.iter().filter(|p| p.gpus == vec![0]).collect();
+        let g1: Vec<_> = r.placements.iter().filter(|p| p.gpus == vec![1]).collect();
+        assert_eq!(g0.len(), 2);
+        assert_eq!(g1.len(), 2);
+    }
+
+    #[test]
+    fn migration_threshold_respected() {
+        // Model resident on gpu1 with slightly worse KVPR than gpu0: stays.
+        let inputs = vec![
+            PlacementInput { demand: demand(0, 100.0, 0.05, 4.0, 1), current: vec![1] },
+        ];
+        let mut capacities = caps(2);
+        capacities[1] = 75e9; // gpu1 marginally worse
+        let r = place(&inputs, &capacities, 0.5);
+        assert_eq!(r.placements[0].gpus, vec![1]);
+        assert!(!r.placements[0].migrated);
+        // With tau = 0 the better GPU wins.
+        let r2 = place(&inputs, &capacities, 0.0);
+        assert_eq!(r2.placements[0].gpus, vec![0]);
+        assert!(r2.placements[0].migrated);
+    }
+
+    #[test]
+    fn tp_anti_affinity() {
+        let inputs = vec![
+            PlacementInput { demand: demand(0, 2000.0, 0.03, 17.5, 4), current: vec![] },
+            PlacementInput { demand: demand(1, 500.0, 0.03, 2.0, 1), current: vec![] },
+        ];
+        let r = place(&inputs, &caps(4), 0.1);
+        let mut gpus = r.placements[0].gpus.clone();
+        assert_eq!(gpus.len(), 4);
+        gpus.sort_unstable();
+        gpus.dedup();
+        assert_eq!(gpus.len(), 4, "TP shards must land on distinct GPUs");
+    }
+
+    #[test]
+    fn kvpr_balanced_beats_naive_stacking() {
+        // 8 equal models on 4 GPUs -> 2 per GPU, max KVPR near min KVPR.
+        let inputs: Vec<PlacementInput> = (0..8)
+            .map(|i| PlacementInput { demand: demand(i, 1000.0, 0.03, 8.0, 1), current: vec![] })
+            .collect();
+        let r = place(&inputs, &caps(4), 0.1);
+        let max = r.kvpr.iter().cloned().fold(0.0, f64::max);
+        let min = r.kvpr.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(max / min < 1.25, "kvpr spread too wide: {:?}", r.kvpr);
+        for g in 0..4 {
+            let cnt = r.placements.iter().filter(|p| p.gpus.contains(&g)).count();
+            assert_eq!(cnt, 2);
+        }
+    }
+
+    #[test]
+    fn weights_reduce_shared_kv() {
+        let inputs = vec![
+            PlacementInput { demand: demand(0, 100.0, 0.05, 40.0, 1), current: vec![] },
+        ];
+        let r = place(&inputs, &caps(1), 0.1);
+        assert!((r.shared_kv[0] - 40e9).abs() < 1e6);
+    }
+
+    #[test]
+    fn eviction_policy_requires_both_conditions() {
+        let p = EvictionPolicy::default();
+        // Idle long but no memory pressure -> keep resident (space sharing).
+        assert!(!p.should_evict(100.0, 0.0, 0.9));
+        // Pressure but recently active -> keep.
+        assert!(!p.should_evict(30.0, 0.0, 0.01));
+        // Idle + pressure -> evict.
+        assert!(p.should_evict(100.0, 0.0, 0.01));
+    }
+}

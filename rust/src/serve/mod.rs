@@ -1,0 +1,9 @@
+//! The real serving path: PrismNano models served through PJRT with
+//! kvcached-governed paged KV, a shared router queue, slack-aware admission,
+//! and continuous batched decode. This is the end-to-end proof that the
+//! three layers compose (DESIGN.md SS6); the cluster-scale experiments run
+//! on the simulator instead.
+
+pub mod server;
+
+pub use server::{RealServer, ServeRequest, ServeResult, ServerConfig};

@@ -1,0 +1,8 @@
+//! Discrete-event cluster simulator binding engines, kvcached, and the
+//! control plane, with Prism and the four baselines as policy variants.
+
+pub mod policy;
+pub mod simulator;
+
+pub use policy::PolicyKind;
+pub use simulator::{SimConfig, Simulator};

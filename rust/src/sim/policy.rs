@@ -1,0 +1,76 @@
+//! Serving policies: Prism and the paper's four baselines (SS7.1).
+
+/// Which coordination policy governs the run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// Full Prism: kvcached ballooning + KVPR placement + Moore-Hodgson
+    /// arbitration + idle eviction + engine pools + parallel loading.
+    Prism,
+    /// Static partition: fixed placement, fixed per-model KV quotas, FCFS.
+    StaticPartition,
+    /// MuxServe++: spatial sharing through kvcached (models share KV memory
+    /// on their GPU) but no eviction, no migration, FCFS admission.
+    MuxServePlusPlus,
+    /// QLM-style time sharing: per-model request groups dispatched to GPUs
+    /// under EDF; swapping evicts the resident model and pays an engine
+    /// restart (QLM restarts engines on swap [37]).
+    Qlm,
+    /// ServerlessLLM-style: models unloaded when idle; reactivation pays the
+    /// cold-start path; unbounded batching.
+    ServerlessLlm,
+}
+
+impl PolicyKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            PolicyKind::Prism => "prism",
+            PolicyKind::StaticPartition => "s-partition",
+            PolicyKind::MuxServePlusPlus => "muxserve++",
+            PolicyKind::Qlm => "qlm",
+            PolicyKind::ServerlessLlm => "serverlessllm",
+        }
+    }
+
+    pub fn all() -> [PolicyKind; 5] {
+        [
+            PolicyKind::Prism,
+            PolicyKind::StaticPartition,
+            PolicyKind::MuxServePlusPlus,
+            PolicyKind::Qlm,
+            PolicyKind::ServerlessLlm,
+        ]
+    }
+
+    /// Does this policy keep all models resident from t=0 (space sharing)?
+    pub fn static_residency(self) -> bool {
+        matches!(self, PolicyKind::StaticPartition | PolicyKind::MuxServePlusPlus)
+    }
+
+    /// Does this policy use slack-aware (Moore-Hodgson) admission?
+    pub fn slack_aware(self) -> bool {
+        matches!(self, PolicyKind::Prism) && std::env::var("PRISM_NO_MH").is_err()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_unique() {
+        let names: Vec<&str> = PolicyKind::all().iter().map(|p| p.name()).collect();
+        let mut d = names.clone();
+        d.sort_unstable();
+        d.dedup();
+        assert_eq!(d.len(), names.len());
+    }
+
+    #[test]
+    fn classification() {
+        assert!(PolicyKind::StaticPartition.static_residency());
+        assert!(PolicyKind::MuxServePlusPlus.static_residency());
+        assert!(!PolicyKind::Prism.static_residency());
+        assert!(PolicyKind::Prism.slack_aware());
+        assert!(!PolicyKind::Qlm.slack_aware());
+    }
+}

@@ -1,0 +1,283 @@
+//! Synthetic trace generator reproducing the paper's production statistics.
+//!
+//! Substitution (DESIGN.md SS2): the real Novita/Hyperbolic/Arena traces are
+//! proprietary; this generator is tuned so the *published* aggregates hold:
+//!   * bursty groups: 23-50% of models concurrently active on average, with
+//!     54-766 active-set switches/hour (SS3.1, Fig 12a);
+//!   * heterogeneous activation: a few hot always-on models (central
+//!     reasoning LLMs), many warm/cold fine-tunes with sporadic bursts;
+//!   * volatility: request-rate CV > 1 for many models and 40-100 idle
+//!     intervals (>10 s) per hour (Fig 13);
+//!   * unpredictability: near-zero day-over-day Pearson correlation (Fig 12b).
+//!
+//! Mechanism: each model runs an on/off renewal process (gamma busy periods,
+//! Pareto idle gaps - heavy tails create long idles) modulated by a global
+//! regime process that re-draws which warm models are "in the bursty group"
+//! at exponentially-distributed epochs. Within a busy period, arrivals are
+//! Poisson with per-burst intensity drawn lognormally (rate volatility).
+
+use crate::trace::{Trace, TraceEvent};
+use crate::util::rng::{Rng, Zipf};
+
+#[derive(Debug, Clone)]
+pub struct TraceGenConfig {
+    pub name: String,
+    pub n_models: usize,
+    pub duration: f64,
+    pub seed: u64,
+    /// Fraction of models that are hot (near-continuously active).
+    pub hot_frac: f64,
+    /// Mean busy-period length (s) for warm models.
+    pub busy_mean: f64,
+    /// Pareto tail index for idle gaps (smaller = heavier tail = longer idles).
+    pub idle_alpha: f64,
+    /// Minimum idle gap (s).
+    pub idle_min: f64,
+    /// Base request rate (req/s) of the hottest model during a burst.
+    pub peak_rate: f64,
+    /// Zipf exponent for per-model popularity.
+    pub zipf_s: f64,
+    /// Mean regime (bursty-group) duration in seconds.
+    pub regime_mean: f64,
+    /// Fraction of warm models in the bursty group at any time.
+    pub group_frac: f64,
+    /// Lognormal (mu, sigma) for prompt tokens.
+    pub prompt_lognorm: (f64, f64),
+    /// Lognormal (mu, sigma) for output tokens.
+    pub output_lognorm: (f64, f64),
+}
+
+impl TraceGenConfig {
+    /// Novita-like: 16 models, >70% idle time, moderate switching (~54/hr).
+    pub fn novita_like(n_models: usize, duration: f64, seed: u64) -> Self {
+        TraceGenConfig {
+            name: "novita-like".into(),
+            n_models,
+            duration,
+            seed,
+            hot_frac: 0.13,
+            busy_mean: 90.0,
+            idle_alpha: 1.1,
+            idle_min: 180.0,
+            peak_rate: 2.0,
+            zipf_s: 1.0,
+            regime_mean: 180.0,
+            group_frac: 0.25,
+            prompt_lognorm: (5.3, 0.8),  // median ~200 tokens
+            output_lognorm: (4.6, 0.7),  // median ~100 tokens
+        }
+    }
+
+    /// Hyperbolic-like: 24 models, burstier and heavier request patterns.
+    pub fn hyperbolic_like(n_models: usize, duration: f64, seed: u64) -> Self {
+        TraceGenConfig {
+            name: "hyperbolic-like".into(),
+            n_models,
+            duration,
+            seed,
+            hot_frac: 0.10,
+            busy_mean: 45.0,
+            idle_alpha: 1.05,
+            idle_min: 40.0,
+            peak_rate: 4.0,
+            zipf_s: 1.1,
+            regime_mean: 120.0,
+            group_frac: 0.35,
+            prompt_lognorm: (5.8, 1.0),
+            output_lognorm: (5.0, 0.8),
+        }
+    }
+
+    /// Arena-chat-like: many models, fast active-set churn (~766 switches/hr).
+    pub fn arena_chat_like(n_models: usize, duration: f64, seed: u64) -> Self {
+        TraceGenConfig {
+            name: "arena-chat-like".into(),
+            n_models,
+            duration,
+            seed,
+            hot_frac: 0.05,
+            busy_mean: 15.0,
+            idle_alpha: 1.3,
+            idle_min: 90.0,
+            peak_rate: 1.0,
+            zipf_s: 0.8,
+            regime_mean: 45.0,
+            group_frac: 0.4,
+            prompt_lognorm: (5.0, 0.9),
+            output_lognorm: (5.2, 0.7),
+        }
+    }
+
+    /// Arena-battle-like: long-horizon evaluation platform trace.
+    pub fn arena_battle_like(n_models: usize, duration: f64, seed: u64) -> Self {
+        TraceGenConfig {
+            name: "arena-battle-like".into(),
+            n_models,
+            duration,
+            seed,
+            hot_frac: 0.08,
+            busy_mean: 30.0,
+            idle_alpha: 1.25,
+            idle_min: 10.0,
+            peak_rate: 0.8,
+            zipf_s: 0.9,
+            regime_mean: 90.0,
+            group_frac: 0.35,
+            prompt_lognorm: (5.1, 0.9),
+            output_lognorm: (5.1, 0.8),
+        }
+    }
+}
+
+pub fn generate(cfg: &TraceGenConfig) -> Trace {
+    let mut root = Rng::new(cfg.seed);
+    let zipf = Zipf::new(cfg.n_models, cfg.zipf_s);
+    let n_hot = ((cfg.n_models as f64 * cfg.hot_frac).round() as usize).max(1);
+
+    // Regime process: which warm models are in the bursty group, re-drawn at
+    // exponential epochs. Membership biases busy-period starts.
+    let mut regime_rng = root.fork(0xE9);
+    let mut regimes: Vec<(f64, Vec<bool>)> = Vec::new();
+    let mut t = 0.0;
+    while t < cfg.duration {
+        let mut members = vec![false; cfg.n_models];
+        let k = ((cfg.n_models - n_hot) as f64 * cfg.group_frac).round() as usize;
+        for idx in regime_rng.sample_indices(cfg.n_models - n_hot, k) {
+            members[n_hot + idx] = true;
+        }
+        regimes.push((t, members));
+        t += regime_rng.exp(1.0 / cfg.regime_mean);
+    }
+    let regime_at = |time: f64| -> &Vec<bool> {
+        let i = regimes.partition_point(|(t0, _)| *t0 <= time);
+        &regimes[i.saturating_sub(1)].1
+    };
+
+    let mut events: Vec<TraceEvent> = Vec::new();
+    for m in 0..cfg.n_models {
+        let mut rng = root.fork(m as u64 + 1);
+        let hot = m < n_hot;
+        // Popularity scales this model's in-burst intensity.
+        let pop = zipf.pmf(m) * cfg.n_models as f64; // ~1.0 on average
+        let base_rate = cfg.peak_rate * pop.max(0.02);
+
+        let mut t = rng.range_f64(0.0, if hot { 5.0 } else { cfg.idle_min });
+        while t < cfg.duration {
+            // Busy period.
+            let busy_len = if hot {
+                rng.gamma(4.0, cfg.busy_mean) // long sustained activity
+            } else {
+                rng.gamma(1.5, cfg.busy_mean / 1.5)
+            };
+            // Burst intensity varies per burst (rate volatility, CV > 1).
+            let intensity = base_rate * rng.lognormal(0.0, 0.8);
+            let busy_end = (t + busy_len).min(cfg.duration);
+            while t < busy_end {
+                let gap = rng.exp(intensity.max(1e-4));
+                t += gap;
+                if t >= busy_end {
+                    break;
+                }
+                let prompt = rng
+                    .lognormal(cfg.prompt_lognorm.0, cfg.prompt_lognorm.1)
+                    .clamp(8.0, 8192.0) as u32;
+                let output = rng
+                    .lognormal(cfg.output_lognorm.0, cfg.output_lognorm.1)
+                    .clamp(4.0, 4096.0) as u32;
+                events.push(TraceEvent { t, model_idx: m, prompt_tokens: prompt, output_tokens: output });
+            }
+            t = busy_end;
+            if hot {
+                // Hot models take only brief pauses.
+                t += rng.exp(1.0 / (cfg.idle_min * 0.5 + 1.0));
+            } else {
+                // Warm/cold: heavy-tailed idle; models outside the current
+                // bursty group stay idle longer (group membership check).
+                let mut idle = rng.pareto(cfg.idle_min, cfg.idle_alpha);
+                // Retry-bias: if the model is in the current regime's group,
+                // shorten the idle so its bursts align with the group.
+                if *regime_at(t).get(m).unwrap_or(&false) {
+                    idle = idle.min(rng.range_f64(cfg.idle_min * 1.5, cfg.idle_min * 6.0));
+                }
+                t += idle;
+            }
+        }
+    }
+
+    events.sort_by(|a, b| a.t.partial_cmp(&b.t).unwrap());
+    Trace { name: cfg.name.clone(), n_models: cfg.n_models, events, duration: cfg.duration }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::stats;
+
+    #[test]
+    fn deterministic_by_seed() {
+        let cfg = TraceGenConfig::novita_like(8, 1800.0, 7);
+        let a = generate(&cfg);
+        let b = generate(&cfg);
+        assert_eq!(a.events.len(), b.events.len());
+        assert_eq!(a.events.first(), b.events.first());
+        let c = generate(&TraceGenConfig::novita_like(8, 1800.0, 8));
+        assert_ne!(a.events.len(), c.events.len());
+    }
+
+    #[test]
+    fn novita_like_statistics_match_paper() {
+        let cfg = TraceGenConfig::novita_like(16, 4.0 * 3600.0, 42);
+        let t = generate(&cfg);
+        assert!(t.events.len() > 1000, "len={}", t.events.len());
+
+        // SS3.1: models idle >70% of the time on average (2-min activity cells).
+        let idle_frac = stats::mean_idle_fraction(&t, 120.0);
+        assert!(idle_frac > 0.55, "idle_frac={idle_frac}");
+
+        // SS3.1: 23-50% concurrently active on average.
+        let active_frac = stats::mean_active_fraction(&t, 120.0);
+        assert!((0.10..=0.55).contains(&active_frac), "active_frac={active_frac}");
+
+        // Fig 12a: tens of switches per hour.
+        let sw = stats::switches_per_hour(&t, 120.0);
+        assert!(sw > 20.0 && sw < 2000.0, "switches/hr={sw}");
+
+        // Fig 13b: many models with CV > 1 over per-minute rates.
+        let cvs = stats::per_model_rate_cv(&t, 60.0);
+        let n_volatile = cvs.iter().filter(|&&c| c > 1.0).count();
+        assert!(n_volatile * 2 >= cvs.len(), "volatile {n_volatile}/{}", cvs.len());
+    }
+
+    #[test]
+    fn hot_models_dominate_volume() {
+        let cfg = TraceGenConfig::novita_like(16, 7200.0, 1);
+        let t = generate(&cfg);
+        let counts = t.events_per_model();
+        let hot: usize = counts[..2].iter().sum();
+        let total: usize = counts.iter().sum();
+        assert!(hot as f64 / total as f64 > 0.2, "hot frac {}", hot as f64 / total as f64);
+        // But tail models do appear.
+        assert!(counts[8..].iter().filter(|&&c| c > 0).count() >= 4);
+    }
+
+    #[test]
+    fn arena_chat_churns_faster_than_novita() {
+        let nov = generate(&TraceGenConfig::novita_like(16, 7200.0, 3));
+        let arena = generate(&TraceGenConfig::arena_chat_like(16, 7200.0, 3));
+        let sw_n = stats::switches_per_hour(&nov, 120.0);
+        let sw_a = stats::switches_per_hour(&arena, 120.0);
+        assert!(sw_a > sw_n, "arena {sw_a} <= novita {sw_n}");
+    }
+
+    #[test]
+    fn day_over_day_unpredictable() {
+        // Two days with different seeds = different realizations; the paper's
+        // Fig 12b near-zero Pearson corresponds to no daily periodicity.
+        let d1 = generate(&TraceGenConfig::novita_like(12, 6.0 * 3600.0, 100));
+        let d2 = generate(&TraceGenConfig::novita_like(12, 6.0 * 3600.0, 101));
+        let cors = stats::day_over_day_pearson(&d1, &d2, 600.0);
+        let mean_abs: f64 =
+            cors.iter().map(|c| c.abs()).sum::<f64>() / cors.len().max(1) as f64;
+        assert!(mean_abs < 0.45, "mean |pearson| = {mean_abs}");
+    }
+}

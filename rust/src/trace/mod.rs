@@ -1,0 +1,161 @@
+//! Multi-LLM workload traces: schema, synthetic generation matching the
+//! paper's published production statistics (SS3, Appendix A.1), loading, and
+//! the statistics used in Figs 1, 12, 13.
+
+pub mod gen;
+pub mod stats;
+
+/// One inference request arrival.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    /// Arrival time in seconds from trace start.
+    pub t: f64,
+    /// Index into the trace's model list.
+    pub model_idx: usize,
+    pub prompt_tokens: u32,
+    pub output_tokens: u32,
+}
+
+/// A workload trace over `n_models` models.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub name: String,
+    pub n_models: usize,
+    /// Events sorted by arrival time.
+    pub events: Vec<TraceEvent>,
+    /// Trace duration in seconds.
+    pub duration: f64,
+}
+
+impl Trace {
+    /// Scale request volume by `factor` by replicating/thinning events while
+    /// preserving temporal pattern (the paper's rate-scaling methodology).
+    pub fn scale_rate(&self, factor: f64) -> Trace {
+        assert!(factor > 0.0);
+        let mut events = Vec::new();
+        let mut rng = crate::util::rng::Rng::new(0x5CA1E ^ self.events.len() as u64);
+        for e in &self.events {
+            let mut copies = factor.floor() as usize;
+            if rng.f64() < factor - copies as f64 {
+                copies += 1;
+            }
+            for c in 0..copies {
+                let mut e2 = e.clone();
+                // Jitter replicas slightly so they are not simultaneous.
+                if c > 0 {
+                    e2.t += rng.range_f64(0.0, 0.200);
+                }
+                events.push(e2);
+            }
+        }
+        events.sort_by(|a, b| a.t.partial_cmp(&b.t).unwrap());
+        Trace {
+            name: format!("{}-x{:.2}", self.name, factor),
+            n_models: self.n_models,
+            events,
+            duration: self.duration,
+        }
+    }
+
+    /// Restrict to a time window [t0, t1), re-based to 0.
+    pub fn window(&self, t0: f64, t1: f64) -> Trace {
+        let events = self
+            .events
+            .iter()
+            .filter(|e| e.t >= t0 && e.t < t1)
+            .map(|e| TraceEvent { t: e.t - t0, ..e.clone() })
+            .collect();
+        Trace {
+            name: format!("{}-w", self.name),
+            n_models: self.n_models,
+            events,
+            duration: t1 - t0,
+        }
+    }
+
+    /// Restrict to a subset of models (indices remapped to 0..k).
+    pub fn select_models(&self, keep: &[usize]) -> Trace {
+        let map: std::collections::BTreeMap<usize, usize> =
+            keep.iter().enumerate().map(|(new, &old)| (old, new)).collect();
+        let events = self
+            .events
+            .iter()
+            .filter_map(|e| {
+                map.get(&e.model_idx).map(|&m| TraceEvent { model_idx: m, ..e.clone() })
+            })
+            .collect();
+        Trace {
+            name: format!("{}-sel", self.name),
+            n_models: keep.len(),
+            events,
+            duration: self.duration,
+        }
+    }
+
+    pub fn events_per_model(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.n_models];
+        for e in &self.events {
+            counts[e.model_idx] += 1;
+        }
+        counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Trace {
+        Trace {
+            name: "t".into(),
+            n_models: 2,
+            events: vec![
+                TraceEvent { t: 1.0, model_idx: 0, prompt_tokens: 10, output_tokens: 5 },
+                TraceEvent { t: 2.0, model_idx: 1, prompt_tokens: 20, output_tokens: 5 },
+                TraceEvent { t: 3.0, model_idx: 0, prompt_tokens: 30, output_tokens: 5 },
+            ],
+            duration: 10.0,
+        }
+    }
+
+    #[test]
+    fn scale_rate_doubles() {
+        let t = tiny().scale_rate(2.0);
+        assert_eq!(t.events.len(), 6);
+        // Sorted by time.
+        assert!(t.events.windows(2).all(|w| w[0].t <= w[1].t));
+    }
+
+    #[test]
+    fn scale_rate_fractional_statistical() {
+        let mut base = tiny();
+        // Make a bigger base for the statistical check.
+        for i in 0..1000 {
+            base.events.push(TraceEvent {
+                t: i as f64 * 0.01,
+                model_idx: 0,
+                prompt_tokens: 1,
+                output_tokens: 1,
+            });
+        }
+        let n0 = base.events.len() as f64;
+        let t = base.scale_rate(1.5);
+        assert!((t.events.len() as f64 / n0 - 1.5).abs() < 0.1);
+    }
+
+    #[test]
+    fn window_rebases() {
+        let t = tiny().window(1.5, 3.5);
+        assert_eq!(t.events.len(), 2);
+        assert!((t.events[0].t - 0.5).abs() < 1e-12);
+        assert!((t.duration - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn select_models_remaps() {
+        let t = tiny().select_models(&[1]);
+        assert_eq!(t.n_models, 1);
+        assert_eq!(t.events.len(), 1);
+        assert_eq!(t.events[0].model_idx, 0);
+    }
+}

@@ -1,0 +1,222 @@
+//! Trace statistics from the paper's SS3 / Appendix A.1 characterization:
+//! activity cells (Fig 1a), active-set switches (Fig 12a), day-over-day
+//! Pearson (Fig 12b), idle intervals (Fig 13a), request-rate CV (Fig 13b).
+
+use crate::trace::Trace;
+use crate::util::stats::{cv, pearson};
+
+/// Activity matrix: `cells[m][i]` = true if model m received >=1 request in
+/// cell i of width `cell_seconds` (Fig 1a's dark/light shading).
+pub fn activity_matrix(trace: &Trace, cell_seconds: f64) -> Vec<Vec<bool>> {
+    let n_cells = (trace.duration / cell_seconds).ceil() as usize;
+    let mut cells = vec![vec![false; n_cells]; trace.n_models];
+    for e in &trace.events {
+        let c = ((e.t / cell_seconds) as usize).min(n_cells.saturating_sub(1));
+        cells[e.model_idx][c] = true;
+    }
+    cells
+}
+
+/// Mean fraction of models active per cell (paper: 23-50%).
+pub fn mean_active_fraction(trace: &Trace, cell_seconds: f64) -> f64 {
+    let m = activity_matrix(trace, cell_seconds);
+    if m.is_empty() || m[0].is_empty() {
+        return 0.0;
+    }
+    let n_cells = m[0].len();
+    let mut acc = 0.0;
+    for c in 0..n_cells {
+        let active = m.iter().filter(|row| row[c]).count();
+        acc += active as f64 / m.len() as f64;
+    }
+    acc / n_cells as f64
+}
+
+/// Mean fraction of time a model is idle (paper: >70% for Novita).
+pub fn mean_idle_fraction(trace: &Trace, cell_seconds: f64) -> f64 {
+    1.0 - mean_active_fraction(trace, cell_seconds)
+}
+
+/// Active-set switches per hour (Fig 12a): a switch is counted whenever the
+/// set of active models (>=1 request in the past `window` seconds) changes,
+/// evaluated at event granularity.
+pub fn switches_per_hour(trace: &Trace, window: f64) -> f64 {
+    if trace.events.is_empty() || trace.duration <= 0.0 {
+        return 0.0;
+    }
+    // Sweep: for each model, activity intervals [t, t+window) per event; the
+    // active set changes at event times and at expiry boundaries. Evaluate on
+    // a fine grid for robustness.
+    let step = (window / 40.0).max(1.0);
+    let n_steps = (trace.duration / step) as usize;
+    let mut last_expiry = vec![f64::NEG_INFINITY; trace.n_models];
+    let mut set_prev: Vec<bool> = vec![false; trace.n_models];
+    let mut switches = 0u64;
+    let mut ei = 0;
+    for s in 0..n_steps {
+        let now = s as f64 * step;
+        while ei < trace.events.len() && trace.events[ei].t <= now {
+            let e = &trace.events[ei];
+            last_expiry[e.model_idx] = last_expiry[e.model_idx].max(e.t + window);
+            ei += 1;
+        }
+        let set_now: Vec<bool> = last_expiry.iter().map(|&x| x > now).collect();
+        if set_now != set_prev {
+            switches += 1;
+            set_prev = set_now;
+        }
+    }
+    switches as f64 / (trace.duration / 3600.0)
+}
+
+/// Per-model idle intervals (> `min_gap` seconds) per hour (Fig 13a).
+pub fn per_model_idle_intervals_per_hour(trace: &Trace, min_gap: f64) -> Vec<f64> {
+    let hours = trace.duration / 3600.0;
+    let mut last: Vec<Option<f64>> = vec![None; trace.n_models];
+    let mut counts = vec![0usize; trace.n_models];
+    for e in &trace.events {
+        if let Some(prev) = last[e.model_idx] {
+            if e.t - prev > min_gap {
+                counts[e.model_idx] += 1;
+            }
+        }
+        last[e.model_idx] = Some(e.t);
+    }
+    counts.iter().map(|&c| c as f64 / hours.max(1e-9)).collect()
+}
+
+/// Per-model CV of requests-per-bucket (Fig 13b; bucket = 60 s in the paper).
+pub fn per_model_rate_cv(trace: &Trace, bucket_seconds: f64) -> Vec<f64> {
+    let n_buckets = (trace.duration / bucket_seconds).ceil() as usize;
+    let mut series = vec![vec![0.0f64; n_buckets]; trace.n_models];
+    for e in &trace.events {
+        let b = ((e.t / bucket_seconds) as usize).min(n_buckets.saturating_sub(1));
+        series[e.model_idx][b] += 1.0;
+    }
+    series
+        .iter()
+        .filter(|s| s.iter().sum::<f64>() > 0.0)
+        .map(|s| cv(s))
+        .collect()
+}
+
+/// Day-over-day Pearson correlation per model (Fig 12b): correlate each
+/// model's request-rate series across two traces (two "days") bucketed at
+/// `bucket_seconds`.
+pub fn day_over_day_pearson(day1: &Trace, day2: &Trace, bucket_seconds: f64) -> Vec<f64> {
+    assert_eq!(day1.n_models, day2.n_models);
+    let dur = day1.duration.min(day2.duration);
+    let n_buckets = (dur / bucket_seconds).floor() as usize;
+    let mut out = Vec::new();
+    for m in 0..day1.n_models {
+        let mut s1 = vec![0.0; n_buckets];
+        let mut s2 = vec![0.0; n_buckets];
+        for e in day1.events.iter().filter(|e| e.model_idx == m) {
+            let b = (e.t / bucket_seconds) as usize;
+            if b < n_buckets {
+                s1[b] += 1.0;
+            }
+        }
+        for e in day2.events.iter().filter(|e| e.model_idx == m) {
+            let b = (e.t / bucket_seconds) as usize;
+            if b < n_buckets {
+                s2[b] += 1.0;
+            }
+        }
+        if s1.iter().sum::<f64>() > 0.0 && s2.iter().sum::<f64>() > 0.0 {
+            out.push(pearson(&s1, &s2));
+        }
+    }
+    out
+}
+
+/// Per-model normalized request-rate heat rows (Fig 1b): rates bucketed and
+/// normalized to each model's max.
+pub fn normalized_rate_rows(trace: &Trace, bucket_seconds: f64) -> Vec<Vec<f64>> {
+    let n_buckets = (trace.duration / bucket_seconds).ceil() as usize;
+    let mut rows = vec![vec![0.0f64; n_buckets]; trace.n_models];
+    for e in &trace.events {
+        let b = ((e.t / bucket_seconds) as usize).min(n_buckets.saturating_sub(1));
+        rows[e.model_idx][b] += 1.0;
+    }
+    for row in &mut rows {
+        let mx = row.iter().cloned().fold(0.0, f64::max);
+        if mx > 0.0 {
+            for v in row.iter_mut() {
+                *v /= mx;
+            }
+        }
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::TraceEvent;
+
+    fn mk(events: Vec<(f64, usize)>, n_models: usize, duration: f64) -> Trace {
+        Trace {
+            name: "t".into(),
+            n_models,
+            events: events
+                .into_iter()
+                .map(|(t, m)| TraceEvent { t, model_idx: m, prompt_tokens: 10, output_tokens: 5 })
+                .collect(),
+            duration,
+        }
+    }
+
+    #[test]
+    fn activity_matrix_marks_cells() {
+        let t = mk(vec![(5.0, 0), (125.0, 1)], 2, 240.0);
+        let m = activity_matrix(&t, 120.0);
+        assert_eq!(m[0], vec![true, false]);
+        assert_eq!(m[1], vec![false, true]);
+    }
+
+    #[test]
+    fn active_fraction_half() {
+        let t = mk(vec![(5.0, 0), (125.0, 0)], 2, 240.0);
+        // model 0 active in both cells, model 1 never -> 50%.
+        assert!((mean_active_fraction(&t, 120.0) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn switches_counted() {
+        // Model 0 active early, model 1 later: at least 2 set changes.
+        let t = mk(vec![(10.0, 0), (1000.0, 1)], 2, 3600.0);
+        let sw = switches_per_hour(&t, 120.0);
+        assert!(sw >= 2.0, "sw={sw}");
+    }
+
+    #[test]
+    fn idle_intervals_per_model() {
+        let t = mk(vec![(0.0, 0), (100.0, 0), (105.0, 0), (3600.0, 0)], 1, 3600.0);
+        let v = per_model_idle_intervals_per_hour(&t, 10.0);
+        // gaps: 100 (counted), 5 (no), 3495 (counted) => 2 per hour.
+        assert!((v[0] - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cv_zero_for_constant_rate() {
+        let events: Vec<(f64, usize)> = (0..60).map(|i| (i as f64 * 60.0 + 1.0, 0)).collect();
+        let t = mk(events, 1, 3600.0);
+        let cvs = per_model_rate_cv(&t, 60.0);
+        assert!(cvs[0] < 0.2, "cv={}", cvs[0]);
+    }
+
+    #[test]
+    fn pearson_identical_days_is_one() {
+        let d = mk(vec![(10.0, 0), (500.0, 0), (1000.0, 0)], 1, 3600.0);
+        let cors = day_over_day_pearson(&d, &d, 600.0);
+        assert!((cors[0] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn normalized_rows_max_one() {
+        let t = mk(vec![(1.0, 0), (2.0, 0), (700.0, 0)], 1, 1200.0);
+        let rows = normalized_rate_rows(&t, 600.0);
+        assert_eq!(rows[0], vec![1.0, 0.5]);
+    }
+}

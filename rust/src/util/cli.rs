@@ -1,0 +1,173 @@
+//! Tiny declarative CLI argument parser (no clap in the offline vendor set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! generates usage text. Used by the `prism` binary and the examples.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+pub struct Cli {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub specs: Vec<ArgSpec>,
+}
+
+impl Cli {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Cli { name, about, specs: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec { name, help, default: Some(default), is_flag: false });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} - {}\n\nOptions:\n", self.name, self.about);
+        for spec in &self.specs {
+            let lhs = if spec.is_flag {
+                format!("  --{}", spec.name)
+            } else {
+                format!("  --{} <v>", spec.name)
+            };
+            let def = spec.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+            s.push_str(&format!("{lhs:—<0}{}\n", format!("  {}{}", spec.help, def)));
+        }
+        s
+    }
+
+    /// Parse an iterator of raw args (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(&self, raw: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        // Seed defaults.
+        for spec in &self.specs {
+            if let Some(d) = spec.default {
+                out.values.insert(spec.name.to_string(), d.to_string());
+            }
+        }
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(body) = tok.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n\n{}", self.usage()))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("--{key} is a flag and takes no value"));
+                    }
+                    out.flags.push(key);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("--{key} requires a value"))?,
+                    };
+                    out.values.insert(key, val);
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse process args after the given number of leading positionals to skip.
+    pub fn parse_env(&self, skip: usize) -> Result<Args, String> {
+        self.parse(std::env::args().skip(1 + skip))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .opt("rate", "1.0", "request rate")
+            .opt("gpus", "2", "gpu count")
+            .flag("verbose", "chatty")
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = cli().parse(sv(&["--rate", "3.5"])).unwrap();
+        assert_eq!(a.get_f64("rate", 0.0), 3.5);
+        assert_eq!(a.get_usize("gpus", 0), 2);
+        assert!(!a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn equals_form_and_flags() {
+        let a = cli().parse(sv(&["--gpus=8", "--verbose", "pos1"])).unwrap();
+        assert_eq!(a.get_usize("gpus", 0), 8);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(cli().parse(sv(&["--nope"])).is_err());
+        assert!(cli().parse(sv(&["--rate"])).is_err());
+        assert!(cli().parse(sv(&["--verbose=1"])).is_err());
+        assert!(cli().parse(sv(&["--help"])).is_err()); // usage via Err
+    }
+}

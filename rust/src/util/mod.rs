@@ -1,0 +1,9 @@
+//! Infrastructure utilities (the offline environment vendors no serde/clap/
+//! criterion/proptest, so Prism ships its own minimal equivalents).
+
+pub mod cli;
+pub mod json;
+pub mod logger;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,194 @@
+//! Minimal property-based testing framework (no proptest in the vendor set).
+//!
+//! `check(cases, seed, gen, prop)` runs `prop` on `cases` generated inputs;
+//! on failure it greedily shrinks via the input's `Shrink` implementation and
+//! panics with the minimal counterexample. Generators are plain closures over
+//! `Rng`, so any domain type can be generated inline.
+
+use crate::util::rng::Rng;
+
+/// Types that can propose smaller versions of themselves for shrinking.
+pub trait Shrink: Sized + Clone + std::fmt::Debug {
+    /// Candidate strictly-smaller values, in decreasing order of aggressiveness.
+    fn shrink(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+impl Shrink for u8 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(0);
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(0);
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+impl Shrink for u64 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(0);
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+impl Shrink for f64 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.abs() > 1e-9 {
+            out.push(0.0);
+            out.push(self / 2.0);
+        }
+        out
+    }
+}
+
+impl<T: Shrink> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.is_empty() {
+            return out;
+        }
+        // Remove halves, then single elements, then shrink one element.
+        out.push(self[..self.len() / 2].to_vec());
+        out.push(self[self.len() / 2..].to_vec());
+        if self.len() > 1 {
+            let mut v = self.clone();
+            v.pop();
+            out.push(v);
+            let mut v = self.clone();
+            v.remove(0);
+            out.push(v);
+        }
+        for (i, x) in self.iter().enumerate() {
+            for sx in x.shrink().into_iter().take(2) {
+                let mut v = self.clone();
+                v[i] = sx;
+                out.push(v);
+            }
+        }
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self.0.shrink().into_iter().map(|a| (a, self.1.clone())).collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink, C: Shrink> Shrink for (A, B, C) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone(), self.2.clone()))
+            .collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b, self.2.clone())));
+        out.extend(self.2.shrink().into_iter().map(|c| (self.0.clone(), self.1.clone(), c)));
+        out
+    }
+}
+
+/// Run `prop` on `cases` inputs drawn by `gen`; shrink + panic on failure.
+pub fn check<T, G, P>(cases: usize, seed: u64, mut gen: G, prop: P)
+where
+    T: Shrink,
+    G: FnMut(&mut Rng) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            let (min_input, min_msg) = shrink_loop(input, msg, &prop);
+            panic!(
+                "property failed (case {case}/{cases}, seed {seed})\n  minimal input: {:?}\n  error: {}",
+                min_input, min_msg
+            );
+        }
+    }
+}
+
+fn shrink_loop<T: Shrink, P: Fn(&T) -> Result<(), String>>(
+    mut cur: T,
+    mut msg: String,
+    prop: &P,
+) -> (T, String) {
+    // Bounded greedy descent.
+    for _ in 0..200 {
+        let mut advanced = false;
+        for cand in cur.shrink() {
+            if let Err(m) = prop(&cand) {
+                cur = cand;
+                msg = m;
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            break;
+        }
+    }
+    (cur, msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check(200, 1, |r| r.below(100), |&x| {
+            if x < 100 {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal input: 10")]
+    fn shrinks_to_boundary() {
+        // Fails for x >= 10; shrinker should land exactly on 10.
+        check(500, 2, |r| r.below(1000), |&x| {
+            if x < 10 {
+                Ok(())
+            } else {
+                Err(format!("{x} too big"))
+            }
+        });
+    }
+
+    #[test]
+    fn vec_shrink_produces_smaller() {
+        let v = vec![3usize, 4, 5];
+        assert!(v.shrink().iter().all(|s| s.len() < v.len() || s.iter().sum::<usize>() <= v.iter().sum::<usize>()));
+    }
+}

@@ -1,0 +1,232 @@
+//! Descriptive statistics used by trace analysis, metrics, and benches:
+//! mean/std/CV, percentiles, Pearson correlation, histograms, and a
+//! streaming reservoir-free percentile recorder.
+
+/// Mean of a slice (0.0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Coefficient of variation sigma/mu (paper Fig 13b). 0 when mean is 0.
+pub fn cv(xs: &[f64]) -> f64 {
+    let m = mean(xs);
+    if m.abs() < 1e-12 {
+        0.0
+    } else {
+        std_dev(xs) / m
+    }
+}
+
+/// Percentile via linear interpolation on a sorted copy; p in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, p)
+}
+
+/// Percentile of an already-sorted slice.
+pub fn percentile_sorted(v: &[f64], p: f64) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let w = rank - lo as f64;
+        v[lo] * (1.0 - w) + v[hi] * w
+    }
+}
+
+/// Pearson correlation coefficient (paper Fig 12b day-over-day predictability).
+/// Returns 0.0 when either series is constant.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut cov = 0.0;
+    let mut vx = 0.0;
+    let mut vy = 0.0;
+    for i in 0..n {
+        let dx = xs[i] - mx;
+        let dy = ys[i] - my;
+        cov += dx * dy;
+        vx += dx * dx;
+        vy += dy * dy;
+    }
+    if vx < 1e-24 || vy < 1e-24 {
+        return 0.0;
+    }
+    cov / (vx.sqrt() * vy.sqrt())
+}
+
+/// Fixed-width histogram over [lo, hi) with n bins; out-of-range clamps.
+pub fn histogram(xs: &[f64], lo: f64, hi: f64, bins: usize) -> Vec<usize> {
+    let mut h = vec![0usize; bins];
+    if bins == 0 || hi <= lo {
+        return h;
+    }
+    let w = (hi - lo) / bins as f64;
+    for &x in xs {
+        let mut b = ((x - lo) / w) as isize;
+        b = b.clamp(0, bins as isize - 1);
+        h[b as usize] += 1;
+    }
+    h
+}
+
+/// Accumulates samples and reports summary stats; used by metrics and benches.
+#[derive(Debug, Default, Clone)]
+pub struct Summary {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.samples.push(x);
+        self.sorted = false;
+    }
+
+    pub fn extend(&mut self, xs: &[f64]) {
+        self.samples.extend_from_slice(xs);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        mean(&self.samples)
+    }
+
+    pub fn p(&mut self, pct: f64) -> f64 {
+        self.ensure_sorted();
+        percentile_sorted(&self.samples, pct)
+    }
+
+    pub fn min(&mut self) -> f64 {
+        self.ensure_sorted();
+        self.samples.first().copied().unwrap_or(0.0)
+    }
+
+    pub fn max(&mut self) -> f64 {
+        self.ensure_sorted();
+        self.samples.last().copied().unwrap_or(0.0)
+    }
+
+    /// Fraction of samples <= threshold (SLO attainment).
+    pub fn frac_le(&self, thr: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 1.0;
+        }
+        self.samples.iter().filter(|&&x| x <= thr).count() as f64 / self.samples.len() as f64
+    }
+
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_cv() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std_dev(&xs) - 2.0).abs() < 1e-12);
+        assert!((cv(&xs) - 0.4).abs() < 1e-12);
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(cv(&[0.0, 0.0]), 0.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(percentile(&xs, 25.0), 2.0);
+        // interpolation
+        let ys = [0.0, 10.0];
+        assert_eq!(percentile(&ys, 95.0), 9.5);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn pearson_basics() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&xs, &ys) - 1.0).abs() < 1e-12);
+        let zs = [8.0, 6.0, 4.0, 2.0];
+        assert!((pearson(&xs, &zs) + 1.0).abs() < 1e-12);
+        assert_eq!(pearson(&xs, &[5.0, 5.0, 5.0, 5.0]), 0.0);
+    }
+
+    #[test]
+    fn pearson_uncorrelated_near_zero() {
+        use crate::util::rng::Rng;
+        let mut r = Rng::new(1);
+        let xs: Vec<f64> = (0..5000).map(|_| r.f64()).collect();
+        let ys: Vec<f64> = (0..5000).map(|_| r.f64()).collect();
+        assert!(pearson(&xs, &ys).abs() < 0.05);
+    }
+
+    #[test]
+    fn histogram_clamps() {
+        let h = histogram(&[-1.0, 0.5, 1.5, 99.0], 0.0, 2.0, 2);
+        assert_eq!(h, vec![2, 2]);
+    }
+
+    #[test]
+    fn summary_attainment() {
+        let mut s = Summary::new();
+        s.extend(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.frac_le(2.5), 0.5);
+        assert_eq!(s.frac_le(0.5), 0.0);
+        assert_eq!(s.frac_le(4.0), 1.0);
+        assert_eq!(s.p(50.0), 2.5);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+        assert_eq!(Summary::new().frac_le(1.0), 1.0);
+    }
+}

@@ -1,0 +1,177 @@
+//! Cross-module integration tests: trace -> simulator -> metrics under every
+//! policy, the paper's qualitative orderings, the real PJRT serving path,
+//! and experiment-driver smoke coverage.
+
+use prism::experiments::e2e::assign_ids;
+use prism::model::spec::{table3_catalog, ModelId};
+use prism::sim::{PolicyKind, SimConfig, Simulator};
+use prism::trace::gen::{generate, TraceGenConfig};
+
+fn models_8x8b() -> Vec<prism::model::spec::ModelSpec> {
+    assign_ids(
+        table3_catalog()
+            .into_iter()
+            .filter(|m| m.name.contains("8b") || m.name.contains("7b"))
+            .take(8)
+            .collect(),
+    )
+}
+
+#[test]
+fn paper_ordering_prism_dominates_time_sharing() {
+    // SS7.2: QLM and ServerlessLLM time sharing must lose badly on TTFT
+    // against Prism under interleaved multi-model load.
+    let specs = models_8x8b();
+    let trace = generate(&TraceGenConfig::hyperbolic_like(8, 300.0, 99)).scale_rate(2.0);
+    let run = |p| {
+        let mut cfg = SimConfig::new(p, 2);
+        cfg.slo_scale = 8.0;
+        Simulator::new(cfg, specs.clone()).run(&trace).0
+    };
+    let prism = run(PolicyKind::Prism);
+    let qlm = run(PolicyKind::Qlm);
+    let sls = run(PolicyKind::ServerlessLlm);
+    assert!(
+        prism.ttft_attainment() > qlm.ttft_attainment() + 0.1,
+        "prism {} vs qlm {}",
+        prism.ttft_attainment(),
+        qlm.ttft_attainment()
+    );
+    assert!(
+        prism.ttft_attainment() > sls.ttft_attainment(),
+        "prism {} vs serverless {}",
+        prism.ttft_attainment(),
+        sls.ttft_attainment()
+    );
+}
+
+#[test]
+fn paper_ordering_elasticity_beats_static_quotas_under_pressure() {
+    // Table 2 shape: kvcached sharing >> static quotas when memory binds.
+    let specs = assign_ids(
+        table3_catalog()
+            .into_iter()
+            .filter(|m| m.name.contains("8b"))
+            .take(3)
+            .collect(),
+    );
+    // Long sequences on one GPU make quotas bind.
+    let mut rng = prism::util::rng::Rng::new(5);
+    let mut events = Vec::new();
+    for m in 0..3usize {
+        let mut t = 0.0;
+        while t < 180.0 {
+            t += rng.exp(if m == 0 { 3.0 } else { 1.0 });
+            events.push(prism::trace::TraceEvent {
+                t,
+                model_idx: m,
+                prompt_tokens: 600 + rng.below(1400) as u32,
+                output_tokens: 300 + rng.below(900) as u32,
+            });
+        }
+    }
+    events.sort_by(|a, b| a.t.partial_cmp(&b.t).unwrap());
+    let trace = prism::trace::Trace {
+        name: "pressure".into(),
+        n_models: 3,
+        events,
+        duration: 180.0,
+    };
+    let run = |p| {
+        let mut cfg = SimConfig::new(p, 1);
+        cfg.slo_scale = 8.0;
+        Simulator::new(cfg, specs.clone()).run(&trace).0
+    };
+    let elastic = run(PolicyKind::MuxServePlusPlus);
+    let quotas = run(PolicyKind::StaticPartition);
+    assert!(
+        elastic.mean_ttft() < quotas.mean_ttft(),
+        "elastic {} vs quotas {}",
+        elastic.mean_ttft(),
+        quotas.mean_ttft()
+    );
+}
+
+#[test]
+fn tp_models_serve_correctly_across_gpus() {
+    let specs = assign_ids(vec![
+        table3_catalog().into_iter().find(|m| m.tp == 4).unwrap(),
+        table3_catalog()[0].clone(),
+    ]);
+    let mut rng = prism::util::rng::Rng::new(8);
+    let events: Vec<prism::trace::TraceEvent> = (0..60)
+        .map(|i| prism::trace::TraceEvent {
+            t: i as f64,
+            model_idx: (rng.below(2)) as usize,
+            prompt_tokens: 100,
+            output_tokens: 30,
+        })
+        .collect();
+    let trace = prism::trace::Trace { name: "tp".into(), n_models: 2, events, duration: 60.0 };
+    let mut cfg = SimConfig::new(PolicyKind::Prism, 4);
+    cfg.slo_scale = 10.0;
+    let (m, _) = Simulator::new(cfg, specs).run(&trace);
+    let done = m.completions.iter().filter(|c| !c.dropped).count();
+    assert_eq!(done, 60, "all TP-model requests served");
+}
+
+#[test]
+fn per_model_attainment_accounting() {
+    let specs = models_8x8b();
+    let trace = generate(&TraceGenConfig::novita_like(8, 240.0, 17));
+    let mut cfg = SimConfig::new(PolicyKind::Prism, 2);
+    cfg.slo_scale = 12.0;
+    let (m, _) = Simulator::new(cfg, specs).run(&trace);
+    // Per-model attainments aggregate consistently with the global one.
+    let mut total = 0.0;
+    let mut n = 0usize;
+    for i in 0..8u32 {
+        let cnt = m.completions.iter().filter(|c| c.model == ModelId(i)).count();
+        if cnt > 0 {
+            total += m.ttft_attainment_for(ModelId(i)) * cnt as f64;
+            n += cnt;
+        }
+    }
+    assert_eq!(n, m.completions.len());
+    assert!((total / n as f64 - m.ttft_attainment()).abs() < 1e-9);
+}
+
+#[test]
+fn experiment_drivers_smoke() {
+    // The cheapest three drivers run end to end and save CSVs.
+    for id in ["fig10", "fig13", "overhead"] {
+        let tables = prism::experiments::run(id, true).unwrap();
+        assert!(!tables.is_empty(), "{id} produced no tables");
+        for t in &tables {
+            assert!(!t.rows.is_empty(), "{id}: empty table {}", t.title);
+        }
+    }
+}
+
+#[test]
+fn real_serving_path_composes() {
+    // Full three-layer check (skipped when artifacts are absent).
+    let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let nano = root.join("prism-nano");
+    if !nano.join("manifest.json").is_file() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let mut srv = prism::serve::RealServer::new(
+        prism::serve::ServerConfig::default(),
+        &[nano.as_path()],
+        &[],
+    )
+    .unwrap();
+    let reqs = vec![prism::serve::ServeRequest {
+        model: "prism-nano".into(),
+        prompt: vec![10, 20, 30, 40, 50],
+        max_new_tokens: 4,
+        arrival: 0.0,
+        ttft_slo: Some(5.0),
+    }];
+    let out = srv.serve(&reqs).unwrap();
+    let r = out[0].as_ref().unwrap();
+    assert_eq!(r.generated.len(), 4);
+    assert!(r.ttft < 5.0);
+}
