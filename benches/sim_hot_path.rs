@@ -1,0 +1,156 @@
+//! Simulator hot-path macro-benchmark: simulated-events/sec at cluster
+//! scale (50-100 models, 16-32 GPUs, hour-plus novita-like traces, every
+//! policy), written to `BENCH_sim.json` so the perf trajectory is tracked
+//! across changes.
+//!
+//! Flags:
+//!   --smoke              tiny CI configuration (seconds, not minutes)
+//!   --prepush            ALSO time the legacy pre-pushed-arrival heap
+//!                        (`SimConfig::stream_arrivals = false`) for an
+//!                        in-binary A/B of the streamed event loop
+//!   --baseline <file>    report speedup vs a previously recorded
+//!                        BENCH_sim.json (env PRISM_BENCH_BASELINE works
+//!                        too); run the bench on the pre-change commit to
+//!                        produce one
+//!   --policy <name>      only run policies whose name contains <name>
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use prism::bench::harness::Table;
+use prism::model::spec::{catalog_subset, ModelId, ModelSpec};
+use prism::sim::{PolicyKind, SimConfig, Simulator};
+use prism::trace::gen::{generate, TraceGenConfig};
+use prism::util::json::{self, Json};
+
+struct Scenario {
+    name: &'static str,
+    n_models: usize,
+    n_gpus: u32,
+    duration: f64,
+}
+
+/// Single-GPU model fleet of size `n`: the Table-3 catalog tops out at 58
+/// models, so larger fleets cycle it with fresh ids.
+fn fleet(n: usize) -> Vec<ModelSpec> {
+    let base: Vec<ModelSpec> =
+        catalog_subset(58).into_iter().filter(|m| !m.is_tp()).collect();
+    (0..n)
+        .map(|i| {
+            let mut s = base[i % base.len()].clone();
+            s.id = ModelId(i as u32);
+            if i >= base.len() {
+                s.name = format!("{}-r{}", s.name, i / base.len());
+            }
+            s
+        })
+        .collect()
+}
+
+type BaselineKey = (String, String, String); // (scenario, policy, mode)
+
+fn load_baseline(path: &str) -> Option<BTreeMap<BaselineKey, f64>> {
+    let j = json::parse_file(std::path::Path::new(path)).ok()?;
+    let rows = j.get("rows").as_arr()?;
+    let mut map = BTreeMap::new();
+    for r in rows {
+        let key = (
+            r.get("scenario").as_str()?.to_string(),
+            r.get("policy").as_str()?.to_string(),
+            r.get("mode").as_str()?.to_string(),
+        );
+        map.insert(key, r.get("events_per_sec").as_f64()?);
+    }
+    Some(map)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let prepush = args.iter().any(|a| a == "--prepush");
+    let opt = |flag: &str| {
+        args.iter().position(|a| a == flag).and_then(|i| args.get(i + 1).cloned())
+    };
+    let policy_filter = opt("--policy").unwrap_or_default();
+    let baseline = opt("--baseline")
+        .or_else(|| std::env::var("PRISM_BENCH_BASELINE").ok())
+        .and_then(|p| {
+            let b = load_baseline(&p);
+            if b.is_none() {
+                eprintln!("warning: could not read baseline {p}");
+            }
+            b
+        });
+
+    let scenarios: Vec<Scenario> = if smoke {
+        vec![Scenario { name: "smoke-8m-4g-2min", n_models: 8, n_gpus: 4, duration: 120.0 }]
+    } else {
+        vec![
+            Scenario { name: "novita-50m-16g-1h", n_models: 50, n_gpus: 16, duration: 3600.0 },
+            Scenario { name: "novita-100m-32g-2h", n_models: 100, n_gpus: 32, duration: 7200.0 },
+        ]
+    };
+
+    let mut table = Table::new(
+        "sim hot path: simulated-events/sec",
+        &["scenario", "policy", "mode", "requests", "events", "wall_s", "events/s", "vs_base"],
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    for sc in &scenarios {
+        let trace = generate(&TraceGenConfig::novita_like(sc.n_models, sc.duration, 7));
+        let specs = fleet(sc.n_models);
+        for policy in PolicyKind::all() {
+            if !policy_filter.is_empty() && !policy.name().contains(&policy_filter) {
+                continue;
+            }
+            let modes: &[bool] = if prepush { &[true, false] } else { &[true] };
+            for &stream in modes {
+                let mode = if stream { "streamed" } else { "prepush" };
+                let mut cfg = SimConfig::new(policy, sc.n_gpus);
+                cfg.slo_scale = 8.0;
+                cfg.stream_arrivals = stream;
+                let t0 = Instant::now();
+                let (m, _) = Simulator::new(cfg, specs.clone()).run(&trace);
+                let wall = t0.elapsed().as_secs_f64();
+                let eps = m.sim_events as f64 / wall.max(1e-9);
+                let key =
+                    (sc.name.to_string(), policy.name().to_string(), mode.to_string());
+                let speedup = baseline.as_ref().and_then(|b| b.get(&key)).map(|&base| {
+                    if base > 0.0 { eps / base } else { f64::NAN }
+                });
+                table.row(vec![
+                    sc.name.into(),
+                    policy.name().into(),
+                    mode.into(),
+                    trace.events.len().to_string(),
+                    m.sim_events.to_string(),
+                    format!("{wall:.2}"),
+                    format!("{eps:.0}"),
+                    speedup.map(|s| format!("{s:.2}x")).unwrap_or_else(|| "-".into()),
+                ]);
+                let mut row = Json::obj();
+                row.set("scenario", Json::Str(sc.name.to_string()));
+                row.set("policy", Json::Str(policy.name().to_string()));
+                row.set("mode", Json::Str(mode.to_string()));
+                row.set("requests", Json::from_f64(trace.events.len() as f64));
+                row.set("completions", Json::from_f64(m.completions.len() as f64));
+                row.set("events", Json::from_f64(m.sim_events as f64));
+                row.set("wall_s", Json::from_f64(wall));
+                row.set("events_per_sec", Json::from_f64(eps));
+                row.set("ttft_attainment", Json::from_f64(m.ttft_attainment()));
+                if let Some(s) = speedup {
+                    row.set("speedup_vs_baseline", Json::from_f64(s));
+                }
+                rows.push(row);
+            }
+        }
+    }
+    table.print();
+
+    let mut out = Json::obj();
+    out.set("bench", Json::Str("sim_hot_path".to_string()));
+    out.set("smoke", Json::Bool(smoke));
+    out.set("rows", Json::Arr(rows));
+    std::fs::write("BENCH_sim.json", out.to_string_pretty()).expect("write BENCH_sim.json");
+    println!("wrote BENCH_sim.json");
+}

@@ -59,6 +59,11 @@ pub struct Cluster {
     pub node_pools: Vec<u32>,
     pub engines: Vec<SimEngine>,
     pub residency: BTreeMap<ModelId, Residency>,
+    /// GPU -> resident models (reverse of `residency`), kept sorted by id so
+    /// iteration order matches a residency-map scan. Maintained by
+    /// activate/evict (and therefore migrate); lets per-GPU queries run in
+    /// O(residents on that GPU) instead of scanning every model.
+    gpu_residents: Vec<Vec<ModelId>>,
     pub perf: GpuPerf,
     pub gpus_per_node: u32,
     pub load_strategy: LoadStrategy,
@@ -84,6 +89,7 @@ impl Cluster {
             node_pools: vec![8 * gpus_per_node.max(1); n_nodes as usize],
             engines: Vec::new(),
             residency: BTreeMap::new(),
+            gpu_residents: vec![Vec::new(); n_gpus as usize],
             perf,
             gpus_per_node,
             load_strategy: LoadStrategy::Parallel,
@@ -99,6 +105,29 @@ impl Cluster {
 
     pub fn is_resident(&self, m: ModelId) -> bool {
         self.residency.contains_key(&m)
+    }
+
+    /// Models resident on GPU `g`, sorted by id (reverse residency index).
+    pub fn residents_on(&self, g: usize) -> &[ModelId] {
+        &self.gpu_residents[g]
+    }
+
+    /// Verify the reverse index agrees with `residency` (test support).
+    pub fn check_residency_index(&self) -> bool {
+        for (g, models) in self.gpu_residents.iter().enumerate() {
+            if models.windows(2).any(|w| w[0] >= w[1]) {
+                return false; // must stay sorted and duplicate-free
+            }
+            for m in models {
+                match self.residency.get(m) {
+                    Some(r) if r.gpus.contains(&GpuId(g as u32)) => {}
+                    _ => return false,
+                }
+            }
+        }
+        let indexed: usize = self.gpu_residents.iter().map(|v| v.len()).sum();
+        let expected: usize = self.residency.values().map(|r| r.gpus.len()).sum();
+        indexed == expected
     }
 
     /// Activate `spec` on the given GPU group at time `now`.
@@ -141,6 +170,11 @@ impl Cluster {
 
         let engine_idx = self.engines.len();
         self.engines.push(SimEngine::new(spec.clone()));
+        for g in &gpus {
+            let v = &mut self.gpu_residents[g.0 as usize];
+            let pos = v.binary_search(&spec.id).unwrap_or_else(|p| p);
+            v.insert(pos, spec.id);
+        }
         self.residency.insert(
             spec.id,
             Residency {
@@ -161,6 +195,9 @@ impl Cluster {
         let Some(res) = self.residency.remove(&m) else {
             return Vec::new();
         };
+        for g in &res.gpus {
+            self.gpu_residents[g.0 as usize].retain(|&x| x != m);
+        }
         let engine = &mut self.engines[res.engine_idx];
         // Free all KV blocks via a group allocator view.
         let mut reqs = {
@@ -227,7 +264,7 @@ pub struct GroupAlloc<'a> {
 impl<'a> crate::engine::engine::KvAlloc for GroupAlloc<'a> {
     fn alloc(&mut self) -> Result<crate::engine::engine::GroupBlock, crate::kvcached::KvError> {
         let mut out = Vec::with_capacity(self.group.len());
-        for (i, g) in self.group.iter().enumerate() {
+        for g in self.group.iter() {
             match self.gpus[g.0 as usize].kvc.alloc_block(self.model) {
                 Ok(b) => out.push(b),
                 Err(e) => {
@@ -236,7 +273,6 @@ impl<'a> crate::engine::engine::KvAlloc for GroupAlloc<'a> {
                         let gj = self.group[j];
                         let _ = self.gpus[gj.0 as usize].kvc.free_block(b);
                     }
-                    debug_assert!(i > 0 || true);
                     return Err(e);
                 }
             }
@@ -319,6 +355,46 @@ mod tests {
         assert!(!c.is_resident(big.id));
         assert!(c.gpus[0].kvc.check_conservation());
         assert_eq!(c.gpus[0].kvc.stats().weight_bytes, 0);
+    }
+
+    #[test]
+    fn reverse_index_tracks_residency() {
+        let mut c = cluster(2);
+        let cat = catalog_subset(8);
+        let m1 = cat.iter().find(|m| m.name.contains("1b-ft00")).unwrap();
+        let m2 = cat.iter().find(|m| m.name.contains("1b-ft01")).unwrap();
+        c.activate(m1, vec![GpuId(0)], 0.0).unwrap();
+        c.activate(m2, vec![GpuId(0)], 0.0).unwrap();
+        let mut both = vec![m1.id, m2.id];
+        both.sort();
+        assert_eq!(c.residents_on(0).to_vec(), both);
+        assert!(c.residents_on(1).is_empty());
+        assert!(c.check_residency_index());
+        c.migrate(m1, GpuId(1), 1.0, true).unwrap();
+        assert_eq!(c.residents_on(0).to_vec(), vec![m2.id]);
+        assert_eq!(c.residents_on(1).to_vec(), vec![m1.id]);
+        assert!(c.check_residency_index());
+        c.evict(m2.id);
+        assert!(c.residents_on(0).is_empty());
+        assert!(c.check_residency_index());
+    }
+
+    #[test]
+    fn reverse_index_covers_tp_groups() {
+        let mut c = cluster(4);
+        let cat = catalog_subset(8);
+        let tp_model = cat.iter().find(|m| m.is_tp()).unwrap();
+        let gpus: Vec<GpuId> = (0..tp_model.tp).map(GpuId).collect();
+        c.activate(tp_model, gpus.clone(), 0.0).unwrap();
+        for g in &gpus {
+            assert_eq!(c.residents_on(g.0 as usize).to_vec(), vec![tp_model.id]);
+        }
+        assert!(c.check_residency_index());
+        c.evict(tp_model.id);
+        for g in &gpus {
+            assert!(c.residents_on(g.0 as usize).is_empty());
+        }
+        assert!(c.check_residency_index());
     }
 
     #[test]

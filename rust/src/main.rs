@@ -173,7 +173,13 @@ fn cmd_sim() -> Result<()> {
     t.row(vec!["evictions".into(), m.evictions.to_string()]);
     t.row(vec!["migrations".into(), m.migrations.to_string()]);
     t.row(vec!["preemptions".into(), m.preemptions.to_string()]);
-    t.row(vec!["sim_wall_s".into(), format!("{:.2}", t0.elapsed().as_secs_f64())]);
+    let wall = t0.elapsed().as_secs_f64();
+    t.row(vec!["sim_wall_s".into(), format!("{wall:.2}")]);
+    t.row(vec!["sim_events".into(), m.sim_events.to_string()]);
+    t.row(vec![
+        "sim_events_per_s".into(),
+        format!("{:.0}", m.sim_events as f64 / wall.max(1e-9)),
+    ]);
     t.print();
     Ok(())
 }

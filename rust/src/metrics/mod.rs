@@ -1,13 +1,18 @@
 //! Metrics: SLO attainment, latency summaries, throughput (idle-excluded),
 //! and sampled timelines for the memory/queue plots (Figs 2, 6, 7, 8).
 
+use std::cell::RefCell;
+
 use crate::model::spec::ModelId;
 use crate::request::Completion;
-use crate::util::stats::Summary;
+use crate::util::stats::percentile_sorted;
 
 /// Aggregated results of one serving run.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Default)]
 pub struct RunMetrics {
+    /// Every completion record. Public for iteration; the sorted percentile
+    /// cache below auto-rebuilds when this grows or shrinks — after an
+    /// in-place, same-length edit call `invalidate_latency_cache`.
     pub completions: Vec<Completion>,
     /// Sum of engine busy seconds (for idle-excluded throughput).
     pub busy_seconds: f64,
@@ -16,9 +21,79 @@ pub struct RunMetrics {
     pub evictions: u64,
     pub migrations: u64,
     pub preemptions: u64,
+    /// Total simulator events processed (hot-path events/sec benchmarking).
+    pub sim_events: u64,
+    /// Sorted latency views, built lazily on the first percentile query and
+    /// rebuilt if `completions` grew since. Figure drivers query many
+    /// percentiles per run; re-collecting and re-sorting per query was
+    /// O(n log n) each time.
+    sorted: RefCell<Option<SortedCache>>,
+}
+
+impl Clone for RunMetrics {
+    fn clone(&self) -> Self {
+        RunMetrics {
+            completions: self.completions.clone(),
+            busy_seconds: self.busy_seconds,
+            wall_seconds: self.wall_seconds,
+            activations: self.activations,
+            evictions: self.evictions,
+            migrations: self.migrations,
+            preemptions: self.preemptions,
+            sim_events: self.sim_events,
+            // The lazy sorted views are not carried over: clones are
+            // typically mutated further and a stale cache must not survive.
+            sorted: RefCell::new(None),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+struct SortedCache {
+    /// Completion count the views were built from (staleness check).
+    n: usize,
+    ttft: Vec<f64>,
+    tpot: Vec<f64>,
+    e2e: Vec<f64>,
+}
+
+impl SortedCache {
+    fn build(cs: &[Completion]) -> Self {
+        let mut ttft: Vec<f64> = cs.iter().map(|c| c.ttft).filter(|x| x.is_finite()).collect();
+        let mut tpot: Vec<f64> = cs.iter().map(|c| c.tpot).filter(|x| x.is_finite()).collect();
+        let mut e2e: Vec<f64> = cs
+            .iter()
+            .filter(|c| c.finish.is_finite())
+            .map(|c| c.finish - c.arrival)
+            .collect();
+        ttft.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        tpot.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        e2e.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        SortedCache { n: cs.len(), ttft, tpot, e2e }
+    }
 }
 
 impl RunMetrics {
+    /// Run `f` against the sorted latency views, (re)building them if
+    /// `completions` grew since the last query.
+    fn with_sorted<R>(&self, f: impl FnOnce(&SortedCache) -> R) -> R {
+        let mut cache = self.sorted.borrow_mut();
+        let stale = match cache.as_ref() {
+            Some(c) => c.n != self.completions.len(),
+            None => true,
+        };
+        if stale {
+            *cache = Some(SortedCache::build(&self.completions));
+        }
+        f(cache.as_ref().expect("cache just built"))
+    }
+
+    /// Drop the cached sorted views. Needed only after an in-place,
+    /// same-length edit of `completions` (growth is detected automatically).
+    pub fn invalidate_latency_cache(&self) {
+        *self.sorted.borrow_mut() = None;
+    }
+
     pub fn ttft_attainment(&self) -> f64 {
         frac(&self.completions, |c| c.ttft_ok())
     }
@@ -40,13 +115,12 @@ impl RunMetrics {
     }
 
     pub fn p95_ttft(&self) -> f64 {
-        let mut s = Summary::new();
-        for c in &self.completions {
-            if c.ttft.is_finite() {
-                s.add(c.ttft);
-            }
-        }
-        s.p(95.0)
+        self.p_ttft(95.0)
+    }
+
+    /// Arbitrary TTFT percentile over finite samples (sorted once, cached).
+    pub fn p_ttft(&self, pct: f64) -> f64 {
+        self.with_sorted(|c| percentile_sorted(&c.ttft, pct))
     }
 
     pub fn mean_tpot(&self) -> f64 {
@@ -54,13 +128,12 @@ impl RunMetrics {
     }
 
     pub fn p95_tpot(&self) -> f64 {
-        let mut s = Summary::new();
-        for c in &self.completions {
-            if c.tpot.is_finite() {
-                s.add(c.tpot);
-            }
-        }
-        s.p(95.0)
+        self.p_tpot(95.0)
+    }
+
+    /// Arbitrary TPOT percentile over finite samples (sorted once, cached).
+    pub fn p_tpot(&self, pct: f64) -> f64 {
+        self.with_sorted(|c| percentile_sorted(&c.tpot, pct))
     }
 
     pub fn mean_e2e(&self) -> f64 {
@@ -68,13 +141,12 @@ impl RunMetrics {
     }
 
     pub fn p95_e2e(&self) -> f64 {
-        let mut s = Summary::new();
-        for c in &self.completions {
-            if c.finish.is_finite() {
-                s.add(c.finish - c.arrival);
-            }
-        }
-        s.p(95.0)
+        self.p_e2e(95.0)
+    }
+
+    /// Arbitrary end-to-end latency percentile (sorted once, cached).
+    pub fn p_e2e(&self, pct: f64) -> f64 {
+        self.with_sorted(|c| percentile_sorted(&c.e2e, pct))
     }
 
     /// Requests per second of engine-busy time (the paper's idle-excluded
@@ -124,8 +196,14 @@ fn frac<F: Fn(&Completion) -> bool>(cs: &[Completion], f: F) -> f64 {
 }
 
 fn finite_mean<I: Iterator<Item = f64>>(it: I) -> f64 {
-    let v: Vec<f64> = it.filter(|x| x.is_finite()).collect();
-    crate::util::stats::mean(&v)
+    let (mut sum, mut n) = (0.0, 0usize);
+    for x in it {
+        if x.is_finite() {
+            sum += x;
+            n += 1;
+        }
+    }
+    if n == 0 { 0.0 } else { sum / n as f64 }
 }
 
 /// One timeline sample (memory/queue plots).
@@ -188,6 +266,31 @@ mod tests {
         let m = RunMetrics::default();
         assert_eq!(m.ttft_attainment(), 1.0);
         assert_eq!(m.req_throughput(), 0.0);
+        assert_eq!(m.p95_ttft(), 0.0);
+    }
+
+    #[test]
+    fn percentile_cache_rebuilds_after_growth() {
+        let mut m = RunMetrics::default();
+        m.completions.push(comp(0.1, 0.5, 0.01, 0.05));
+        assert!((m.p95_ttft() - 0.1).abs() < 1e-12);
+        // Growing `completions` invalidates the cached sorted view.
+        m.completions.push(comp(0.9, 0.5, 0.01, 0.05));
+        assert!((m.p95_ttft() - 0.86).abs() < 1e-9, "p95 {}", m.p95_ttft());
+        assert!((m.p_ttft(0.0) - 0.1).abs() < 1e-12);
+        assert!((m.p95_e2e() - 10.0).abs() < 1e-12);
+        // Infinite latencies (dropped/unfinished) are excluded from views.
+        let mut d = comp(f64::INFINITY, 0.5, f64::INFINITY, 0.05);
+        d.finish = f64::INFINITY;
+        m.completions.push(d);
+        assert!((m.p_ttft(100.0) - 0.9).abs() < 1e-12);
+        // Same-length in-place edits need the explicit invalidation hook;
+        // clones never carry a stale cache.
+        m.completions[1].ttft = 0.5;
+        m.invalidate_latency_cache();
+        assert!((m.p_ttft(100.0) - 0.5).abs() < 1e-12);
+        let m2 = m.clone();
+        assert!((m2.p_ttft(100.0) - 0.5).abs() < 1e-12); // rebuilds, never stale
     }
 
     #[test]

@@ -40,21 +40,38 @@ impl RateMonitor {
         }
     }
 
-    /// Tokens per second over the window ending at `now`.
-    pub fn rate(&mut self, now: f64) -> f64 {
+    /// Drop events older than the window. Periodic housekeeping so queries
+    /// between records stay cheap; `rate_at` skips expired events either way.
+    pub fn expire_to(&mut self, now: f64) {
         self.expire(now);
-        if self.events.is_empty() {
-            return 0.0;
+    }
+
+    /// Tokens per second over the window ending at `now`, without mutating
+    /// state (the simulator's hot path reads rates per event; cloning or
+    /// expiring the VecDeque there would be per-GPU x per-model work).
+    pub fn rate_at(&self, now: f64) -> f64 {
+        let mut total = self.total;
+        let mut live_front: Option<f64> = None;
+        for &(t, n) in &self.events {
+            if now - t > self.window {
+                total -= n;
+            } else {
+                live_front = Some(t);
+                break;
+            }
         }
-        let span = (now - self.events.front().unwrap().0).max(1e-9).min(self.window);
+        let Some(t0) = live_front else { return 0.0 };
+        let span = (now - t0).max(1e-9).min(self.window);
         // Use the configured window once enough history exists: smoother and
         // matches a plain moving average.
-        let denom = if now - self.events.front().unwrap().0 >= self.window * 0.5 {
-            span
-        } else {
-            self.window * 0.5
-        };
-        self.total as f64 / denom
+        let denom = if now - t0 >= self.window * 0.5 { span } else { self.window * 0.5 };
+        total as f64 / denom
+    }
+
+    /// Tokens per second over the window ending at `now` (expires as it goes).
+    pub fn rate(&mut self, now: f64) -> f64 {
+        self.expire(now);
+        self.rate_at(now)
     }
 
     pub fn window_seconds(&self) -> f64 {
@@ -107,6 +124,24 @@ mod tests {
         assert!((r - 100.0).abs() < 5.0, "r={r}");
         // Old events expire: after 120 s of silence the rate collapses.
         assert_eq!(m.rate(200.0), 0.0);
+    }
+
+    #[test]
+    fn rate_at_matches_mutating_rate() {
+        let mut a = RateMonitor::new(60.0);
+        let mut b = RateMonitor::new(60.0);
+        for i in 0..200u64 {
+            let t = i as f64 * 0.7;
+            a.record(t, (i % 17) * 3);
+            b.record(t, (i % 17) * 3);
+        }
+        // `a` is only read via the non-mutating path; `b` expires as it goes.
+        for &now in &[10.0, 80.0, 139.3, 200.0, 400.0] {
+            let ra = a.rate_at(now);
+            assert_eq!(ra.to_bits(), b.rate(now).to_bits(), "now={now}");
+        }
+        a.expire_to(400.0);
+        assert_eq!(a.rate_at(400.0), 0.0);
     }
 
     #[test]

@@ -47,8 +47,11 @@ impl PolicyKind {
     }
 
     /// Does this policy use slack-aware (Moore-Hodgson) admission?
+    /// Pure classification; the `PRISM_NO_MH` env override is resolved once
+    /// into `SimConfig::slack_aware` at construction, not re-read per
+    /// admission on the hot path.
     pub fn slack_aware(self) -> bool {
-        matches!(self, PolicyKind::Prism) && std::env::var("PRISM_NO_MH").is_err()
+        matches!(self, PolicyKind::Prism)
     }
 }
 

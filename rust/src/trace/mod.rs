@@ -92,6 +92,13 @@ impl Trace {
         }
     }
 
+    /// True when events are non-decreasing in time. Generators uphold this
+    /// by construction; the simulator's streamed-arrival cursor relies on it
+    /// (and builds a sorted index when it does not hold).
+    pub fn is_sorted(&self) -> bool {
+        self.events.windows(2).all(|w| w[0].t <= w[1].t)
+    }
+
     pub fn events_per_model(&self) -> Vec<usize> {
         let mut counts = vec![0usize; self.n_models];
         for e in &self.events {
@@ -141,6 +148,14 @@ mod tests {
         let n0 = base.events.len() as f64;
         let t = base.scale_rate(1.5);
         assert!((t.events.len() as f64 / n0 - 1.5).abs() < 0.1);
+    }
+
+    #[test]
+    fn sortedness_detected() {
+        let mut t = tiny();
+        assert!(t.is_sorted());
+        t.events.swap(0, 2);
+        assert!(!t.is_sorted());
     }
 
     #[test]

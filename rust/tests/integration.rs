@@ -137,6 +137,47 @@ fn per_model_attainment_accounting() {
 }
 
 #[test]
+fn determinism_regression_fixed_seed() {
+    // Guards the hot-path refactor against behavior drift: fixed-seed runs
+    // must produce bitwise-identical headline metrics across repeats, and
+    // the streamed-arrival event loop must match the pre-pushed heap
+    // formulation exactly, for Prism and a time-sharing baseline.
+    let specs = models_8x8b();
+    let trace = generate(&TraceGenConfig::novita_like(8, 300.0, 1234)).scale_rate(2.0);
+    for p in [PolicyKind::Prism, PolicyKind::ServerlessLlm] {
+        let run = |stream: bool| {
+            let mut cfg = SimConfig::new(p, 2);
+            cfg.slo_scale = 8.0;
+            cfg.stream_arrivals = stream;
+            Simulator::new(cfg, specs.clone()).run(&trace).0
+        };
+        let a = run(true);
+        for other in [run(true), run(false)] {
+            assert_eq!(a.completions.len(), other.completions.len(), "{}", p.name());
+            assert_eq!(
+                a.ttft_attainment().to_bits(),
+                other.ttft_attainment().to_bits(),
+                "{}",
+                p.name()
+            );
+            assert_eq!(
+                a.tpot_attainment().to_bits(),
+                other.tpot_attainment().to_bits(),
+                "{}",
+                p.name()
+            );
+            assert_eq!(
+                (a.activations, a.evictions, a.migrations, a.preemptions),
+                (other.activations, other.evictions, other.migrations, other.preemptions),
+                "{}",
+                p.name()
+            );
+            assert_eq!(a.sim_events, other.sim_events, "{}", p.name());
+        }
+    }
+}
+
+#[test]
 fn experiment_drivers_smoke() {
     // The cheapest three drivers run end to end and save CSVs.
     for id in ["fig10", "fig13", "overhead"] {
