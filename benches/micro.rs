@@ -106,7 +106,7 @@ fn bench_trace_and_sim() {
         |_| {
             let cfg = SimConfig::new(PolicyKind::Prism, 2);
             let (m, _) = Simulator::new(cfg, specs.clone()).run(&trace);
-            black_box(m.completions.len())
+            black_box(m.total())
         },
     );
 }

@@ -1,22 +1,36 @@
 //! `cargo bench` target regenerating every paper table and figure at quick
 //! scale (full scale via `prism exp <id>`), plus wall-clock timing per
 //! experiment. Custom harness: criterion is not in the offline vendor set.
+//!
+//! Flags:
+//!   <substr>    only run experiment ids containing <substr>
+//!   --jobs N    sweep worker count (default: auto; 1 = sequential)
 
 use std::time::Instant;
 
 fn main() {
-    let filter = std::env::args()
-        .skip(1)
-        .find(|a| !a.starts_with('-'))
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let jobs = prism::sweep::parse_jobs_flag(&args);
+    let filter = args
+        .iter()
+        .enumerate()
+        .filter(|(i, a)| {
+            !a.starts_with('-') && !(*i > 0 && args[i - 1] == "--jobs")
+        })
+        .map(|(_, a)| a.clone())
+        .next()
         .unwrap_or_default();
-    println!("== paper experiment bench (quick scale) ==");
+    println!(
+        "== paper experiment bench (quick scale, {} sweep workers) ==",
+        prism::sweep::resolve_jobs(jobs)
+    );
     let mut total = 0.0;
     for id in prism::experiments::ids() {
         if !filter.is_empty() && !id.contains(&filter) {
             continue;
         }
         let t0 = Instant::now();
-        match prism::experiments::run(id, true) {
+        match prism::experiments::run_jobs(id, true, jobs) {
             Ok(tables) => {
                 let dt = t0.elapsed().as_secs_f64();
                 total += dt;

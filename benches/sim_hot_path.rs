@@ -8,18 +8,27 @@
 //!   --prepush            ALSO time the legacy pre-pushed-arrival heap
 //!                        (`SimConfig::stream_arrivals = false`) for an
 //!                        in-binary A/B of the streamed event loop
+//!   --sweep              ALSO run a policy x SLO sweep grid through the
+//!                        parallel sweep engine (aggregate events/sec over
+//!                        the whole grid; `--jobs` sets the worker count)
+//!   --jobs N             sweep worker count (default: auto)
 //!   --baseline <file>    report speedup vs a previously recorded
 //!                        BENCH_sim.json (env PRISM_BENCH_BASELINE works
 //!                        too); run the bench on the pre-change commit to
 //!                        produce one
+//!   --gate-pct <p>       with a baseline: exit non-zero if any row's
+//!                        events/sec regressed more than p percent
+//!                        (default 15). This is the CI perf gate.
 //!   --policy <name>      only run policies whose name contains <name>
 
 use std::collections::BTreeMap;
 use std::time::Instant;
 
 use prism::bench::harness::Table;
+use prism::metrics::RunMetrics;
 use prism::model::spec::{catalog_subset, ModelId, ModelSpec};
 use prism::sim::{PolicyKind, SimConfig, Simulator};
+use prism::sweep::{resolve_jobs, run_points, SweepGrid};
 use prism::trace::gen::{generate, TraceGenConfig};
 use prism::util::json::{self, Json};
 
@@ -54,33 +63,53 @@ fn load_baseline(path: &str) -> Option<BTreeMap<BaselineKey, f64>> {
     let rows = j.get("rows").as_arr()?;
     let mut map = BTreeMap::new();
     for r in rows {
-        let key = (
-            r.get("scenario").as_str()?.to_string(),
-            r.get("policy").as_str()?.to_string(),
-            r.get("mode").as_str()?.to_string(),
-        );
-        map.insert(key, r.get("events_per_sec").as_f64()?);
+        // One malformed row must not discard the whole baseline (that would
+        // silently disable the perf gate); skip it with a warning instead.
+        let parsed = (|| {
+            let key = (
+                r.get("scenario").as_str()?.to_string(),
+                r.get("policy").as_str()?.to_string(),
+                r.get("mode").as_str()?.to_string(),
+            );
+            Some((key, r.get("events_per_sec").as_f64()?))
+        })();
+        match parsed {
+            Some((key, eps)) => {
+                map.insert(key, eps);
+            }
+            None => eprintln!("warning: skipping malformed baseline row in {path}"),
+        }
     }
-    Some(map)
+    if map.is_empty() { None } else { Some(map) }
 }
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let smoke = args.iter().any(|a| a == "--smoke");
     let prepush = args.iter().any(|a| a == "--prepush");
-    let opt = |flag: &str| {
-        args.iter().position(|a| a == flag).and_then(|i| args.get(i + 1).cloned())
+    let sweep = args.iter().any(|a| a == "--sweep");
+    // A present flag with no following value is an error, not a silent default.
+    let opt = |flag: &str| -> Option<String> {
+        args.iter().position(|a| a == flag).map(|i| {
+            args.get(i + 1)
+                .unwrap_or_else(|| panic!("{flag} requires a value"))
+                .clone()
+        })
     };
     let policy_filter = opt("--policy").unwrap_or_default();
-    let baseline = opt("--baseline")
-        .or_else(|| std::env::var("PRISM_BENCH_BASELINE").ok())
-        .and_then(|p| {
-            let b = load_baseline(&p);
-            if b.is_none() {
-                eprintln!("warning: could not read baseline {p}");
-            }
-            b
-        });
+    let jobs = prism::sweep::parse_jobs_flag(&args);
+    let gate_pct: f64 = opt("--gate-pct")
+        .map(|s| s.parse().expect("--gate-pct expects a number"))
+        .unwrap_or(15.0);
+    let baseline_path =
+        opt("--baseline").or_else(|| std::env::var("PRISM_BENCH_BASELINE").ok());
+    let baseline = baseline_path.as_ref().and_then(|p| load_baseline(p));
+    if let (Some(p), None) = (&baseline_path, &baseline) {
+        // An explicitly requested baseline that cannot be read must not
+        // silently disable the perf gate and exit green.
+        eprintln!("error: baseline {p} could not be read or parsed; refusing to run ungated");
+        std::process::exit(2);
+    }
 
     let scenarios: Vec<Scenario> = if smoke {
         vec![Scenario { name: "smoke-8m-4g-2min", n_models: 8, n_gpus: 4, duration: 120.0 }]
@@ -96,6 +125,23 @@ fn main() {
         &["scenario", "policy", "mode", "requests", "events", "wall_s", "events/s", "vs_base"],
     );
     let mut rows: Vec<Json> = Vec::new();
+    // Rows that regressed more than gate_pct vs the baseline: (key, speedup).
+    let mut regressions: Vec<(BaselineKey, f64)> = Vec::new();
+    // `gated = false` reports the speedup without enforcing the threshold
+    // (the sweep row's aggregate events/sec scales with the machine's core
+    // count, so it cannot gate across heterogeneous runners).
+    let mut speedup_of = |key: &BaselineKey, eps: f64, gated: bool| -> Option<f64> {
+        let s = baseline.as_ref().and_then(|b| b.get(key)).map(|&base| {
+            if base > 0.0 { eps / base } else { f64::NAN }
+        });
+        if let Some(s) = s {
+            if gated && s.is_finite() && s < 1.0 - gate_pct / 100.0 {
+                regressions.push((key.clone(), s));
+            }
+        }
+        s
+    };
+
     for sc in &scenarios {
         let trace = generate(&TraceGenConfig::novita_like(sc.n_models, sc.duration, 7));
         let specs = fleet(sc.n_models);
@@ -109,15 +155,27 @@ fn main() {
                 let mut cfg = SimConfig::new(policy, sc.n_gpus);
                 cfg.slo_scale = 8.0;
                 cfg.stream_arrivals = stream;
-                let t0 = Instant::now();
-                let (m, _) = Simulator::new(cfg, specs.clone()).run(&trace);
-                let wall = t0.elapsed().as_secs_f64();
+                // Smoke rows gate CI: take the best of 3 sub-second reps so
+                // single-shot scheduler noise on shared runners does not trip
+                // the threshold. Runs are deterministic, so metrics are
+                // identical across reps - only wall time varies.
+                let reps = if smoke { 3 } else { 1 };
+                let mut wall = f64::INFINITY;
+                let mut best: Option<RunMetrics> = None;
+                for _ in 0..reps {
+                    let t0 = Instant::now();
+                    let (m, _) = Simulator::new(cfg.clone(), specs.clone()).run(&trace);
+                    let w = t0.elapsed().as_secs_f64();
+                    if w < wall {
+                        wall = w;
+                        best = Some(m);
+                    }
+                }
+                let m = best.expect("at least one rep ran");
                 let eps = m.sim_events as f64 / wall.max(1e-9);
                 let key =
                     (sc.name.to_string(), policy.name().to_string(), mode.to_string());
-                let speedup = baseline.as_ref().and_then(|b| b.get(&key)).map(|&base| {
-                    if base > 0.0 { eps / base } else { f64::NAN }
-                });
+                let speedup = speedup_of(&key, eps, true);
                 table.row(vec![
                     sc.name.into(),
                     policy.name().into(),
@@ -133,7 +191,7 @@ fn main() {
                 row.set("policy", Json::Str(policy.name().to_string()));
                 row.set("mode", Json::Str(mode.to_string()));
                 row.set("requests", Json::from_f64(trace.events.len() as f64));
-                row.set("completions", Json::from_f64(m.completions.len() as f64));
+                row.set("completions", Json::from_f64(m.total() as f64));
                 row.set("events", Json::from_f64(m.sim_events as f64));
                 row.set("wall_s", Json::from_f64(wall));
                 row.set("events_per_sec", Json::from_f64(eps));
@@ -144,6 +202,61 @@ fn main() {
                 rows.push(row);
             }
         }
+
+        // Parallel sweep scenario: the policy x SLO grid through the sweep
+        // engine, reported as aggregate simulated-events/sec (this is the
+        // number the worker pool is supposed to scale with cores). Honors
+        // --policy like the per-policy rows.
+        if sweep {
+            let sweep_policies: Vec<PolicyKind> = PolicyKind::all()
+                .into_iter()
+                .filter(|p| policy_filter.is_empty() || p.name().contains(&policy_filter))
+                .collect();
+            if sweep_policies.is_empty() {
+                eprintln!("--sweep: no policies match --policy {policy_filter}; skipping");
+                continue;
+            }
+            let grid = SweepGrid::new()
+                .policies(&sweep_policies)
+                .gpus(&[sc.n_gpus])
+                .slo_scales(&[4.0, 8.0]);
+            let points = grid.points();
+            // Report the worker count run_points actually uses (it clamps
+            // to the point count), not the raw resolved parallelism.
+            let n_jobs = resolve_jobs(jobs).min(points.len());
+            let t0 = Instant::now();
+            let results = run_points(&points, jobs, |_, pt| pt.run(&specs, &trace));
+            let wall = t0.elapsed().as_secs_f64();
+            let events: u64 = results.iter().map(|m| m.sim_events).sum();
+            let requests: usize = results.iter().map(|m| m.total()).sum();
+            let eps = events as f64 / wall.max(1e-9);
+            let key = (format!("sweep-{}", sc.name), "grid".to_string(), "sweep".to_string());
+            let speedup = speedup_of(&key, eps, false);
+            table.row(vec![
+                key.0.clone(),
+                format!("grid[{}]x{n_jobs}j", points.len()),
+                "sweep".into(),
+                requests.to_string(),
+                events.to_string(),
+                format!("{wall:.2}"),
+                format!("{eps:.0}"),
+                speedup.map(|s| format!("{s:.2}x")).unwrap_or_else(|| "-".into()),
+            ]);
+            let mut row = Json::obj();
+            row.set("scenario", Json::Str(key.0.clone()));
+            row.set("policy", Json::Str(key.1.clone()));
+            row.set("mode", Json::Str(key.2.clone()));
+            row.set("points", Json::from_f64(points.len() as f64));
+            row.set("jobs", Json::from_f64(n_jobs as f64));
+            row.set("requests", Json::from_f64(requests as f64));
+            row.set("events", Json::from_f64(events as f64));
+            row.set("wall_s", Json::from_f64(wall));
+            row.set("events_per_sec", Json::from_f64(eps));
+            if let Some(s) = speedup {
+                row.set("speedup_vs_baseline", Json::from_f64(s));
+            }
+            rows.push(row);
+        }
     }
     table.print();
 
@@ -153,4 +266,17 @@ fn main() {
     out.set("rows", Json::Arr(rows));
     std::fs::write("BENCH_sim.json", out.to_string_pretty()).expect("write BENCH_sim.json");
     println!("wrote BENCH_sim.json");
+
+    // CI perf gate: fail the process (after writing BENCH_sim.json so the
+    // artifact still uploads) when any row regressed beyond the threshold.
+    if !regressions.is_empty() {
+        eprintln!(
+            "PERF REGRESSION: {} row(s) slower than baseline by >{gate_pct}%:",
+            regressions.len()
+        );
+        for ((sc, pol, mode), s) in &regressions {
+            eprintln!("  {sc}/{pol}/{mode}: {s:.2}x of baseline");
+        }
+        std::process::exit(1);
+    }
 }

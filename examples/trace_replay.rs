@@ -9,7 +9,8 @@
 use prism::bench::harness::Table;
 use prism::experiments::e2e::assign_ids;
 use prism::model::spec::table3_catalog;
-use prism::sim::{PolicyKind, SimConfig, Simulator};
+use prism::sim::SimConfig;
+use prism::sweep::{default_jobs, run_points, SweepGrid};
 use prism::trace::gen::{generate, TraceGenConfig};
 
 fn main() {
@@ -34,14 +35,27 @@ fn main() {
         &["system", "ttft_att", "tpot_att", "mean_ttft_s", "p95_ttft_s",
           "tok_tput_busy", "activ", "evict", "migr"],
     );
-    for p in PolicyKind::all() {
-        let mut cfg = SimConfig::new(p, 4);
-        cfg.slo_scale = 8.0;
-        let t0 = std::time::Instant::now();
-        let (m, _) = Simulator::new(cfg, specs.clone()).run(&trace);
-        eprintln!("  {} simulated in {:.2}s", p.name(), t0.elapsed().as_secs_f64());
+    // One sweep point per policy, executed on the worker pool; results come
+    // back keyed to points, so the table order never depends on scheduling.
+    let points = SweepGrid::new().gpus(&[4]).points();
+    let workers = default_jobs().min(points.len());
+    let t0 = std::time::Instant::now();
+    let results = run_points(&points, 0, |_, pt| {
+        let mut cfg = SimConfig::new(pt.policy, pt.n_gpus);
+        cfg.slo_scale = pt.slo_scale;
+        // The table prints a percentile column: keep it exact.
+        cfg.metrics_full_dump = true;
+        pt.run_with(cfg, &specs, &trace)
+    });
+    eprintln!(
+        "  {} policies simulated in {:.2}s on {} workers",
+        points.len(),
+        t0.elapsed().as_secs_f64(),
+        workers
+    );
+    for (pt, m) in points.iter().zip(&results) {
         t.row(vec![
-            p.name().into(),
+            pt.policy.name().into(),
             format!("{:.3}", m.ttft_attainment()),
             format!("{:.3}", m.tpot_attainment()),
             format!("{:.3}", m.mean_ttft()),

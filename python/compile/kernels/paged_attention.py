@@ -61,11 +61,11 @@ def _decode_kernel(
         # Gather one KV page: K,V [Tp, Dh] for (layer, kvh).
         k = pl.load(
             pool_ref,
-            (page, pl.dslice(0, tp), layer, 0, kvh, pl.dslice(0, dh)),
+            (page, pl.dslice(0, tp), jnp.int32(layer), jnp.int32(0), kvh, pl.dslice(0, dh)),
         ).astype(jnp.float32)
         v = pl.load(
             pool_ref,
-            (page, pl.dslice(0, tp), layer, 1, kvh, pl.dslice(0, dh)),
+            (page, pl.dslice(0, tp), jnp.int32(layer), jnp.int32(1), kvh, pl.dslice(0, dh)),
         ).astype(jnp.float32)
         s = jnp.dot(k, q) * scale  # [Tp]  (MXU-shaped on real TPU)
         pos = i * tp + jax.lax.iota(jnp.int32, tp)

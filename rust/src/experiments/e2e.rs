@@ -1,9 +1,15 @@
 //! End-to-end simulator experiments (Tab 2, Fig 5, 7, 8, 9, 11, 15, SS7.5).
+//!
+//! Every multi-run experiment enumerates its grid into the `sweep` engine
+//! instead of hand-rolled nested loops: points run on a worker pool
+//! (`jobs` workers; 0 = auto, 1 = sequential) and results are keyed to
+//! points, so tables are byte-identical whatever the worker count.
 
 use crate::bench::harness::Table;
 use crate::metrics::RunMetrics;
 use crate::model::spec::{catalog_subset, table3_catalog, ModelId, ModelSpec};
 use crate::sim::{PolicyKind, SimConfig, Simulator};
+use crate::sweep::{run_points, SweepGrid};
 use crate::trace::gen::{generate, TraceGenConfig};
 use crate::trace::Trace;
 
@@ -29,19 +35,6 @@ fn eight_models() -> Vec<ModelSpec> {
     assign_ids(v)
 }
 
-fn run_once(
-    policy: PolicyKind,
-    n_gpus: u32,
-    slo_scale: f64,
-    specs: &[ModelSpec],
-    trace: &Trace,
-) -> RunMetrics {
-    let mut cfg = SimConfig::new(policy, n_gpus);
-    cfg.slo_scale = slo_scale;
-    let sim = Simulator::new(cfg, specs.to_vec());
-    sim.run(trace).0
-}
-
 fn traces_for_e2e(quick: bool, n_models: usize) -> Vec<(&'static str, Trace)> {
     let dur = if quick { 240.0 } else { 900.0 };
     vec![
@@ -50,10 +43,18 @@ fn traces_for_e2e(quick: bool, n_models: usize) -> Vec<(&'static str, Trace)> {
     ]
 }
 
+fn att_row(prefix: Vec<String>, p: PolicyKind, m: &RunMetrics) -> Vec<String> {
+    let mut row = prefix;
+    row.push(p.name().into());
+    row.push(format!("{:.3}", m.ttft_attainment()));
+    row.push(format!("{:.3}", m.tpot_attainment()));
+    row
+}
+
 /// Table 2: MuxServe vs MuxServe++ - the kvcached delta. "MuxServe" is
 /// modelled as space sharing with static per-model KV quotas (no elastic
 /// memory); MuxServe++ shares the KV pool through kvcached.
-pub fn tab2_muxserve(quick: bool) -> Vec<Table> {
+pub fn tab2_muxserve(quick: bool, jobs: usize) -> Vec<Table> {
     let cat = table3_catalog();
     let specs = assign_ids(
         cat.iter().filter(|m| m.name.contains("8b")).take(3).cloned().collect(),
@@ -87,13 +88,21 @@ pub fn tab2_muxserve(quick: bool) -> Vec<Table> {
         &["system", "mean_e2e_s", "p95_e2e_s", "req_tput", "tok_tput",
           "mean_ttft_s", "p95_ttft_s", "mean_tpot_ms", "p95_tpot_ms"],
     );
-    for (name, policy) in [
+    let points = [
         ("muxserve", PolicyKind::StaticPartition),
         ("muxserve++", PolicyKind::MuxServePlusPlus),
-    ] {
-        let m = run_once(policy, 1, 8.0, &specs, &trace);
+    ];
+    let results = run_points(&points, jobs, |_, &(_, policy)| {
+        let mut cfg = SimConfig::new(policy, 1);
+        cfg.slo_scale = 8.0;
+        // Tab 2 is percentile-heavy (p95 e2e/ttft/tpot columns): keep the
+        // raw records so those columns stay exact, not sketch estimates.
+        cfg.metrics_full_dump = true;
+        Simulator::new(cfg, specs.clone()).run(&trace).0
+    });
+    for ((name, _), m) in points.iter().zip(&results) {
         t.row(vec![
-            name.into(),
+            (*name).into(),
             format!("{:.2}", m.mean_e2e()),
             format!("{:.2}", m.p95_e2e()),
             format!("{:.2}", m.req_throughput()),
@@ -108,54 +117,68 @@ pub fn tab2_muxserve(quick: bool) -> Vec<Table> {
 }
 
 /// Fig 5: SLO attainment vs rate scale / SLO scale / #GPUs, 2 traces, all
-/// five systems.
-pub fn fig5_end_to_end(quick: bool) -> Vec<Table> {
+/// five systems. Each row of the figure is one sweep grid.
+pub fn fig5_end_to_end(quick: bool, jobs: usize) -> Vec<Table> {
     let specs = eight_models();
     let mut out = Vec::new();
 
-    // Row 1: attainment vs rate scale (8 models, 2 GPUs).
+    // Row 1: attainment vs rate scale (8 models, 2 GPUs). Scaled traces are
+    // materialized once per (trace, rate) pair; the five policies sharing a
+    // pair read the same copy instead of re-scaling per point.
     let rate_scales: &[f64] = if quick { &[1.0, 4.0] } else { &[0.5, 1.0, 2.0, 4.0, 8.0] };
-    for (tname, trace) in traces_for_e2e(quick, specs.len()) {
-        let mut t = Table::new(
-            &format!("Fig 5 row1 ({tname}): attainment vs rate scale, 8 models / 2 GPUs"),
-            &["rate_scale", "system", "ttft_att", "tpot_att"],
-        );
-        for &rs in rate_scales {
-            let scaled = trace.scale_rate(rs);
-            for p in PolicyKind::all() {
-                let m = run_once(p, 2, 8.0, &specs, &scaled);
-                t.row(vec![
-                    format!("{rs}"),
-                    p.name().into(),
-                    format!("{:.3}", m.ttft_attainment()),
-                    format!("{:.3}", m.tpot_attainment()),
-                ]);
-            }
+    let traces = traces_for_e2e(quick, specs.len());
+    let scaled: Vec<Vec<Trace>> = traces
+        .iter()
+        .map(|(_, tr)| rate_scales.iter().map(|&rs| tr.scale_rate(rs)).collect())
+        .collect();
+    let points = SweepGrid::new().traces(traces.len()).rate_scales(rate_scales).points();
+    let results = run_points(&points, jobs, |_, pt| {
+        // The grid copies rates verbatim, so the position lookup is exact;
+        // fall back to per-point scaling (bit-identical output) rather than
+        // panicking a worker if the axes ever drift apart.
+        match rate_scales.iter().position(|&r| r == pt.rate_scale) {
+            Some(ri) => pt.run_prescaled(&specs, &scaled[pt.trace][ri]),
+            None => pt.run(&specs, &traces[pt.trace].1),
         }
-        out.push(t);
+    });
+    let mut tables: Vec<Table> = traces
+        .iter()
+        .map(|(tname, _)| {
+            Table::new(
+                &format!("Fig 5 row1 ({tname}): attainment vs rate scale, 8 models / 2 GPUs"),
+                &["rate_scale", "system", "ttft_att", "tpot_att"],
+            )
+        })
+        .collect();
+    for (pt, m) in points.iter().zip(&results) {
+        tables[pt.trace].row(att_row(vec![format!("{}", pt.rate_scale)], pt.policy, m));
     }
+    out.extend(tables);
 
-    // Row 2: attainment vs SLO scale.
+    // Row 2: attainment vs SLO scale (rate fixed at 2x, scaled once per
+    // trace; the grid's rate axis only labels the point keys).
     let slo_scales: &[f64] = if quick { &[2.0, 16.0] } else { &[1.0, 2.0, 4.0, 8.0, 16.0, 32.0] };
-    for (tname, trace) in traces_for_e2e(quick, specs.len()) {
-        let scaled = trace.scale_rate(2.0);
-        let mut t = Table::new(
-            &format!("Fig 5 row2 ({tname}): attainment vs SLO scale, 8 models / 2 GPUs"),
-            &["slo_scale", "system", "ttft_att", "tpot_att"],
-        );
-        for &ss in slo_scales {
-            for p in PolicyKind::all() {
-                let m = run_once(p, 2, ss, &specs, &scaled);
-                t.row(vec![
-                    format!("{ss}"),
-                    p.name().into(),
-                    format!("{:.3}", m.ttft_attainment()),
-                    format!("{:.3}", m.tpot_attainment()),
-                ]);
-            }
-        }
-        out.push(t);
+    let scaled2: Vec<Trace> = traces.iter().map(|(_, tr)| tr.scale_rate(2.0)).collect();
+    let points = SweepGrid::new()
+        .traces(traces.len())
+        .rate_scales(&[2.0])
+        .slo_scales(slo_scales)
+        .points();
+    let results =
+        run_points(&points, jobs, |_, pt| pt.run_prescaled(&specs, &scaled2[pt.trace]));
+    let mut tables: Vec<Table> = traces
+        .iter()
+        .map(|(tname, _)| {
+            Table::new(
+                &format!("Fig 5 row2 ({tname}): attainment vs SLO scale, 8 models / 2 GPUs"),
+                &["slo_scale", "system", "ttft_att", "tpot_att"],
+            )
+        })
+        .collect();
+    for (pt, m) in points.iter().zip(&results) {
+        tables[pt.trace].row(att_row(vec![format!("{}", pt.slo_scale)], pt.policy, m));
     }
+    out.extend(tables);
 
     // Row 3: attainment vs #GPUs (18 models, 1B-8B).
     let specs18 = assign_ids(
@@ -166,29 +189,28 @@ pub fn fig5_end_to_end(quick: bool) -> Vec<Table> {
             .collect(),
     );
     let gpu_counts: &[u32] = if quick { &[2, 4] } else { &[1, 2, 3, 4, 5, 6, 7, 8] };
-    for (tname, trace) in traces_for_e2e(quick, specs18.len()) {
-        let mut t = Table::new(
-            &format!("Fig 5 row3 ({tname}): attainment vs #GPUs, 18 models"),
-            &["gpus", "system", "ttft_att", "tpot_att"],
-        );
-        for &g in gpu_counts {
-            for p in PolicyKind::all() {
-                let m = run_once(p, g, 8.0, &specs18, &trace);
-                t.row(vec![
-                    g.to_string(),
-                    p.name().into(),
-                    format!("{:.3}", m.ttft_attainment()),
-                    format!("{:.3}", m.tpot_attainment()),
-                ]);
-            }
-        }
-        out.push(t);
+    let traces18 = traces_for_e2e(quick, specs18.len());
+    let points = SweepGrid::new().traces(traces18.len()).gpus(gpu_counts).points();
+    let results =
+        run_points(&points, jobs, |_, pt| pt.run_prescaled(&specs18, &traces18[pt.trace].1));
+    let mut tables: Vec<Table> = traces18
+        .iter()
+        .map(|(tname, _)| {
+            Table::new(
+                &format!("Fig 5 row3 ({tname}): attainment vs #GPUs, 18 models"),
+                &["gpus", "system", "ttft_att", "tpot_att"],
+            )
+        })
+        .collect();
+    for (pt, m) in points.iter().zip(&results) {
+        tables[pt.trace].row(att_row(vec![pt.n_gpus.to_string()], pt.policy, m));
     }
+    out.extend(tables);
     out
 }
 
 /// Fig 7: global placement ablation (8 models / 2 GPUs).
-pub fn fig7_placement_ablation(quick: bool) -> Vec<Table> {
+pub fn fig7_placement_ablation(quick: bool, jobs: usize) -> Vec<Table> {
     let specs = eight_models();
     let dur = if quick { 240.0 } else { 900.0 };
     let trace = generate(&TraceGenConfig::arena_chat_like(specs.len(), dur, 33)).scale_rate(2.0);
@@ -196,16 +218,19 @@ pub fn fig7_placement_ablation(quick: bool) -> Vec<Table> {
         "Fig 7a: global placement scheduler on/off",
         &["config", "ttft_att", "tpot_att", "migrations"],
     );
-    let mut tl_tables = Vec::new();
-    for (name, tau) in [("global-sched-on", 0.2), ("global-sched-off", f64::INFINITY)] {
+    // infinite tau = never migrate = no global scheduling
+    let points = [("global-sched-on", 0.2), ("global-sched-off", f64::INFINITY)];
+    let results = run_points(&points, jobs, |_, &(_, tau)| {
         let mut cfg = SimConfig::new(PolicyKind::Prism, 2);
         cfg.slo_scale = 8.0;
-        cfg.tau = tau; // infinite tau = never migrate = no global scheduling
+        cfg.tau = tau;
         cfg.sample_dt = 10.0;
-        let sim = Simulator::new(cfg, specs.clone());
-        let (m, tl) = sim.run(&trace);
+        Simulator::new(cfg, specs.clone()).run(&trace)
+    });
+    let mut tl_tables = Vec::new();
+    for ((name, _), (m, tl)) in points.iter().zip(&results) {
         t.row(vec![
-            name.into(),
+            (*name).into(),
             format!("{:.3}", m.ttft_attainment()),
             format!("{:.3}", m.tpot_attainment()),
             m.migrations.to_string(),
@@ -214,7 +239,7 @@ pub fn fig7_placement_ablation(quick: bool) -> Vec<Table> {
             &format!("Fig 7b ({name}): per-GPU free KV over time"),
             &["t", "gpu0_free_gb", "gpu1_free_gb"],
         );
-        for s in &tl {
+        for s in tl {
             tt.row(vec![
                 format!("{:.0}", s.t),
                 format!("{:.1}", s.gpus[0].3 as f64 / 1e9),
@@ -230,7 +255,7 @@ pub fn fig7_placement_ablation(quick: bool) -> Vec<Table> {
 
 /// Fig 8: GPU-local arbitration ablation - two models, model1 SLO scale
 /// fixed at 8, model2's scale swept; local scheduling on/off.
-pub fn fig8_arbitration_ablation(quick: bool) -> Vec<Table> {
+pub fn fig8_arbitration_ablation(quick: bool, jobs: usize) -> Vec<Table> {
     let cat = table3_catalog();
     // Model 0: an 8B with long prompts; model 1: a small 1B with strict SLOs.
     let m0 = cat.iter().find(|m| m.name.contains("8b")).unwrap().clone();
@@ -264,36 +289,42 @@ pub fn fig8_arbitration_ablation(quick: bool) -> Vec<Table> {
     let trace = Trace { name: "fig8".into(), n_models: 2, events, duration: dur };
 
     let scales: &[f64] = if quick { &[1.0, 4.0] } else { &[1.0, 2.0, 4.0, 6.0, 8.0] };
-    let mut table = Table::new(
-        "Fig 8a: TTFT attainment vs model2 SLO scale (local sched on/off)",
-        &["m2_slo_scale", "config", "m1_ttft_att", "m2_ttft_att"],
-    );
+    let mut points = Vec::new();
     for &s2 in scales {
         for (name, policy) in [
             ("local-on", PolicyKind::Prism),
             ("local-off", PolicyKind::MuxServePlusPlus), // FCFS, no slack awareness
         ] {
-            let mut cfg = SimConfig::new(policy, 1);
-            cfg.slo_scale = 1.0; // per-model scales set below via slos
-            let mut sim = Simulator::new(cfg, specs.clone());
-            // Override SLOs: model0 scale 8, model1 scale s2.
-            let (t0, p0) = sim.slo_of(0);
-            let (t1, p1) = sim.slo_of(1);
-            sim.set_slos(vec![(t0 * 8.0, p0 * 8.0), (t1 * s2, p1 * s2)]);
-            let (m, _) = sim.run(&trace);
-            table.row(vec![
-                format!("{s2}"),
-                name.into(),
-                format!("{:.3}", m.ttft_attainment_for(ModelId(0))),
-                format!("{:.3}", m.ttft_attainment_for(ModelId(1))),
-            ]);
+            points.push((s2, name, policy));
         }
+    }
+    let results = run_points(&points, jobs, |_, &(s2, _, policy)| {
+        let mut cfg = SimConfig::new(policy, 1);
+        cfg.slo_scale = 1.0; // per-model scales set below via slos
+        let mut sim = Simulator::new(cfg, specs.clone());
+        // Override SLOs: model0 scale 8, model1 scale s2.
+        let (t0, p0) = sim.slo_of(0);
+        let (t1, p1) = sim.slo_of(1);
+        sim.set_slos(vec![(t0 * 8.0, p0 * 8.0), (t1 * s2, p1 * s2)]);
+        sim.run(&trace).0
+    });
+    let mut table = Table::new(
+        "Fig 8a: TTFT attainment vs model2 SLO scale (local sched on/off)",
+        &["m2_slo_scale", "config", "m1_ttft_att", "m2_ttft_att"],
+    );
+    for ((s2, name, _), m) in points.iter().zip(&results) {
+        table.row(vec![
+            format!("{s2}"),
+            (*name).into(),
+            format!("{:.3}", m.ttft_attainment_for(ModelId(0))),
+            format!("{:.3}", m.ttft_attainment_for(ModelId(1))),
+        ]);
     }
     vec![table]
 }
 
 /// Fig 9: large scale - 58 models, TP for big ones, up to 32 GPUs.
-pub fn fig9_large_scale(quick: bool) -> Vec<Table> {
+pub fn fig9_large_scale(quick: bool, jobs: usize) -> Vec<Table> {
     let specs = assign_ids(if quick {
         catalog_subset(16)
     } else {
@@ -302,33 +333,31 @@ pub fn fig9_large_scale(quick: bool) -> Vec<Table> {
     let dur = if quick { 180.0 } else { 600.0 };
     let trace = generate(&TraceGenConfig::arena_chat_like(specs.len(), dur, 55));
     let gpus: &[u32] = if quick { &[8] } else { &[8, 16, 24, 32] };
-    let policies = PolicyKind::all();
 
+    let points = SweepGrid::new().gpus(gpus).slo_scales(&[5.0]).points();
+    let results = run_points(&points, jobs, |_, pt| pt.run(&specs, &trace));
     let mut a = Table::new(
         "Fig 9a: attainment vs #GPUs (58 models, TP 32B/70B)",
         &["gpus", "system", "ttft_att", "tpot_att"],
     );
     let mut best: std::collections::BTreeMap<&str, u32> = Default::default();
-    for &g in gpus {
-        for p in policies {
-            let m = run_once(p, g, 5.0, &specs, &trace);
-            let ta = m.ttft_attainment();
-            a.row(vec![
-                g.to_string(),
-                p.name().into(),
-                format!("{:.3}", ta),
-                format!("{:.3}", m.tpot_attainment()),
-            ]);
-            if ta >= 0.99 && !best.contains_key(p.name()) {
-                best.insert(p.name(), g);
-            }
+    for (pt, m) in points.iter().zip(&results) {
+        let ta = m.ttft_attainment();
+        a.row(vec![
+            pt.n_gpus.to_string(),
+            pt.policy.name().into(),
+            format!("{:.3}", ta),
+            format!("{:.3}", m.tpot_attainment()),
+        ]);
+        if ta >= 0.99 && !best.contains_key(pt.policy.name()) {
+            best.insert(pt.policy.name(), pt.n_gpus);
         }
     }
     let mut b = Table::new(
         "Fig 9b: GPUs needed for 99% TTFT attainment",
         &["system", "gpus_for_99pct"],
     );
-    for p in policies {
+    for p in PolicyKind::all() {
         b.row(vec![
             p.name().into(),
             best.get(p.name()).map(|g| g.to_string()).unwrap_or_else(|| format!(">{}", gpus.last().unwrap())),
@@ -339,7 +368,7 @@ pub fn fig9_large_scale(quick: bool) -> Vec<Table> {
 
 /// Fig 11: production shadow replay - throughput and revenue per GPU,
 /// before (static partition) vs after (Prism).
-pub fn fig11_production(quick: bool) -> Vec<Table> {
+pub fn fig11_production(quick: bool, jobs: usize) -> Vec<Table> {
     let specs = assign_ids(
         catalog_subset(30)
             .into_iter()
@@ -349,45 +378,57 @@ pub fn fig11_production(quick: bool) -> Vec<Table> {
     );
     let dur = if quick { 240.0 } else { 1200.0 };
     let n_gpus = 4;
+    let companies = [("A", 61u64, 2.0), ("B", 62, 1.0)];
+    // Shadow traces are independent too: generate them through the engine.
+    let traces = run_points(&companies, jobs, |_, &(_, seed, scale)| {
+        generate(&TraceGenConfig::hyperbolic_like(specs.len(), dur, seed)).scale_rate(scale)
+    });
+    let mut points = Vec::new();
+    for ci in 0..companies.len() {
+        for (label, p) in [("before", PolicyKind::StaticPartition), ("after", PolicyKind::Prism)] {
+            points.push((ci, label, p));
+        }
+    }
+    let results = run_points(&points, jobs, |_, &(ci, _, p)| {
+        let mut cfg = SimConfig::new(p, n_gpus);
+        cfg.slo_scale = 10.0;
+        Simulator::new(cfg, specs.clone()).run(&traces[ci]).0
+    });
     let mut t = Table::new(
         "Fig 11: shadow replay - per-GPU throughput and revenue, before/after Prism",
         &["company", "system", "tok_tput_per_gpu", "revenue_per_gpu", "ttft_att"],
     );
-    for (company, seed, scale) in [("A", 61u64, 2.0), ("B", 62, 1.0)] {
-        let trace = generate(&TraceGenConfig::hyperbolic_like(specs.len(), dur, seed))
-            .scale_rate(scale);
-        for (label, p) in [("before", PolicyKind::StaticPartition), ("after", PolicyKind::Prism)] {
-            let m = run_once(p, n_gpus, 10.0, &specs, &trace);
-            t.row(vec![
-                company.into(),
-                label.into(),
-                format!("{:.0}", m.token_throughput() / n_gpus as f64),
-                // $0.5 in / $2 out per 1M tokens (typical published rates).
-                format!("{:.4}", m.revenue_per_gpu(0.0005, 0.002, n_gpus as usize)),
-                format!("{:.3}", m.ttft_attainment()),
-            ]);
-        }
+    for ((ci, label, _), m) in points.iter().zip(&results) {
+        t.row(vec![
+            companies[*ci].0.into(),
+            (*label).into(),
+            format!("{:.0}", m.token_throughput() / n_gpus as f64),
+            // $0.5 in / $2 out per 1M tokens (typical published rates).
+            format!("{:.4}", m.revenue_per_gpu(0.0005, 0.002, n_gpus as usize)),
+            format!("{:.3}", m.ttft_attainment()),
+        ]);
     }
     vec![t]
 }
 
 /// Fig 15: sensitivity to the idle-eviction threshold and monitor window.
-pub fn fig15_sensitivity(quick: bool) -> Vec<Table> {
+pub fn fig15_sensitivity(quick: bool, jobs: usize) -> Vec<Table> {
     let specs = eight_models();
     let dur = if quick { 240.0 } else { 900.0 };
     let trace = generate(&TraceGenConfig::hyperbolic_like(specs.len(), dur, 71)).scale_rate(2.0);
 
     let thresholds: &[f64] = if quick { &[10.0, 45.0, 120.0] } else { &[10.0, 20.0, 45.0, 60.0, 80.0, 120.0] };
+    let th_results = run_points(thresholds, jobs, |_, &th| {
+        let mut cfg = SimConfig::new(PolicyKind::Prism, 2);
+        cfg.slo_scale = 8.0;
+        cfg.eviction.idle_threshold = th;
+        Simulator::new(cfg, specs.clone()).run(&trace).0
+    });
     let mut a = Table::new(
         "Fig 15a: mean TTFT vs idle eviction threshold",
         &["threshold_s", "mean_ttft_s", "evictions"],
     );
-    for &th in thresholds {
-        let mut cfg = SimConfig::new(PolicyKind::Prism, 2);
-        cfg.slo_scale = 8.0;
-        cfg.eviction.idle_threshold = th;
-        let sim = Simulator::new(cfg, specs.clone());
-        let (m, _) = sim.run(&trace);
+    for (th, m) in thresholds.iter().zip(&th_results) {
         a.row(vec![
             format!("{th}"),
             format!("{:.3}", m.mean_ttft()),
@@ -396,16 +437,17 @@ pub fn fig15_sensitivity(quick: bool) -> Vec<Table> {
     }
 
     let windows: &[f64] = if quick { &[10.0, 60.0, 300.0] } else { &[10.0, 30.0, 60.0, 120.0, 300.0] };
+    let w_results = run_points(windows, jobs, |_, &w| {
+        let mut cfg = SimConfig::new(PolicyKind::Prism, 2);
+        cfg.slo_scale = 8.0;
+        cfg.monitor_window = w;
+        Simulator::new(cfg, specs.clone()).run(&trace).0
+    });
     let mut b = Table::new(
         "Fig 15b: mean TTFT vs monitoring window",
         &["window_s", "mean_ttft_s", "migrations"],
     );
-    for &w in windows {
-        let mut cfg = SimConfig::new(PolicyKind::Prism, 2);
-        cfg.slo_scale = 8.0;
-        cfg.monitor_window = w;
-        let sim = Simulator::new(cfg, specs.clone());
-        let (m, _) = sim.run(&trace);
+    for (w, m) in windows.iter().zip(&w_results) {
         b.row(vec![
             format!("{w}"),
             format!("{:.3}", m.mean_ttft()),

@@ -3,11 +3,14 @@
 use crate::bench::harness::Table;
 use crate::model::spec::{ModelId, ModelSpec};
 use crate::sim::{PolicyKind, SimConfig, Simulator};
+use crate::sweep::run_points;
 use crate::trace::gen::{generate, TraceGenConfig};
 use crate::trace::{stats, Trace};
 use crate::util::stats::{mean, percentile};
 
-pub fn four_traces(quick: bool) -> Vec<(TraceGenConfig, Trace)> {
+/// The four reference traces; generation is independent and deterministic,
+/// so it fans out over the sweep pool like any other point grid.
+pub fn four_traces(quick: bool, jobs: usize) -> Vec<(TraceGenConfig, Trace)> {
     let dur = if quick { 1800.0 } else { 6.0 * 3600.0 };
     let cfgs = vec![
         TraceGenConfig::hyperbolic_like(24, dur, 10),
@@ -15,21 +18,17 @@ pub fn four_traces(quick: bool) -> Vec<(TraceGenConfig, Trace)> {
         TraceGenConfig::arena_battle_like(if quick { 32 } else { 129 }, dur, 12),
         TraceGenConfig::arena_chat_like(if quick { 32 } else { 84 }, dur, 13),
     ];
-    cfgs.into_iter()
-        .map(|c| {
-            let t = generate(&c);
-            (c, t)
-        })
-        .collect()
+    let traces = run_points(&cfgs, jobs, |_, c| generate(c));
+    cfgs.into_iter().zip(traces).collect()
 }
 
 /// Table 1: trace summary (+ measured bursty-group statistics).
-pub fn tab1_trace_summary(quick: bool) -> Vec<Table> {
+pub fn tab1_trace_summary(quick: bool, jobs: usize) -> Vec<Table> {
     let mut t = Table::new(
         "Table 1: synthetic production traces (paper: Hyperbolic/Novita/Arena)",
         &["trace", "models", "hours", "requests", "active%", "switches/hr"],
     );
-    for (cfg, tr) in four_traces(quick) {
+    for (cfg, tr) in four_traces(quick, jobs) {
         t.row(vec![
             cfg.name.clone(),
             tr.n_models.to_string(),
@@ -144,16 +143,18 @@ pub fn two_model_segment(quick: bool) -> (Trace, Vec<ModelSpec>) {
 
 /// Fig 2: pure time sharing vs pure space sharing on the Fig 1(c) segment -
 /// memory usage and cumulative SLO violations over time.
-pub fn fig2_pure_sharing(quick: bool) -> Vec<Table> {
+pub fn fig2_pure_sharing(quick: bool, jobs: usize) -> Vec<Table> {
     let (trace, specs) = two_model_segment(quick);
     let mut out = Vec::new();
-    for policy in [PolicyKind::Qlm, PolicyKind::StaticPartition] {
+    let policies = [PolicyKind::Qlm, PolicyKind::StaticPartition];
+    let results = run_points(&policies, jobs, |_, &policy| {
         let mut cfg = SimConfig::new(policy, 1);
         cfg.sample_dt = 2.0;
         cfg.slo_scale = 5.0;
         cfg.control_epoch = 1.0;
-        let sim = Simulator::new(cfg, specs.clone());
-        let (m, tl) = sim.run(&trace);
+        Simulator::new(cfg, specs.clone()).run(&trace)
+    });
+    for (policy, (m, tl)) in policies.iter().zip(&results) {
         let mut t = Table::new(
             &format!(
                 "Fig 2 ({}): memory + cumulative TTFT violations (final attainment {:.2})",
@@ -162,7 +163,7 @@ pub fn fig2_pure_sharing(quick: bool) -> Vec<Table> {
             ),
             &["t", "weights_gb", "kv_used_gb", "cum_violations"],
         );
-        for s in &tl {
+        for s in tl {
             let (w, _, used, _) = s.gpus[0];
             t.row(vec![
                 format!("{:.0}", s.t),
@@ -178,16 +179,18 @@ pub fn fig2_pure_sharing(quick: bool) -> Vec<Table> {
 
 /// Fig 6: cross-model memory coordination - total KV and throughput under
 /// Prism vs static partition.
-pub fn fig6_memory_coordination(quick: bool) -> Vec<Table> {
+pub fn fig6_memory_coordination(quick: bool, jobs: usize) -> Vec<Table> {
     let (trace, specs) = two_model_segment(quick);
     let mut out = Vec::new();
-    for policy in [PolicyKind::Prism, PolicyKind::StaticPartition] {
+    let policies = [PolicyKind::Prism, PolicyKind::StaticPartition];
+    let results = run_points(&policies, jobs, |_, &policy| {
         let mut cfg = SimConfig::new(policy, 1);
         cfg.sample_dt = 2.0;
         cfg.slo_scale = 6.0;
         cfg.control_epoch = 1.0;
-        let sim = Simulator::new(cfg, specs.clone());
-        let (m, tl) = sim.run(&trace);
+        Simulator::new(cfg, specs.clone()).run(&trace)
+    });
+    for (policy, (m, tl)) in policies.iter().zip(&results) {
         let mut t = Table::new(
             &format!(
                 "Fig 6 ({}): KV memory + throughput (token tput {:.0} tok/s busy)",
@@ -196,7 +199,7 @@ pub fn fig6_memory_coordination(quick: bool) -> Vec<Table> {
             ),
             &["t", "kv_used_gb", "inst_tok_tput"],
         );
-        for s in &tl {
+        for s in tl {
             let used: u64 = s.gpus.iter().map(|g| g.2).sum();
             t.row(vec![
                 format!("{:.0}", s.t),
@@ -210,33 +213,37 @@ pub fn fig6_memory_coordination(quick: bool) -> Vec<Table> {
 }
 
 /// Fig 12: switches/hour + day-over-day Pearson for the four traces.
-pub fn fig12_switches_pearson(quick: bool) -> Vec<Table> {
+pub fn fig12_switches_pearson(quick: bool, jobs: usize) -> Vec<Table> {
     let mut a = Table::new("Fig 12a: model switches per hour", &["trace", "switches/hr"]);
     let mut b = Table::new(
         "Fig 12b: day-over-day Pearson correlation",
         &["trace", "mean_r", "p90_|r|"],
     );
-    for (cfg, tr) in four_traces(quick) {
-        a.row(vec![
-            cfg.name.clone(),
-            format!("{:.0}", stats::switches_per_hour(&tr, 120.0)),
-        ]);
+    let traces = four_traces(quick, jobs);
+    // Per-trace analysis (including the "next day" regeneration) is
+    // independent: one sweep point per trace.
+    let rows = run_points(&traces, jobs, |_, (cfg, tr)| {
+        let switches = stats::switches_per_hour(tr, 120.0);
         let mut cfg2 = cfg.clone();
         cfg2.seed += 1000; // "next day"
         let tr2 = generate(&cfg2);
-        let cors = stats::day_over_day_pearson(&tr, &tr2, 600.0);
+        let cors = stats::day_over_day_pearson(tr, &tr2, 600.0);
         let abs: Vec<f64> = cors.iter().map(|c| c.abs()).collect();
+        (switches, mean(&cors), percentile(&abs, 90.0))
+    });
+    for ((cfg, _), (switches, mean_r, p90_abs)) in traces.iter().zip(&rows) {
+        a.row(vec![cfg.name.clone(), format!("{switches:.0}")]);
         b.row(vec![
             cfg.name.clone(),
-            format!("{:.3}", mean(&cors)),
-            format!("{:.3}", percentile(&abs, 90.0)),
+            format!("{mean_r:.3}"),
+            format!("{p90_abs:.3}"),
         ]);
     }
     vec![a, b]
 }
 
 /// Fig 13: idle intervals/hour and request-rate CV per trace.
-pub fn fig13_volatility(quick: bool) -> Vec<Table> {
+pub fn fig13_volatility(quick: bool, jobs: usize) -> Vec<Table> {
     let mut a = Table::new(
         "Fig 13a: idle intervals per hour (>10s), per-model distribution",
         &["trace", "p50", "p90", "max"],
@@ -245,7 +252,7 @@ pub fn fig13_volatility(quick: bool) -> Vec<Table> {
         "Fig 13b: CV of requests/min, per-model distribution",
         &["trace", "p50", "p90", "frac_cv>1"],
     );
-    for (cfg, tr) in four_traces(quick) {
+    for (cfg, tr) in four_traces(quick, jobs) {
         let idles = stats::per_model_idle_intervals_per_hour(&tr, 10.0);
         a.row(vec![
             cfg.name.clone(),

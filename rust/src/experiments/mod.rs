@@ -8,8 +8,18 @@ pub mod micro;
 
 use crate::bench::harness::Table;
 
-/// Run an experiment by id ("tab1", "fig5", ... or "all"); returns tables.
+/// Run an experiment by id ("tab1", "fig5", ... or "all") with automatic
+/// sweep parallelism; returns tables.
 pub fn run(id: &str, quick: bool) -> anyhow::Result<Vec<Table>> {
+    run_jobs(id, quick, 0)
+}
+
+/// As [`run`], with an explicit sweep worker count: `jobs = 0` resolves to
+/// `sweep::default_jobs()` (env `PRISM_JOBS` or available parallelism);
+/// `jobs = 1` reproduces the historical sequential behavior bit-for-bit.
+/// Tables are byte-identical for any `jobs` value (results are keyed to
+/// sweep points, never to completion order).
+pub fn run_jobs(id: &str, quick: bool, jobs: usize) -> anyhow::Result<Vec<Table>> {
     let mut out = Vec::new();
     let all = id == "all";
     let mut hit = false;
@@ -30,21 +40,21 @@ pub fn run(id: &str, quick: bool) -> anyhow::Result<Vec<Table>> {
             }
         };
     }
-    exp!("tab1", figures::tab1_trace_summary(quick));
+    exp!("tab1", figures::tab1_trace_summary(quick, jobs));
     exp!("fig1", figures::fig1_dynamics(quick));
-    exp!("fig2", figures::fig2_pure_sharing(quick));
-    exp!("tab2", e2e::tab2_muxserve(quick));
-    exp!("fig5", e2e::fig5_end_to_end(quick));
-    exp!("fig6", figures::fig6_memory_coordination(quick));
-    exp!("fig7", e2e::fig7_placement_ablation(quick));
-    exp!("fig8", e2e::fig8_arbitration_ablation(quick));
-    exp!("fig9", e2e::fig9_large_scale(quick));
+    exp!("fig2", figures::fig2_pure_sharing(quick, jobs));
+    exp!("tab2", e2e::tab2_muxserve(quick, jobs));
+    exp!("fig5", e2e::fig5_end_to_end(quick, jobs));
+    exp!("fig6", figures::fig6_memory_coordination(quick, jobs));
+    exp!("fig7", e2e::fig7_placement_ablation(quick, jobs));
+    exp!("fig8", e2e::fig8_arbitration_ablation(quick, jobs));
+    exp!("fig9", e2e::fig9_large_scale(quick, jobs));
     exp!("fig10", micro::fig10_activation_latency());
-    exp!("fig11", e2e::fig11_production(quick));
-    exp!("fig12", figures::fig12_switches_pearson(quick));
-    exp!("fig13", figures::fig13_volatility(quick));
+    exp!("fig11", e2e::fig11_production(quick, jobs));
+    exp!("fig12", figures::fig12_switches_pearson(quick, jobs));
+    exp!("fig13", figures::fig13_volatility(quick, jobs));
     exp!("fig14", micro::fig14_elastic_overhead(quick));
-    exp!("fig15", e2e::fig15_sensitivity(quick));
+    exp!("fig15", e2e::fig15_sensitivity(quick, jobs));
     exp!("overhead", e2e::overhead_frequency(quick));
     if !hit {
         anyhow::bail!("unknown experiment id '{id}'");

@@ -22,6 +22,7 @@ pub mod trace;
 
 pub mod metrics;
 pub mod sim;
+pub mod sweep;
 
 pub mod runtime;
 

@@ -32,8 +32,8 @@ fn main() {
                  \n  prism serve --models prism-nano,prism-micro --requests 12\
                  \n  prism sim --policy prism --gpus 4 --trace novita --minutes 10\
                  \n  prism trace --kind novita --hours 2\
-                 \n  prism exp fig5 [--quick]\
-                 \n  prism exp all --quick\n"
+                 \n  prism exp fig5 [--quick] [--jobs N]\
+                 \n  prism exp all --quick --jobs 8\n"
             );
             Ok(())
         }
@@ -151,6 +151,9 @@ fn cmd_sim() -> Result<()> {
     );
     let mut cfg = SimConfig::new(policy, a.get_usize("gpus", 2) as u32);
     cfg.slo_scale = a.get_f64("slo-scale", 8.0);
+    // Single run whose table prints percentile columns: keep them exact
+    // rather than sketch estimates.
+    cfg.metrics_full_dump = true;
     let t0 = std::time::Instant::now();
     let (m, _) = Simulator::new(cfg, specs).run(&trace);
     let mut t = Table::new(
@@ -232,13 +235,40 @@ fn cmd_trace() -> Result<()> {
 }
 
 fn cmd_exp() -> Result<()> {
-    let mut args: Vec<String> = std::env::args().skip(2).collect();
-    let quick = args.iter().any(|a| a == "--quick");
-    args.retain(|a| a != "--quick");
-    let id = args.first().cloned().unwrap_or_else(|| "all".to_string());
-    experiments::run(&id, quick)?;
+    let raw: Vec<String> = std::env::args().skip(2).collect();
+    let mut quick = false;
+    // Sweep worker count: 0 = auto (PRISM_JOBS or available parallelism);
+    // --jobs 1 reproduces the sequential behavior bit-for-bit.
+    let mut jobs = 0usize;
+    let mut id: Option<String> = None;
+    let mut it = raw.into_iter();
+    while let Some(tok) = it.next() {
+        if tok == "--quick" {
+            quick = true;
+        } else if tok == "--jobs" {
+            let v = it.next().ok_or_else(|| anyhow::anyhow!("--jobs requires a value"))?;
+            jobs = parse_jobs(&v)?;
+        } else if let Some(v) = tok.strip_prefix("--jobs=") {
+            jobs = parse_jobs(v)?;
+        } else if tok.starts_with("--") {
+            anyhow::bail!("unknown option {tok} (expected --quick or --jobs N)");
+        } else if id.is_none() {
+            id = Some(tok);
+        } else {
+            anyhow::bail!("unexpected extra argument {tok}");
+        }
+    }
+    let id = id.unwrap_or_else(|| "all".to_string());
+    experiments::run_jobs(&id, quick, jobs)?;
     eprintln!("valid experiment ids: {:?}", experiments::ids());
     Ok(())
+}
+
+fn parse_jobs(v: &str) -> Result<usize> {
+    // 0 = auto, matching the bench binaries and the run_jobs docs.
+    v.parse().map_err(|_| {
+        anyhow::anyhow!("--jobs expects a non-negative integer (0 = auto), got {v}")
+    })
 }
 
 fn cmd_models() -> Result<()> {

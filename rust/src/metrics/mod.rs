@@ -1,19 +1,146 @@
 //! Metrics: SLO attainment, latency summaries, throughput (idle-excluded),
 //! and sampled timelines for the memory/queue plots (Figs 2, 6, 7, 8).
+//!
+//! # Sinks
+//!
+//! Completion records flow through the [`MetricsSink`] trait. The default
+//! [`RunMetrics`] sink is *streaming*: it folds every `Completion` into
+//! counters plus per-model and global [`QuantileSketch`]es, so hour-long
+//! 100-model sweep points hold O(models) state instead of every completion.
+//! Tests and figures that need exact percentiles opt into the full-dump
+//! sink (`RunMetrics::full()`, or `SimConfig::metrics_full_dump`), which
+//! additionally retains the raw `Vec<Completion>` and serves percentile
+//! queries from exact sorted views.
+//!
+//! # Thread-safety audit of the lazy percentile cache
+//!
+//! `invalidate_latency_cache` takes `&self` through a `RefCell`. That is
+//! safe against the "sink written from a worker thread while another thread
+//! queries percentiles" hazard *by construction*: `RefCell` makes
+//! `RunMetrics` `!Sync`, so the compiler rejects sharing one instance
+//! across threads. The sweep engine therefore gives every worker its own
+//! `RunMetrics` and folds them on one thread via [`RunMetrics::merge`],
+//! which invalidates the cache unconditionally (growth-based staleness
+//! detection alone would miss a merge that only updates sketches). The
+//! remaining same-length in-place edit window applies only to single-thread
+//! full-dump mutation through `completions_mut`, which is documented to
+//! require the explicit invalidation call.
+
+pub mod sketch;
 
 use std::cell::RefCell;
+
+pub use sketch::QuantileSketch;
 
 use crate::model::spec::ModelId;
 use crate::request::Completion;
 use crate::util::stats::percentile_sorted;
 
-/// Aggregated results of one serving run.
+/// Destination for finished (or dropped) request records.
+///
+/// Defines the record/merge contract shared by [`RunMetrics`] (what the
+/// simulator feeds) and the raw `Vec<Completion>` dump, and what
+/// `sweep::merge_all` folds over. Implementations must be order-insensitive
+/// up to their documented precision so the parallel sweep engine can merge
+/// per-point results deterministically. (The simulator itself is wired to
+/// `RunMetrics` concretely; making it generic over this trait is future
+/// work, not a current extension point.)
+pub trait MetricsSink {
+    /// Absorb one completion record.
+    fn record(&mut self, c: Completion);
+    /// Fold another sink of the same type into `self`.
+    fn merge(&mut self, other: Self)
+    where
+        Self: Sized;
+}
+
+/// The trivially-exact full-dump primitive: keep everything.
+impl MetricsSink for Vec<Completion> {
+    fn record(&mut self, c: Completion) {
+        self.push(c);
+    }
+
+    fn merge(&mut self, other: Self) {
+        self.extend(other);
+    }
+}
+
+/// Per-model streaming statistics: counters + p50/p95/p99-capable sketches.
+#[derive(Debug, Clone, Default)]
+pub struct ModelStats {
+    pub total: u64,
+    pub dropped: u64,
+    pub ttft_ok: u64,
+    pub tpot_ok: u64,
+    pub ttft: QuantileSketch,
+    pub tpot: QuantileSketch,
+    pub e2e: QuantileSketch,
+}
+
+impl ModelStats {
+    fn record(&mut self, c: &Completion) {
+        self.total += 1;
+        if c.dropped {
+            self.dropped += 1;
+        }
+        if c.ttft_ok() {
+            self.ttft_ok += 1;
+        }
+        if c.tpot_ok() {
+            self.tpot_ok += 1;
+        }
+        self.ttft.add(c.ttft);
+        self.tpot.add(c.tpot);
+        if c.finish.is_finite() {
+            self.e2e.add(c.finish - c.arrival);
+        }
+    }
+
+    fn merge(&mut self, other: &ModelStats) {
+        self.total += other.total;
+        self.dropped += other.dropped;
+        self.ttft_ok += other.ttft_ok;
+        self.tpot_ok += other.tpot_ok;
+        self.ttft.merge(&other.ttft);
+        self.tpot.merge(&other.tpot);
+        self.e2e.merge(&other.e2e);
+    }
+
+    pub fn ttft_attainment(&self) -> f64 {
+        if self.total == 0 {
+            1.0
+        } else {
+            self.ttft_ok as f64 / self.total as f64
+        }
+    }
+
+    pub fn tpot_attainment(&self) -> f64 {
+        if self.total == 0 {
+            1.0
+        } else {
+            self.tpot_ok as f64 / self.total as f64
+        }
+    }
+}
+
+/// Aggregated results of one serving run (the default streaming sink).
 #[derive(Debug, Default)]
 pub struct RunMetrics {
-    /// Every completion record. Public for iteration; the sorted percentile
-    /// cache below auto-rebuilds when this grows or shrinks — after an
-    /// in-place, same-length edit call `invalidate_latency_cache`.
-    pub completions: Vec<Completion>,
+    /// Retain raw completions + exact percentile views (opt-in).
+    full_dump: bool,
+    /// Raw records; populated only in full-dump mode.
+    completions: Vec<Completion>,
+    /// Cross-model aggregate: the same counter/sketch fold as each
+    /// per-model slot, so recording semantics live in one place
+    /// (`ModelStats::record`).
+    global: ModelStats,
+    /// Prompt/output token totals over non-dropped completions.
+    prompt_tokens: u64,
+    output_tokens: u64,
+    /// Indexed by `ModelId.0` (dense ids, like the simulator's own index
+    /// map - an O(1) slot instead of a per-completion tree lookup on the
+    /// hot path); entries with `total == 0` mean "model never completed".
+    per_model: Vec<ModelStats>,
     /// Sum of engine busy seconds (for idle-excluded throughput).
     pub busy_seconds: f64,
     pub wall_seconds: f64,
@@ -23,17 +150,20 @@ pub struct RunMetrics {
     pub preemptions: u64,
     /// Total simulator events processed (hot-path events/sec benchmarking).
     pub sim_events: u64,
-    /// Sorted latency views, built lazily on the first percentile query and
-    /// rebuilt if `completions` grew since. Figure drivers query many
-    /// percentiles per run; re-collecting and re-sorting per query was
-    /// O(n log n) each time.
+    /// Exact sorted latency views (full-dump mode only), built lazily on the
+    /// first percentile query and rebuilt if `completions` grew since.
     sorted: RefCell<Option<SortedCache>>,
 }
 
 impl Clone for RunMetrics {
     fn clone(&self) -> Self {
         RunMetrics {
+            full_dump: self.full_dump,
             completions: self.completions.clone(),
+            global: self.global.clone(),
+            prompt_tokens: self.prompt_tokens,
+            output_tokens: self.output_tokens,
+            per_model: self.per_model.clone(),
             busy_seconds: self.busy_seconds,
             wall_seconds: self.wall_seconds,
             activations: self.activations,
@@ -74,7 +204,135 @@ impl SortedCache {
 }
 
 impl RunMetrics {
-    /// Run `f` against the sorted latency views, (re)building them if
+    /// Streaming sink (counters + sketches, no raw completion storage).
+    pub fn streaming() -> Self {
+        Self::with_full_dump(false)
+    }
+
+    /// Full-dump sink: streaming aggregates plus the raw completion list
+    /// and exact percentile views.
+    pub fn full() -> Self {
+        Self::with_full_dump(true)
+    }
+
+    pub fn with_full_dump(full_dump: bool) -> Self {
+        RunMetrics { full_dump, ..Default::default() }
+    }
+
+    pub fn is_full_dump(&self) -> bool {
+        self.full_dump
+    }
+
+    // ------------------------------------------------------------ recording
+
+    /// Absorb one completion into counters, sketches, per-model stats, and
+    /// (in full-dump mode) the raw list.
+    pub fn record(&mut self, c: Completion) {
+        if !c.dropped {
+            self.prompt_tokens += c.prompt_tokens as u64;
+            self.output_tokens += c.output_tokens as u64;
+        }
+        self.global.record(&c);
+        self.stats_slot(c.model).record(&c);
+        if self.full_dump {
+            self.completions.push(c);
+        }
+    }
+
+    fn stats_slot(&mut self, m: ModelId) -> &mut ModelStats {
+        let i = m.0 as usize;
+        if i >= self.per_model.len() {
+            self.per_model.resize_with(i + 1, ModelStats::default);
+        }
+        &mut self.per_model[i]
+    }
+
+    /// Fold another run's metrics into this one (sweep aggregation, merging
+    /// per-point results produced on worker threads). Counter and sketch
+    /// merging is exact and order-independent; the exact percentile cache is
+    /// invalidated unconditionally so queries after a merge always see fresh
+    /// data. Mode mismatch: folding a non-full sink into a full-dump one
+    /// downgrades `self` to streaming (raw records would otherwise cover
+    /// only part of the counters and the exact percentile path would
+    /// silently disagree with them); a streaming target always stays
+    /// streaming.
+    pub fn merge(&mut self, other: RunMetrics) {
+        if self.full_dump && !other.full_dump && other.global.total > 0 {
+            self.full_dump = false;
+            self.completions = Vec::new();
+        }
+        self.global.merge(&other.global);
+        self.prompt_tokens += other.prompt_tokens;
+        self.output_tokens += other.output_tokens;
+        for (i, s) in other.per_model.iter().enumerate() {
+            if s.total > 0 {
+                self.stats_slot(ModelId(i as u32)).merge(s);
+            }
+        }
+        self.busy_seconds += other.busy_seconds;
+        self.wall_seconds = self.wall_seconds.max(other.wall_seconds);
+        self.activations += other.activations;
+        self.evictions += other.evictions;
+        self.migrations += other.migrations;
+        self.preemptions += other.preemptions;
+        self.sim_events += other.sim_events;
+        if self.full_dump {
+            self.completions.extend(other.completions);
+        }
+        self.invalidate_latency_cache();
+    }
+
+    // ------------------------------------------------------------- counters
+
+    /// Total completion records absorbed (finished + dropped).
+    pub fn total(&self) -> usize {
+        self.global.total as usize
+    }
+
+    /// Records that finished (were not dropped).
+    pub fn completed(&self) -> usize {
+        (self.global.total - self.global.dropped) as usize
+    }
+
+    pub fn dropped(&self) -> usize {
+        self.global.dropped as usize
+    }
+
+    /// The cross-model aggregate (same shape as each per-model entry).
+    pub fn global_stats(&self) -> &ModelStats {
+        &self.global
+    }
+
+    /// Raw completion records; empty unless this is a full-dump sink.
+    pub fn completions(&self) -> &[Completion] {
+        &self.completions
+    }
+
+    /// Mutable access to the raw records (full-dump tests only). After an
+    /// in-place, same-length edit, call `invalidate_latency_cache`; note the
+    /// streaming counters and sketches intentionally do NOT track such edits.
+    pub fn completions_mut(&mut self) -> &mut Vec<Completion> {
+        &mut self.completions
+    }
+
+    /// Per-model streaming statistics (counters + quantile sketches);
+    /// `None` for models with no completion records.
+    pub fn model_stats(&self, m: ModelId) -> Option<&ModelStats> {
+        self.per_model.get(m.0 as usize).filter(|s| s.total > 0)
+    }
+
+    /// Iterate models with at least one record, in id order.
+    pub fn per_model(&self) -> impl Iterator<Item = (ModelId, &ModelStats)> {
+        self.per_model
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.total > 0)
+            .map(|(i, s)| (ModelId(i as u32), s))
+    }
+
+    // ---------------------------------------------------------- percentiles
+
+    /// Run `f` against the exact sorted latency views, (re)building them if
     /// `completions` grew since the last query.
     fn with_sorted<R>(&self, f: impl FnOnce(&SortedCache) -> R) -> R {
         let mut cache = self.sorted.borrow_mut();
@@ -88,66 +346,79 @@ impl RunMetrics {
         f(cache.as_ref().expect("cache just built"))
     }
 
-    /// Drop the cached sorted views. Needed only after an in-place,
-    /// same-length edit of `completions` (growth is detected automatically).
+    /// Drop the cached exact sorted views. Called automatically by `merge`;
+    /// needed manually only after an in-place, same-length edit through
+    /// `completions_mut` (growth is detected automatically).
     pub fn invalidate_latency_cache(&self) {
         *self.sorted.borrow_mut() = None;
     }
 
     pub fn ttft_attainment(&self) -> f64 {
-        frac(&self.completions, |c| c.ttft_ok())
+        self.global.ttft_attainment()
     }
 
     pub fn tpot_attainment(&self) -> f64 {
-        frac(&self.completions, |c| c.tpot_ok())
+        self.global.tpot_attainment()
     }
 
     pub fn ttft_attainment_for(&self, m: ModelId) -> f64 {
-        let v: Vec<&Completion> = self.completions.iter().filter(|c| c.model == m).collect();
-        if v.is_empty() {
-            return 1.0;
-        }
-        v.iter().filter(|c| c.ttft_ok()).count() as f64 / v.len() as f64
+        self.model_stats(m).map_or(1.0, |s| s.ttft_attainment())
     }
 
     pub fn mean_ttft(&self) -> f64 {
-        finite_mean(self.completions.iter().map(|c| c.ttft))
+        self.global.ttft.mean()
     }
 
     pub fn p95_ttft(&self) -> f64 {
         self.p_ttft(95.0)
     }
 
-    /// Arbitrary TTFT percentile over finite samples (sorted once, cached).
+    /// Arbitrary TTFT percentile over finite samples: exact (sorted once,
+    /// cached) in full-dump mode, sketch-estimated (≤1% relative error) in
+    /// streaming mode.
     pub fn p_ttft(&self, pct: f64) -> f64 {
-        self.with_sorted(|c| percentile_sorted(&c.ttft, pct))
+        if self.full_dump {
+            self.with_sorted(|c| percentile_sorted(&c.ttft, pct))
+        } else {
+            self.global.ttft.quantile(pct)
+        }
     }
 
     pub fn mean_tpot(&self) -> f64 {
-        finite_mean(self.completions.iter().map(|c| c.tpot))
+        self.global.tpot.mean()
     }
 
     pub fn p95_tpot(&self) -> f64 {
         self.p_tpot(95.0)
     }
 
-    /// Arbitrary TPOT percentile over finite samples (sorted once, cached).
+    /// Arbitrary TPOT percentile (exact in full-dump mode, else sketch).
     pub fn p_tpot(&self, pct: f64) -> f64 {
-        self.with_sorted(|c| percentile_sorted(&c.tpot, pct))
+        if self.full_dump {
+            self.with_sorted(|c| percentile_sorted(&c.tpot, pct))
+        } else {
+            self.global.tpot.quantile(pct)
+        }
     }
 
     pub fn mean_e2e(&self) -> f64 {
-        finite_mean(self.completions.iter().map(|c| c.finish - c.arrival))
+        self.global.e2e.mean()
     }
 
     pub fn p95_e2e(&self) -> f64 {
         self.p_e2e(95.0)
     }
 
-    /// Arbitrary end-to-end latency percentile (sorted once, cached).
+    /// Arbitrary end-to-end percentile (exact in full-dump mode, else sketch).
     pub fn p_e2e(&self, pct: f64) -> f64 {
-        self.with_sorted(|c| percentile_sorted(&c.e2e, pct))
+        if self.full_dump {
+            self.with_sorted(|c| percentile_sorted(&c.e2e, pct))
+        } else {
+            self.global.e2e.quantile(pct)
+        }
     }
+
+    // ----------------------------------------------------------- throughput
 
     /// Requests per second of engine-busy time (the paper's idle-excluded
     /// throughput accounting, SS7.1).
@@ -155,7 +426,7 @@ impl RunMetrics {
         if self.busy_seconds <= 0.0 {
             return 0.0;
         }
-        self.completions.iter().filter(|c| !c.dropped).count() as f64 / self.busy_seconds
+        self.completed() as f64 / self.busy_seconds
     }
 
     /// Tokens per second of engine-busy time (prefill + decode).
@@ -163,47 +434,26 @@ impl RunMetrics {
         if self.busy_seconds <= 0.0 {
             return 0.0;
         }
-        let tokens: u64 = self
-            .completions
-            .iter()
-            .filter(|c| !c.dropped)
-            .map(|c| (c.prompt_tokens + c.output_tokens) as u64)
-            .sum();
-        tokens as f64 / self.busy_seconds
+        (self.prompt_tokens + self.output_tokens) as f64 / self.busy_seconds
     }
 
     /// Revenue proxy (Fig 11b): prefill + decode tokens priced per 1k tokens,
     /// normalized by GPU count.
     pub fn revenue_per_gpu(&self, in_price: f64, out_price: f64, n_gpus: usize) -> f64 {
-        let rev: f64 = self
-            .completions
-            .iter()
-            .filter(|c| !c.dropped)
-            .map(|c| {
-                c.prompt_tokens as f64 / 1000.0 * in_price
-                    + c.output_tokens as f64 / 1000.0 * out_price
-            })
-            .sum();
+        let rev = self.prompt_tokens as f64 / 1000.0 * in_price
+            + self.output_tokens as f64 / 1000.0 * out_price;
         rev / n_gpus.max(1) as f64
     }
 }
 
-fn frac<F: Fn(&Completion) -> bool>(cs: &[Completion], f: F) -> f64 {
-    if cs.is_empty() {
-        return 1.0;
+impl MetricsSink for RunMetrics {
+    fn record(&mut self, c: Completion) {
+        RunMetrics::record(self, c);
     }
-    cs.iter().filter(|c| f(c)).count() as f64 / cs.len() as f64
-}
 
-fn finite_mean<I: Iterator<Item = f64>>(it: I) -> f64 {
-    let (mut sum, mut n) = (0.0, 0usize);
-    for x in it {
-        if x.is_finite() {
-            sum += x;
-            n += 1;
-        }
+    fn merge(&mut self, other: Self) {
+        RunMetrics::merge(self, other);
     }
-    if n == 0 { 0.0 } else { sum / n as f64 }
 }
 
 /// One timeline sample (memory/queue plots).
@@ -244,21 +494,24 @@ mod tests {
 
     #[test]
     fn attainment_counts() {
-        let m = RunMetrics {
-            completions: vec![
-                comp(0.1, 0.5, 0.01, 0.05),
-                comp(0.6, 0.5, 0.01, 0.05),
-                comp(0.2, 0.5, 0.10, 0.05),
-                comp(0.3, 0.5, 0.02, 0.05),
-            ],
-            busy_seconds: 10.0,
-            wall_seconds: 20.0,
-            ..Default::default()
-        };
+        let mut m = RunMetrics::streaming();
+        for c in [
+            comp(0.1, 0.5, 0.01, 0.05),
+            comp(0.6, 0.5, 0.01, 0.05),
+            comp(0.2, 0.5, 0.10, 0.05),
+            comp(0.3, 0.5, 0.02, 0.05),
+        ] {
+            m.record(c);
+        }
+        m.busy_seconds = 10.0;
+        m.wall_seconds = 20.0;
         assert!((m.ttft_attainment() - 0.75).abs() < 1e-12);
         assert!((m.tpot_attainment() - 0.75).abs() < 1e-12);
         assert!((m.req_throughput() - 0.4).abs() < 1e-12);
         assert!((m.token_throughput() - 60.0).abs() < 1e-12);
+        assert_eq!(m.total(), 4);
+        assert_eq!(m.completed(), 4);
+        assert!(m.completions().is_empty(), "streaming sink keeps no raw records");
     }
 
     #[test]
@@ -267,38 +520,142 @@ mod tests {
         assert_eq!(m.ttft_attainment(), 1.0);
         assert_eq!(m.req_throughput(), 0.0);
         assert_eq!(m.p95_ttft(), 0.0);
+        assert_eq!(m.ttft_attainment_for(ModelId(9)), 1.0);
     }
 
     #[test]
-    fn percentile_cache_rebuilds_after_growth() {
-        let mut m = RunMetrics::default();
-        m.completions.push(comp(0.1, 0.5, 0.01, 0.05));
+    fn full_dump_percentile_cache_rebuilds_after_growth() {
+        let mut m = RunMetrics::full();
+        m.record(comp(0.1, 0.5, 0.01, 0.05));
         assert!((m.p95_ttft() - 0.1).abs() < 1e-12);
         // Growing `completions` invalidates the cached sorted view.
-        m.completions.push(comp(0.9, 0.5, 0.01, 0.05));
+        m.record(comp(0.9, 0.5, 0.01, 0.05));
         assert!((m.p95_ttft() - 0.86).abs() < 1e-9, "p95 {}", m.p95_ttft());
         assert!((m.p_ttft(0.0) - 0.1).abs() < 1e-12);
         assert!((m.p95_e2e() - 10.0).abs() < 1e-12);
         // Infinite latencies (dropped/unfinished) are excluded from views.
         let mut d = comp(f64::INFINITY, 0.5, f64::INFINITY, 0.05);
         d.finish = f64::INFINITY;
-        m.completions.push(d);
+        d.dropped = true;
+        m.record(d);
         assert!((m.p_ttft(100.0) - 0.9).abs() < 1e-12);
+        assert_eq!(m.completed(), 2);
+        assert_eq!(m.dropped(), 1);
         // Same-length in-place edits need the explicit invalidation hook;
         // clones never carry a stale cache.
-        m.completions[1].ttft = 0.5;
+        m.completions_mut()[1].ttft = 0.5;
         m.invalidate_latency_cache();
         assert!((m.p_ttft(100.0) - 0.5).abs() < 1e-12);
         let m2 = m.clone();
         assert!((m2.p_ttft(100.0) - 0.5).abs() < 1e-12); // rebuilds, never stale
     }
 
+    /// Satellite regression: percentile queries after `merge` must see fresh
+    /// data even when the exact cache was already built, in both modes.
+    #[test]
+    fn merge_refreshes_percentiles() {
+        let mut a = RunMetrics::full();
+        a.record(comp(0.1, 0.5, 0.01, 0.05));
+        assert!((a.p_ttft(100.0) - 0.1).abs() < 1e-12); // cache now built
+        let mut b = RunMetrics::full();
+        b.record(comp(0.9, 0.5, 0.01, 0.05));
+        b.record(comp(0.7, 0.5, 0.01, 0.05));
+        a.merge(b);
+        assert_eq!(a.total(), 3);
+        assert!((a.p_ttft(100.0) - 0.9).abs() < 1e-12, "stale cache after merge");
+
+        let mut s = RunMetrics::streaming();
+        s.record(comp(0.1, 0.5, 0.01, 0.05));
+        let before = s.p_ttft(100.0);
+        let mut t = RunMetrics::streaming();
+        t.record(comp(0.9, 0.5, 0.01, 0.05));
+        s.merge(t);
+        assert!(s.p_ttft(100.0) > before, "sketch must reflect merged samples");
+        assert_eq!(s.total(), 2);
+    }
+
+    /// Folding a streaming sink into a full-dump one must not leave exact
+    /// percentile views covering only part of the counters: the target
+    /// downgrades to streaming and answers from sketches instead.
+    #[test]
+    fn merge_mode_mismatch_downgrades_to_streaming() {
+        let mut a = RunMetrics::full();
+        a.record(comp(0.1, 0.5, 0.01, 0.05));
+        let mut b = RunMetrics::streaming();
+        b.record(comp(0.9, 0.5, 0.01, 0.05));
+        a.merge(b);
+        assert!(!a.is_full_dump());
+        assert!(a.completions().is_empty());
+        assert_eq!(a.total(), 2);
+        // Percentiles cover all samples via the sketch (0.9 ± 0.5%).
+        assert!(a.p_ttft(100.0) > 0.85);
+        // An empty streaming other must NOT downgrade a full-dump target.
+        let mut c = RunMetrics::full();
+        c.record(comp(0.2, 0.5, 0.01, 0.05));
+        c.merge(RunMetrics::streaming());
+        assert!(c.is_full_dump());
+        assert_eq!(c.completions().len(), 1);
+        // A streaming target absorbing full-dump parts stays streaming.
+        let mut d = RunMetrics::streaming();
+        let mut e = RunMetrics::full();
+        e.record(comp(0.3, 0.5, 0.01, 0.05));
+        d.merge(e);
+        assert!(!d.is_full_dump());
+        assert_eq!(d.total(), 1);
+        assert!(d.completions().is_empty());
+    }
+
+    #[test]
+    fn streaming_and_full_dump_agree_on_exact_stats() {
+        let records = [
+            comp(0.1, 0.5, 0.01, 0.05),
+            comp(0.6, 0.5, 0.01, 0.05),
+            comp(0.2, 0.5, 0.10, 0.05),
+        ];
+        let mut s = RunMetrics::streaming();
+        let mut f = RunMetrics::full();
+        for c in &records {
+            s.record(c.clone());
+            f.record(c.clone());
+        }
+        assert_eq!(s.ttft_attainment().to_bits(), f.ttft_attainment().to_bits());
+        assert_eq!(s.tpot_attainment().to_bits(), f.tpot_attainment().to_bits());
+        assert_eq!(s.mean_ttft().to_bits(), f.mean_ttft().to_bits());
+        assert_eq!(s.total(), f.total());
+        // Percentiles agree to sketch resolution.
+        assert!((s.p95_ttft() - f.p95_ttft()).abs() <= 0.01 * f.p95_ttft());
+    }
+
+    #[test]
+    fn per_model_stats_track_counts_and_quantiles() {
+        let mut m = RunMetrics::streaming();
+        for i in 0..10 {
+            let mut c = comp(0.1 * (i + 1) as f64, 0.5, 0.01, 0.05);
+            c.model = ModelId((i % 2) as u32);
+            m.record(c);
+        }
+        let s0 = m.model_stats(ModelId(0)).unwrap();
+        let s1 = m.model_stats(ModelId(1)).unwrap();
+        assert_eq!(s0.total + s1.total, 10);
+        assert_eq!(s0.total, 5);
+        assert!(s0.ttft.quantile(50.0) > 0.0);
+        assert!(s1.ttft_attainment() <= 1.0);
+        assert!(m.model_stats(ModelId(7)).is_none());
+    }
+
+    #[test]
+    fn vec_sink_keeps_everything() {
+        let mut v: Vec<Completion> = Vec::new();
+        MetricsSink::record(&mut v, comp(0.1, 0.5, 0.01, 0.05));
+        let mut w: Vec<Completion> = vec![comp(0.2, 0.5, 0.01, 0.05)];
+        MetricsSink::merge(&mut w, v);
+        assert_eq!(w.len(), 2);
+    }
+
     #[test]
     fn revenue_normalizes_by_gpu() {
-        let m = RunMetrics {
-            completions: vec![comp(0.1, 0.5, 0.01, 0.05)],
-            ..Default::default()
-        };
+        let mut m = RunMetrics::streaming();
+        m.record(comp(0.1, 0.5, 0.01, 0.05));
         let r1 = m.revenue_per_gpu(1.0, 3.0, 1);
         let r2 = m.revenue_per_gpu(1.0, 3.0, 2);
         assert!((r1 - (0.1 + 0.15)).abs() < 1e-12);

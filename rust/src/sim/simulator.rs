@@ -80,6 +80,12 @@ pub struct SimConfig {
     /// `false` pre-pushes every arrival into the event heap - the legacy
     /// formulation, kept for A/B regression tests and heap-size benchmarks.
     pub stream_arrivals: bool,
+    /// Retain every raw `Completion` (plus exact percentile views) in the
+    /// run's `RunMetrics`. Off by default: the streaming sink keeps only
+    /// counters and quantile sketches, so cluster-scale sweep points stop
+    /// holding every completion in memory. Opt in for tests/figures that
+    /// need exact percentiles or per-request records.
+    pub metrics_full_dump: bool,
 }
 
 impl SimConfig {
@@ -100,6 +106,7 @@ impl SimConfig {
             no_migrate: std::env::var("PRISM_NO_MIGRATE").is_ok(),
             slack_aware: policy.slack_aware() && std::env::var("PRISM_NO_MH").is_err(),
             stream_arrivals: true,
+            metrics_full_dump: false,
         }
     }
 }
@@ -190,7 +197,7 @@ impl Simulator {
             last_request_at: vec![f64::NEG_INFINITY; n],
             demand_rates: vec![0.0; n],
             demand_cache_at: f64::NEG_INFINITY,
-            metrics: RunMetrics::default(),
+            metrics: RunMetrics::with_full_dump(cfg.metrics_full_dump),
             timeline: Vec::new(),
             heap: BinaryHeap::new(),
             step_scheduled: BTreeSet::new(),
@@ -580,8 +587,12 @@ impl Simulator {
             let mut ga = GroupAlloc { gpus, group: &group, model: m };
             engines[eidx].step(now, &self.cfg.perf, &mut ga)
         };
-        // Track violations for timelines.
-        for c in &outcome.completions {
+        // Track violations for timelines, then stream each record into the
+        // metrics sink (counters + sketches; raw retention is opt-in).
+        if !outcome.completions.is_empty() {
+            self.demand_cache_at = f64::NEG_INFINITY; // rates changed
+        }
+        for c in outcome.completions {
             if !c.ttft_ok() {
                 self.cum_violations += 1;
             }
@@ -589,11 +600,8 @@ impl Simulator {
             // Decode-token production feeds the KVPR monitor (SS6.1).
             let idx = self.idx_of(c.model);
             self.monitors[idx].record(now, c.output_tokens as u64);
+            self.metrics.record(c);
         }
-        if !outcome.completions.is_empty() {
-            self.demand_cache_at = f64::NEG_INFINITY; // rates changed
-        }
-        self.metrics.completions.extend(outcome.completions);
         if let Some(r) = self.cluster.residency.get_mut(&m) {
             r.last_active = now;
         }
@@ -959,7 +967,7 @@ impl Simulator {
         }
         for mut r in leftovers {
             r.phase = Phase::Dropped;
-            self.metrics.completions.push(crate::request::Completion::from_request(&r));
+            self.metrics.record(crate::request::Completion::from_request(&r));
         }
 
         self.metrics.busy_seconds = self.cluster.engines.iter().map(|e| e.busy_seconds).sum();
@@ -1015,7 +1023,7 @@ mod tests {
         let n = trace.events.len();
         assert!(n > 50);
         let m = run_policy(PolicyKind::Prism, 2, &trace);
-        let done = m.completions.iter().filter(|c| !c.dropped).count();
+        let done = m.completed();
         assert!(done as f64 > 0.95 * n as f64, "done {done}/{n}");
         assert!(m.ttft_attainment() > 0.5, "ttft att {}", m.ttft_attainment());
         assert!(m.busy_seconds > 0.0);
@@ -1026,13 +1034,8 @@ mod tests {
         let trace = small_trace(4, 180.0, 5);
         for p in PolicyKind::all() {
             let m = run_policy(p, 2, &trace);
-            assert!(
-                !m.completions.is_empty(),
-                "{} produced no completions",
-                p.name()
-            );
-            let done = m.completions.iter().filter(|c| !c.dropped).count();
-            assert!(done > 0, "{} finished nothing", p.name());
+            assert!(m.total() > 0, "{} produced no completions", p.name());
+            assert!(m.completed() > 0, "{} finished nothing", p.name());
         }
     }
 
@@ -1063,7 +1066,7 @@ mod tests {
         for p in [PolicyKind::Prism, PolicyKind::Qlm, PolicyKind::ServerlessLlm] {
             let a = run_policy(p, 2, &trace);
             let b = run_policy(p, 2, &trace);
-            assert_eq!(a.completions.len(), b.completions.len(), "{}", p.name());
+            assert_eq!(a.total(), b.total(), "{}", p.name());
             assert_eq!(
                 a.ttft_attainment().to_bits(),
                 b.ttft_attainment().to_bits(),
@@ -1094,7 +1097,7 @@ mod tests {
             legacy_cfg.stream_arrivals = false;
             let (a, _) = Simulator::new(cfg, specs.clone()).run(&trace);
             let (b, _) = Simulator::new(legacy_cfg, specs).run(&trace);
-            assert_eq!(a.completions.len(), b.completions.len(), "{}", p.name());
+            assert_eq!(a.total(), b.total(), "{}", p.name());
             assert_eq!(
                 a.ttft_attainment().to_bits(),
                 b.ttft_attainment().to_bits(),
@@ -1134,8 +1137,37 @@ mod tests {
         cfg.gpu_bytes = 1 << 28; // 256 MiB
         let sim = Simulator::new(cfg, specs);
         let (m, _) = sim.run(&trace);
-        assert!(!m.completions.is_empty());
-        assert!(m.completions.iter().all(|c| c.dropped));
+        assert!(m.total() > 0);
+        assert_eq!(m.completed(), 0, "all requests must be recorded as dropped");
+    }
+
+    #[test]
+    fn streaming_sink_matches_full_dump_aggregates() {
+        // Exact stats (counters, means) are identical between the default
+        // streaming sink and the opt-in full dump; percentiles agree to the
+        // sketch's documented resolution; only the full dump retains records.
+        let trace = small_trace(4, 240.0, 19);
+        let specs = specs_for(&trace);
+        let run = |full: bool| {
+            let mut cfg = SimConfig::new(PolicyKind::Prism, 2);
+            cfg.slo_scale = 10.0;
+            cfg.metrics_full_dump = full;
+            Simulator::new(cfg, specs.clone()).run(&trace).0
+        };
+        let s = run(false);
+        let f = run(true);
+        assert_eq!(s.total(), f.total());
+        assert!(s.completions().is_empty());
+        assert_eq!(f.completions().len(), f.total());
+        assert_eq!(s.ttft_attainment().to_bits(), f.ttft_attainment().to_bits());
+        assert_eq!(s.tpot_attainment().to_bits(), f.tpot_attainment().to_bits());
+        assert_eq!(s.mean_ttft().to_bits(), f.mean_ttft().to_bits());
+        assert_eq!(s.sim_events, f.sim_events);
+        let (sp, fp) = (s.p95_ttft(), f.p95_ttft());
+        assert!(
+            (sp - fp).abs() <= 0.01 * fp.max(1e-9),
+            "sketch p95 {sp} vs exact {fp}"
+        );
     }
 
     #[test]

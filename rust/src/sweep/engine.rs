@@ -1,0 +1,193 @@
+//! The worker pool: pull points from a shared cursor, write results into
+//! point-indexed slots (`std::thread::scope`; no external dependencies).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::metrics::MetricsSink;
+
+/// Worker count used when the caller passes `jobs = 0`: the `PRISM_JOBS`
+/// env var if set to a positive integer, else available parallelism.
+pub fn default_jobs() -> usize {
+    std::env::var("PRISM_JOBS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        })
+}
+
+/// Resolve a user-facing `--jobs` value: 0 → auto, anything else verbatim.
+pub fn resolve_jobs(jobs: usize) -> usize {
+    if jobs == 0 { default_jobs() } else { jobs }
+}
+
+/// Parse the bench binaries' `--jobs N` / `--jobs=N` flag from raw args
+/// (absent → 0 = auto); panics on a missing or unparsable value, which is
+/// the appropriate failure mode for a bench harness. CLI code with
+/// structured errors (`prism exp`) has its own `Result`-based parser.
+pub fn parse_jobs_flag(args: &[String]) -> usize {
+    let val = args
+        .iter()
+        .position(|a| a == "--jobs")
+        .map(|i| {
+            args.get(i + 1)
+                .unwrap_or_else(|| panic!("--jobs requires a value"))
+                .clone()
+        })
+        .or_else(|| {
+            args.iter().find_map(|a| a.strip_prefix("--jobs=").map(str::to_string))
+        });
+    match val {
+        Some(v) => v.parse().expect("--jobs expects a non-negative integer (0 = auto)"),
+        None => 0,
+    }
+}
+
+/// Execute `f` over every point on a scoped worker pool and return results
+/// in point order: `result[i] == f(i, &points[i])` regardless of which
+/// worker ran it or when it finished (see the module docs for the full
+/// determinism contract). With `jobs <= 1` the closure runs in a plain
+/// sequential loop on the caller's thread - bit-for-bit the pre-engine
+/// behavior. A panicking point propagates out of the scope.
+pub fn run_points<P, R, F>(points: &[P], jobs: usize, f: F) -> Vec<R>
+where
+    P: Sync,
+    R: Send,
+    F: Fn(usize, &P) -> R + Sync,
+{
+    let jobs = resolve_jobs(jobs).min(points.len().max(1));
+    if jobs <= 1 {
+        return points.iter().enumerate().map(|(i, p)| f(i, p)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<R>>> = (0..points.len()).map(|_| Mutex::new(None)).collect();
+    let (f, next, slots_ref) = (&f, &next, &slots);
+    std::thread::scope(|s| {
+        for _ in 0..jobs {
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= points.len() {
+                    break;
+                }
+                let r = f(i, &points[i]);
+                *slots_ref[i].lock().expect("result slot poisoned") = Some(r);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .expect("result slot poisoned")
+                .expect("every point produces exactly one result")
+        })
+        .collect()
+}
+
+/// Fold per-point sink results (e.g. `RunMetrics` from worker threads) into
+/// one aggregate. Merging happens on the caller's thread, in point order,
+/// so sketch/counter aggregation is deterministic. The aggregate is seeded
+/// from the first part, so uniform full-dump parts keep their raw records
+/// (folding into a `Default` target would silently downgrade them to
+/// streaming).
+pub fn merge_all<S: MetricsSink + Default>(parts: Vec<S>) -> S {
+    let mut it = parts.into_iter();
+    let Some(mut out) = it.next() else {
+        return S::default();
+    };
+    for p in it {
+        out.merge(p);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn results_keyed_to_points_not_completion_order() {
+        // Later points finish first (they spin less), yet results line up.
+        let points: Vec<usize> = (0..64).collect();
+        let out = run_points(&points, 8, |i, &p| {
+            assert_eq!(i, p);
+            // Reverse-proportional busy work so completion order inverts.
+            let spins = (64 - p) * 500;
+            let mut acc = 0u64;
+            for k in 0..spins {
+                acc = acc.wrapping_add(std::hint::black_box(k as u64));
+            }
+            (p * 2, acc)
+        });
+        for (i, (r, _)) in out.iter().enumerate() {
+            assert_eq!(*r, i * 2);
+        }
+    }
+
+    #[test]
+    fn sequential_and_parallel_identical() {
+        let points: Vec<u64> = (0..40).collect();
+        let f = |_: usize, &p: &u64| p.wrapping_mul(2654435761) ^ (p << 7);
+        let seq = run_points(&points, 1, f);
+        for jobs in [2, 4, 8, 64] {
+            assert_eq!(seq, run_points(&points, jobs, f), "jobs={jobs}");
+        }
+        // jobs=0 resolves to auto and must still match.
+        assert_eq!(seq, run_points(&points, 0, f));
+    }
+
+    #[test]
+    fn each_point_runs_exactly_once() {
+        let calls = AtomicUsize::new(0);
+        let points: Vec<usize> = (0..100).collect();
+        let out = run_points(&points, 7, |_, &p| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            p
+        });
+        assert_eq!(calls.load(Ordering::Relaxed), 100);
+        assert_eq!(out, points);
+    }
+
+    #[test]
+    fn empty_and_oversubscribed_grids() {
+        let none: Vec<u32> = Vec::new();
+        assert!(run_points(&none, 8, |_, &p| p).is_empty());
+        // More workers than points: pool clamps to the point count.
+        let two = [10u32, 20];
+        assert_eq!(run_points(&two, 64, |_, &p| p + 1), vec![11, 21]);
+    }
+
+    #[test]
+    fn merge_all_folds_sinks() {
+        use crate::request::Completion;
+        let mk = |n: usize| -> Vec<Completion> {
+            (0..n)
+                .map(|i| Completion {
+                    id: crate::request::RequestId(i as u64),
+                    model: crate::model::spec::ModelId(0),
+                    arrival: 0.0,
+                    finish: 1.0,
+                    prompt_tokens: 1,
+                    output_tokens: 1,
+                    ttft: 0.1,
+                    tpot: 0.01,
+                    ttft_slo: 1.0,
+                    tpot_slo: 0.1,
+                    dropped: false,
+                    preemptions: 0,
+                })
+                .collect()
+        };
+        let merged: Vec<Completion> = merge_all(vec![mk(2), mk(3)]);
+        assert_eq!(merged.len(), 5);
+    }
+
+    #[test]
+    fn resolve_jobs_semantics() {
+        assert!(resolve_jobs(0) >= 1);
+        assert_eq!(resolve_jobs(3), 3);
+    }
+}

@@ -1,0 +1,37 @@
+//! Parallel sweep engine: policy × trace × scale experiment grids executed
+//! on a scoped worker pool (Figs 5, 7-9, Tab 2, and the bench sweeps).
+//!
+//! Every simulation run is independent and deterministic, so sweeps scale
+//! near-linearly with cores. An experiment enumerates its grid as a flat
+//! list of [`SweepPoint`]s (or any custom point type) and hands it to
+//! [`run_points`]; workers pull points from a shared cursor and write each
+//! result into the slot indexed by its point.
+//!
+//! # Ordering and determinism contract
+//!
+//! * **Results are keyed to points, not to completion order.** `run_points`
+//!   returns `results[i]` for `points[i]`, whatever order the worker pool
+//!   finished them in. Callers build tables by iterating `points` in
+//!   enumeration order, so output layout never depends on scheduling.
+//! * **Point execution must be pure.** The closure may only depend on its
+//!   point (and shared read-only inputs like specs/traces); it must not
+//!   mutate shared state. The simulator satisfies this: same config + trace
+//!   → bitwise-identical `RunMetrics`.
+//! * **Consequence:** `--jobs 1` and `--jobs N` produce byte-identical
+//!   tables (enforced by the fig5 regression test), and `--jobs 1`
+//!   reproduces the historical sequential behavior exactly - the sequential
+//!   path literally runs the same closure in a plain loop on the caller's
+//!   thread.
+//! * **Grid enumeration is fixed**: [`SweepGrid::points`] nests
+//!   trace → rate scale → SLO scale → GPU count → seed → policy, matching
+//!   the hand-rolled loops it replaced, so tables keep their historical row
+//!   order.
+//!
+//! `jobs = 0` means "auto": the `PRISM_JOBS` env var if set, else
+//! `std::thread::available_parallelism()`.
+
+mod engine;
+mod point;
+
+pub use engine::{default_jobs, merge_all, parse_jobs_flag, resolve_jobs, run_points};
+pub use point::{SweepGrid, SweepPoint};

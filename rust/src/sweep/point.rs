@@ -1,0 +1,229 @@
+//! Sweep points and grids: the (policy, trace, rate/SLO/GPU scale, seed)
+//! coordinates of one simulation run, plus a cartesian-product builder.
+
+use crate::metrics::RunMetrics;
+use crate::model::spec::ModelSpec;
+use crate::sim::{PolicyKind, SimConfig, Simulator};
+use crate::trace::Trace;
+
+/// One independent simulation run in an experiment grid. `trace` indexes
+/// the experiment's trace list (traces are shared read-only across points);
+/// `seed` is carried for labeling/keying - trace generation consumes it
+/// before the sweep starts.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SweepPoint {
+    pub policy: PolicyKind,
+    pub trace: usize,
+    pub n_gpus: u32,
+    pub rate_scale: f64,
+    pub slo_scale: f64,
+    pub seed: u64,
+}
+
+impl SweepPoint {
+    /// Stable human-readable key identifying this point, independent of the
+    /// run order - result rows are attributed by key, never by completion
+    /// order.
+    pub fn key(&self) -> String {
+        format!(
+            "t{}-g{}-rs{}-ss{}-s{}-{}",
+            self.trace,
+            self.n_gpus,
+            self.rate_scale,
+            self.slo_scale,
+            self.seed,
+            self.policy.name()
+        )
+    }
+
+    /// Run this point: policy + GPU count + SLO scale from the point, rate
+    /// scaling applied to `trace`. Pure: identical inputs give bitwise
+    /// identical metrics, which is what makes the parallel sweep safe.
+    ///
+    /// Prefer [`run_prescaled`](Self::run_prescaled) when several points
+    /// share one (trace, rate) pair - this method materializes a scaled
+    /// trace copy per call.
+    pub fn run(&self, specs: &[ModelSpec], trace: &Trace) -> RunMetrics {
+        let mut cfg = SimConfig::new(self.policy, self.n_gpus);
+        cfg.slo_scale = self.slo_scale;
+        self.run_with(cfg, specs, trace)
+    }
+
+    /// As [`run`](Self::run) but with a caller-tuned `SimConfig` (tau,
+    /// sampling, eviction knobs); the point's rate scale is still applied.
+    pub fn run_with(&self, cfg: SimConfig, specs: &[ModelSpec], trace: &Trace) -> RunMetrics {
+        let scaled;
+        let tr = if (self.rate_scale - 1.0).abs() > 1e-12 {
+            scaled = trace.scale_rate(self.rate_scale);
+            &scaled
+        } else {
+            trace
+        };
+        Simulator::new(cfg, specs.to_vec()).run(tr).0
+    }
+
+    /// Run against a trace the caller has already rate-scaled (shared
+    /// read-only across every point of that (trace, rate) pair); only the
+    /// point's policy/GPU/SLO coordinates apply. `rate_scale` then merely
+    /// labels what the caller applied.
+    pub fn run_prescaled(&self, specs: &[ModelSpec], trace: &Trace) -> RunMetrics {
+        let mut cfg = SimConfig::new(self.policy, self.n_gpus);
+        cfg.slo_scale = self.slo_scale;
+        Simulator::new(cfg, specs.to_vec()).run(trace).0
+    }
+}
+
+/// Cartesian-product builder over sweep axes. Enumeration order is part of
+/// the contract (see module docs in `sweep`): trace → rate scale → SLO
+/// scale → GPU count → seed → policy, policies innermost so each table row
+/// group compares systems side by side exactly like the hand-rolled loops
+/// this replaced.
+#[derive(Debug, Clone)]
+pub struct SweepGrid {
+    policies: Vec<PolicyKind>,
+    traces: Vec<usize>,
+    gpus: Vec<u32>,
+    rate_scales: Vec<f64>,
+    slo_scales: Vec<f64>,
+    seeds: Vec<u64>,
+}
+
+impl Default for SweepGrid {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SweepGrid {
+    /// A single-point grid: all five policies over trace 0, 2 GPUs, unit
+    /// rate scale, SLO scale 8 (the SS7.2 default), seed 0. Override axes
+    /// with the builder methods.
+    pub fn new() -> Self {
+        SweepGrid {
+            policies: PolicyKind::all().to_vec(),
+            traces: vec![0],
+            gpus: vec![2],
+            rate_scales: vec![1.0],
+            slo_scales: vec![8.0],
+            seeds: vec![0],
+        }
+    }
+
+    pub fn policies(mut self, ps: &[PolicyKind]) -> Self {
+        self.policies = ps.to_vec();
+        self
+    }
+
+    /// Sweep over trace indices `0..n` (into the experiment's trace list).
+    pub fn traces(mut self, n: usize) -> Self {
+        self.traces = (0..n).collect();
+        self
+    }
+
+    pub fn gpus(mut self, gs: &[u32]) -> Self {
+        self.gpus = gs.to_vec();
+        self
+    }
+
+    pub fn rate_scales(mut self, rs: &[f64]) -> Self {
+        self.rate_scales = rs.to_vec();
+        self
+    }
+
+    pub fn slo_scales(mut self, ss: &[f64]) -> Self {
+        self.slo_scales = ss.to_vec();
+        self
+    }
+
+    /// Seed axis for point labels/keys only: simulation is deterministic
+    /// given a trace, and trace generation consumes its seed *before* the
+    /// sweep starts - so distinct seeds over the same trace list run
+    /// identical simulations. Pair each seed with its own generated trace
+    /// (via the `traces` axis) to get actual variance.
+    pub fn seeds(mut self, seeds: &[u64]) -> Self {
+        self.seeds = seeds.to_vec();
+        self
+    }
+
+    /// Number of points the grid enumerates.
+    pub fn len(&self) -> usize {
+        self.traces.len()
+            * self.rate_scales.len()
+            * self.slo_scales.len()
+            * self.gpus.len()
+            * self.seeds.len()
+            * self.policies.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Enumerate every point in the fixed nesting order (see type docs).
+    pub fn points(&self) -> Vec<SweepPoint> {
+        let mut out = Vec::with_capacity(self.len());
+        for &trace in &self.traces {
+            for &rate_scale in &self.rate_scales {
+                for &slo_scale in &self.slo_scales {
+                    for &n_gpus in &self.gpus {
+                        for &seed in &self.seeds {
+                            for &policy in &self.policies {
+                                out.push(SweepPoint {
+                                    policy,
+                                    trace,
+                                    n_gpus,
+                                    rate_scale,
+                                    slo_scale,
+                                    seed,
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_enumerates_full_product_in_fixed_order() {
+        let g = SweepGrid::new()
+            .policies(&[PolicyKind::Prism, PolicyKind::Qlm])
+            .traces(2)
+            .rate_scales(&[1.0, 4.0]);
+        assert_eq!(g.len(), 2 * 2 * 2);
+        let pts = g.points();
+        assert_eq!(pts.len(), 8);
+        // Policies innermost, then seeds/gpus/slo (singletons), rate, trace.
+        assert_eq!(pts[0].policy, PolicyKind::Prism);
+        assert_eq!(pts[1].policy, PolicyKind::Qlm);
+        assert_eq!(pts[0].trace, 0);
+        assert_eq!(pts[0].rate_scale, 1.0);
+        assert_eq!(pts[2].rate_scale, 4.0);
+        assert_eq!(pts[4].trace, 1);
+        // Enumeration is deterministic.
+        assert_eq!(pts, g.points());
+    }
+
+    #[test]
+    fn point_keys_unique_across_grid() {
+        let g = SweepGrid::new().traces(2).gpus(&[1, 2, 4]).slo_scales(&[2.0, 8.0]);
+        let keys: Vec<String> = g.points().iter().map(|p| p.key()).collect();
+        let mut dedup = keys.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), keys.len(), "point keys must be unique");
+    }
+
+    #[test]
+    fn default_grid_is_all_policies_one_point_each() {
+        let g = SweepGrid::new();
+        assert_eq!(g.len(), PolicyKind::all().len());
+        assert!(!g.is_empty());
+    }
+}
