@@ -29,6 +29,50 @@ fn bench_kvcached() {
         black_box(kvc.stats())
     });
 
+    // Batched allocation: one model lookup + caller-owned buffer for the
+    // whole batch (the engine's per-iteration demand path).
+    run("kvcached/alloc_blocks_batched_1k", 3, 30, |_| {
+        let mut kvc = Kvcached::new(1024 * mb, 2 * mb, 16);
+        kvc.register_kv(ModelId(0), 512 * 1024, u32::MAX);
+        let mut live = Vec::with_capacity(1000);
+        kvc.alloc_blocks(ModelId(0), 1000, &mut live).unwrap();
+        for b in live {
+            kvc.free_block(b).unwrap();
+        }
+        black_box(kvc.stats())
+    });
+
+    // KV churn: the high-preemption, small-block pattern — random interleaved
+    // alloc/free with heavy partial-page traffic and a breathing balloon
+    // limit. Isolates the slot bitmap + O(1) partial tracking.
+    run("kvcached/churn_small_blocks", 3, 20, |_| {
+        let mut kvc = Kvcached::new(64 * mb, 2 * mb, 8);
+        kvc.register_kv(ModelId(0), 128 * 1024, u32::MAX); // 16 slots/page
+        let mut rng = Rng::new(7);
+        let mut live: Vec<_> = Vec::new();
+        for i in 0..4000 {
+            if live.is_empty() || rng.below(3) > 0 {
+                if let Ok(b) = kvc.alloc_block(ModelId(0)) {
+                    live.push(b);
+                }
+            } else {
+                let j = rng.below(live.len());
+                let b = live.swap_remove(j);
+                kvc.free_block(b).unwrap();
+            }
+            if i % 512 == 0 {
+                // Balloon breathing forces empty-page unmaps (the partial
+                // swap-remove path) and remaps.
+                let limit = if i % 1024 == 0 { 8 } else { u32::MAX };
+                let _ = kvc.set_kv_limit(ModelId(0), limit);
+            }
+        }
+        for b in live {
+            kvc.free_block(b).unwrap();
+        }
+        black_box(kvc.stats())
+    });
+
     run("kvcached/balloon_shrink_grow", 3, 100, |_| {
         let mut kvc = Kvcached::new(256 * mb, 2 * mb, 8);
         kvc.register_kv(ModelId(0), mb, u32::MAX);

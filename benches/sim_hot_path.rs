@@ -1,7 +1,9 @@
 //! Simulator hot-path macro-benchmark: simulated-events/sec at cluster
 //! scale (50-100 models, 16-32 GPUs, hour-plus novita-like traces, every
 //! policy), written to `BENCH_sim.json` so the perf trajectory is tracked
-//! across changes.
+//! across changes. The `churn-*` scenarios squeeze a small-model fleet
+//! into a fraction of its working set (high preemption, small KV blocks)
+//! to isolate the kvcached allocator + engine per-token path.
 //!
 //! Flags:
 //!   --smoke              tiny CI configuration (seconds, not minutes)
@@ -37,13 +39,24 @@ struct Scenario {
     n_models: usize,
     n_gpus: u32,
     duration: f64,
+    /// Per-GPU memory. The churn scenarios shrink this far below the fleet's
+    /// working set, so the run is dominated by KV alloc/free, preemption,
+    /// and activation/eviction traffic — isolating the allocator hot path.
+    gpu_bytes: u64,
+    /// Restrict the fleet to sub-4B models (small KV blocks, cheap weights:
+    /// maximum page-slot churn per byte of memory).
+    small_models: bool,
 }
+
+const GB: u64 = 1 << 30;
 
 /// Single-GPU model fleet of size `n`: the Table-3 catalog tops out at 58
 /// models, so larger fleets cycle it with fresh ids.
-fn fleet(n: usize) -> Vec<ModelSpec> {
-    let base: Vec<ModelSpec> =
-        catalog_subset(58).into_iter().filter(|m| !m.is_tp()).collect();
+fn fleet(n: usize, small: bool) -> Vec<ModelSpec> {
+    let base: Vec<ModelSpec> = catalog_subset(58)
+        .into_iter()
+        .filter(|m| !m.is_tp() && (!small || m.params < 4_000_000_000))
+        .collect();
     (0..n)
         .map(|i| {
             let mut s = base[i % base.len()].clone();
@@ -112,11 +125,53 @@ fn main() {
     }
 
     let scenarios: Vec<Scenario> = if smoke {
-        vec![Scenario { name: "smoke-8m-4g-2min", n_models: 8, n_gpus: 4, duration: 120.0 }]
+        vec![
+            Scenario {
+                name: "smoke-8m-4g-2min",
+                n_models: 8,
+                n_gpus: 4,
+                duration: 120.0,
+                gpu_bytes: 80 * GB,
+                small_models: false,
+            },
+            Scenario {
+                name: "churn-12m-2g-2min",
+                n_models: 12,
+                n_gpus: 2,
+                duration: 120.0,
+                gpu_bytes: 8 * GB,
+                small_models: true,
+            },
+        ]
     } else {
         vec![
-            Scenario { name: "novita-50m-16g-1h", n_models: 50, n_gpus: 16, duration: 3600.0 },
-            Scenario { name: "novita-100m-32g-2h", n_models: 100, n_gpus: 32, duration: 7200.0 },
+            Scenario {
+                name: "novita-50m-16g-1h",
+                n_models: 50,
+                n_gpus: 16,
+                duration: 3600.0,
+                gpu_bytes: 80 * GB,
+                small_models: false,
+            },
+            Scenario {
+                name: "novita-100m-32g-2h",
+                n_models: 100,
+                n_gpus: 32,
+                duration: 7200.0,
+                gpu_bytes: 80 * GB,
+                small_models: false,
+            },
+            // KV churn at scale: a small-model fleet squeezed onto GPUs with
+            // a fraction of its working set, so the allocator (block
+            // alloc/free, partial pages, preemption) dominates the profile.
+            Scenario {
+                name: "churn-48m-4g-1h",
+                n_models: 48,
+                n_gpus: 4,
+                duration: 3600.0,
+                gpu_bytes: 12 * GB,
+                small_models: true,
+            },
         ]
     };
 
@@ -144,7 +199,7 @@ fn main() {
 
     for sc in &scenarios {
         let trace = generate(&TraceGenConfig::novita_like(sc.n_models, sc.duration, 7));
-        let specs = fleet(sc.n_models);
+        let specs = fleet(sc.n_models, sc.small_models);
         for policy in PolicyKind::all() {
             if !policy_filter.is_empty() && !policy.name().contains(&policy_filter) {
                 continue;
@@ -155,6 +210,7 @@ fn main() {
                 let mut cfg = SimConfig::new(policy, sc.n_gpus);
                 cfg.slo_scale = 8.0;
                 cfg.stream_arrivals = stream;
+                cfg.gpu_bytes = sc.gpu_bytes;
                 // Smoke rows gate CI: take the best of 3 sub-second reps so
                 // single-shot scheduler noise on shared runners does not trip
                 // the threshold. Runs are deterministic, so metrics are
@@ -206,8 +262,9 @@ fn main() {
         // Parallel sweep scenario: the policy x SLO grid through the sweep
         // engine, reported as aggregate simulated-events/sec (this is the
         // number the worker pool is supposed to scale with cores). Honors
-        // --policy like the per-policy rows.
-        if sweep {
+        // --policy like the per-policy rows. Churn scenarios are excluded:
+        // SweepPoint runs with default GPU memory, so they would not churn.
+        if sweep && !sc.small_models {
             let sweep_policies: Vec<PolicyKind> = PolicyKind::all()
                 .into_iter()
                 .filter(|p| policy_filter.is_empty() || p.name().contains(&policy_filter))

@@ -51,7 +51,12 @@ pub fn fmt_ns(ns: f64) -> String {
 
 /// Run `f` for `iters` timed iterations after `warmup` untimed ones.
 /// `f` receives the iteration index and returns a value that is black-boxed.
-pub fn run<T, F: FnMut(usize) -> T>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+pub fn run<T, F: FnMut(usize) -> T>(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    mut f: F,
+) -> BenchResult {
     for i in 0..warmup {
         black_box(f(i));
     }
@@ -122,7 +127,8 @@ impl Table {
             .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
             .collect();
         let _ = writeln!(out, "{}", header.join("  "));
-        let _ = writeln!(out, "{}", widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("  "));
+        let dashes: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        let _ = writeln!(out, "{}", dashes.join("  "));
         for r in &self.rows {
             let line: Vec<String> = r
                 .iter()
@@ -147,7 +153,8 @@ impl Table {
                 s.to_string()
             }
         };
-        let _ = writeln!(out, "{}", self.columns.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+        let _ =
+            writeln!(out, "{}", self.columns.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
         for r in &self.rows {
             let _ = writeln!(out, "{}", r.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
         }

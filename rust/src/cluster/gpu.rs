@@ -201,7 +201,7 @@ impl Cluster {
         let engine = &mut self.engines[res.engine_idx];
         // Free all KV blocks via a group allocator view.
         let mut reqs = {
-            let mut ga = GroupAlloc { gpus: &mut self.gpus, group: &res.gpus, model: m };
+            let mut ga = GroupAlloc::new(&mut self.gpus, &res.gpus, m);
             engine.drain(&mut ga)
         };
         for g in &res.gpus {
@@ -254,35 +254,67 @@ impl Cluster {
 
 }
 
-/// Allocates one KV block on every GPU of a TP group, atomically.
+/// Allocates KV blocks on every GPU of a TP group, atomically per block.
+/// One instance lives per engine step: the scratch buffer makes multi-GPU
+/// group allocation heap-free per token.
 pub struct GroupAlloc<'a> {
-    pub gpus: &'a mut Vec<GpuDevice>,
-    pub group: &'a [GpuId],
-    pub model: ModelId,
+    gpus: &'a mut [GpuDevice],
+    group: &'a [GpuId],
+    model: ModelId,
+    /// Staging for one group block (width > 1 only); reused across the step.
+    scratch: Vec<crate::kvcached::BlockRef>,
+}
+
+impl<'a> GroupAlloc<'a> {
+    pub fn new(gpus: &'a mut [GpuDevice], group: &'a [GpuId], model: ModelId) -> Self {
+        GroupAlloc { gpus, group, model, scratch: Vec::new() }
+    }
 }
 
 impl<'a> crate::engine::engine::KvAlloc for GroupAlloc<'a> {
-    fn alloc(&mut self) -> Result<crate::engine::engine::GroupBlock, crate::kvcached::KvError> {
-        let mut out = Vec::with_capacity(self.group.len());
-        for g in self.group.iter() {
-            match self.gpus[g.0 as usize].kvc.alloc_block(self.model) {
-                Ok(b) => out.push(b),
-                Err(e) => {
-                    // Roll back the partial group allocation.
-                    for (j, b) in out.into_iter().enumerate() {
-                        let gj = self.group[j];
-                        let _ = self.gpus[gj.0 as usize].kvc.free_block(b);
-                    }
-                    return Err(e);
-                }
-            }
-        }
-        Ok(out)
+    fn width(&self) -> usize {
+        self.group.len()
     }
 
-    fn free(&mut self, b: crate::engine::engine::GroupBlock) {
-        for (i, r) in b.into_iter().enumerate() {
-            let g = self.group[i];
+    fn alloc_n(
+        &mut self,
+        n: u32,
+        out: &mut Vec<crate::kvcached::BlockRef>,
+    ) -> Result<(), crate::kvcached::KvError> {
+        if self.group.len() == 1 {
+            // Fast path (single-GPU groups, the common fleet): one batched
+            // kvcached call amortizes the model lookup over the whole batch;
+            // blocks allocated before a failure stay in `out` per the trait
+            // contract.
+            let g = self.group[0].0 as usize;
+            return self.gpus[g].kvc.alloc_blocks(self.model, n, out);
+        }
+        // TP groups: block by block, so each appended block is complete on
+        // every shard or rolled back entirely.
+        for _ in 0..n {
+            self.scratch.clear();
+            for g in self.group.iter() {
+                match self.gpus[g.0 as usize].kvc.alloc_block(self.model) {
+                    Ok(b) => self.scratch.push(b),
+                    Err(e) => {
+                        // Roll back this block's partial group allocation.
+                        for (j, b) in self.scratch.drain(..).enumerate() {
+                            let gj = self.group[j];
+                            let _ = self.gpus[gj.0 as usize].kvc.free_block(b);
+                        }
+                        return Err(e);
+                    }
+                }
+            }
+            out.extend_from_slice(&self.scratch);
+        }
+        Ok(())
+    }
+
+    fn free_run(&mut self, refs: &[crate::kvcached::BlockRef]) {
+        let width = self.group.len();
+        for (i, &r) in refs.iter().enumerate() {
+            let g = self.group[i % width];
             self.gpus[g.0 as usize].kvc.free_block(r).expect("group free");
         }
     }
@@ -325,12 +357,19 @@ mod tests {
         for g in &gpus {
             assert!(c.gpus[g.0 as usize].kvc.stats().weight_bytes > 0);
         }
-        // Group-wide block allocation touches all shards.
+        // Group-wide block allocation touches all shards, block-major.
         let res = c.residency.get(&tp_model.id).unwrap().clone();
-        let mut ga = GroupAlloc { gpus: &mut c.gpus, group: &res.gpus, model: tp_model.id };
-        let b = ga.alloc().unwrap();
-        assert_eq!(b.len(), tp_model.tp as usize);
-        ga.free(b);
+        let mut ga = GroupAlloc::new(&mut c.gpus, &res.gpus, tp_model.id);
+        let mut b = Vec::new();
+        ga.alloc_n(2, &mut b).unwrap();
+        assert_eq!(b.len(), 2 * tp_model.tp as usize);
+        for (i, r) in b.iter().enumerate() {
+            assert_eq!(r.model, tp_model.id, "ref {i} belongs to the model");
+        }
+        ga.free_run(&b);
+        for g in &gpus {
+            assert_eq!(c.gpus[g.0 as usize].kvc.kv_used_blocks(tp_model.id), 0);
+        }
     }
 
     #[test]

@@ -8,13 +8,37 @@
 //! allocation fails (pool exhausted or balloon limit), the engine preempts
 //! the longest-running decode request (recompute-style, matching SGLang's
 //! policy the paper builds on) and retries once.
+//!
+//! # Per-token complexity budget
+//!
+//! `step` runs once per engine iteration and its decode phase touches every
+//! running request, so per-token work is O(1) amortized and heap-free:
+//!
+//! * the decode loop iterates `running` **by index** — preemption only ever
+//!   pops the youngest (last) entry, so indices below the cursor stay
+//!   stable and no `ids` snapshot or O(batch) `position()` rescan exists
+//!   (the old formulation was O(batch²) per iteration);
+//! * per-request KV blocks live in an arena ([`BlockTable`]) keyed by the
+//!   request's dense `kv_slot` — block runs are flat block-major
+//!   `Vec<BlockRef>`s whose capacity is recycled across requests, so
+//!   steady-state decode performs no hashing and no allocation;
+//! * an iteration's block demand goes through ONE batched
+//!   [`KvAlloc::alloc_n`] call per request, not a `Vec`-returning call per
+//!   block;
+//! * the prefill queue is a `VecDeque`, so a preemption's re-queue at the
+//!   front is O(1) instead of shifting the whole queue.
+//!
+//! Work proportional to the batch is allowed only per *iteration* (timing,
+//! latency accrual) or per *completion* (order-preserving removal), never
+//! per token. Regressions show up in `benches/sim_hot_path.rs` (KV-churn
+//! scenario) and `benches/micro.rs`.
 
-use std::collections::HashMap;
+use std::collections::VecDeque;
 
 use crate::engine::perf::GpuPerf;
 use crate::kvcached::{BlockRef, KvError};
 use crate::model::spec::ModelSpec;
-use crate::request::{Completion, Phase, Request, RequestId};
+use crate::request::{Completion, Phase, Request, RequestId, NO_KV_SLOT};
 
 /// Tokens per KV block (SGLang default page size is 16-64 tokens).
 pub const BLOCK_TOKENS: u32 = 16;
@@ -23,14 +47,99 @@ pub const CHUNK_TOKENS: u32 = 512;
 /// Maximum concurrent decode batch per engine.
 pub const MAX_BATCH: u32 = 64;
 
-/// One block replicated across the engine's TP group (one BlockRef per GPU).
-pub type GroupBlock = Vec<BlockRef>;
-
-/// Group-wide KV allocation interface provided by the cluster: allocates one
-/// block on EVERY GPU of the engine's group or fails atomically.
+/// Group-wide KV allocation interface provided by the cluster. A "group
+/// block" is one KV block replicated across every GPU of the engine's TP
+/// group: `width()` refs, laid out contiguously in block-major order.
 pub trait KvAlloc {
-    fn alloc(&mut self) -> Result<GroupBlock, KvError>;
-    fn free(&mut self, b: GroupBlock);
+    /// Refs per group block (= the TP degree of the engine's group).
+    fn width(&self) -> usize;
+
+    /// Allocate `n` group blocks, appending `n * width()` refs to `out`
+    /// (block `b`'s refs occupy `out[start + b*width .. start + (b+1)*width]`).
+    /// Every appended block is group-complete: allocated on ALL GPUs of the
+    /// group or not appended at all. On `Err`, complete blocks allocated
+    /// before the failure remain in `out` — callers keep partial progress
+    /// across preemption retries, exactly as repeated single-block calls
+    /// would.
+    fn alloc_n(&mut self, n: u32, out: &mut Vec<BlockRef>) -> Result<(), KvError>;
+
+    /// Free a block-major run previously produced by `alloc_n`.
+    fn free_run(&mut self, refs: &[BlockRef]);
+}
+
+/// Arena of per-request block runs. Each request holding KV owns one dense
+/// slot (`Request::kv_slot`); the slot's run is that request's flat
+/// block-major `BlockRef` sequence. Released slots keep their `Vec`
+/// capacity and are recycled, so steady-state decode appends into
+/// already-grown buffers without touching the allocator.
+#[derive(Debug, Default)]
+struct BlockTable {
+    runs: Vec<Vec<BlockRef>>,
+    free: Vec<u32>,
+}
+
+impl BlockTable {
+    fn acquire(&mut self) -> u32 {
+        match self.free.pop() {
+            Some(s) => s,
+            None => {
+                self.runs.push(Vec::new());
+                (self.runs.len() - 1) as u32
+            }
+        }
+    }
+
+    fn release(&mut self, slot: u32) {
+        self.runs[slot as usize].clear(); // keep capacity for the next tenant
+        self.free.push(slot);
+    }
+
+    fn total_refs(&self) -> usize {
+        self.runs.iter().map(|r| r.len()).sum()
+    }
+}
+
+/// Grow `r`'s block run to cover `tokens_needed` tokens. Free function so
+/// call sites can borrow the table and a request from disjoint engine
+/// fields simultaneously.
+fn ensure_blocks(
+    table: &mut BlockTable,
+    kv: &mut dyn KvAlloc,
+    r: &mut Request,
+    tokens_needed: u32,
+) -> Result<(), KvError> {
+    let width = kv.width().max(1);
+    let need = tokens_needed.div_ceil(BLOCK_TOKENS) as usize;
+    let slot = if r.kv_slot == NO_KV_SLOT {
+        let s = table.acquire();
+        r.kv_slot = s;
+        s
+    } else {
+        r.kv_slot
+    };
+    let have = table.runs[slot as usize].len() / width;
+    let res = if need > have {
+        kv.alloc_n((need - have) as u32, &mut table.runs[slot as usize])
+    } else {
+        Ok(())
+    };
+    if table.runs[slot as usize].is_empty() {
+        // Nothing allocated (first block failed): don't hold an empty slot,
+        // so `kv_slot != NO_KV_SLOT` always means "holds at least one block".
+        table.release(slot);
+        r.kv_slot = NO_KV_SLOT;
+    }
+    res
+}
+
+/// Return all of `r`'s blocks to the allocator and recycle its arena slot.
+fn release_blocks(table: &mut BlockTable, kv: &mut dyn KvAlloc, r: &mut Request) {
+    if r.kv_slot != NO_KV_SLOT {
+        let slot = r.kv_slot;
+        r.kv_slot = NO_KV_SLOT;
+        kv.free_run(&table.runs[slot as usize]);
+        table.release(slot);
+    }
 }
 
 #[derive(Debug, Clone, Default)]
@@ -47,10 +156,12 @@ pub struct StepOutcome {
 pub struct SimEngine {
     pub spec: ModelSpec,
     /// Admitted requests awaiting (or mid-) prefill, in admission order.
-    queue: Vec<Request>,
+    /// Deque: preemption re-queues at the front in O(1).
+    queue: VecDeque<Request>,
     /// Requests in decode.
     running: Vec<Request>,
-    blocks: HashMap<RequestId, Vec<GroupBlock>>,
+    /// Per-request KV block runs, keyed by each request's dense `kv_slot`.
+    table: BlockTable,
     pub chunk_tokens: u32,
     pub max_batch: u32,
     /// Total iterations and busy seconds (throughput accounting excl. idle).
@@ -63,9 +174,9 @@ impl SimEngine {
     pub fn new(spec: ModelSpec) -> Self {
         SimEngine {
             spec,
-            queue: Vec::new(),
+            queue: VecDeque::new(),
             running: Vec::new(),
-            blocks: HashMap::new(),
+            table: BlockTable::default(),
             chunk_tokens: CHUNK_TOKENS,
             max_batch: MAX_BATCH,
             iterations: 0,
@@ -76,8 +187,9 @@ impl SimEngine {
 
     /// Admit a request (arbitration has already decided it should run here).
     pub fn admit(&mut self, mut r: Request) {
+        debug_assert_eq!(r.kv_slot, NO_KV_SLOT, "admitted request holds foreign KV");
         r.phase = Phase::Prefill;
-        self.queue.push(r);
+        self.queue.push_back(r);
     }
 
     pub fn has_work(&self) -> bool {
@@ -107,53 +219,28 @@ impl SimEngine {
         self.active_kv_tokens() * self.spec.kv_bytes_per_token() * self.spec.tp as u64
     }
 
-    /// Blocks held per request (used by drains/migration).
+    /// Blocks held across all requests (used by drains/migration).
     pub fn held_blocks(&self) -> usize {
-        self.blocks.values().map(|v| v.len()).sum()
+        self.table.total_refs() / (self.spec.tp as usize).max(1)
     }
 
-    fn ensure_blocks(
-        &mut self,
-        id: RequestId,
-        tokens_needed: u32,
-        kv: &mut dyn KvAlloc,
-    ) -> Result<(), KvError> {
-        let have = self.blocks.get(&id).map(|v| v.len() as u32).unwrap_or(0);
-        let need = tokens_needed.div_ceil(BLOCK_TOKENS);
-        for _ in have..need {
-            let b = kv.alloc()?;
-            self.blocks.entry(id).or_default().push(b);
-        }
-        Ok(())
-    }
-
-    fn release_blocks(&mut self, id: RequestId, kv: &mut dyn KvAlloc) {
-        if let Some(bs) = self.blocks.remove(&id) {
-            for b in bs {
-                kv.free(b);
-            }
-        }
-    }
-
-    /// Preempt a decode request *promoted after* `requester` (LIFO,
-    /// recompute-style - the vLLM/SGLang discipline). The age ordering is
-    /// what makes this livelock-free: a request may only evict strictly
-    /// younger ones, so the oldest running request always progresses,
-    /// finishes, and releases memory. (Both "preempt the longest-decoded"
-    /// and plain "preempt anyone but me" livelock: the victim re-prefills,
-    /// gets promoted, and immediately preempts its preemptor.)
-    fn preempt_younger(&mut self, kv: &mut dyn KvAlloc, requester: RequestId) -> bool {
-        let Some(pos) = self.running.iter().position(|r| r.id == requester) else {
-            return false;
-        };
-        if pos + 1 >= self.running.len() {
+    /// Preempt a decode request *promoted after* the requester at
+    /// `requester_idx` (LIFO, recompute-style - the vLLM/SGLang discipline).
+    /// The age ordering is what makes this livelock-free: a request may only
+    /// evict strictly younger ones, so the oldest running request always
+    /// progresses, finishes, and releases memory. (Both "preempt the
+    /// longest-decoded" and plain "preempt anyone but me" livelock: the
+    /// victim re-prefills, gets promoted, and immediately preempts its
+    /// preemptor.)
+    fn preempt_younger(&mut self, kv: &mut dyn KvAlloc, requester_idx: usize) -> bool {
+        if requester_idx + 1 >= self.running.len() {
             return false; // requester is the youngest: it must wait instead
         }
         let mut r = self.running.pop().expect("younger victim exists");
-        self.release_blocks(r.id, kv);
+        release_blocks(&mut self.table, kv, &mut r);
         r.preemptions += 1;
         r.preemptions_apply();
-        self.queue.insert(0, r);
+        self.queue.push_front(r);
         self.preemptions += 1;
         true
     }
@@ -166,15 +253,14 @@ impl SimEngine {
             .iter()
             .enumerate()
             .rev()
-            .find(|(_, r)| r.id != protect && self.blocks.contains_key(&r.id))
+            .find(|(_, r)| r.id != protect && r.kv_slot != NO_KV_SLOT)
             .map(|(i, _)| i);
         if let Some(i) = qv {
-            let id = self.queue[i].id;
-            self.release_blocks(id, kv);
-            let mut r = self.queue.remove(i);
+            let mut r = self.queue.remove(i).expect("victim index in range");
+            release_blocks(&mut self.table, kv, &mut r);
             r.preemptions += 1;
             r.preemptions_apply();
-            self.queue.push(r);
+            self.queue.push_back(r);
             self.preemptions += 1;
             return true;
         }
@@ -184,17 +270,15 @@ impl SimEngine {
     /// Drain everything (engine eviction): frees all KV; returns the requests
     /// (callers re-queue them elsewhere). Completed stats are preserved.
     pub fn drain(&mut self, kv: &mut dyn KvAlloc) -> Vec<Request> {
-        let ids: Vec<RequestId> = self.blocks.keys().copied().collect();
-        for id in ids {
-            self.release_blocks(id, kv);
-        }
         let mut out: Vec<Request> = Vec::new();
-        for mut r in self.queue.drain(..) {
+        for mut r in std::mem::take(&mut self.queue) {
+            release_blocks(&mut self.table, kv, &mut r);
             r.phase = Phase::Queued;
             r.prefill_done_tokens = 0;
             out.push(r);
         }
-        for mut r in self.running.drain(..) {
+        for mut r in std::mem::take(&mut self.running) {
+            release_blocks(&mut self.table, kv, &mut r);
             r.phase = Phase::Queued;
             r.preemptions += 1;
             r.preemptions_apply();
@@ -215,27 +299,27 @@ impl SimEngine {
         // first, or prefill of waiting requests consumes every block that a
         // preemption frees and decode livelocks (vLLM/SGLang likewise give
         // the running batch priority over admission).
-        // Iterate by id: preemption removes entries from `running` mid-scan.
-        let mut finished: Vec<RequestId> = Vec::new();
+        //
+        // Index-based iteration, robust to mid-scan preemption: victims are
+        // only ever popped off the END of `running` (strictly younger than
+        // the scan cursor), so every index at or below the cursor — and
+        // every recorded `finished` index — stays valid for the whole scan.
+        let mut finished: Vec<usize> = Vec::new();
         // Set when decode hit memory pressure this iteration: prefill
         // admission is then suppressed so it cannot re-consume the blocks
         // that preemption just freed (that re-consumption livelocks).
         let mut pressure = false;
-        let ids: Vec<RequestId> = self.running.iter().map(|r| r.id).collect();
-        for id in ids {
-            let Some(idx) = self.running.iter().position(|r| r.id == id) else {
-                continue; // preempted earlier this iteration
-            };
-            let tokens_after =
-                self.running[idx].prompt_tokens + self.running[idx].decoded_tokens + 1;
+        let mut i = 0usize;
+        while i < self.running.len() {
+            let tokens_after = self.running[i].prompt_tokens + self.running[i].decoded_tokens + 1;
             let mut attempts = 0;
             loop {
-                match self.ensure_blocks(id, tokens_after, kv) {
+                match ensure_blocks(&mut self.table, kv, &mut self.running[i], tokens_after) {
                     Ok(()) => {
-                        let r = self.running.iter_mut().find(|r| r.id == id).unwrap();
+                        let r = &mut self.running[i];
                         r.decoded_tokens += 1;
                         if r.decoded_tokens >= r.output_tokens {
-                            finished.push(id);
+                            finished.push(i);
                         }
                         break;
                     }
@@ -245,9 +329,10 @@ impl SimEngine {
                         // partial prefill (not yet served, so younger in
                         // service order by definition). Retry after a
                         // successful preemption.
+                        let protect = self.running[i].id;
                         if attempts < 4
-                            && (self.preempt_younger(kv, id)
-                                || self.steal_from_queue_tail(kv, id))
+                            && (self.preempt_younger(kv, i)
+                                || self.steal_from_queue_tail(kv, protect))
                         {
                             out.preempted += 1;
                             attempts += 1;
@@ -260,6 +345,7 @@ impl SimEngine {
                     Err(e) => panic!("unexpected kv error: {e}"),
                 }
             }
+            i += 1;
         }
 
         // ---- Phase 2: chunked prefill for the queue head(s) -------------
@@ -272,12 +358,11 @@ impl SimEngine {
             && (self.running.len() as u32) < self.max_batch
         {
             let id = self.queue[qi].id;
-            let total_prefill =
-                self.queue[qi].prompt_tokens + self.queue[qi].decoded_tokens;
+            let total_prefill = self.queue[qi].prompt_tokens + self.queue[qi].decoded_tokens;
             let done = self.queue[qi].prefill_done_tokens;
             let take = chunk_left.min(total_prefill - done);
             // KV for the newly prefetched tokens.
-            match self.ensure_blocks(id, done + take, kv) {
+            match ensure_blocks(&mut self.table, kv, &mut self.queue[qi], done + take) {
                 Ok(()) => {}
                 Err(KvError::OutOfPages(_)) | Err(KvError::LimitReached { .. }) => {
                     // Memory pressure. Prefill never preempts active decodes
@@ -323,18 +408,20 @@ impl SimEngine {
             }
         }
 
-        // Completions.
-        for id in finished {
-            let Some(i) = self.running.iter().position(|r| r.id == id) else {
-                continue; // finished request preempted later in the scan
-            };
-            let mut r = self.running.remove(i);
+        // Completions: `finished` holds increasing, still-valid indices
+        // (victim pops only ever removed entries above the scan cursor).
+        // Order-preserving removal keeps the age ordering the preemption
+        // discipline relies on; O(batch) per completion, not per token.
+        let mut removed = 0usize;
+        for &fi in &finished {
+            let mut r = self.running.remove(fi - removed);
+            removed += 1;
             r.phase = Phase::Finished;
             r.finish_time = Some(end);
             if r.first_token_time.is_none() {
                 r.first_token_time = Some(end);
             }
-            self.release_blocks(r.id, kv);
+            release_blocks(&mut self.table, kv, &mut r);
             out.completions.push(Completion::from_request(&r));
         }
 
@@ -346,7 +433,7 @@ impl SimEngine {
             if self.queue[i].prefill_done_tokens >= total_prefill
                 && (self.running.len() as u32) < self.max_batch
             {
-                let mut r = self.queue.remove(i);
+                let mut r = self.queue.remove(i).expect("promotion index in range");
                 if r.first_token_time.is_none() {
                     r.first_token_time = Some(end);
                 }
@@ -357,7 +444,7 @@ impl SimEngine {
                 if r.decoded_tokens >= r.output_tokens {
                     r.phase = Phase::Finished;
                     r.finish_time = Some(end);
-                    self.release_blocks(r.id, kv);
+                    release_blocks(&mut self.table, kv, &mut r);
                     out.completions.push(Completion::from_request(&r));
                 } else {
                     r.phase = Phase::Decode;
@@ -410,11 +497,14 @@ mod tests {
     }
 
     impl<'a> KvAlloc for OneGpu<'a> {
-        fn alloc(&mut self) -> Result<GroupBlock, KvError> {
-            Ok(vec![self.kvc.alloc_block(self.model)?])
+        fn width(&self) -> usize {
+            1
         }
-        fn free(&mut self, b: GroupBlock) {
-            for r in b {
+        fn alloc_n(&mut self, n: u32, out: &mut Vec<BlockRef>) -> Result<(), KvError> {
+            self.kvc.alloc_blocks(self.model, n, out)
+        }
+        fn free_run(&mut self, refs: &[BlockRef]) {
+            for &r in refs {
                 self.kvc.free_block(r).unwrap();
             }
         }
@@ -521,6 +611,35 @@ mod tests {
         assert_eq!(done, 4, "all requests must eventually finish");
         assert!(preempted > 0, "workload must have triggered preemption");
         assert_eq!(kvc.kv_used_blocks(ModelId(0)), 0);
+    }
+
+    #[test]
+    fn preemption_is_lifo_oldest_completes_first() {
+        // LIFO (preempt-younger-only) discipline: the oldest admitted
+        // request is never a victim, so under sustained memory pressure it
+        // must be the first to complete.
+        let (mut e, mut kvc) = setup(24);
+        for i in 0..4 {
+            e.admit(req(i, 256, 64));
+        }
+        let perf = GpuPerf::default();
+        let mut now = 0.0;
+        let mut comps = Vec::new();
+        let mut preempted = 0;
+        for _ in 0..30_000 {
+            let mut kv = OneGpu { kvc: &mut kvc, model: ModelId(0) };
+            let o = e.step(now, &perf, &mut kv);
+            now += o.duration;
+            preempted += o.preempted;
+            comps.extend(o.completions);
+            if !e.has_work() {
+                break;
+            }
+        }
+        assert!(preempted > 0, "workload must have triggered preemption");
+        assert_eq!(comps.len(), 4);
+        assert_eq!(comps[0].id, RequestId(0), "oldest request finishes first");
+        assert_eq!(e.held_blocks(), 0);
     }
 
     #[test]

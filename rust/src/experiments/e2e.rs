@@ -360,7 +360,9 @@ pub fn fig9_large_scale(quick: bool, jobs: usize) -> Vec<Table> {
     for p in PolicyKind::all() {
         b.row(vec![
             p.name().into(),
-            best.get(p.name()).map(|g| g.to_string()).unwrap_or_else(|| format!(">{}", gpus.last().unwrap())),
+            best.get(p.name())
+                .map(|g| g.to_string())
+                .unwrap_or_else(|| format!(">{}", gpus.last().unwrap())),
         ]);
     }
     vec![a, b]
@@ -417,7 +419,8 @@ pub fn fig15_sensitivity(quick: bool, jobs: usize) -> Vec<Table> {
     let dur = if quick { 240.0 } else { 900.0 };
     let trace = generate(&TraceGenConfig::hyperbolic_like(specs.len(), dur, 71)).scale_rate(2.0);
 
-    let thresholds: &[f64] = if quick { &[10.0, 45.0, 120.0] } else { &[10.0, 20.0, 45.0, 60.0, 80.0, 120.0] };
+    let thresholds: &[f64] =
+        if quick { &[10.0, 45.0, 120.0] } else { &[10.0, 20.0, 45.0, 60.0, 80.0, 120.0] };
     let th_results = run_points(thresholds, jobs, |_, &th| {
         let mut cfg = SimConfig::new(PolicyKind::Prism, 2);
         cfg.slo_scale = 8.0;
@@ -436,7 +439,8 @@ pub fn fig15_sensitivity(quick: bool, jobs: usize) -> Vec<Table> {
         ]);
     }
 
-    let windows: &[f64] = if quick { &[10.0, 60.0, 300.0] } else { &[10.0, 30.0, 60.0, 120.0, 300.0] };
+    let windows: &[f64] =
+        if quick { &[10.0, 60.0, 300.0] } else { &[10.0, 30.0, 60.0, 120.0, 300.0] };
     let w_results = run_points(windows, jobs, |_, &w| {
         let mut cfg = SimConfig::new(PolicyKind::Prism, 2);
         cfg.slo_scale = 8.0;

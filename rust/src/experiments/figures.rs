@@ -134,7 +134,8 @@ pub fn two_model_segment(quick: bool) -> (Trace, Vec<ModelSpec>) {
     events.retain(|e| e.t < dur);
     let trace = Trace { name: "fig1c-seg".into(), n_models: 2, events, duration: dur };
     let cat = crate::model::spec::table3_catalog();
-    let eights: Vec<ModelSpec> = cat.iter().filter(|m| m.name.contains("8b")).take(2).cloned().collect();
+    let eights: Vec<ModelSpec> =
+        cat.iter().filter(|m| m.name.contains("8b")).take(2).cloned().collect();
     let mut specs: Vec<ModelSpec> = eights; // two 8B models on one GPU
     specs[0].id = ModelId(0);
     specs[1].id = ModelId(1);

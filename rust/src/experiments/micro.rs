@@ -70,7 +70,9 @@ pub fn fig14_elastic_overhead(quick: bool) -> Vec<Table> {
             });
         }
         let trace = Trace { name: "fig14".into(), n_models: 2, events, duration: dur };
-        for (name, p) in [("prism", PolicyKind::Prism), ("s-partition", PolicyKind::StaticPartition)] {
+        for (name, p) in
+            [("prism", PolicyKind::Prism), ("s-partition", PolicyKind::StaticPartition)]
+        {
             let mut cfg = SimConfig::new(p, 1);
             cfg.gpu_bytes = 40 * (1 << 30);
             cfg.perf = GpuPerf::a100_40g();

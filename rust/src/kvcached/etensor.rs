@@ -78,6 +78,38 @@ impl ElasticTensor {
         }
     }
 
+    /// Batched commit: map `n` slots through one kvcached call (single
+    /// model lookup amortized over the batch), appending the slot ids to
+    /// `out`. Atomic: on `Err` nothing is committed and `out` is untouched.
+    pub fn alloc_slots(
+        &mut self,
+        kvc: &mut Kvcached,
+        n: usize,
+        out: &mut Vec<u32>,
+    ) -> Result<(), KvError> {
+        if self.free_slots.len() < n {
+            return Err(KvError::OutOfPages(crate::kvcached::pool::OutOfPages {
+                requested: n as u32,
+                available: self.free_slots.len() as u32,
+            }));
+        }
+        let mut blocks = Vec::with_capacity(n);
+        if let Err(e) = kvc.alloc_blocks(self.model, n as u32, &mut blocks) {
+            // alloc_blocks keeps partial progress; roll it back for slot
+            // atomicity (a request needs its whole span or nothing).
+            for b in blocks {
+                let _ = kvc.free_block(b);
+            }
+            return Err(e);
+        }
+        for b in blocks {
+            let slot = self.free_slots.pop().expect("count checked above");
+            self.backing[slot as usize] = Some(b);
+            out.push(slot);
+        }
+        Ok(())
+    }
+
     /// Release a slot's physical backing; the virtual slot is reusable.
     pub fn free_slot(&mut self, kvc: &mut Kvcached, slot: u32) -> Result<(), KvError> {
         let b = self.backing[slot as usize]
@@ -142,6 +174,27 @@ mod tests {
         // Freeing one re-enables allocation.
         et.free_slot(&mut kvc, slots[0]).unwrap();
         assert!(et.alloc_slot(&mut kvc).is_ok());
+    }
+
+    #[test]
+    fn batched_alloc_slots_is_atomic() {
+        let (mut kvc, mut et) = setup(); // 8 physical, 16 virtual slots
+        let mut slots = Vec::new();
+        et.alloc_slots(&mut kvc, 6, &mut slots).unwrap();
+        assert_eq!(slots.len(), 6);
+        assert_eq!(et.mapped_slots(), 6);
+        // 3 more don't fit (2 physical left): nothing is committed.
+        assert!(et.alloc_slots(&mut kvc, 3, &mut slots).is_err());
+        assert_eq!(slots.len(), 6);
+        assert_eq!(et.mapped_slots(), 6);
+        assert!(kvc.check_conservation());
+        // The remaining 2 still allocate.
+        et.alloc_slots(&mut kvc, 2, &mut slots).unwrap();
+        assert_eq!(et.mapped_slots(), 8);
+        for s in slots {
+            et.free_slot(&mut kvc, s).unwrap();
+        }
+        assert_eq!(et.mapped_slots(), 0);
     }
 
     #[test]

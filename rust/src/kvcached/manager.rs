@@ -16,6 +16,25 @@
 //! limit makes the manager release free pages immediately and report how many
 //! *used* pages must be vacated by the engine (via preemption) before the
 //! target is met.
+//!
+//! # Per-token complexity budget
+//!
+//! `alloc_block`/`free_block` sit on the engine's per-decode-token path, so
+//! both are O(1) amortized and heap-allocation-free:
+//!
+//! * slot occupancy is an inline `u64` bitmap per page ([`SlotBits`]);
+//!   first-free is one `trailing_zeros`, never a `Vec<bool>` scan (geometries
+//!   with more than 64 slots per page spill to a boxed word array, still
+//!   O(slots/64) at worst and allocated only when the page is mapped);
+//! * partial-page membership is position-indexed (`partial_pos`), so removal
+//!   is an O(1) swap-remove — never a `partial.retain` scan;
+//! * [`Kvcached::alloc_blocks`] batches an iteration's demand through ONE
+//!   model lookup, appending into a caller-owned buffer.
+//!
+//! Anything O(slots), O(partial), or O(pages) on the alloc/free path is a
+//! regression (`set_kv_limit` alone may scan pages: ballooning is a control
+//! action, not a per-token one). Tracked by `benches/micro.rs`
+//! (`kvcached/*`) and the KV-churn scenario in `benches/sim_hot_path.rs`.
 
 use std::collections::BTreeMap;
 
@@ -30,12 +49,89 @@ pub struct BlockRef {
     pub slot: u32,     // block slot within the page
 }
 
+/// Slot-occupancy bitmap for one page (set bit = used). Pages with at most
+/// 64 slots — the norm at simulator geometry (2 MiB pages, 32 KiB+ blocks) —
+/// use one inline word with zero heap allocation; finer geometries (the real
+/// server's KiB-scale slots) spill to a boxed word array allocated once at
+/// page map time.
+#[derive(Debug, Clone)]
+enum SlotBits {
+    Inline(u64),
+    Spill(Box<[u64]>),
+}
+
+impl SlotBits {
+    fn new(slots: u32) -> Self {
+        if slots <= 64 {
+            SlotBits::Inline(0)
+        } else {
+            SlotBits::Spill(vec![0u64; slots.div_ceil(64) as usize].into_boxed_slice())
+        }
+    }
+
+    fn get(&self, slot: u32) -> bool {
+        match self {
+            SlotBits::Inline(w) => (w >> slot) & 1 == 1,
+            SlotBits::Spill(ws) => (ws[slot as usize / 64] >> (slot % 64)) & 1 == 1,
+        }
+    }
+
+    fn set(&mut self, slot: u32) {
+        match self {
+            SlotBits::Inline(w) => *w |= 1u64 << slot,
+            SlotBits::Spill(ws) => ws[slot as usize / 64] |= 1u64 << (slot % 64),
+        }
+    }
+
+    fn clear(&mut self, slot: u32) {
+        match self {
+            SlotBits::Inline(w) => *w &= !(1u64 << slot),
+            SlotBits::Spill(ws) => ws[slot as usize / 64] &= !(1u64 << (slot % 64)),
+        }
+    }
+
+    /// Lowest free slot below `slots` via `trailing_zeros` — the same slot a
+    /// linear first-free scan would pick.
+    fn first_free(&self, slots: u32) -> Option<u32> {
+        match self {
+            SlotBits::Inline(w) => {
+                let free = !w & mask_below(slots);
+                (free != 0).then(|| free.trailing_zeros())
+            }
+            SlotBits::Spill(ws) => {
+                for (i, w) in ws.iter().enumerate() {
+                    let free = !w;
+                    if free != 0 {
+                        let slot = i as u32 * 64 + free.trailing_zeros();
+                        // Bits at/above `slots` in the tail word are never
+                        // set, so they read as free: reject them.
+                        return (slot < slots).then_some(slot);
+                    }
+                }
+                None
+            }
+        }
+    }
+}
+
+/// Bitmask of the `slots` low bits (all ones when `slots >= 64`).
+fn mask_below(slots: u32) -> u64 {
+    if slots >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << slots) - 1
+    }
+}
+
 #[derive(Debug, Clone)]
 struct PageState {
     phys: PhysPage,
-    used: Vec<bool>, // slot occupancy
+    bits: SlotBits, // slot occupancy bitmap
     used_count: u32,
 }
+
+/// `partial_pos` sentinel: the page is not in the partial list.
+const NOT_PARTIAL: u32 = u32::MAX;
 
 /// Per-model KV state: geometry + mapped pages.
 #[derive(Debug)]
@@ -44,11 +140,83 @@ struct ModelKv {
     slots_per_page: u32,
     pages: Vec<Option<PageState>>, // index = page_idx; None = unmapped slot reuse
     free_page_indices: Vec<u32>,   // reusable page_idx values
-    /// page indices with at least one free slot (partial-page priority).
+    /// page indices with at least one free slot (partial-page priority);
+    /// allocation draws from the top.
     partial: Vec<u32>,
+    /// page_idx -> position in `partial` (NOT_PARTIAL when absent): O(1)
+    /// membership removal by swap-remove instead of `partial.retain`.
+    partial_pos: Vec<u32>,
     limit_pages: u32,
     mapped_pages: u32,
     used_blocks: u64,
+}
+
+impl ModelKv {
+    fn partial_push(&mut self, pi: u32) {
+        debug_assert_eq!(self.partial_pos[pi as usize], NOT_PARTIAL);
+        self.partial_pos[pi as usize] = self.partial.len() as u32;
+        self.partial.push(pi);
+    }
+
+    fn partial_remove(&mut self, pi: u32) {
+        let pos = std::mem::replace(&mut self.partial_pos[pi as usize], NOT_PARTIAL);
+        if pos == NOT_PARTIAL {
+            return;
+        }
+        self.partial.swap_remove(pos as usize);
+        if let Some(&moved) = self.partial.get(pos as usize) {
+            self.partial_pos[moved as usize] = pos;
+        }
+    }
+}
+
+/// One block allocation over (pool, per-model state): the shared core of
+/// `alloc_block` and the batched `alloc_blocks`. Returns the block plus the
+/// map cost accrued (nonzero only when a fresh physical page was mapped).
+fn alloc_block_in(
+    pool: &mut PagePool,
+    mk: &mut ModelKv,
+    model: ModelId,
+) -> Result<(BlockRef, f64), KvError> {
+    // Partial-page priority (D3): top of the partial stack.
+    if let Some(&pi) = mk.partial.last() {
+        let page = mk.pages[pi as usize].as_mut().expect("partial page exists");
+        debug_assert!(page.used_count < mk.slots_per_page, "full page in partial list");
+        let slot = page.bits.first_free(mk.slots_per_page).expect("slot free");
+        page.bits.set(slot);
+        page.used_count += 1;
+        mk.used_blocks += 1;
+        if page.used_count == mk.slots_per_page {
+            mk.partial_remove(pi); // top of stack: swap-remove is a pop
+        }
+        return Ok((BlockRef { model, page_idx: pi, slot }, 0.0));
+    }
+
+    // Need a fresh page.
+    if mk.mapped_pages >= mk.limit_pages {
+        return Err(KvError::LimitReached { model, limit_pages: mk.limit_pages });
+    }
+    let (phys, cost) = pool.alloc_one().map_err(KvError::OutOfPages)?;
+    let mut bits = SlotBits::new(mk.slots_per_page);
+    bits.set(0);
+    let state = PageState { phys, bits, used_count: 1 };
+    let pi = match mk.free_page_indices.pop() {
+        Some(i) => {
+            mk.pages[i as usize] = Some(state);
+            i
+        }
+        None => {
+            mk.pages.push(Some(state));
+            mk.partial_pos.push(NOT_PARTIAL);
+            (mk.pages.len() - 1) as u32
+        }
+    };
+    mk.mapped_pages += 1;
+    mk.used_blocks += 1;
+    if mk.slots_per_page > 1 {
+        mk.partial_push(pi);
+    }
+    Ok((BlockRef { model, page_idx: pi, slot: 0 }, cost))
 }
 
 /// GPU-level memory statistics (drives KVPR's `shared_kv` and Fig 6/14).
@@ -165,6 +333,7 @@ impl Kvcached {
                 pages: Vec::new(),
                 free_page_indices: Vec::new(),
                 partial: Vec::new(),
+                partial_pos: Vec::new(),
                 limit_pages,
                 mapped_pages: 0,
                 used_blocks: 0,
@@ -182,65 +351,58 @@ impl Kvcached {
 
     /// Allocate one token block for `model`. Prefers partially-filled pages
     /// (D3); maps a new physical page only when no partial page has room and
-    /// the model is under its limit.
+    /// the model is under its limit. O(1), no heap allocation.
     pub fn alloc_block(&mut self, model: ModelId) -> Result<BlockRef, KvError> {
         let mk = self.kv.get_mut(&model).ok_or(KvError::UnknownModel(model))?;
-
-        // Partial-page priority.
-        while let Some(&pi) = mk.partial.last() {
-            let page = mk.pages[pi as usize].as_mut().expect("partial page exists");
-            if page.used_count < mk.slots_per_page {
-                let slot = page.used.iter().position(|u| !u).expect("slot free") as u32;
-                page.used[slot as usize] = true;
-                page.used_count += 1;
-                mk.used_blocks += 1;
-                if page.used_count == mk.slots_per_page {
-                    mk.partial.pop();
-                }
-                return Ok(BlockRef { model, page_idx: pi, slot });
-            }
-            mk.partial.pop();
-        }
-
-        // Need a fresh page.
-        if mk.mapped_pages >= mk.limit_pages {
-            return Err(KvError::LimitReached { model, limit_pages: mk.limit_pages });
-        }
-        let (pages, cost) = self.pool.alloc(1).map_err(KvError::OutOfPages)?;
+        let (r, cost) = alloc_block_in(&mut self.pool, mk, model)?;
         self.accrued_cost_us += cost;
-        let phys = pages[0];
-        let slots = mk.slots_per_page;
-        let mut used = vec![false; slots as usize];
-        used[0] = true;
-        let state = PageState { phys, used, used_count: 1 };
-        let pi = match mk.free_page_indices.pop() {
-            Some(i) => {
-                mk.pages[i as usize] = Some(state);
-                i
+        Ok(r)
+    }
+
+    /// Batched allocation: `n` blocks for `model`, appended to `out`, with
+    /// the model lookup amortized over the whole batch (one engine iteration
+    /// allocates all of its demand through a single call). On `Err`, blocks
+    /// allocated before the failure REMAIN in `out` — callers keep partial
+    /// progress across preemption retries, exactly as repeated `alloc_block`
+    /// calls always did.
+    pub fn alloc_blocks(
+        &mut self,
+        model: ModelId,
+        n: u32,
+        out: &mut Vec<BlockRef>,
+    ) -> Result<(), KvError> {
+        let mk = self.kv.get_mut(&model).ok_or(KvError::UnknownModel(model))?;
+        let mut cost = 0.0;
+        let mut err = None;
+        for _ in 0..n {
+            match alloc_block_in(&mut self.pool, mk, model) {
+                Ok((r, c)) => {
+                    cost += c;
+                    out.push(r);
+                }
+                Err(e) => {
+                    err = Some(e);
+                    break;
+                }
             }
-            None => {
-                mk.pages.push(Some(state));
-                (mk.pages.len() - 1) as u32
-            }
-        };
-        mk.mapped_pages += 1;
-        mk.used_blocks += 1;
-        if slots > 1 {
-            mk.partial.push(pi);
         }
-        Ok(BlockRef { model, page_idx: pi, slot: 0 })
+        self.accrued_cost_us += cost;
+        match err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
     }
 
     /// Free one token block; a page whose last block is freed is unmapped
     /// immediately only if the model is over its limit, otherwise kept mapped
-    /// (and preferred for reuse) to avoid map churn.
+    /// (and preferred for reuse) to avoid map churn. O(1), no heap allocation.
     pub fn free_block(&mut self, r: BlockRef) -> Result<(), KvError> {
         let mk = self.kv.get_mut(&r.model).ok_or(KvError::UnknownModel(r.model))?;
         let page = mk.pages[r.page_idx as usize]
             .as_mut()
             .ok_or(KvError::UnknownModel(r.model))?;
-        assert!(page.used[r.slot as usize], "double free of {r:?}");
-        page.used[r.slot as usize] = false;
+        assert!(page.bits.get(r.slot), "double free of {r:?}");
+        page.bits.clear(r.slot);
         let was_full = page.used_count == mk.slots_per_page;
         page.used_count -= 1;
         mk.used_blocks -= 1;
@@ -250,14 +412,14 @@ impl Kvcached {
                 let phys = page.phys;
                 mk.pages[r.page_idx as usize] = None;
                 mk.free_page_indices.push(r.page_idx);
-                mk.partial.retain(|&pi| pi != r.page_idx);
+                mk.partial_remove(r.page_idx);
                 mk.mapped_pages -= 1;
                 self.accrued_cost_us += self.pool.free(&[phys]);
                 return Ok(());
             }
         }
         if was_full {
-            mk.partial.push(r.page_idx);
+            mk.partial_push(r.page_idx);
         }
         Ok(())
     }
@@ -279,7 +441,7 @@ impl Kvcached {
                         to_free.push(p.phys);
                         mk.pages[i] = None;
                         mk.free_page_indices.push(i as u32);
-                        mk.partial.retain(|&pi| pi != i as u32);
+                        mk.partial_remove(i as u32);
                     }
                 }
             }
@@ -475,6 +637,69 @@ mod tests {
         k.unregister_kv(m);
         assert!(k.stats().free_bytes > free_before);
         assert_eq!(k.kv_mapped_pages(m), 0);
+        assert!(k.check_conservation());
+    }
+
+    #[test]
+    fn batched_alloc_keeps_partial_progress_on_failure() {
+        let mut k = kvc();
+        let m = ModelId(1);
+        k.register_kv(m, DEFAULT_PAGE_BYTES, 3); // 1 slot/page, limit 3
+        let mut out = Vec::new();
+        match k.alloc_blocks(m, 5, &mut out) {
+            Err(KvError::LimitReached { limit_pages: 3, .. }) => {}
+            other => panic!("expected limit, got {other:?}"),
+        }
+        assert_eq!(out.len(), 3, "blocks before the failure stay allocated");
+        assert_eq!(k.kv_used_blocks(m), 3);
+        assert_eq!(k.kv_mapped_pages(m), 3);
+        for b in out {
+            k.free_block(b).unwrap();
+        }
+        assert!(k.check_conservation());
+    }
+
+    #[test]
+    fn batched_alloc_matches_repeated_single_allocs() {
+        let script = |k: &mut Kvcached, batched: bool| -> Vec<BlockRef> {
+            let m = ModelId(1);
+            k.register_kv(m, 512 * 1024, u32::MAX); // 4 slots/page
+            let mut out = Vec::new();
+            if batched {
+                k.alloc_blocks(m, 11, &mut out).unwrap();
+            } else {
+                for _ in 0..11 {
+                    out.push(k.alloc_block(m).unwrap());
+                }
+            }
+            out
+        };
+        let (mut a, mut b) = (kvc(), kvc());
+        let ra = script(&mut a, true);
+        let rb = script(&mut b, false);
+        assert_eq!(ra, rb, "batched and single-block allocation pick the same slots");
+        assert_eq!(a.kv_mapped_pages(ModelId(1)), b.kv_mapped_pages(ModelId(1)));
+        assert_eq!(a.accrued_cost_us, b.accrued_cost_us);
+    }
+
+    #[test]
+    fn spill_bitmap_geometry_over_64_slots() {
+        // 16 KiB blocks on 2 MiB pages = 128 slots/page: exercises the
+        // boxed-word spill path of the slot bitmap.
+        let mut k = kvc();
+        let m = ModelId(1);
+        k.register_kv(m, 16 * 1024, u32::MAX);
+        let blocks: Vec<BlockRef> = (0..130).map(|_| k.alloc_block(m).unwrap()).collect();
+        assert_eq!(k.kv_mapped_pages(m), 2);
+        assert_eq!(blocks[127], BlockRef { model: m, page_idx: 0, slot: 127 });
+        assert_eq!(blocks[128].page_idx, 1);
+        // Freeing a low slot on page 0 makes it the preferred partial page.
+        k.free_block(blocks[70]).unwrap();
+        let nb = k.alloc_block(m).unwrap();
+        assert_eq!(nb, BlockRef { model: m, page_idx: 0, slot: 70 });
+        let (partial_len, free_slots) = k.debug_partial(m);
+        assert_eq!(free_slots, 2 * 128 - 130);
+        assert!(partial_len >= 1);
         assert!(k.check_conservation());
     }
 

@@ -130,6 +130,260 @@ mod prop_tests {
         check(60, 0xB411_00, gen_script, run_script);
     }
 
+    // ------------------------------------------------------------------
+    // Reference-model equivalence: the production bitmap/arena allocator
+    // vs a naive Vec<bool> + linear-scan implementation with the same
+    // selection policy (top-of-partial-stack pages, lowest free slot,
+    // swap-remove membership). Every alloc/free/limit/balloon outcome —
+    // the exact (page_idx, slot) refs, mapped-page counts, over-limit
+    // reports, error kinds — must match op for op.
+    // ------------------------------------------------------------------
+
+    struct RefPool {
+        free: u32,
+    }
+
+    struct RefKv {
+        slots_per_page: u32,
+        /// page_idx -> (slot occupancy, used_count); None = unmapped.
+        pages: Vec<Option<(Vec<bool>, u32)>>,
+        free_idx: Vec<u32>,
+        partial: Vec<u32>,
+        limit: u32,
+        mapped: u32,
+    }
+
+    impl RefKv {
+        fn new(slots_per_page: u32) -> Self {
+            RefKv {
+                slots_per_page,
+                pages: Vec::new(),
+                free_idx: Vec::new(),
+                partial: Vec::new(),
+                limit: u32::MAX,
+                mapped: 0,
+            }
+        }
+
+        fn partial_remove(&mut self, pi: u32) {
+            if let Some(pos) = self.partial.iter().position(|&x| x == pi) {
+                self.partial.swap_remove(pos);
+            }
+        }
+
+        fn alloc(&mut self, pool: &mut RefPool) -> Result<(u32, u32), &'static str> {
+            if let Some(&pi) = self.partial.last() {
+                let (used, cnt) = self.pages[pi as usize].as_mut().unwrap();
+                let slot = used.iter().position(|u| !*u).unwrap() as u32;
+                used[slot as usize] = true;
+                *cnt += 1;
+                if *cnt == self.slots_per_page {
+                    self.partial.pop();
+                }
+                return Ok((pi, slot));
+            }
+            if self.mapped >= self.limit {
+                return Err("limit");
+            }
+            if pool.free == 0 {
+                return Err("oom");
+            }
+            pool.free -= 1;
+            let mut used = vec![false; self.slots_per_page as usize];
+            used[0] = true;
+            let pi = match self.free_idx.pop() {
+                Some(i) => {
+                    self.pages[i as usize] = Some((used, 1));
+                    i
+                }
+                None => {
+                    self.pages.push(Some((used, 1)));
+                    (self.pages.len() - 1) as u32
+                }
+            };
+            self.mapped += 1;
+            if self.slots_per_page > 1 {
+                self.partial.push(pi);
+            }
+            Ok((pi, 0))
+        }
+
+        fn free(&mut self, pool: &mut RefPool, pi: u32, slot: u32) {
+            let (used, cnt) = self.pages[pi as usize].as_mut().unwrap();
+            assert!(used[slot as usize], "ref model double free");
+            used[slot as usize] = false;
+            let was_full = *cnt == self.slots_per_page;
+            *cnt -= 1;
+            if *cnt == 0 && self.mapped > self.limit {
+                self.pages[pi as usize] = None;
+                self.free_idx.push(pi);
+                self.partial_remove(pi);
+                self.mapped -= 1;
+                pool.free += 1;
+                return;
+            }
+            if was_full {
+                self.partial.push(pi);
+            }
+        }
+
+        fn set_limit(&mut self, pool: &mut RefPool, limit: u32) -> u32 {
+            self.limit = limit;
+            let mut freed = 0u32;
+            if self.mapped > limit {
+                for i in 0..self.pages.len() {
+                    if self.mapped - freed <= limit {
+                        break;
+                    }
+                    if matches!(&self.pages[i], Some((_, 0))) {
+                        self.pages[i] = None;
+                        self.free_idx.push(i as u32);
+                        self.partial_remove(i as u32);
+                        freed += 1;
+                    }
+                }
+                self.mapped -= freed;
+                pool.free += freed;
+            }
+            self.mapped.saturating_sub(limit)
+        }
+    }
+
+    #[derive(Debug, Clone)]
+    enum EqOp {
+        Alloc(u8),
+        Free(u8, usize),   // free the live block at index (mod len)
+        SetLimit(u8, u32),
+        Batch(u8, u8),     // alloc_blocks(n)
+        Tick,
+    }
+
+    fn gen_eq_script(r: &mut Rng) -> Vec<EqOp> {
+        let n = r.range_usize(1, 160);
+        (0..n)
+            .map(|_| match r.below(16) {
+                0..=5 => EqOp::Alloc(r.below(2) as u8),
+                6..=9 => EqOp::Free(r.below(2) as u8, r.below(64)),
+                10..=11 => EqOp::SetLimit(r.below(2) as u8, r.below(24) as u32),
+                12..=14 => EqOp::Batch(r.below(2) as u8, (1 + r.below(12)) as u8),
+                _ => EqOp::Tick,
+            })
+            .collect()
+    }
+
+    fn run_eq_script(ops: &[EqOp]) -> Result<(), String> {
+        let mb = 1024 * 1024;
+        let mut kvc = Kvcached::new(32 * mb, 2 * mb, 2); // 16 pages
+        let mut pool = RefPool { free: 16 };
+        let models = [ModelId(0), ModelId(1)];
+        kvc.register_kv(models[0], 512 * 1024, u32::MAX); // 4 slots/page
+        kvc.register_kv(models[1], 2 * mb, u32::MAX); // 1 slot/page
+        let mut refs = [RefKv::new(4), RefKv::new(1)];
+        let mut live: Vec<Vec<BlockRef>> = vec![Vec::new(); 2];
+
+        for op in ops {
+            match op {
+                EqOp::Alloc(m) => {
+                    let mi = *m as usize;
+                    let got = kvc.alloc_block(models[mi]);
+                    let want = refs[mi].alloc(&mut pool);
+                    match (got, want) {
+                        (Ok(b), Ok((pi, slot))) => {
+                            if (b.page_idx, b.slot) != (pi, slot) {
+                                return Err(format!(
+                                    "alloc drift: got {:?}, ref ({pi},{slot})",
+                                    b
+                                ));
+                            }
+                            live[mi].push(b);
+                        }
+                        (Err(KvError::LimitReached { .. }), Err("limit"))
+                        | (Err(KvError::OutOfPages(_)), Err("oom")) => {}
+                        (g, w) => return Err(format!("error drift: got {g:?}, ref {w:?}")),
+                    }
+                }
+                EqOp::Batch(m, n) => {
+                    let mi = *m as usize;
+                    let before = live[mi].len();
+                    let got = kvc.alloc_blocks(models[mi], *n as u32, &mut live[mi]);
+                    // Drive the reference until it fails too; outcomes and
+                    // every appended (page, slot) must line up pairwise.
+                    let mut want: Result<(), &'static str> = Ok(());
+                    let mut want_refs: Vec<(u32, u32)> = Vec::new();
+                    for _ in 0..*n {
+                        match refs[mi].alloc(&mut pool) {
+                            Ok(b) => want_refs.push(b),
+                            Err(e) => {
+                                want = Err(e);
+                                break;
+                            }
+                        }
+                    }
+                    let appended: Vec<(u32, u32)> =
+                        live[mi][before..].iter().map(|b| (b.page_idx, b.slot)).collect();
+                    if appended != want_refs {
+                        return Err(format!(
+                            "batch drift: got {appended:?}, ref {want_refs:?}"
+                        ));
+                    }
+                    match (&got, &want) {
+                        (Ok(()), Ok(())) => {}
+                        (Err(KvError::LimitReached { .. }), Err(e)) if *e == "limit" => {}
+                        (Err(KvError::OutOfPages(_)), Err(e)) if *e == "oom" => {}
+                        (g, w) => {
+                            return Err(format!("batch error drift: got {g:?}, ref {w:?}"))
+                        }
+                    }
+                }
+                EqOp::Free(m, k) => {
+                    let mi = *m as usize;
+                    if live[mi].is_empty() {
+                        continue;
+                    }
+                    let b = live[mi].remove(k % live[mi].len());
+                    kvc.free_block(b).map_err(|e| e.to_string())?;
+                    refs[mi].free(&mut pool, b.page_idx, b.slot);
+                }
+                EqOp::SetLimit(m, l) => {
+                    let mi = *m as usize;
+                    let got = kvc.set_kv_limit(models[mi], *l).map_err(|e| e.to_string())?;
+                    let want = refs[mi].set_limit(&mut pool, *l);
+                    if got != want {
+                        return Err(format!("over-limit drift: got {got}, ref {want}"));
+                    }
+                }
+                EqOp::Tick => {
+                    kvc.tick_prealloc();
+                }
+            }
+            for (mi, m) in models.iter().enumerate() {
+                if kvc.kv_mapped_pages(*m) != refs[mi].mapped {
+                    return Err(format!(
+                        "mapped-page drift for {m} after {op:?}: kvc={} ref={}",
+                        kvc.kv_mapped_pages(*m),
+                        refs[mi].mapped
+                    ));
+                }
+                if kvc.kv_used_blocks(*m) != live[mi].len() as u64 {
+                    return Err(format!("used-block drift for {m} after {op:?}"));
+                }
+            }
+            if !kvc.check_conservation() {
+                return Err(format!("conservation violated after {op:?}"));
+            }
+        }
+        Ok(())
+    }
+
+    // Element-wise shrinking is pointless for ops; the blanket `Vec<T>`
+    // impl handles prefix/suffix/element removal.
+    impl Shrink for EqOp {}
+
+    #[test]
+    fn bitmap_allocator_matches_reference_model() {
+        check(80, 0xB411_02, gen_eq_script, |s| run_eq_script(s.as_slice()));
+    }
+
     #[test]
     fn shared_kv_never_exceeds_capacity() {
         check(

@@ -8,6 +8,16 @@
 //! The pool is pure bookkeeping plus a timing model; the simulator charges
 //! `alloc_cost`/`free_cost` to its clock, and the real serving path uses the
 //! same pool (with small pages) to govern its PJRT-backed KV tensor.
+//!
+//! # Per-token complexity budget
+//!
+//! The pool sits under `Kvcached::alloc_block`, which the engine calls on
+//! the per-decode-token path, so every operation here is O(1) and
+//! allocation-free: [`PagePool::alloc_one`] pops one page id off a stack
+//! (prealloc buffer first) without constructing a `Vec`, and
+//! [`PagePool::alloc_n`] appends into a caller-owned buffer. The
+//! `(Vec<PhysPage>, cost)`-returning [`PagePool::alloc`] remains as a
+//! convenience wrapper for cold paths (weight loading, tests).
 
 /// Default physical page size: 2 MiB (CUDA VMM minimum granularity).
 pub const DEFAULT_PAGE_BYTES: u64 = 2 * 1024 * 1024;
@@ -93,13 +103,21 @@ impl PagePool {
     /// Allocate `n` physical pages, drawing from the prealloc buffer first.
     /// Returns the pages and the modelled latency in microseconds.
     pub fn alloc(&mut self, n: u32) -> Result<(Vec<PhysPage>, f64), OutOfPages> {
+        let mut out = Vec::with_capacity(n as usize);
+        let cost = self.alloc_n(n, &mut out)?;
+        Ok((out, cost))
+    }
+
+    /// Allocate `n` pages, appending them to `out` (no per-call `Vec`; the
+    /// caller owns and reuses the buffer). Returns the modelled latency in
+    /// microseconds; on `Err`, `out` is untouched.
+    pub fn alloc_n(&mut self, n: u32, out: &mut Vec<PhysPage>) -> Result<f64, OutOfPages> {
         if n == 0 {
-            return Ok((Vec::new(), 0.0));
+            return Ok(0.0);
         }
         if self.free_pages() < n {
             return Err(OutOfPages { requested: n, available: self.free_pages() });
         }
-        let mut out = Vec::with_capacity(n as usize);
         let from_buf = (n as usize).min(self.prealloc.len());
         for _ in 0..from_buf {
             out.push(PhysPage(self.prealloc.pop().unwrap()));
@@ -116,7 +134,26 @@ impl PagePool {
             }
         }
         self.counters.pages_mapped += n as u64;
-        Ok((out, cost))
+        Ok(cost)
+    }
+
+    /// Allocate exactly one page without touching the heap (per-token hot
+    /// path). Identical accounting and cost model to `alloc(1)`.
+    pub fn alloc_one(&mut self) -> Result<(PhysPage, f64), OutOfPages> {
+        if let Some(p) = self.prealloc.pop() {
+            self.counters.prealloc_hits += 1;
+            self.counters.pages_mapped += 1;
+            return Ok((PhysPage(p), 0.0));
+        }
+        match self.free.pop() {
+            Some(p) => {
+                self.counters.prealloc_misses += 1;
+                self.counters.map_batches += 1;
+                self.counters.pages_mapped += 1;
+                Ok((PhysPage(p), MAP_US_BATCH + MAP_US_PER_PAGE))
+            }
+            None => Err(OutOfPages { requested: 1, available: 0 }),
+        }
     }
 
     /// Return pages; they land in the prealloc buffer up to its target, the
@@ -240,5 +277,44 @@ mod tests {
         let mut p = pool();
         let (pages, cost) = p.alloc(0).unwrap();
         assert!(pages.is_empty() && cost == 0.0);
+    }
+
+    #[test]
+    fn alloc_one_matches_alloc_1_accounting() {
+        let mut a = pool();
+        let mut b = pool();
+        a.refill_prealloc();
+        b.refill_prealloc();
+        // Drain through the prealloc buffer into cold pages on both paths.
+        for _ in 0..8 {
+            let (pa, ca) = a.alloc_one().unwrap();
+            let (pb, cb) = b.alloc(1).unwrap();
+            assert_eq!(pa, pb[0]);
+            assert_eq!(ca, cb);
+        }
+        assert_eq!(a.counters.prealloc_hits, b.counters.prealloc_hits);
+        assert_eq!(a.counters.map_batches, b.counters.map_batches);
+        assert_eq!(a.counters.pages_mapped, b.counters.pages_mapped);
+        assert_eq!(a.free_pages(), b.free_pages());
+        let err = {
+            let mut x = pool();
+            while x.alloc_one().is_ok() {}
+            x.alloc_one().unwrap_err()
+        };
+        assert_eq!(err, OutOfPages { requested: 1, available: 0 });
+    }
+
+    #[test]
+    fn alloc_n_appends_and_is_atomic_on_err() {
+        let mut p = pool();
+        let mut buf = Vec::new();
+        let cost = p.alloc_n(10, &mut buf).unwrap();
+        assert_eq!(buf.len(), 10);
+        assert!(cost > 0.0);
+        // A failing alloc_n leaves the buffer untouched.
+        assert!(p.alloc_n(64, &mut buf).is_err());
+        assert_eq!(buf.len(), 10);
+        p.free(&buf);
+        assert_eq!(p.free_pages(), 32);
     }
 }

@@ -61,8 +61,11 @@ impl ModelSpec {
     /// KV-cache bytes per token per GPU - the paper's `token_size`.
     /// K+V over all layers: L * 2 * Hkv * Dh * dtype, divided across TP.
     pub fn kv_bytes_per_token(&self) -> u64 {
-        let full =
-            self.n_layers as u64 * 2 * self.n_kv_heads as u64 * self.d_head as u64 * self.dtype_bytes as u64;
+        let full = self.n_layers as u64
+            * 2
+            * self.n_kv_heads as u64
+            * self.d_head as u64
+            * self.dtype_bytes as u64;
         full / self.tp as u64
     }
 

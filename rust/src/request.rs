@@ -9,6 +9,9 @@ use crate::model::spec::ModelId;
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct RequestId(pub u64);
 
+/// Sentinel for [`Request::kv_slot`]: the request holds no KV blocks.
+pub const NO_KV_SLOT: u32 = u32::MAX;
+
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Phase {
     Queued,
@@ -39,6 +42,11 @@ pub struct Request {
     pub decode_time_accum: f64,
     /// Times this request was preempted (memory pressure).
     pub preemptions: u32,
+    /// Dense slot in the serving engine's block table while the request
+    /// holds KV blocks there ([`NO_KV_SLOT`] otherwise). Engine-local
+    /// bookkeeping: assigned on first block allocation, reset whenever the
+    /// engine releases the request's blocks.
+    pub kv_slot: u32,
 }
 
 impl Request {
@@ -66,6 +74,7 @@ impl Request {
             finish_time: None,
             decode_time_accum: 0.0,
             preemptions: 0,
+            kv_slot: NO_KV_SLOT,
         }
     }
 

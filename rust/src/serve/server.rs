@@ -139,7 +139,8 @@ impl RealServer {
         let mut results: Vec<Option<ServeResult>> = (0..requests.len()).map(|_| None).collect();
         let mut queued: Vec<usize> = Vec::new(); // indices not yet admitted
         let mut not_arrived: Vec<usize> = (0..requests.len()).collect();
-        not_arrived.sort_by(|&a, &b| requests[a].arrival.partial_cmp(&requests[b].arrival).unwrap());
+        not_arrived
+            .sort_by(|&a, &b| requests[a].arrival.partial_cmp(&requests[b].arrival).unwrap());
         not_arrived.reverse(); // pop smallest arrival from the back
 
         loop {
@@ -254,20 +255,16 @@ impl RealServer {
                 m.page_tokens,
             )
         };
-        // Commit pool slots for the full request span (prompt + generation).
+        // Commit pool slots for the full request span (prompt + generation)
+        // in one batched, atomic kvcached call.
         let st = self.models.get_mut(&r.model).unwrap();
         let mut slots = Vec::with_capacity(pages_needed);
-        for _ in 0..pages_needed {
-            match st.et.alloc_slot(&mut self.kvc) {
-                Ok(s) => slots.push(s),
-                Err(KvError::OutOfPages(_)) | Err(KvError::LimitReached { .. }) => {
-                    for s in slots {
-                        st.et.free_slot(&mut self.kvc, s).ok();
-                    }
-                    return Ok(false);
-                }
-                Err(e) => return Err(anyhow!("{e}")),
+        match st.et.alloc_slots(&mut self.kvc, pages_needed, &mut slots) {
+            Ok(()) => {}
+            Err(KvError::OutOfPages(_)) | Err(KvError::LimitReached { .. }) => {
+                return Ok(false); // out of memory: stays queued
             }
+            Err(e) => return Err(anyhow!("{e}")),
         }
         // Scatter prompt KV into the committed slots.
         for t in 0..r.prompt.len() {

@@ -23,10 +23,19 @@
 //!   read (`RateMonitor::rate_at`) is non-mutating and clone-free.
 //! * **O(models + gpus)** control-epoch overhead on top of the placement
 //!   algorithm itself (Algorithm 1 is O(models x gpus) by design).
+//! * **O(lookahead)** arrival memory under lazy rate scaling
+//!   ([`Simulator::run_scaled`]): scaled replicas are generated at the
+//!   cursor, never materialized as a per-point trace copy.
+//!
+//! The layers below carry their own per-token budgets (see the module docs
+//! of `engine::engine` and `kvcached::manager`): one engine iteration does
+//! O(1) amortized, allocation-free block alloc/free per decode token —
+//! no O(batch²) rescans, no O(slots) bitmap scans, no O(partial) retains.
 //!
 //! Anything super-linear in models x gpus per *event* is a regression; the
 //! trend is tracked by `benches/sim_hot_path.rs` (simulated-events/sec,
-//! recorded in BENCH_sim.json).
+//! recorded in BENCH_sim.json; the KV-churn scenario isolates the
+//! allocator under preemption pressure).
 //!
 //! SLO assignment follows the paper's methodology (SS7.1): per-model base
 //! SLOs correspond to dedicated-GPU latency (computed from the perf model),
@@ -47,7 +56,7 @@ use crate::sched::arbitration::{moore_hodgson, Candidate};
 use crate::sched::kvpr::{kvpr, ModelDemand, RateMonitor};
 use crate::sched::placement::{place, EvictionPolicy, PlacementInput};
 use crate::sim::policy::PolicyKind;
-use crate::trace::Trace;
+use crate::trace::{ScaledEvents, Trace, TraceEvent};
 
 #[derive(Debug, Clone)]
 pub struct SimConfig {
@@ -410,8 +419,7 @@ impl Simulator {
 
     // ------------------------------------------------------------- arrivals
 
-    fn on_arrival(&mut self, trace: &Trace, ev_idx: usize) {
-        let e = &trace.events[ev_idx];
+    fn on_arrival(&mut self, e: &TraceEvent) {
         let now = e.t;
         let idx = e.model_idx;
         let (ttft_slo, tpot_slo) = self.slos[idx];
@@ -531,9 +539,9 @@ impl Simulator {
                 Some(res) if res.ready_at <= now + 1e-9 => {
                     let eidx = res.engine_idx;
                     let cap = self.cluster.engines[eidx].max_batch as usize * 2;
-                    if self.cluster.engines[eidx].queue_len() + self.cluster.engines[eidx].running_len()
-                        < cap
-                    {
+                    let load = self.cluster.engines[eidx].queue_len()
+                        + self.cluster.engines[eidx].running_len();
+                    if load < cap {
                         let m = req.model;
                         self.cluster.engines[eidx].admit(req);
                         self.schedule_step(m, now);
@@ -584,7 +592,7 @@ impl Simulator {
         }
         let outcome = {
             let (engines, gpus) = (&mut self.cluster.engines, &mut self.cluster.gpus);
-            let mut ga = GroupAlloc { gpus, group: &group, model: m };
+            let mut ga = GroupAlloc::new(gpus, &group, m);
             engines[eidx].step(now, &self.cfg.perf, &mut ga)
         };
         // Track violations for timelines, then stream each record into the
@@ -871,15 +879,49 @@ impl Simulator {
 
     // ------------------------------------------------------------------ run
 
-    pub fn run(mut self, trace: &Trace) -> (RunMetrics, Vec<TimelineSample>) {
+    pub fn run(self, trace: &Trace) -> (RunMetrics, Vec<TimelineSample>) {
+        self.run_scaled(trace, 1.0)
+    }
+
+    /// As [`run`](Self::run), with the trace's request volume scaled by
+    /// `rate_scale` LAZILY at the arrival cursor: identical output to
+    /// `run(&trace.scale_rate(rate_scale))` (regression-tested) without ever
+    /// materializing the scaled event vector, so sweep points over the same
+    /// base trace share it read-only. The legacy pre-push formulation has no
+    /// cursor to scale through, so it still materializes.
+    pub fn run_scaled(self, trace: &Trace, rate_scale: f64) -> (RunMetrics, Vec<TimelineSample>) {
+        let scaling = (rate_scale - 1.0).abs() > 1e-12;
+        if scaling && (!self.cfg.stream_arrivals || !trace.is_sorted()) {
+            // The lazy cursor needs the streaming loop AND a time-sorted
+            // base: `scale_rate` sorts globally, and the cursor can only
+            // reproduce that order when base events already arrive in time
+            // order. Materialize (which sorts) for the legacy pre-push mode
+            // and for unsorted traces.
+            let scaled = trace.scale_rate(rate_scale);
+            return self.run_inner(&scaled, None);
+        }
+        if scaling {
+            let cursor = ScaledEvents::new(trace, rate_scale);
+            return self.run_inner(trace, Some(cursor));
+        }
+        self.run_inner(trace, None)
+    }
+
+    fn run_inner<'a>(
+        mut self,
+        trace: &'a Trace,
+        mut scaled: Option<ScaledEvents<'a>>,
+    ) -> (RunMetrics, Vec<TimelineSample>) {
         self.initial_placement();
 
         // Arrivals stream from a cursor over the time-sorted trace, keeping
         // the heap at O(active events) instead of O(#trace events). An
         // unsorted trace (none of the generators produce one) gets a sorted
-        // index so semantics never depend on input order.
+        // index so semantics never depend on input order. With a lazy
+        // rate-scaling cursor (`scaled`), that cursor IS the arrival source
+        // and emits in sorted order by construction.
         let stream = self.cfg.stream_arrivals;
-        let order: Option<Vec<usize>> = if stream && !trace.is_sorted() {
+        let order: Option<Vec<usize>> = if scaled.is_none() && stream && !trace.is_sorted() {
             let mut idx: Vec<usize> = (0..trace.events.len()).collect();
             idx.sort_by(|&a, &b| trace.events[a].t.partial_cmp(&trace.events[b].t).unwrap());
             Some(idx)
@@ -890,6 +932,7 @@ impl Simulator {
         let mut next_arrival = 0usize;
         if !stream {
             // Legacy formulation (A/B regression + heap-size benchmarks).
+            debug_assert!(scaled.is_none(), "pre-push mode materializes scaled traces");
             for (i, e) in trace.events.iter().enumerate() {
                 self.push_ev(e.t, Ev::Arrival(i));
             }
@@ -916,23 +959,32 @@ impl Simulator {
             // Arrivals win time ties: in the pre-push formulation they carry
             // the lowest sequence numbers, so `<=` preserves event order.
             let heap_head = self.heap.peek().map(|Reverse((Time(ht), ..))| *ht);
-            let arrival_head = (next_arrival < trace.events.len())
-                .then(|| trace.events[arrival_at(next_arrival)].t);
+            let arrival_head = match &mut scaled {
+                Some(c) => c.peek_t(),
+                None => (next_arrival < trace.events.len())
+                    .then(|| trace.events[arrival_at(next_arrival)].t),
+            };
             let take_arrival = match (arrival_head, heap_head) {
                 (Some(at), Some(ht)) => at <= ht,
                 (Some(_), None) => true,
                 (None, _) => false,
             };
             if take_arrival {
-                let i = arrival_at(next_arrival);
-                let now = trace.events[i].t;
+                let now = arrival_head.expect("take_arrival implies a head");
                 if now > tail_limit {
                     break;
                 }
-                next_arrival += 1;
+                let e = match &mut scaled {
+                    Some(c) => c.next_event().expect("peeked event exists"),
+                    None => {
+                        let i = arrival_at(next_arrival);
+                        next_arrival += 1;
+                        trace.events[i].clone()
+                    }
+                };
                 last_now = now;
                 self.metrics.sim_events += 1;
-                self.on_arrival(trace, i);
+                self.on_arrival(&e);
                 continue;
             }
             let Some(Reverse((Time(now), _, kind, payload))) = self.heap.pop() else {
@@ -944,7 +996,10 @@ impl Simulator {
             last_now = now;
             self.metrics.sim_events += 1;
             match kind {
-                0 => self.on_arrival(trace, payload),
+                0 => {
+                    let e = trace.events[payload].clone();
+                    self.on_arrival(&e);
+                }
                 1 => self.on_step(ModelId(payload as u32), now),
                 2 => {
                     self.on_epoch(now);
@@ -1113,6 +1168,64 @@ mod tests {
             assert_eq!(a.sim_events, b.sim_events, "{}", p.name());
             assert_eq!(a.wall_seconds.to_bits(), b.wall_seconds.to_bits(), "{}", p.name());
         }
+    }
+
+    #[test]
+    fn lazy_rate_scaling_matches_materialized_run() {
+        // run_scaled(trace, f) must be observationally identical to
+        // run(&trace.scale_rate(f)) — same arrivals in the same order, so
+        // bitwise-equal metrics — for both streamed and pre-push loops.
+        let trace = small_trace(5, 300.0, 23);
+        let materialized = trace.scale_rate(2.5);
+        for p in [PolicyKind::Prism, PolicyKind::ServerlessLlm] {
+            for stream in [true, false] {
+                let specs = specs_for(&trace);
+                let mut cfg = SimConfig::new(p, 2);
+                cfg.slo_scale = 10.0;
+                cfg.stream_arrivals = stream;
+                let (a, _) = Simulator::new(cfg.clone(), specs.clone()).run_scaled(&trace, 2.5);
+                let (b, _) = Simulator::new(cfg, specs).run(&materialized);
+                assert_eq!(a.total(), b.total(), "{} stream={stream}", p.name());
+                assert_eq!(
+                    a.ttft_attainment().to_bits(),
+                    b.ttft_attainment().to_bits(),
+                    "{} stream={stream}",
+                    p.name()
+                );
+                assert_eq!(a.sim_events, b.sim_events, "{} stream={stream}", p.name());
+                assert_eq!(
+                    (a.activations, a.evictions, a.migrations, a.preemptions),
+                    (b.activations, b.evictions, b.migrations, b.preemptions),
+                    "{} stream={stream}",
+                    p.name()
+                );
+                assert_eq!(
+                    a.wall_seconds.to_bits(),
+                    b.wall_seconds.to_bits(),
+                    "{} stream={stream}",
+                    p.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lazy_rate_scaling_unsorted_trace_falls_back_to_materializing() {
+        // An unsorted base trace must not go through the lazy cursor (which
+        // assumes time order); run_scaled still matches the materialized run.
+        let mut trace = small_trace(4, 200.0, 37);
+        assert!(trace.events.len() > 4);
+        let n = trace.events.len();
+        trace.events.swap(1, n - 2); // break time order
+        assert!(!trace.is_sorted());
+        let specs = specs_for(&trace);
+        let mut cfg = SimConfig::new(PolicyKind::Prism, 2);
+        cfg.slo_scale = 10.0;
+        let (a, _) = Simulator::new(cfg.clone(), specs.clone()).run_scaled(&trace, 2.0);
+        let (b, _) = Simulator::new(cfg, specs).run(&trace.scale_rate(2.0));
+        assert_eq!(a.total(), b.total());
+        assert_eq!(a.sim_events, b.sim_events);
+        assert_eq!(a.ttft_attainment().to_bits(), b.ttft_attainment().to_bits());
     }
 
     #[test]

@@ -37,12 +37,11 @@ impl SweepPoint {
     }
 
     /// Run this point: policy + GPU count + SLO scale from the point, rate
-    /// scaling applied to `trace`. Pure: identical inputs give bitwise
-    /// identical metrics, which is what makes the parallel sweep safe.
-    ///
-    /// Prefer [`run_prescaled`](Self::run_prescaled) when several points
-    /// share one (trace, rate) pair - this method materializes a scaled
-    /// trace copy per call.
+    /// scaling applied to `trace` lazily at the simulator's arrival cursor
+    /// (`Simulator::run_scaled` — bit-identical to materializing
+    /// `trace.scale_rate(..)`, without the per-point event-vector copy).
+    /// Pure: identical inputs give bitwise identical metrics, which is what
+    /// makes the parallel sweep safe.
     pub fn run(&self, specs: &[ModelSpec], trace: &Trace) -> RunMetrics {
         let mut cfg = SimConfig::new(self.policy, self.n_gpus);
         cfg.slo_scale = self.slo_scale;
@@ -50,16 +49,10 @@ impl SweepPoint {
     }
 
     /// As [`run`](Self::run) but with a caller-tuned `SimConfig` (tau,
-    /// sampling, eviction knobs); the point's rate scale is still applied.
+    /// sampling, eviction knobs); the point's rate scale is still applied
+    /// (lazily, at the arrival cursor).
     pub fn run_with(&self, cfg: SimConfig, specs: &[ModelSpec], trace: &Trace) -> RunMetrics {
-        let scaled;
-        let tr = if (self.rate_scale - 1.0).abs() > 1e-12 {
-            scaled = trace.scale_rate(self.rate_scale);
-            &scaled
-        } else {
-            trace
-        };
-        Simulator::new(cfg, specs.to_vec()).run(tr).0
+        Simulator::new(cfg, specs.to_vec()).run_scaled(trace, self.rate_scale).0
     }
 
     /// Run against a trace the caller has already rate-scaled (shared

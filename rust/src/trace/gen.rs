@@ -184,7 +184,12 @@ pub fn generate(cfg: &TraceGenConfig) -> Trace {
                 let output = rng
                     .lognormal(cfg.output_lognorm.0, cfg.output_lognorm.1)
                     .clamp(4.0, 4096.0) as u32;
-                events.push(TraceEvent { t, model_idx: m, prompt_tokens: prompt, output_tokens: output });
+                events.push(TraceEvent {
+                    t,
+                    model_idx: m,
+                    prompt_tokens: prompt,
+                    output_tokens: output,
+                });
             }
             t = busy_end;
             if hot {

@@ -108,6 +108,120 @@ impl Trace {
     }
 }
 
+/// A replica awaiting emission from the lazy scaled view, ordered by
+/// `(t, seq)` — exactly the order `scale_rate`'s stable time sort produces
+/// (`seq` is generation order, which stable sorting preserves on ties).
+#[derive(Debug)]
+struct PendingReplica {
+    t: f64,
+    seq: u64,
+    ev: TraceEvent,
+}
+
+impl PartialEq for PendingReplica {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t && self.seq == other.seq
+    }
+}
+impl Eq for PendingReplica {}
+impl PartialOrd for PendingReplica {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for PendingReplica {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.t.partial_cmp(&other.t).expect("no NaN event times").then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// Lazy rate-scaled view over a trace: emits the EXACT event sequence
+/// `trace.scale_rate(factor).events` would contain (same RNG stream, same
+/// stable time ordering) without materializing the scaled vector. Sweep
+/// grids share one base trace read-only across points; each point's cursor
+/// holds only the replicas inside one 200 ms jitter lookahead window.
+pub struct ScaledEvents<'a> {
+    base: &'a [TraceEvent],
+    factor: f64,
+    next_base: usize,
+    seq: u64,
+    rng: crate::util::rng::Rng,
+    pending: std::collections::BinaryHeap<std::cmp::Reverse<PendingReplica>>,
+}
+
+impl<'a> ScaledEvents<'a> {
+    /// The base trace must be time-sorted (`Trace::is_sorted`): the cursor
+    /// only has a 200 ms jitter lookahead, so an out-of-order base event
+    /// would be emitted late where `scale_rate`'s global sort would not.
+    /// Callers with possibly-unsorted traces materialize instead (see
+    /// `Simulator::run_scaled`).
+    pub fn new(trace: &'a Trace, factor: f64) -> Self {
+        assert!(factor > 0.0);
+        debug_assert!(trace.is_sorted(), "ScaledEvents requires a time-sorted base trace");
+        ScaledEvents {
+            base: &trace.events,
+            factor,
+            next_base: 0,
+            seq: 0,
+            // Same seed derivation as `Trace::scale_rate`.
+            rng: crate::util::rng::Rng::new(0x5CA1E ^ trace.events.len() as u64),
+            pending: std::collections::BinaryHeap::new(),
+        }
+    }
+
+    /// Expand the next base event into its replicas (possibly zero when
+    /// thinning with factor < 1), consuming the RNG exactly as
+    /// `scale_rate` does.
+    fn expand_one(&mut self) {
+        let e = self.base[self.next_base].clone();
+        self.next_base += 1;
+        let mut copies = self.factor.floor() as usize;
+        if self.rng.f64() < self.factor - copies as f64 {
+            copies += 1;
+        }
+        for c in 0..copies {
+            let t = if c > 0 { e.t + self.rng.range_f64(0.0, 0.200) } else { e.t };
+            self.pending.push(std::cmp::Reverse(PendingReplica {
+                t,
+                seq: self.seq,
+                ev: TraceEvent { t, ..e.clone() },
+            }));
+            self.seq += 1;
+        }
+    }
+
+    /// Arrival time of the next event, if any. Jitter only moves replicas
+    /// LATER than their base event, so the head is final once every base
+    /// event at or before it has been expanded (ties expand too, but their
+    /// replicas carry higher `seq` and sort after the head).
+    pub fn peek_t(&mut self) -> Option<f64> {
+        loop {
+            match self.pending.peek().map(|std::cmp::Reverse(p)| p.t) {
+                Some(t) => {
+                    if self.next_base < self.base.len() && self.base[self.next_base].t <= t {
+                        self.expand_one();
+                    } else {
+                        return Some(t);
+                    }
+                }
+                None => {
+                    if self.next_base < self.base.len() {
+                        self.expand_one();
+                    } else {
+                        return None;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Emit the next event in scaled-trace order.
+    pub fn next_event(&mut self) -> Option<TraceEvent> {
+        self.peek_t()?;
+        self.pending.pop().map(|std::cmp::Reverse(p)| p.ev)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -148,6 +262,36 @@ mod tests {
         let n0 = base.events.len() as f64;
         let t = base.scale_rate(1.5);
         assert!((t.events.len() as f64 / n0 - 1.5).abs() < 0.1);
+    }
+
+    #[test]
+    fn lazy_scaled_view_matches_materialized_exactly() {
+        // The lazy cursor must reproduce scale_rate's output event-for-event
+        // (bitwise-equal times), including fractional thinning/replication
+        // and jitter-induced reordering near 200 ms boundaries.
+        let base = gen::generate(&gen::TraceGenConfig::novita_like(4, 120.0, 9));
+        assert!(base.events.len() > 100);
+        for factor in [0.4, 1.0, 1.5, 2.0, 3.7] {
+            let materialized = base.scale_rate(factor);
+            let mut lazy = ScaledEvents::new(&base, factor);
+            let mut got = Vec::new();
+            while let Some(e) = lazy.next_event() {
+                got.push(e);
+            }
+            assert_eq!(got, materialized.events, "factor {factor}");
+        }
+    }
+
+    #[test]
+    fn lazy_scaled_view_peek_is_stable() {
+        let base = tiny();
+        let mut lazy = ScaledEvents::new(&base, 2.0);
+        while let Some(t) = lazy.peek_t() {
+            assert_eq!(lazy.peek_t(), Some(t), "peek must not consume");
+            let e = lazy.next_event().unwrap();
+            assert_eq!(e.t, t);
+        }
+        assert_eq!(lazy.next_event(), None);
     }
 
     #[test]

@@ -189,6 +189,9 @@ mod tests {
     #[test]
     fn vec_shrink_produces_smaller() {
         let v = vec![3usize, 4, 5];
-        assert!(v.shrink().iter().all(|s| s.len() < v.len() || s.iter().sum::<usize>() <= v.iter().sum::<usize>()));
+        assert!(v
+            .shrink()
+            .iter()
+            .all(|s| s.len() < v.len() || s.iter().sum::<usize>() <= v.iter().sum::<usize>()));
     }
 }
