@@ -9,7 +9,7 @@ use prism::sched::arbitration::{moore_hodgson, Candidate};
 use prism::sched::kvpr::ModelDemand;
 use prism::sched::placement::{place, PlacementInput};
 use prism::request::RequestId;
-use prism::sim::{PolicyKind, SimConfig, Simulator};
+use prism::sim::{SimConfig, Simulator};
 use prism::trace::gen::{generate, TraceGenConfig};
 use prism::util::rng::Rng;
 
@@ -148,7 +148,7 @@ fn bench_trace_and_sim() {
         1,
         8,
         |_| {
-            let cfg = SimConfig::new(PolicyKind::Prism, 2);
+            let cfg = SimConfig::new("prism", 2);
             let (m, _) = Simulator::new(cfg, specs.clone()).run(&trace);
             black_box(m.total())
         },

@@ -29,7 +29,7 @@ use std::time::Instant;
 use prism::bench::harness::Table;
 use prism::metrics::RunMetrics;
 use prism::model::spec::{catalog_subset, ModelId, ModelSpec};
-use prism::sim::{PolicyKind, SimConfig, Simulator};
+use prism::sim::{registry, SimConfig, Simulator};
 use prism::sweep::{resolve_jobs, run_points, SweepGrid};
 use prism::trace::gen::{generate, TraceGenConfig};
 use prism::util::json::{self, Json};
@@ -200,8 +200,8 @@ fn main() {
     for sc in &scenarios {
         let trace = generate(&TraceGenConfig::novita_like(sc.n_models, sc.duration, 7));
         let specs = fleet(sc.n_models, sc.small_models);
-        for policy in PolicyKind::all() {
-            if !policy_filter.is_empty() && !policy.name().contains(&policy_filter) {
+        for policy in registry().names() {
+            if !policy_filter.is_empty() && !policy.contains(&policy_filter) {
                 continue;
             }
             let modes: &[bool] = if prepush { &[true, false] } else { &[true] };
@@ -229,12 +229,11 @@ fn main() {
                 }
                 let m = best.expect("at least one rep ran");
                 let eps = m.sim_events as f64 / wall.max(1e-9);
-                let key =
-                    (sc.name.to_string(), policy.name().to_string(), mode.to_string());
+                let key = (sc.name.to_string(), policy.to_string(), mode.to_string());
                 let speedup = speedup_of(&key, eps, true);
                 table.row(vec![
                     sc.name.into(),
-                    policy.name().into(),
+                    policy.into(),
                     mode.into(),
                     trace.events.len().to_string(),
                     m.sim_events.to_string(),
@@ -244,7 +243,7 @@ fn main() {
                 ]);
                 let mut row = Json::obj();
                 row.set("scenario", Json::Str(sc.name.to_string()));
-                row.set("policy", Json::Str(policy.name().to_string()));
+                row.set("policy", Json::Str(policy.to_string()));
                 row.set("mode", Json::Str(mode.to_string()));
                 row.set("requests", Json::from_f64(trace.events.len() as f64));
                 row.set("completions", Json::from_f64(m.total() as f64));
@@ -265,9 +264,10 @@ fn main() {
         // --policy like the per-policy rows. Churn scenarios are excluded:
         // SweepPoint runs with default GPU memory, so they would not churn.
         if sweep && !sc.small_models {
-            let sweep_policies: Vec<PolicyKind> = PolicyKind::all()
+            let sweep_policies: Vec<&'static str> = registry()
+                .names()
                 .into_iter()
-                .filter(|p| policy_filter.is_empty() || p.name().contains(&policy_filter))
+                .filter(|p| policy_filter.is_empty() || p.contains(&policy_filter))
                 .collect();
             if sweep_policies.is_empty() {
                 eprintln!("--sweep: no policies match --policy {policy_filter}; skipping");

@@ -2,7 +2,8 @@
 //!
 //! Replays a novita-like synthetic trace (bursty groups, heavy-tailed idles,
 //! volatile rates - SS3 statistics) over a simulated 4-GPU cluster under
-//! Prism and all four baselines, printing the attainment table.
+//! every registered policy (Prism, the four paper baselines, and the
+//! seallm latency-aware sharing baseline), printing the attainment table.
 //!
 //! Run: `cargo run --release --example trace_replay`
 
@@ -55,7 +56,7 @@ fn main() {
     );
     for (pt, m) in points.iter().zip(&results) {
         t.row(vec![
-            pt.policy.name().into(),
+            pt.policy.into(),
             format!("{:.3}", m.ttft_attainment()),
             format!("{:.3}", m.tpot_attainment()),
             format!("{:.3}", m.mean_ttft()),

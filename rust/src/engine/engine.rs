@@ -18,7 +18,7 @@
 //!   pops the youngest (last) entry, so indices below the cursor stay
 //!   stable and no `ids` snapshot or O(batch) `position()` rescan exists
 //!   (the old formulation was O(batch²) per iteration);
-//! * per-request KV blocks live in an arena ([`BlockTable`]) keyed by the
+//! * per-request KV blocks live in an arena (`BlockTable`) keyed by the
 //!   request's dense `kv_slot` — block runs are flat block-major
 //!   `Vec<BlockRef>`s whose capacity is recycled across requests, so
 //!   steady-state decode performs no hashing and no allocation;

@@ -8,7 +8,7 @@
 use crate::bench::harness::Table;
 use crate::metrics::RunMetrics;
 use crate::model::spec::{catalog_subset, table3_catalog, ModelId, ModelSpec};
-use crate::sim::{PolicyKind, SimConfig, Simulator};
+use crate::sim::{registry, SimConfig, Simulator};
 use crate::sweep::{run_points, SweepGrid};
 use crate::trace::gen::{generate, TraceGenConfig};
 use crate::trace::Trace;
@@ -43,9 +43,9 @@ fn traces_for_e2e(quick: bool, n_models: usize) -> Vec<(&'static str, Trace)> {
     ]
 }
 
-fn att_row(prefix: Vec<String>, p: PolicyKind, m: &RunMetrics) -> Vec<String> {
+fn att_row(prefix: Vec<String>, policy: &str, m: &RunMetrics) -> Vec<String> {
     let mut row = prefix;
-    row.push(p.name().into());
+    row.push(policy.into());
     row.push(format!("{:.3}", m.ttft_attainment()));
     row.push(format!("{:.3}", m.tpot_attainment()));
     row
@@ -88,10 +88,7 @@ pub fn tab2_muxserve(quick: bool, jobs: usize) -> Vec<Table> {
         &["system", "mean_e2e_s", "p95_e2e_s", "req_tput", "tok_tput",
           "mean_ttft_s", "p95_ttft_s", "mean_tpot_ms", "p95_tpot_ms"],
     );
-    let points = [
-        ("muxserve", PolicyKind::StaticPartition),
-        ("muxserve++", PolicyKind::MuxServePlusPlus),
-    ];
+    let points = [("muxserve", "s-partition"), ("muxserve++", "muxserve++")];
     let results = run_points(&points, jobs, |_, &(_, policy)| {
         let mut cfg = SimConfig::new(policy, 1);
         cfg.slo_scale = 8.0;
@@ -116,14 +113,14 @@ pub fn tab2_muxserve(quick: bool, jobs: usize) -> Vec<Table> {
     vec![t]
 }
 
-/// Fig 5: SLO attainment vs rate scale / SLO scale / #GPUs, 2 traces, all
-/// five systems. Each row of the figure is one sweep grid.
+/// Fig 5: SLO attainment vs rate scale / SLO scale / #GPUs, 2 traces,
+/// every registered policy. Each row of the figure is one sweep grid.
 pub fn fig5_end_to_end(quick: bool, jobs: usize) -> Vec<Table> {
     let specs = eight_models();
     let mut out = Vec::new();
 
     // Row 1: attainment vs rate scale (8 models, 2 GPUs). Scaled traces are
-    // materialized once per (trace, rate) pair; the five policies sharing a
+    // materialized once per (trace, rate) pair; the policies sharing a
     // pair read the same copy instead of re-scaling per point.
     let rate_scales: &[f64] = if quick { &[1.0, 4.0] } else { &[0.5, 1.0, 2.0, 4.0, 8.0] };
     let traces = traces_for_e2e(quick, specs.len());
@@ -221,7 +218,7 @@ pub fn fig7_placement_ablation(quick: bool, jobs: usize) -> Vec<Table> {
     // infinite tau = never migrate = no global scheduling
     let points = [("global-sched-on", 0.2), ("global-sched-off", f64::INFINITY)];
     let results = run_points(&points, jobs, |_, &(_, tau)| {
-        let mut cfg = SimConfig::new(PolicyKind::Prism, 2);
+        let mut cfg = SimConfig::new("prism", 2);
         cfg.slo_scale = 8.0;
         cfg.tau = tau;
         cfg.sample_dt = 10.0;
@@ -292,8 +289,8 @@ pub fn fig8_arbitration_ablation(quick: bool, jobs: usize) -> Vec<Table> {
     let mut points = Vec::new();
     for &s2 in scales {
         for (name, policy) in [
-            ("local-on", PolicyKind::Prism),
-            ("local-off", PolicyKind::MuxServePlusPlus), // FCFS, no slack awareness
+            ("local-on", "prism"),
+            ("local-off", "muxserve++"), // FCFS, no slack awareness
         ] {
             points.push((s2, name, policy));
         }
@@ -345,22 +342,22 @@ pub fn fig9_large_scale(quick: bool, jobs: usize) -> Vec<Table> {
         let ta = m.ttft_attainment();
         a.row(vec![
             pt.n_gpus.to_string(),
-            pt.policy.name().into(),
+            pt.policy.into(),
             format!("{:.3}", ta),
             format!("{:.3}", m.tpot_attainment()),
         ]);
-        if ta >= 0.99 && !best.contains_key(pt.policy.name()) {
-            best.insert(pt.policy.name(), pt.n_gpus);
+        if ta >= 0.99 && !best.contains_key(pt.policy) {
+            best.insert(pt.policy, pt.n_gpus);
         }
     }
     let mut b = Table::new(
         "Fig 9b: GPUs needed for 99% TTFT attainment",
         &["system", "gpus_for_99pct"],
     );
-    for p in PolicyKind::all() {
+    for p in registry().names() {
         b.row(vec![
-            p.name().into(),
-            best.get(p.name())
+            p.into(),
+            best.get(p)
                 .map(|g| g.to_string())
                 .unwrap_or_else(|| format!(">{}", gpus.last().unwrap())),
         ]);
@@ -387,7 +384,7 @@ pub fn fig11_production(quick: bool, jobs: usize) -> Vec<Table> {
     });
     let mut points = Vec::new();
     for ci in 0..companies.len() {
-        for (label, p) in [("before", PolicyKind::StaticPartition), ("after", PolicyKind::Prism)] {
+        for (label, p) in [("before", "s-partition"), ("after", "prism")] {
             points.push((ci, label, p));
         }
     }
@@ -422,7 +419,7 @@ pub fn fig15_sensitivity(quick: bool, jobs: usize) -> Vec<Table> {
     let thresholds: &[f64] =
         if quick { &[10.0, 45.0, 120.0] } else { &[10.0, 20.0, 45.0, 60.0, 80.0, 120.0] };
     let th_results = run_points(thresholds, jobs, |_, &th| {
-        let mut cfg = SimConfig::new(PolicyKind::Prism, 2);
+        let mut cfg = SimConfig::new("prism", 2);
         cfg.slo_scale = 8.0;
         cfg.eviction.idle_threshold = th;
         Simulator::new(cfg, specs.clone()).run(&trace).0
@@ -442,7 +439,7 @@ pub fn fig15_sensitivity(quick: bool, jobs: usize) -> Vec<Table> {
     let windows: &[f64] =
         if quick { &[10.0, 60.0, 300.0] } else { &[10.0, 30.0, 60.0, 120.0, 300.0] };
     let w_results = run_points(windows, jobs, |_, &w| {
-        let mut cfg = SimConfig::new(PolicyKind::Prism, 2);
+        let mut cfg = SimConfig::new("prism", 2);
         cfg.slo_scale = 8.0;
         cfg.monitor_window = w;
         Simulator::new(cfg, specs.clone()).run(&trace).0
@@ -466,7 +463,7 @@ pub fn overhead_frequency(quick: bool) -> Vec<Table> {
     let specs = eight_models();
     let dur = if quick { 240.0 } else { 600.0 };
     let trace = generate(&TraceGenConfig::novita_like(specs.len(), dur, 81)).scale_rate(2.0);
-    let mut cfg = SimConfig::new(PolicyKind::Prism, 2);
+    let mut cfg = SimConfig::new("prism", 2);
     cfg.slo_scale = 8.0;
     let sim = Simulator::new(cfg, specs.clone());
     let (m, _) = sim.run(&trace);

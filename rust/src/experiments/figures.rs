@@ -2,7 +2,7 @@
 
 use crate::bench::harness::Table;
 use crate::model::spec::{ModelId, ModelSpec};
-use crate::sim::{PolicyKind, SimConfig, Simulator};
+use crate::sim::{SimConfig, Simulator};
 use crate::sweep::run_points;
 use crate::trace::gen::{generate, TraceGenConfig};
 use crate::trace::{stats, Trace};
@@ -147,7 +147,7 @@ pub fn two_model_segment(quick: bool) -> (Trace, Vec<ModelSpec>) {
 pub fn fig2_pure_sharing(quick: bool, jobs: usize) -> Vec<Table> {
     let (trace, specs) = two_model_segment(quick);
     let mut out = Vec::new();
-    let policies = [PolicyKind::Qlm, PolicyKind::StaticPartition];
+    let policies = ["qlm", "s-partition"];
     let results = run_points(&policies, jobs, |_, &policy| {
         let mut cfg = SimConfig::new(policy, 1);
         cfg.sample_dt = 2.0;
@@ -159,7 +159,7 @@ pub fn fig2_pure_sharing(quick: bool, jobs: usize) -> Vec<Table> {
         let mut t = Table::new(
             &format!(
                 "Fig 2 ({}): memory + cumulative TTFT violations (final attainment {:.2})",
-                policy.name(),
+                policy,
                 m.ttft_attainment()
             ),
             &["t", "weights_gb", "kv_used_gb", "cum_violations"],
@@ -183,7 +183,7 @@ pub fn fig2_pure_sharing(quick: bool, jobs: usize) -> Vec<Table> {
 pub fn fig6_memory_coordination(quick: bool, jobs: usize) -> Vec<Table> {
     let (trace, specs) = two_model_segment(quick);
     let mut out = Vec::new();
-    let policies = [PolicyKind::Prism, PolicyKind::StaticPartition];
+    let policies = ["prism", "s-partition"];
     let results = run_points(&policies, jobs, |_, &policy| {
         let mut cfg = SimConfig::new(policy, 1);
         cfg.sample_dt = 2.0;
@@ -195,7 +195,7 @@ pub fn fig6_memory_coordination(quick: bool, jobs: usize) -> Vec<Table> {
         let mut t = Table::new(
             &format!(
                 "Fig 6 ({}): KV memory + throughput (token tput {:.0} tok/s busy)",
-                policy.name(),
+                policy,
                 m.token_throughput()
             ),
             &["t", "kv_used_gb", "inst_tok_tput"],

@@ -6,7 +6,7 @@ use crate::engine::loading::{activation_seconds, LoadStrategy};
 use crate::engine::perf::GpuPerf;
 use crate::experiments::e2e::assign_ids;
 use crate::model::spec::table3_catalog;
-use crate::sim::{PolicyKind, SimConfig, Simulator};
+use crate::sim::{SimConfig, Simulator};
 use crate::trace::Trace;
 
 /// Fig 10: model activation latency by size, for the three loading paths.
@@ -70,10 +70,8 @@ pub fn fig14_elastic_overhead(quick: bool) -> Vec<Table> {
             });
         }
         let trace = Trace { name: "fig14".into(), n_models: 2, events, duration: dur };
-        for (name, p) in
-            [("prism", PolicyKind::Prism), ("s-partition", PolicyKind::StaticPartition)]
-        {
-            let mut cfg = SimConfig::new(p, 1);
+        for name in ["prism", "s-partition"] {
+            let mut cfg = SimConfig::new(name, 1);
             cfg.gpu_bytes = 40 * (1 << 30);
             cfg.perf = GpuPerf::a100_40g();
             cfg.slo_scale = 10.0;

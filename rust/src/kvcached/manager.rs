@@ -22,7 +22,7 @@
 //! `alloc_block`/`free_block` sit on the engine's per-decode-token path, so
 //! both are O(1) amortized and heap-allocation-free:
 //!
-//! * slot occupancy is an inline `u64` bitmap per page ([`SlotBits`]);
+//! * slot occupancy is an inline `u64` bitmap per page (`SlotBits`);
 //!   first-free is one `trailing_zeros`, never a `Vec<bool>` scan (geometries
 //!   with more than 64 slots per page spill to a boxed word array, still
 //!   O(slots/64) at worst and allocated only when the page is mapped);

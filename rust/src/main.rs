@@ -11,7 +11,7 @@ use anyhow::Result;
 use prism::bench::harness::Table;
 use prism::experiments;
 use prism::model::spec::{catalog_subset, table3_catalog};
-use prism::sim::{PolicyKind, SimConfig, Simulator};
+use prism::sim::{registry, SimConfig, Simulator};
 use prism::trace::gen::{generate, TraceGenConfig};
 use prism::util::cli::Cli;
 
@@ -113,8 +113,10 @@ fn cmd_serve() -> Result<()> {
 }
 
 fn cmd_sim() -> Result<()> {
+    // The help string is generated from the registry, so the accepted-name
+    // list can never drift from what the lookup below resolves.
     let cli = Cli::new("prism sim", "simulate a policy on a synthetic trace")
-        .opt("policy", "prism", "prism|s-partition|muxserve++|qlm|serverlessllm")
+        .opt("policy", "prism", registry().names_joined())
         .opt("gpus", "2", "GPU count")
         .opt("models", "8", "number of models")
         .opt("trace", "novita", "novita|hyperbolic|arena-chat|arena-battle")
@@ -123,14 +125,10 @@ fn cmd_sim() -> Result<()> {
         .opt("slo-scale", "8.0", "SLO scale factor")
         .opt("seed", "1", "trace seed");
     let a = cli.parse_env(1).map_err(anyhow::Error::msg)?;
-    let policy = match a.get_or("policy", "prism").as_str() {
-        "prism" => PolicyKind::Prism,
-        "s-partition" => PolicyKind::StaticPartition,
-        "muxserve++" => PolicyKind::MuxServePlusPlus,
-        "qlm" => PolicyKind::Qlm,
-        "serverlessllm" => PolicyKind::ServerlessLlm,
-        other => anyhow::bail!("unknown policy {other}"),
-    };
+    let policy_name = a.get_or("policy", "prism");
+    let policy = registry().lookup(&policy_name).ok_or_else(|| {
+        anyhow::anyhow!("unknown policy {policy_name} (valid: {})", registry().names_joined())
+    })?;
     let n_models = a.get_usize("models", 8);
     let dur = a.get_f64("minutes", 10.0) * 60.0;
     let seed = a.get_u64("seed", 1);
@@ -149,7 +147,7 @@ fn cmd_sim() -> Result<()> {
             .take(n_models)
             .collect(),
     );
-    let mut cfg = SimConfig::new(policy, a.get_usize("gpus", 2) as u32);
+    let mut cfg = SimConfig::with_policy(policy, a.get_usize("gpus", 2) as u32);
     cfg.slo_scale = a.get_f64("slo-scale", 8.0);
     // Single run whose table prints percentile columns: keep them exact
     // rather than sketch estimates.
@@ -159,7 +157,7 @@ fn cmd_sim() -> Result<()> {
     let mut t = Table::new(
         &format!(
             "Simulation: {} on {} ({} requests)",
-            policy.name(),
+            policy_name,
             trace.name,
             trace.events.len()
         ),

@@ -1,8 +1,9 @@
 //! Discrete-event cluster simulator binding engines, kvcached, and the
-//! control plane, with Prism and the four baselines as policy variants.
+//! control plane, with serving policies as pluggable [`SchedulingPolicy`]
+//! implementations selected by name through the [`PolicyRegistry`].
 
-pub mod policy;
+pub mod policies;
 pub mod simulator;
 
-pub use policy::PolicyKind;
-pub use simulator::{SimConfig, Simulator};
+pub use policies::{by_name, registry, PolicyHandle, PolicyRegistry, SchedulingPolicy};
+pub use simulator::{PolicyCtx, SimConfig, Simulator};

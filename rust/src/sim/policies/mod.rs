@@ -1,0 +1,314 @@
+//! The pluggable two-level scheduling-policy API.
+//!
+//! Prism's core contribution is a *two-level scheduling policy* — cluster
+//! level placement/eviction plus GPU-level admission — layered over
+//! cross-model memory coordination (paper SS6). This module makes that
+//! surface a first-class API: every policy implements [`SchedulingPolicy`]
+//! and is selected **by name** through the [`PolicyRegistry`], so adding a
+//! new system (another baseline, an ablation) never touches the simulator
+//! core in `sim/simulator.rs`.
+//!
+//! # Trait contract
+//!
+//! Hooks operate exclusively through the [`PolicyCtx`] facade, which
+//! exposes the simulator state policies actually need — demand snapshots,
+//! the residency map and its per-GPU reverse index, pending/GPU queues,
+//! and kvcached memory pressure — never `&mut Simulator` itself. Two rules
+//! keep the sweep engine's `--jobs 1` ≡ `--jobs N` byte-identity guarantee
+//! (see `sweep/mod.rs`) intact:
+//!
+//! * **Deterministic**: a hook's behavior must be a pure function of the
+//!   `PolicyCtx` state and its arguments. No RNG, no wall-clock reads, no
+//!   global mutable state, no iteration over unordered containers (the
+//!   facade only hands out deterministically ordered views — residency is
+//!   a `BTreeMap`, the reverse index is sorted).
+//! * **Scoped**: all mutations go through `PolicyCtx` methods
+//!   (activate/evict/migrate, queue moves, step scheduling), which keep the
+//!   simulator's internal indexes consistent.
+//!
+//! Policies must also be stateless (`Send + Sync`, shared via
+//! [`PolicyHandle`]): one instance is reused across every simulation run
+//! and across sweep worker threads. Per-run state belongs in the simulator
+//! (extend `PolicyCtx` if a new policy needs a view of it).
+//!
+//! # Registry
+//!
+//! [`registry()`] is the process-wide instance holding the six built-ins
+//! in fixed order: the paper's five systems (`prism`, `s-partition`,
+//! `muxserve++`, `qlm`, `serverlessllm`) plus the SeaLLM-inspired
+//! latency-aware sharing baseline (`seallm`). `prism sim --policy`,
+//! `SweepGrid`'s default policy axis, and the benches all resolve names
+//! against it, so the accepted-name list cannot drift between surfaces.
+
+mod muxserve_pp;
+mod prism;
+mod qlm;
+mod s_partition;
+mod seallm;
+mod serverlessllm;
+
+use std::sync::{Arc, OnceLock};
+
+use crate::cluster::GpuId;
+use crate::engine::loading::LoadStrategy;
+use crate::request::Request;
+use crate::sched::kvpr::ModelDemand;
+use crate::sched::placement::{place, PlacementInput};
+
+pub use crate::sim::simulator::PolicyCtx;
+pub use muxserve_pp::MuxServePlusPlus;
+pub use prism::Prism;
+pub use qlm::Qlm;
+pub use s_partition::StaticPartition;
+pub use seallm::SeaLlm;
+pub use serverlessllm::ServerlessLlm;
+
+/// Shared, clonable handle to a policy implementation. Cheap to clone
+/// (`Arc`), safe to share across sweep worker threads.
+pub type PolicyHandle = Arc<dyn SchedulingPolicy>;
+
+/// A two-level serving policy: cluster-level hooks (initial placement,
+/// routing/residency decisions, the control epoch) plus GPU-level
+/// admission classification. See the module docs for the determinism
+/// contract every implementation must uphold.
+pub trait SchedulingPolicy: Send + Sync + std::fmt::Debug {
+    /// Registry key — also the CLI `--policy` name and the table label.
+    /// Must be unique across the registry.
+    fn name(&self) -> &'static str;
+
+    /// Keep every model resident from t=0 (space sharing)? When true, a
+    /// request for a non-resident model waits in `pending` (the model
+    /// simply did not fit at t=0) instead of triggering activation.
+    fn static_residency(&self) -> bool {
+        false
+    }
+
+    /// GPU-level admission: order each GPU's shared queue by prefill slack
+    /// (Moore-Hodgson, Algorithm 2) instead of FCFS? The classification is
+    /// resolved once into `SimConfig::slack_aware` at construction
+    /// (combined with the `PRISM_NO_MH` env override), never re-read on
+    /// the admission hot path.
+    fn slack_aware(&self) -> bool {
+        false
+    }
+
+    /// Weight-loading strategy paid on every activation of a model.
+    fn load_strategy(&self) -> LoadStrategy {
+        LoadStrategy::Parallel
+    }
+
+    /// Cluster-level hook: place models at t=0, before any arrival.
+    /// Default: uniform-demand Algorithm-1 placement of everything that
+    /// fits (no rate information exists yet). Time-sharing policies
+    /// override this to start with an empty cluster.
+    fn initial_placement(&self, ctx: &mut PolicyCtx<'_>) {
+        place_all_uniform(ctx);
+    }
+
+    /// Cluster-level hook: a request arrived (or is being retried at an
+    /// epoch) for a model that is not currently resident. Default:
+    /// space-sharing policies park it in `pending` (see
+    /// [`static_residency`](Self::static_residency)); everyone else
+    /// activates on demand, parking the request only if the model cannot
+    /// fit right now.
+    fn route_nonresident(&self, ctx: &mut PolicyCtx<'_>, req: Request, now: f64) {
+        if self.static_residency() {
+            ctx.push_pending(req);
+            return;
+        }
+        let idx = ctx.model_idx(req.model);
+        match ctx.ensure_resident(idx, now) {
+            Some(_) => ctx.enqueue_resident(req, now),
+            None => ctx.push_pending(req),
+        }
+    }
+
+    /// Cluster-level hook: the control epoch (placement, eviction, group
+    /// dispatch). Runs after monitor housekeeping and before the
+    /// simulator's policy-agnostic pending-retry and re-admission pass.
+    fn on_epoch(&self, _ctx: &mut PolicyCtx<'_>, _now: f64) {}
+}
+
+/// Uniform-demand Algorithm-1 placement of every model (no rate info at
+/// t=0): the default [`SchedulingPolicy::initial_placement`] body, shared
+/// by all space-sharing policies.
+fn place_all_uniform(ctx: &mut PolicyCtx<'_>) {
+    let caps: Vec<f64> = (0..ctx.n_gpus()).map(|g| ctx.shared_kv_bytes(g) as f64).collect();
+    let inputs: Vec<PlacementInput> = ctx
+        .specs()
+        .iter()
+        .map(|s| PlacementInput {
+            demand: ModelDemand {
+                model: s.id,
+                token_rate: 1.0,
+                token_size: s.kv_bytes_per_token() as f64 * s.tp as f64,
+                slo: 0.05,
+                weight_bytes_per_gpu: s.weight_bytes_per_gpu(),
+                tp: s.tp,
+            },
+            current: vec![],
+        })
+        .collect();
+    let result = place(&inputs, &caps, ctx.tau());
+    for (i, p) in result.placements.iter().enumerate() {
+        let gpus: Vec<GpuId> = p.gpus.iter().map(|&g| GpuId(g as u32)).collect();
+        ctx.activate(i, gpus, 0.0);
+    }
+}
+
+/// Name-keyed policy registry. Registration order is enumeration order
+/// (it fixes table row order in sweeps), and duplicate names are rejected.
+#[derive(Debug)]
+pub struct PolicyRegistry {
+    entries: Vec<PolicyHandle>,
+    /// `"name|name|…"` in registration order, for CLI help/error text.
+    joined: String,
+}
+
+impl Default for PolicyRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PolicyRegistry {
+    /// An empty registry. Most callers want [`registry()`] (the global
+    /// instance with the built-ins) instead.
+    pub fn new() -> Self {
+        PolicyRegistry { entries: Vec::new(), joined: String::new() }
+    }
+
+    /// All six built-in policies in fixed order: the paper's five systems,
+    /// then the `seallm` baseline.
+    pub fn with_builtins() -> Self {
+        let mut r = Self::new();
+        let builtins: [PolicyHandle; 6] = [
+            Arc::new(Prism),
+            Arc::new(StaticPartition),
+            Arc::new(MuxServePlusPlus),
+            Arc::new(Qlm),
+            Arc::new(ServerlessLlm),
+            Arc::new(SeaLlm),
+        ];
+        for p in builtins {
+            r.register(p).expect("built-in policy names are unique");
+        }
+        r
+    }
+
+    /// Register a policy under its [`SchedulingPolicy::name`]. Rejects
+    /// duplicates: two policies answering to one name would make
+    /// name-keyed sweep results ambiguous.
+    pub fn register(&mut self, p: PolicyHandle) -> Result<(), String> {
+        if self.lookup(p.name()).is_some() {
+            return Err(format!("policy {:?} is already registered", p.name()));
+        }
+        self.entries.push(p);
+        self.joined = self.entries.iter().map(|e| e.name()).collect::<Vec<_>>().join("|");
+        Ok(())
+    }
+
+    /// Resolve a policy by name.
+    pub fn lookup(&self, name: &str) -> Option<PolicyHandle> {
+        self.entries.iter().find(|e| e.name() == name).cloned()
+    }
+
+    /// Registered names, in registration order.
+    pub fn names(&self) -> Vec<&'static str> {
+        self.entries.iter().map(|e| e.name()).collect()
+    }
+
+    /// `"name|name|…"` in registration order — ready-made for CLI help
+    /// strings and unknown-name errors.
+    pub fn names_joined(&self) -> &str {
+        &self.joined
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// The process-wide registry holding the six built-in policies, built once
+/// on first use.
+pub fn registry() -> &'static PolicyRegistry {
+    static REG: OnceLock<PolicyRegistry> = OnceLock::new();
+    REG.get_or_init(PolicyRegistry::with_builtins)
+}
+
+/// Resolve a built-in policy by name, panicking with the valid-name list on
+/// an unknown name — the ergonomic path for tests, benches, and experiment
+/// code. CLI surfaces use [`registry()`]`.lookup(..)` to report a proper
+/// error instead.
+pub fn by_name(name: &str) -> PolicyHandle {
+    registry().lookup(name).unwrap_or_else(|| {
+        panic!("unknown policy {:?} (valid: {})", name, registry().names_joined())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_round_trips_every_builtin_name() {
+        // register → lookup → name() round-trip, for all six policies
+        // including the new `seallm` baseline.
+        let names = registry().names();
+        assert_eq!(
+            names,
+            vec!["prism", "s-partition", "muxserve++", "qlm", "serverlessllm", "seallm"]
+        );
+        for name in names {
+            let p = registry().lookup(name).expect("registered name resolves");
+            assert_eq!(p.name(), name);
+            assert_eq!(by_name(name).name(), name, "lookup and by_name agree");
+        }
+        assert_eq!(registry().len(), 6);
+        assert!(!registry().is_empty());
+        assert_eq!(
+            registry().names_joined(),
+            "prism|s-partition|muxserve++|qlm|serverlessllm|seallm"
+        );
+    }
+
+    #[test]
+    fn duplicate_name_registration_rejected() {
+        let mut r = PolicyRegistry::with_builtins();
+        let before = r.len();
+        let err = r.register(Arc::new(Prism)).unwrap_err();
+        assert!(err.contains("prism"), "error names the colliding policy: {err}");
+        assert_eq!(r.len(), before, "failed registration must not grow the registry");
+    }
+
+    #[test]
+    fn lookup_unknown_name_is_none() {
+        assert!(registry().lookup("no-such-policy").is_none());
+    }
+
+    #[test]
+    fn classification_matches_paper() {
+        assert!(by_name("s-partition").static_residency());
+        assert!(by_name("muxserve++").static_residency());
+        assert!(!by_name("prism").static_residency());
+        assert!(by_name("prism").slack_aware());
+        assert!(by_name("seallm").slack_aware());
+        assert!(!by_name("qlm").slack_aware());
+        assert!(matches!(by_name("qlm").load_strategy(), LoadStrategy::Naive));
+        assert!(matches!(by_name("serverlessllm").load_strategy(), LoadStrategy::Naive));
+        assert!(matches!(by_name("prism").load_strategy(), LoadStrategy::Parallel));
+    }
+
+    #[test]
+    fn names_unique() {
+        let names = registry().names();
+        let mut d = names.clone();
+        d.sort_unstable();
+        d.dedup();
+        assert_eq!(d.len(), names.len());
+    }
+}

@@ -1,0 +1,21 @@
+//! MuxServe++: spatial sharing through kvcached (models share KV memory on
+//! their GPU) but no eviction, no migration, FCFS admission.
+
+use super::SchedulingPolicy;
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MuxServePlusPlus;
+
+impl SchedulingPolicy for MuxServePlusPlus {
+    fn name(&self) -> &'static str {
+        "muxserve++"
+    }
+
+    fn static_residency(&self) -> bool {
+        true
+    }
+
+    // Everything else is the trait default: uniform t=0 placement, no
+    // epoch action, FCFS admission — the kvcached elasticity it is named
+    // for lives below the policy layer, in the shared KV pool.
+}

@@ -1,0 +1,73 @@
+//! QLM-style time sharing: per-model request groups dispatched to GPUs
+//! under EDF; swapping evicts the resident model and pays an engine
+//! restart (QLM restarts engines on swap [37]).
+
+use crate::engine::loading::LoadStrategy;
+use crate::model::spec::ModelId;
+use crate::request::Request;
+
+use super::{PolicyCtx, SchedulingPolicy};
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Qlm;
+
+impl SchedulingPolicy for Qlm {
+    fn name(&self) -> &'static str {
+        "qlm"
+    }
+
+    fn load_strategy(&self) -> LoadStrategy {
+        LoadStrategy::Naive // engine restart on swap
+    }
+
+    /// Time sharing starts with an empty cluster; groups swap in at epochs.
+    fn initial_placement(&self, _ctx: &mut PolicyCtx<'_>) {}
+
+    /// Group queue; dispatch happens at epochs, never on arrival.
+    fn route_nonresident(&self, ctx: &mut PolicyCtx<'_>, req: Request, _now: f64) {
+        ctx.push_pending(req);
+    }
+
+    fn on_epoch(&self, ctx: &mut PolicyCtx<'_>, now: f64) {
+        dispatch_groups(ctx, now);
+    }
+}
+
+/// Group pending requests by model; dispatch the group whose head has the
+/// earliest deadline onto each idle GPU, swapping models in.
+fn dispatch_groups(ctx: &mut PolicyCtx<'_>, now: f64) {
+    loop {
+        // Find an idle GPU (no resident model with work).
+        let idle_gpu = (0..ctx.n_gpus())
+            .find(|&g| !ctx.residents_on(g).iter().any(|&m| ctx.engine_has_work(m)));
+        let Some(g) = idle_gpu else { break };
+        // Earliest-deadline pending group. (TP groups: QLM picks the first
+        // tp idle GPUs; we simplify by requiring residency via
+        // ensure_resident below.)
+        let head = ctx
+            .pending()
+            .iter()
+            .min_by(|a, b| a.ttft_deadline().partial_cmp(&b.ttft_deadline()).unwrap())
+            .map(|r| r.model);
+        let Some(m) = head else { break };
+        let idx = ctx.model_idx(m);
+        // Swap: evict whatever is resident-and-idle on g, then activate.
+        let victims: Vec<ModelId> = ctx
+            .residents_on(g)
+            .iter()
+            .filter(|cand| !ctx.engine_has_work(**cand))
+            .copied()
+            .collect();
+        for v in victims {
+            ctx.evict_to_pending(v);
+        }
+        if ctx.ensure_resident(idx, now).is_none() {
+            break;
+        }
+        // Dispatch the whole group.
+        let group = ctx.take_pending_of(m);
+        for r in group {
+            ctx.enqueue_resident(r, now);
+        }
+    }
+}

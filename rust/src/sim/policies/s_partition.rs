@@ -1,0 +1,38 @@
+//! Static partition: fixed placement, fixed per-model KV quotas, FCFS.
+
+use super::{place_all_uniform, PolicyCtx, SchedulingPolicy};
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StaticPartition;
+
+impl SchedulingPolicy for StaticPartition {
+    fn name(&self) -> &'static str {
+        "s-partition"
+    }
+
+    fn static_residency(&self) -> bool {
+        true
+    }
+
+    fn initial_placement(&self, ctx: &mut PolicyCtx<'_>) {
+        place_all_uniform(ctx);
+        apply_static_quotas(ctx);
+    }
+}
+
+/// Divide each GPU's post-weight memory evenly among its resident models
+/// as hard KV quotas.
+fn apply_static_quotas(ctx: &mut PolicyCtx<'_>) {
+    for g in 0..ctx.n_gpus() {
+        let residents = ctx.residents_on(g).to_vec();
+        if residents.is_empty() {
+            continue;
+        }
+        let free = ctx.kv_stats(g).free_bytes;
+        let page = ctx.page_bytes(g);
+        let quota_pages = (free / page / residents.len() as u64) as u32;
+        for m in residents {
+            ctx.set_kv_limit(g, m, quota_pages.max(1));
+        }
+    }
+}

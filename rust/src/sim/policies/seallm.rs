@@ -1,0 +1,61 @@
+//! SeaLLM-inspired latency-aware sharing baseline (PAPERS.md:
+//! "SeaLLM: Service-Aware and Latency-Optimized Resource Sharing for Large
+//! Language Model Inference").
+//!
+//! The sixth registered policy, and the first added *through* the
+//! [`SchedulingPolicy`] API rather than by editing the simulator: every
+//! model is placed up front and shares KV elastically (like `muxserve++`),
+//! admission is latency-optimized via slack-aware ordering (like `prism`),
+//! and the only control-epoch action is a conservative latency-aware
+//! unload of long-idle models once their GPU's free-KV headroom turns
+//! scarce — no migration, no static quota walls. Evicted models reactivate
+//! on demand through the default routing hook.
+
+use crate::cluster::GpuId;
+use crate::model::spec::ModelId;
+
+use super::{PolicyCtx, SchedulingPolicy};
+
+/// Unload only when the free-KV fraction on one of the model's GPUs drops
+/// below this: sharing stays maximal while memory is plentiful.
+const PRESSURE_FREE_FRACTION: f64 = 0.15;
+
+/// Idle grace before an unload (s) — far longer than ServerlessLLM's
+/// aggressive 3 s, so latency is not repeatedly spent on cold starts.
+const IDLE_GRACE_SECONDS: f64 = 30.0;
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SeaLlm;
+
+impl SchedulingPolicy for SeaLlm {
+    fn name(&self) -> &'static str {
+        "seallm"
+    }
+
+    fn slack_aware(&self) -> bool {
+        true // latency-optimized admission
+    }
+
+    fn on_epoch(&self, ctx: &mut PolicyCtx<'_>, now: f64) {
+        let candidates: Vec<(ModelId, f64, Vec<GpuId>)> =
+            ctx.residency().values().map(|r| (r.model, r.last_active, r.gpus.clone())).collect();
+        for (m, last_active, gpus) in candidates {
+            if ctx.engine_has_work(m) {
+                continue;
+            }
+            if now - last_active <= IDLE_GRACE_SECONDS {
+                continue;
+            }
+            let min_free = gpus
+                .iter()
+                .map(|g| {
+                    let st = ctx.kv_stats(g.0 as usize);
+                    st.free_bytes as f64 / st.total_bytes as f64
+                })
+                .fold(1.0, f64::min);
+            if min_free < PRESSURE_FREE_FRACTION {
+                ctx.evict_to_pending(m);
+            }
+        }
+    }
+}

@@ -1,0 +1,40 @@
+//! ServerlessLLM-style: models unloaded when idle; reactivation pays the
+//! cold-start path; unbounded batching.
+
+use crate::engine::loading::LoadStrategy;
+use crate::model::spec::ModelId;
+
+use super::{PolicyCtx, SchedulingPolicy};
+
+/// Aggressive unloading: idle this long means the model is released, with
+/// no memory-pressure gate at all.
+const IDLE_UNLOAD_SECONDS: f64 = 3.0;
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServerlessLlm;
+
+impl SchedulingPolicy for ServerlessLlm {
+    fn name(&self) -> &'static str {
+        "serverlessllm"
+    }
+
+    fn load_strategy(&self) -> LoadStrategy {
+        LoadStrategy::Naive // full cold start
+    }
+
+    /// Serverless starts cold: nothing is resident until requested.
+    fn initial_placement(&self, _ctx: &mut PolicyCtx<'_>) {}
+
+    fn on_epoch(&self, ctx: &mut PolicyCtx<'_>, now: f64) {
+        let candidates: Vec<(ModelId, f64)> =
+            ctx.residency().values().map(|r| (r.model, r.last_active)).collect();
+        for (m, last_active) in candidates {
+            if ctx.engine_has_work(m) {
+                continue;
+            }
+            if now - last_active > IDLE_UNLOAD_SECONDS {
+                ctx.evict_to_pending(m);
+            }
+        }
+    }
+}

@@ -25,7 +25,11 @@
 //! * **Grid enumeration is fixed**: [`SweepGrid::points`] nests
 //!   trace → rate scale → SLO scale → GPU count → seed → policy, matching
 //!   the hand-rolled loops it replaced, so tables keep their historical row
-//!   order.
+//!   order. The default policy axis is the registry's registration order
+//!   (`crate::sim::registry()`), and policies are keyed by name, so the
+//!   same determinism contract extends to any registered
+//!   `SchedulingPolicy` — policy hooks must be pure w.r.t. their
+//!   `PolicyCtx` (see `sim/policies`).
 //!
 //! `jobs = 0` means "auto": the `PRISM_JOBS` env var if set, else
 //! `std::thread::available_parallelism()`.

@@ -3,7 +3,7 @@
 
 use crate::metrics::RunMetrics;
 use crate::model::spec::ModelSpec;
-use crate::sim::{PolicyKind, SimConfig, Simulator};
+use crate::sim::{registry, SimConfig, Simulator};
 use crate::trace::Trace;
 
 /// One independent simulation run in an experiment grid. `trace` indexes
@@ -12,7 +12,9 @@ use crate::trace::Trace;
 /// before the sweep starts.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SweepPoint {
-    pub policy: PolicyKind,
+    /// Registry name of the policy (see `sim/policies`): points stay
+    /// `Copy` + comparable, and resolve to the policy object only when run.
+    pub policy: &'static str,
     pub trace: usize,
     pub n_gpus: u32,
     pub rate_scale: f64,
@@ -32,7 +34,7 @@ impl SweepPoint {
             self.rate_scale,
             self.slo_scale,
             self.seed,
-            self.policy.name()
+            self.policy
         )
     }
 
@@ -73,7 +75,7 @@ impl SweepPoint {
 /// this replaced.
 #[derive(Debug, Clone)]
 pub struct SweepGrid {
-    policies: Vec<PolicyKind>,
+    policies: Vec<&'static str>,
     traces: Vec<usize>,
     gpus: Vec<u32>,
     rate_scales: Vec<f64>,
@@ -88,12 +90,13 @@ impl Default for SweepGrid {
 }
 
 impl SweepGrid {
-    /// A single-point grid: all five policies over trace 0, 2 GPUs, unit
+    /// A single-point grid: every registered policy (sourced from the
+    /// global registry, in registration order) over trace 0, 2 GPUs, unit
     /// rate scale, SLO scale 8 (the SS7.2 default), seed 0. Override axes
     /// with the builder methods.
     pub fn new() -> Self {
         SweepGrid {
-            policies: PolicyKind::all().to_vec(),
+            policies: registry().names(),
             traces: vec![0],
             gpus: vec![2],
             rate_scales: vec![1.0],
@@ -102,7 +105,8 @@ impl SweepGrid {
         }
     }
 
-    pub fn policies(mut self, ps: &[PolicyKind]) -> Self {
+    /// Restrict the policy axis to the given registry names.
+    pub fn policies(mut self, ps: &[&'static str]) -> Self {
         self.policies = ps.to_vec();
         self
     }
@@ -185,16 +189,13 @@ mod tests {
 
     #[test]
     fn grid_enumerates_full_product_in_fixed_order() {
-        let g = SweepGrid::new()
-            .policies(&[PolicyKind::Prism, PolicyKind::Qlm])
-            .traces(2)
-            .rate_scales(&[1.0, 4.0]);
+        let g = SweepGrid::new().policies(&["prism", "qlm"]).traces(2).rate_scales(&[1.0, 4.0]);
         assert_eq!(g.len(), 2 * 2 * 2);
         let pts = g.points();
         assert_eq!(pts.len(), 8);
         // Policies innermost, then seeds/gpus/slo (singletons), rate, trace.
-        assert_eq!(pts[0].policy, PolicyKind::Prism);
-        assert_eq!(pts[1].policy, PolicyKind::Qlm);
+        assert_eq!(pts[0].policy, "prism");
+        assert_eq!(pts[1].policy, "qlm");
         assert_eq!(pts[0].trace, 0);
         assert_eq!(pts[0].rate_scale, 1.0);
         assert_eq!(pts[2].rate_scale, 4.0);
@@ -214,9 +215,34 @@ mod tests {
     }
 
     #[test]
-    fn default_grid_is_all_policies_one_point_each() {
+    fn default_grid_policy_axis_comes_from_the_registry() {
+        // One point per registered policy, in registration order — the
+        // default list can never drift from the registry.
         let g = SweepGrid::new();
-        assert_eq!(g.len(), PolicyKind::all().len());
+        assert_eq!(g.len(), registry().len());
+        let pts = g.points();
+        let names: Vec<&str> = pts.iter().map(|p| p.policy).collect();
+        assert_eq!(names, registry().names());
         assert!(!g.is_empty());
+    }
+
+    #[test]
+    fn registry_registered_sixth_policy_runs_in_a_sweep_grid() {
+        // The new trait-API policy (seallm) is a first-class sweep citizen:
+        // enumerate it through a grid and run its point end to end.
+        use crate::experiments::e2e::assign_ids;
+        use crate::model::spec::catalog_subset;
+        use crate::trace::gen::{generate, TraceGenConfig};
+        let g = SweepGrid::new().policies(&["seallm"]).slo_scales(&[10.0]);
+        let pts = g.points();
+        assert_eq!(pts.len(), 1);
+        assert_eq!(pts[0].policy, "seallm");
+        let trace = generate(&TraceGenConfig::novita_like(4, 180.0, 11));
+        let specs = assign_ids(
+            catalog_subset(30).into_iter().filter(|m| !m.is_tp()).take(4).collect(),
+        );
+        let m = pts[0].run(&specs, &trace);
+        assert!(m.total() > 0, "seallm produced no completions");
+        assert!(m.completed() > 0, "seallm finished nothing");
     }
 }

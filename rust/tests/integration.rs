@@ -4,7 +4,7 @@
 
 use prism::experiments::e2e::assign_ids;
 use prism::model::spec::{table3_catalog, ModelId};
-use prism::sim::{PolicyKind, SimConfig, Simulator};
+use prism::sim::{SimConfig, Simulator};
 use prism::trace::gen::{generate, TraceGenConfig};
 
 fn models_8x8b() -> Vec<prism::model::spec::ModelSpec> {
@@ -28,9 +28,9 @@ fn paper_ordering_prism_dominates_time_sharing() {
         cfg.slo_scale = 8.0;
         Simulator::new(cfg, specs.clone()).run(&trace).0
     };
-    let prism = run(PolicyKind::Prism);
-    let qlm = run(PolicyKind::Qlm);
-    let sls = run(PolicyKind::ServerlessLlm);
+    let prism = run("prism");
+    let qlm = run("qlm");
+    let sls = run("serverlessllm");
     assert!(
         prism.ttft_attainment() > qlm.ttft_attainment() + 0.1,
         "prism {} vs qlm {}",
@@ -82,8 +82,8 @@ fn paper_ordering_elasticity_beats_static_quotas_under_pressure() {
         cfg.slo_scale = 8.0;
         Simulator::new(cfg, specs.clone()).run(&trace).0
     };
-    let elastic = run(PolicyKind::MuxServePlusPlus);
-    let quotas = run(PolicyKind::StaticPartition);
+    let elastic = run("muxserve++");
+    let quotas = run("s-partition");
     assert!(
         elastic.mean_ttft() < quotas.mean_ttft(),
         "elastic {} vs quotas {}",
@@ -108,7 +108,7 @@ fn tp_models_serve_correctly_across_gpus() {
         })
         .collect();
     let trace = prism::trace::Trace { name: "tp".into(), n_models: 2, events, duration: 60.0 };
-    let mut cfg = SimConfig::new(PolicyKind::Prism, 4);
+    let mut cfg = SimConfig::new("prism", 4);
     cfg.slo_scale = 10.0;
     let (m, _) = Simulator::new(cfg, specs).run(&trace);
     assert_eq!(m.completed(), 60, "all TP-model requests served");
@@ -118,7 +118,7 @@ fn tp_models_serve_correctly_across_gpus() {
 fn per_model_attainment_accounting() {
     let specs = models_8x8b();
     let trace = generate(&TraceGenConfig::novita_like(8, 240.0, 17));
-    let mut cfg = SimConfig::new(PolicyKind::Prism, 2);
+    let mut cfg = SimConfig::new("prism", 2);
     cfg.slo_scale = 12.0;
     let (m, _) = Simulator::new(cfg, specs).run(&trace);
     // Per-model attainments aggregate consistently with the global one.
@@ -142,7 +142,7 @@ fn determinism_regression_fixed_seed() {
     // formulation exactly, for Prism and a time-sharing baseline.
     let specs = models_8x8b();
     let trace = generate(&TraceGenConfig::novita_like(8, 300.0, 1234)).scale_rate(2.0);
-    for p in [PolicyKind::Prism, PolicyKind::ServerlessLlm] {
+    for p in ["prism", "serverlessllm"] {
         let run = |stream: bool| {
             let mut cfg = SimConfig::new(p, 2);
             cfg.slo_scale = 8.0;
@@ -151,26 +151,16 @@ fn determinism_regression_fixed_seed() {
         };
         let a = run(true);
         for other in [run(true), run(false)] {
-            assert_eq!(a.total(), other.total(), "{}", p.name());
-            assert_eq!(
-                a.ttft_attainment().to_bits(),
-                other.ttft_attainment().to_bits(),
-                "{}",
-                p.name()
-            );
-            assert_eq!(
-                a.tpot_attainment().to_bits(),
-                other.tpot_attainment().to_bits(),
-                "{}",
-                p.name()
-            );
+            assert_eq!(a.total(), other.total(), "{}", p);
+            assert_eq!(a.ttft_attainment().to_bits(), other.ttft_attainment().to_bits(), "{}", p);
+            assert_eq!(a.tpot_attainment().to_bits(), other.tpot_attainment().to_bits(), "{}", p);
             assert_eq!(
                 (a.activations, a.evictions, a.migrations, a.preemptions),
                 (other.activations, other.evictions, other.migrations, other.preemptions),
                 "{}",
-                p.name()
+                p
             );
-            assert_eq!(a.sim_events, other.sim_events, "{}", p.name());
+            assert_eq!(a.sim_events, other.sim_events, "{}", p);
         }
     }
 }

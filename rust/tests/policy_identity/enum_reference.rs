@@ -1,76 +1,75 @@
-//! The discrete-event cluster simulator.
+//! Byte-for-byte reference copy of the PRE-REFACTOR enum-dispatch simulator
+//! (`sim/simulator.rs` + `sim/policy.rs` as of commit 59e1467), with
+//! `PolicyKind` matches hardwired exactly as they were. The A/B test in
+//! `main.rs` replays identical traces through this reference and through the
+//! trait-dispatch simulator and asserts bitwise-identical metrics, locking
+//! the policy-API refactor to the historical behavior.
 //!
-//! Replays a `Trace` against a `Cluster` under a
-//! [`SchedulingPolicy`](crate::sim::policies::SchedulingPolicy), producing
-//! `RunMetrics` + timeline samples. Event kinds: request arrivals, engine
-//! iterations (variable duration from the perf model), control epochs
-//! (placement/eviction), and timeline samples.
-//!
-//! The simulator core is policy-agnostic: every policy decision (initial
-//! placement, non-resident routing, the control epoch, load strategy,
-//! admission classification) dispatches through the policy trait, with
-//! hooks operating on a [`PolicyCtx`] facade over this module's state. The
-//! policies themselves live in `sim/policies/`.
-//!
-//! # Hot-path complexity budget
-//!
-//! The event loop is sized for cluster-scale replays (50-100 models on
-//! 16-32 GPUs over hour-long traces), so per-event work is bounded:
-//!
-//! * **O(log heap)** heap pop/push per event, with the heap held to
-//!   O(active events): arrivals stream from the time-sorted trace through a
-//!   cursor instead of being pre-pushed (`SimConfig::stream_arrivals`).
-//! * **O(1)** `ModelId -> specs index` via `model_index`, built once at
-//!   construction - never a linear scan of `specs`.
-//! * **O(residents on that GPU)** for per-GPU queries via the cluster's
-//!   reverse index (`Cluster::residents_on`), kept in sync by
-//!   activate/evict/migrate - never a scan of the full residency map.
-//! * **O(models)** demand refresh at most once per distinct event time
-//!   (`refresh_demand`, invalidated when token rates record); the monitor
-//!   read (`RateMonitor::rate_at`) is non-mutating and clone-free.
-//! * **O(models + gpus)** control-epoch overhead on top of the placement
-//!   algorithm itself (Algorithm 1 is O(models x gpus) by design).
-//! * **O(lookahead)** arrival memory under lazy rate scaling
-//!   ([`Simulator::run_scaled`]): scaled replicas are generated at the
-//!   cursor, never materialized as a per-point trace copy.
-//!
-//! The layers below carry their own per-token budgets (see the module docs
-//! of `engine::engine` and `kvcached::manager`): one engine iteration does
-//! O(1) amortized, allocation-free block alloc/free per decode token —
-//! no O(batch²) rescans, no O(slots) bitmap scans, no O(partial) retains.
-//!
-//! Anything super-linear in models x gpus per *event* is a regression; the
-//! trend is tracked by `benches/sim_hot_path.rs` (simulated-events/sec,
-//! recorded in BENCH_sim.json; the KV-churn scenario isolates the
-//! allocator under preemption pressure).
-//!
-//! SLO assignment follows the paper's methodology (SS7.1): per-model base
-//! SLOs correspond to dedicated-GPU latency (computed from the perf model),
-//! then scaled by `slo_scale`.
+//! Do not "improve" this module: its value is that it does NOT evolve with
+//! the library. It only consumes public crate APIs (cluster, engines,
+//! kvcached, sched, trace, metrics), so it stays compilable without keeping
+//! any legacy code in the library itself.
+#![allow(dead_code)]
+
+/// The pre-refactor policy enum, verbatim.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    Prism,
+    StaticPartition,
+    MuxServePlusPlus,
+    Qlm,
+    ServerlessLlm,
+}
+
+impl PolicyKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            PolicyKind::Prism => "prism",
+            PolicyKind::StaticPartition => "s-partition",
+            PolicyKind::MuxServePlusPlus => "muxserve++",
+            PolicyKind::Qlm => "qlm",
+            PolicyKind::ServerlessLlm => "serverlessllm",
+        }
+    }
+
+    pub fn all() -> [PolicyKind; 5] {
+        [
+            PolicyKind::Prism,
+            PolicyKind::StaticPartition,
+            PolicyKind::MuxServePlusPlus,
+            PolicyKind::Qlm,
+            PolicyKind::ServerlessLlm,
+        ]
+    }
+
+    pub fn static_residency(self) -> bool {
+        matches!(self, PolicyKind::StaticPartition | PolicyKind::MuxServePlusPlus)
+    }
+
+    pub fn slack_aware(self) -> bool {
+        matches!(self, PolicyKind::Prism)
+    }
+}
 
 use std::cmp::Reverse;
 use std::collections::{BTreeMap, BTreeSet, BinaryHeap, HashMap};
-use std::sync::Arc;
 
-use crate::cluster::gpu::GroupAlloc;
-use crate::cluster::{Cluster, GpuId, Residency};
-use crate::engine::perf::GpuPerf;
-use crate::kvcached::{KvError, MemStats};
-use crate::metrics::{RunMetrics, TimelineSample};
-use crate::model::spec::{ModelId, ModelSpec};
-use crate::request::{Phase, Request};
-use crate::sched::arbitration::{moore_hodgson, Candidate};
-use crate::sched::kvpr::{kvpr, ModelDemand, RateMonitor};
-use crate::sched::placement::EvictionPolicy;
-use crate::sim::policies::{by_name, PolicyHandle};
-use crate::trace::{ScaledEvents, Trace, TraceEvent};
+use prism::cluster::gpu::GroupAlloc;
+use prism::cluster::{Cluster, GpuId};
+use prism::engine::loading::LoadStrategy;
+use prism::engine::perf::GpuPerf;
+use prism::kvcached::KvError;
+use prism::metrics::{RunMetrics, TimelineSample};
+use prism::model::spec::{ModelId, ModelSpec};
+use prism::request::{Phase, Request};
+use prism::sched::arbitration::{moore_hodgson, Candidate};
+use prism::sched::kvpr::{kvpr, ModelDemand, RateMonitor};
+use prism::sched::placement::{place, EvictionPolicy, PlacementInput};
+use prism::trace::{ScaledEvents, Trace, TraceEvent};
 
 #[derive(Debug, Clone)]
 pub struct SimConfig {
-    /// The scheduling policy driving this run, shared and stateless; see
-    /// `sim/policies/`. Resolved from a registry name by
-    /// [`SimConfig::new`].
-    pub policy: PolicyHandle,
+    pub policy: PolicyKind,
     pub n_gpus: u32,
     pub gpu_bytes: u64,
     pub gpus_per_node: u32,
@@ -108,17 +107,9 @@ pub struct SimConfig {
 }
 
 impl SimConfig {
-    /// Config for the named policy, resolved against the global
-    /// [`registry`](crate::sim::policies::registry); panics on an unknown
-    /// name (CLI surfaces pre-validate via the registry to report a proper
-    /// error). Use [`with_policy`](Self::with_policy) for a policy object
-    /// that is not globally registered.
-    pub fn new(policy: &str, n_gpus: u32) -> Self {
-        Self::with_policy(by_name(policy), n_gpus)
-    }
-
-    pub fn with_policy(policy: PolicyHandle, n_gpus: u32) -> Self {
+    pub fn new(policy: PolicyKind, n_gpus: u32) -> Self {
         SimConfig {
+            policy,
             n_gpus,
             gpu_bytes: 80 * (1 << 30),
             gpus_per_node: 8,
@@ -134,7 +125,6 @@ impl SimConfig {
             slack_aware: policy.slack_aware() && std::env::var("PRISM_NO_MH").is_err(),
             stream_arrivals: true,
             metrics_full_dump: false,
-            policy,
         }
     }
 }
@@ -290,6 +280,61 @@ impl Simulator {
 
     // ------------------------------------------------------------ placement
 
+    /// Initial placement at t=0. Space-sharing policies (and Prism) pre-place
+    /// everything that fits; time-sharing policies start empty.
+    fn initial_placement(&mut self) {
+        match self.cfg.policy {
+            PolicyKind::Qlm | PolicyKind::ServerlessLlm => {}
+            _ => {
+                // Uniform-demand Algorithm 1 placement (no rate info yet).
+                let caps: Vec<f64> = (0..self.cluster.n_gpus())
+                    .map(|g| self.cluster.gpus[g].kvc.shared_kv_bytes() as f64)
+                    .collect();
+                let inputs: Vec<PlacementInput> = self
+                    .specs
+                    .iter()
+                    .map(|s| PlacementInput {
+                        demand: ModelDemand {
+                            model: s.id,
+                            token_rate: 1.0,
+                            token_size: s.kv_bytes_per_token() as f64 * s.tp as f64,
+                            slo: 0.05,
+                            weight_bytes_per_gpu: s.weight_bytes_per_gpu(),
+                            tp: s.tp,
+                        },
+                        current: vec![],
+                    })
+                    .collect();
+                let result = place(&inputs, &caps, self.cfg.tau);
+                for (i, p) in result.placements.iter().enumerate() {
+                    let spec = self.specs[i].clone();
+                    let gpus: Vec<GpuId> = p.gpus.iter().map(|&g| GpuId(g as u32)).collect();
+                    let _ = self.cluster.activate(&spec, gpus, 0.0);
+                }
+                if self.cfg.policy == PolicyKind::StaticPartition {
+                    self.apply_static_quotas();
+                }
+            }
+        }
+    }
+
+    /// Static partition: divide each GPU's post-weight memory evenly among
+    /// its resident models as hard KV quotas.
+    fn apply_static_quotas(&mut self) {
+        for g in 0..self.cluster.n_gpus() {
+            let residents = self.cluster.residents_on(g).to_vec();
+            if residents.is_empty() {
+                continue;
+            }
+            let free = self.cluster.gpus[g].kvc.stats().free_bytes;
+            let page = self.cluster.gpus[g].kvc.page_bytes();
+            let quota_pages = (free / page / residents.len() as u64) as u32;
+            for m in residents {
+                let _ = self.cluster.gpus[g].kvc.set_kv_limit(m, quota_pages.max(1));
+            }
+        }
+    }
+
     /// Pick GPUs for activating `spec` (lowest KVPR first, paper SS6.1).
     fn pick_gpus(&mut self, spec: &ModelSpec, now: f64) -> Vec<GpuId> {
         self.refresh_demand(now);
@@ -331,9 +376,13 @@ impl Simulator {
         if let Some(r) = self.cluster.residency.get(&spec.id) {
             return Some(r.ready_at);
         }
-        // Loading strategy is a policy classification (e.g. QLM restarts
-        // engines on swap, ServerlessLLM pays the full cold start).
-        self.cluster.load_strategy = self.cfg.policy.load_strategy();
+        // Choose loading strategy per policy.
+        self.cluster.load_strategy = match self.cfg.policy {
+            PolicyKind::Prism => LoadStrategy::Parallel,
+            PolicyKind::Qlm => LoadStrategy::Naive, // engine restart on swap
+            PolicyKind::ServerlessLlm => LoadStrategy::Naive, // full cold start
+            _ => LoadStrategy::Parallel,
+        };
         const MAX_ACTIVATION_ATTEMPTS: usize = 8;
         for _ in 0..MAX_ACTIVATION_ATTEMPTS {
             let gpus = self.pick_gpus(&spec, now);
@@ -403,13 +452,31 @@ impl Simulator {
     }
 
     fn route(&mut self, req: Request, now: f64) {
-        if self.cluster.is_resident(req.model) {
-            self.enqueue_on_gpu(req, now);
-        } else {
-            // Policy decision: activate on demand, park in `pending` (for
-            // an epoch retry), or group-queue for epoch dispatch.
-            let policy = Arc::clone(&self.cfg.policy);
-            policy.route_nonresident(&mut PolicyCtx::new(self), req, now);
+        let idx = self.idx_of(req.model);
+        let resident = self.cluster.is_resident(req.model);
+        match self.cfg.policy {
+            PolicyKind::Qlm => {
+                // Group queue; dispatch at epochs.
+                if resident {
+                    self.enqueue_on_gpu(req, now);
+                } else {
+                    self.pending.push(req);
+                }
+            }
+            _ => {
+                if resident {
+                    self.enqueue_on_gpu(req, now);
+                } else if self.cfg.policy.static_residency() {
+                    // Static policies: model should have been placed at t=0;
+                    // if it did not fit, requests wait (and violate SLOs).
+                    self.pending.push(req);
+                } else {
+                    match self.ensure_resident(idx, now) {
+                        Some(_) => self.enqueue_on_gpu(req, now),
+                        None => self.pending.push(req),
+                    }
+                }
+            }
         }
     }
 
@@ -449,7 +516,7 @@ impl Simulator {
             // Admit the feasible set in EDF order, then the deferred ones
             // behind them: Moore-Hodgson decides priority, not starvation -
             // deferred requests are served late, not dropped (SS6.2).
-            let mut order: BTreeMap<crate::request::RequestId, usize> = BTreeMap::new();
+            let mut order: BTreeMap<prism::request::RequestId, usize> = BTreeMap::new();
             for (i, id) in sched.admitted.iter().chain(sched.deferred.iter()).enumerate() {
                 order.insert(*id, i);
             }
@@ -570,9 +637,15 @@ impl Simulator {
         for mon in &mut self.monitors {
             mon.expire_to(now);
         }
-        // Policy decision: placement / eviction / group dispatch.
-        let policy = Arc::clone(&self.cfg.policy);
-        policy.on_epoch(&mut PolicyCtx::new(self), now);
+        match self.cfg.policy {
+            PolicyKind::Prism => {
+                self.prism_evictions(now);
+                self.prism_placement(now);
+            }
+            PolicyKind::Qlm => self.qlm_dispatch(now),
+            PolicyKind::ServerlessLlm => self.serverless_evictions(now),
+            _ => {}
+        }
         // Retry pending requests whose models can now be activated.
         let pending = std::mem::take(&mut self.pending);
         for req in pending {
@@ -587,6 +660,195 @@ impl Simulator {
         // Background prealloc refill (kvcached prep thread).
         for g in 0..self.cluster.n_gpus() {
             self.cluster.gpus[g].kvc.tick_prealloc();
+        }
+    }
+
+    fn prism_evictions(&mut self, now: f64) {
+        if self.cfg.no_evict {
+            return;
+        }
+        let candidates: Vec<(ModelId, f64, Vec<GpuId>)> = self
+            .cluster
+            .residency
+            .values()
+            .map(|r| (r.model, r.last_active, r.gpus.clone()))
+            .collect();
+        for (m, last_active, gpus) in candidates {
+            let eidx = self.cluster.residency.get(&m).unwrap().engine_idx;
+            if self.cluster.engines[eidx].has_work() {
+                continue;
+            }
+            // "Constrained for others" = KV headroom (free + reclaimable)
+            // is scarce; weight residency alone is not pressure, because
+            // kvcached already lets co-tenants use the free pool.
+            let min_free = gpus
+                .iter()
+                .map(|g| {
+                    let st = self.cluster.gpus[g.0 as usize].kvc.stats();
+                    self.cluster.gpus[g.0 as usize].kvc.shared_kv_bytes() as f64
+                        / st.total_bytes as f64
+                })
+                .fold(1.0, f64::min);
+            if self.cfg.eviction.should_evict(now, last_active, min_free) {
+                let reqs = self.evict_model(m);
+                self.pending.extend(reqs);
+            }
+        }
+    }
+
+    fn prism_placement(&mut self, now: f64) {
+        if self.cfg.no_migrate {
+            return;
+        }
+        // Build demand for resident models; migrate per Algorithm 1.
+        let resident: Vec<ModelId> = self.cluster.residency.keys().copied().collect();
+        if resident.len() < 2 {
+            return;
+        }
+        self.refresh_demand(now);
+        let caps: Vec<f64> = (0..self.cluster.n_gpus())
+            .map(|g| {
+                let st = self.cluster.gpus[g].kvc.stats();
+                (st.total_bytes - st.kv_used_bytes) as f64
+            })
+            .collect();
+        let inputs: Vec<PlacementInput> = resident
+            .iter()
+            .map(|&m| PlacementInput {
+                demand: self.demand_of(m, now),
+                current: self
+                    .cluster
+                    .residency
+                    .get(&m)
+                    .unwrap()
+                    .gpus
+                    .iter()
+                    .map(|g| g.0 as usize)
+                    .collect(),
+            })
+            .collect();
+        let result = place(&inputs, &caps, self.cfg.tau);
+        for (i, p) in result.placements.iter().enumerate() {
+            if !p.migrated {
+                continue;
+            }
+            let spec = self.specs[self.idx_of(inputs[i].demand.model)].clone();
+            if spec.tp != 1 {
+                continue; // TP migration out of scope (paper: anti-affinity only)
+            }
+            // Only migrate idle-engine models; busy ones keep serving (the
+            // paper overlaps migration, we approximate by deferring).
+            let eidx = self.cluster.residency.get(&spec.id).unwrap().engine_idx;
+            if self.cluster.engines[eidx].has_work() {
+                continue;
+            }
+            let to = GpuId(p.gpus[0] as u32);
+            let from = self.cluster.residency.get(&spec.id).unwrap().gpus[0];
+            // Migration is only worth its disruption when the source GPU is
+            // actually pressured (paper SS6.1: avoid migrations with
+            // marginal benefit). KVPR has units 1/s: a value above ~0.1
+            // means demand would fill the GPU's free KV within ~10 s.
+            let src_kvpr = {
+                let shared = self.cluster.gpus[from.0 as usize].kvc.shared_kv_bytes() as f64;
+                let w: f64 = self
+                    .cluster
+                    .residents_on(from.0 as usize)
+                    .iter()
+                    .map(|m| self.demand_rates[self.model_index[m]])
+                    .sum();
+                kvpr(w, shared)
+            };
+            if src_kvpr < 0.1 {
+                continue;
+            }
+            if from != to {
+                if self.cluster.migrate(&spec, to, now, true).is_ok() {
+                    // Move this model's queued requests with it immediately;
+                    // waiting for the next epoch would burn the TTFT budget.
+                    let old_q = std::mem::take(&mut self.gpu_queues[from.0 as usize]);
+                    let (mine, rest): (Vec<Request>, Vec<Request>) =
+                        old_q.into_iter().partition(|r| r.model == spec.id);
+                    self.gpu_queues[from.0 as usize] = rest;
+                    if !mine.is_empty() {
+                        self.gpu_queues[to.0 as usize].extend(mine);
+                        let ready = self.cluster.residency.get(&spec.id).unwrap().ready_at;
+                        self.schedule_step(spec.id, ready.max(now));
+                    }
+                }
+            }
+        }
+    }
+
+    fn qlm_dispatch(&mut self, now: f64) {
+        // Group pending requests by model; dispatch the group whose head has
+        // the earliest deadline onto each idle GPU, swapping models in.
+        loop {
+            // Find an idle GPU (no resident model with work).
+            let idle_gpu = (0..self.cluster.n_gpus()).find(|&g| {
+                !self.cluster.residents_on(g).iter().any(|m| {
+                    let eidx = self.cluster.residency[m].engine_idx;
+                    self.cluster.engines[eidx].has_work()
+                })
+            });
+            let Some(g) = idle_gpu else { break };
+            // Earliest-deadline pending group. (TP groups: QLM picks the
+            // first tp idle GPUs; we simplify by requiring residency via
+            // ensure_resident below.)
+            let head = self
+                .pending
+                .iter()
+                .min_by(|a, b| a.ttft_deadline().partial_cmp(&b.ttft_deadline()).unwrap())
+                .map(|r| r.model);
+            let Some(m) = head else { break };
+            let idx = self.idx_of(m);
+            // Swap: evict whatever is resident-and-idle on g, then activate.
+            let victims: Vec<ModelId> = self
+                .cluster
+                .residents_on(g)
+                .iter()
+                .filter(|cand| {
+                    let eidx = self.cluster.residency[*cand].engine_idx;
+                    !self.cluster.engines[eidx].has_work()
+                })
+                .copied()
+                .collect();
+            for v in victims {
+                let reqs = self.evict_model(v);
+                self.pending.extend(reqs);
+            }
+            if self.ensure_resident(idx, now).is_none() {
+                break;
+            }
+            // Dispatch the whole group.
+            let group: Vec<Request> = {
+                let (grp, rest): (Vec<Request>, Vec<Request>) =
+                    std::mem::take(&mut self.pending).into_iter().partition(|r| r.model == m);
+                self.pending = rest;
+                grp
+            };
+            for r in group {
+                self.enqueue_on_gpu(r, now);
+            }
+        }
+    }
+
+    fn serverless_evictions(&mut self, now: f64) {
+        // Aggressive unloading: short idle threshold, no memory-pressure gate.
+        let candidates: Vec<(ModelId, f64)> = self
+            .cluster
+            .residency
+            .values()
+            .map(|r| (r.model, r.last_active))
+            .collect();
+        for (m, last_active) in candidates {
+            let eidx = self.cluster.residency.get(&m).unwrap().engine_idx;
+            if self.cluster.engines[eidx].has_work() {
+                continue;
+            }
+            if now - last_active > 3.0 {
+                let reqs = self.evict_model(m);
+                self.pending.extend(reqs);
+            }
         }
     }
 
@@ -659,10 +921,7 @@ impl Simulator {
         trace: &'a Trace,
         mut scaled: Option<ScaledEvents<'a>>,
     ) -> (RunMetrics, Vec<TimelineSample>) {
-        // Policy decision: t=0 placement (space sharers pre-place
-        // everything that fits; time sharers start empty).
-        let policy = Arc::clone(&self.cfg.policy);
-        policy.initial_placement(&mut PolicyCtx::new(&mut self));
+        self.initial_placement();
 
         // Arrivals stream from a cursor over the time-sorted trace, keeping
         // the heap at O(active events) instead of O(#trace events). An
@@ -772,7 +1031,7 @@ impl Simulator {
         }
         for mut r in leftovers {
             r.phase = Phase::Dropped;
-            self.metrics.record(crate::request::Completion::from_request(&r));
+            self.metrics.record(prism::request::Completion::from_request(&r));
         }
 
         self.metrics.busy_seconds = self.cluster.engines.iter().map(|e| e.busy_seconds).sum();
@@ -788,476 +1047,5 @@ impl Simulator {
         !self.pending.is_empty()
             || self.gpu_queues.iter().any(|q| !q.is_empty())
             || self.cluster.engines.iter().any(|e| e.has_work())
-    }
-}
-
-/// The facade [`SchedulingPolicy`](crate::sim::policies::SchedulingPolicy)
-/// hooks operate through: a curated view of the simulator state policies
-/// actually need — demand snapshots, the residency map and its per-GPU
-/// reverse index, pending/GPU queues, and kvcached memory pressure —
-/// instead of `&mut Simulator` internals.
-///
-/// Every accessor is deterministic (ordered views only: residency is a
-/// `BTreeMap`, the reverse index is sorted by id) and every mutation keeps
-/// the simulator's internal indexes consistent, so policy hooks stay pure
-/// w.r.t. this facade and the sweep engine's `--jobs 1` ≡ `--jobs N`
-/// byte-identity contract survives (see `sweep/mod.rs`).
-pub struct PolicyCtx<'a> {
-    sim: &'a mut Simulator,
-}
-
-impl<'a> PolicyCtx<'a> {
-    pub(crate) fn new(sim: &'a mut Simulator) -> Self {
-        PolicyCtx { sim }
-    }
-
-    // ------------------------------------------------------------- queries
-
-    pub fn n_gpus(&self) -> usize {
-        self.sim.cluster.n_gpus()
-    }
-
-    /// The model catalog of this run; placement index `i` in
-    /// [`activate`](Self::activate) refers to `specs()[i]`.
-    pub fn specs(&self) -> &[ModelSpec] {
-        &self.sim.specs
-    }
-
-    pub fn spec(&self, idx: usize) -> &ModelSpec {
-        &self.sim.specs[idx]
-    }
-
-    /// O(1) `ModelId -> specs index`.
-    pub fn model_idx(&self, m: ModelId) -> usize {
-        self.sim.idx_of(m)
-    }
-
-    /// Migration threshold tau on KVPR improvement (`SimConfig::tau`).
-    pub fn tau(&self) -> f64 {
-        self.sim.cfg.tau
-    }
-
-    /// Idle-eviction tuning (`SimConfig::eviction`).
-    pub fn eviction(&self) -> &EvictionPolicy {
-        &self.sim.cfg.eviction
-    }
-
-    /// Ablation env override `PRISM_NO_EVICT`, resolved at construction.
-    pub fn no_evict(&self) -> bool {
-        self.sim.cfg.no_evict
-    }
-
-    /// Ablation env override `PRISM_NO_MIGRATE`, resolved at construction.
-    pub fn no_migrate(&self) -> bool {
-        self.sim.cfg.no_migrate
-    }
-
-    /// The residency map (model -> where it lives), in `ModelId` order.
-    pub fn residency(&self) -> &BTreeMap<ModelId, Residency> {
-        &self.sim.cluster.residency
-    }
-
-    pub fn residency_of(&self, m: ModelId) -> Option<&Residency> {
-        self.sim.cluster.residency.get(&m)
-    }
-
-    /// Models resident on GPU `g`, sorted by id (the reverse index).
-    pub fn residents_on(&self, g: usize) -> &[ModelId] {
-        self.sim.cluster.residents_on(g)
-    }
-
-    /// Does the resident model's engine hold queued or running work?
-    /// Panics if `m` is not resident (mirrors the policies' invariant that
-    /// they only ask about models they just observed in `residency()`).
-    pub fn engine_has_work(&self, m: ModelId) -> bool {
-        let r = self.sim.cluster.residency.get(&m).expect("model resident");
-        self.sim.cluster.engines[r.engine_idx].has_work()
-    }
-
-    /// kvcached memory stats for GPU `g`.
-    pub fn kv_stats(&self, g: usize) -> MemStats {
-        self.sim.cluster.gpus[g].kvc.stats()
-    }
-
-    /// Reclaimable KV headroom (free + idle-reclaimable) on GPU `g`.
-    pub fn shared_kv_bytes(&self, g: usize) -> u64 {
-        self.sim.cluster.gpus[g].kvc.shared_kv_bytes()
-    }
-
-    pub fn page_bytes(&self, g: usize) -> u64 {
-        self.sim.cluster.gpus[g].kvc.page_bytes()
-    }
-
-    /// Requests parked for a later activation/dispatch, in arrival order.
-    pub fn pending(&self) -> &[Request] {
-        &self.sim.pending
-    }
-
-    /// Memory demand of model `m` from the KVPR monitor (paper SS6.1).
-    pub fn demand_of(&self, m: ModelId, now: f64) -> ModelDemand {
-        self.sim.demand_of(m, now)
-    }
-
-    /// Recompute the per-model `w_token_rate` snapshot unless one is
-    /// already valid for `now` (cached per distinct event time).
-    pub fn refresh_demand(&mut self, now: f64) {
-        self.sim.refresh_demand(now);
-    }
-
-    /// KVPR of GPU `g` at `now` (demand-weighted pressure, units 1/s).
-    pub fn gpu_kvpr(&mut self, g: usize, now: f64) -> f64 {
-        self.sim.refresh_demand(now);
-        let shared = self.sim.cluster.gpus[g].kvc.shared_kv_bytes() as f64;
-        let w: f64 = self
-            .sim
-            .cluster
-            .residents_on(g)
-            .iter()
-            .map(|m| self.sim.demand_rates[self.sim.model_index[m]])
-            .sum();
-        kvpr(w, shared)
-    }
-
-    // ----------------------------------------------------------- mutations
-
-    /// Cap model `m`'s KV quota on GPU `g` (static-partition policies).
-    /// Best-effort: an unknown model on `g` is ignored.
-    pub fn set_kv_limit(&mut self, g: usize, m: ModelId, pages: u32) {
-        let _ = self.sim.cluster.gpus[g].kvc.set_kv_limit(m, pages);
-    }
-
-    /// Activate `specs()[idx]` on `gpus`. Best-effort: if memory is short
-    /// the model simply stays non-resident (t=0 placement semantics).
-    pub fn activate(&mut self, idx: usize, gpus: Vec<GpuId>, now: f64) {
-        let spec = self.sim.specs[idx].clone();
-        let _ = self.sim.cluster.activate(&spec, gpus, now);
-    }
-
-    /// Make `specs()[idx]` resident (picking GPUs by lowest KVPR, evicting
-    /// idle victims if memory is short). Returns the ready time, or `None`
-    /// if it cannot fit right now.
-    pub fn ensure_resident(&mut self, idx: usize, now: f64) -> Option<f64> {
-        self.sim.ensure_resident(idx, now)
-    }
-
-    /// Evict model `m`, moving its in-flight and queued requests to
-    /// `pending` (they re-route at the next epoch).
-    pub fn evict_to_pending(&mut self, m: ModelId) {
-        let reqs = self.sim.evict_model(m);
-        self.sim.pending.extend(reqs);
-    }
-
-    pub fn push_pending(&mut self, req: Request) {
-        self.sim.pending.push(req);
-    }
-
-    /// Remove and return every pending request of model `m`, preserving
-    /// the relative order of the rest.
-    pub fn take_pending_of(&mut self, m: ModelId) -> Vec<Request> {
-        let (grp, rest): (Vec<Request>, Vec<Request>) =
-            std::mem::take(&mut self.sim.pending).into_iter().partition(|r| r.model == m);
-        self.sim.pending = rest;
-        grp
-    }
-
-    /// Enqueue a request on its (resident) model's lead-GPU shared queue
-    /// and schedule an engine step. Panics if the model is not resident.
-    pub fn enqueue_resident(&mut self, req: Request, now: f64) {
-        self.sim.enqueue_on_gpu(req, now);
-    }
-
-    /// Migrate resident model `m` to GPU `to`; returns success. The caller
-    /// is responsible for moving `m`'s queued requests (see
-    /// [`take_gpu_queue`](Self::take_gpu_queue)).
-    pub fn migrate(&mut self, m: ModelId, to: GpuId, now: f64) -> bool {
-        let spec = self.sim.specs[self.sim.model_index[&m]].clone();
-        self.sim.cluster.migrate(&spec, to, now, true).is_ok()
-    }
-
-    /// Detach GPU `g`'s shared admission queue (for filtering/moving).
-    pub fn take_gpu_queue(&mut self, g: usize) -> Vec<Request> {
-        std::mem::take(&mut self.sim.gpu_queues[g])
-    }
-
-    /// Re-attach a queue taken via [`take_gpu_queue`](Self::take_gpu_queue).
-    pub fn put_gpu_queue(&mut self, g: usize, q: Vec<Request>) {
-        self.sim.gpu_queues[g] = q;
-    }
-
-    pub fn extend_gpu_queue(&mut self, g: usize, reqs: Vec<Request>) {
-        self.sim.gpu_queues[g].extend(reqs);
-    }
-
-    /// Schedule an engine step for model `m` at time `t` (deduplicated:
-    /// at most one outstanding step event per model).
-    pub fn schedule_step(&mut self, m: ModelId, t: f64) {
-        self.sim.schedule_step(m, t);
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::model::spec::catalog_subset;
-    use crate::trace::gen::{generate, TraceGenConfig};
-
-    fn small_trace(n_models: usize, dur: f64, seed: u64) -> Trace {
-        generate(&TraceGenConfig::novita_like(n_models, dur, seed))
-    }
-
-    fn specs_for(trace: &Trace) -> Vec<ModelSpec> {
-        // Small models only so everything fits comfortably in tests.
-        let cat = catalog_subset(30);
-        (0..trace.n_models)
-            .map(|i| {
-                let mut s = cat[3 + i].clone(); // skip the big ones
-                s.id = ModelId(i as u32);
-                s
-            })
-            .collect()
-    }
-
-    fn run_policy(p: &str, n_gpus: u32, trace: &Trace) -> RunMetrics {
-        let specs = specs_for(trace);
-        let mut cfg = SimConfig::new(p, n_gpus);
-        cfg.slo_scale = 10.0;
-        let sim = Simulator::new(cfg, specs);
-        let (m, _) = sim.run(trace);
-        m
-    }
-
-    #[test]
-    fn prism_serves_all_requests() {
-        let trace = small_trace(4, 300.0, 11);
-        let n = trace.events.len();
-        assert!(n > 50);
-        let m = run_policy("prism", 2, &trace);
-        let done = m.completed();
-        assert!(done as f64 > 0.95 * n as f64, "done {done}/{n}");
-        assert!(m.ttft_attainment() > 0.5, "ttft att {}", m.ttft_attainment());
-        assert!(m.busy_seconds > 0.0);
-    }
-
-    #[test]
-    fn all_policies_complete_without_hanging() {
-        let trace = small_trace(4, 180.0, 5);
-        for p in crate::sim::policies::registry().names() {
-            let m = run_policy(p, 2, &trace);
-            assert!(m.total() > 0, "{} produced no completions", p);
-            assert!(m.completed() > 0, "{} finished nothing", p);
-        }
-    }
-
-    #[test]
-    fn seallm_sixth_policy_runs_end_to_end() {
-        // The first policy added purely through the SchedulingPolicy API
-        // (no simulator edits): it must serve a trace like any built-in.
-        let trace = small_trace(4, 240.0, 9);
-        let n = trace.events.len();
-        let m = run_policy("seallm", 2, &trace);
-        assert!(m.total() > 0, "seallm recorded nothing");
-        assert!(m.completed() as f64 > 0.9 * n as f64, "done {}/{n}", m.completed());
-        assert!(m.busy_seconds > 0.0);
-    }
-
-    #[test]
-    fn prism_beats_serverless_on_ttft() {
-        let trace = small_trace(6, 600.0, 21);
-        let prism = run_policy("prism", 2, &trace);
-        let sls = run_policy("serverlessllm", 2, &trace);
-        assert!(
-            prism.ttft_attainment() > sls.ttft_attainment(),
-            "prism {} <= serverless {}",
-            prism.ttft_attainment(),
-            sls.ttft_attainment()
-        );
-    }
-
-    #[test]
-    fn more_gpus_do_not_hurt() {
-        let trace = small_trace(6, 300.0, 31).scale_rate(2.0);
-        let a2 = run_policy("prism", 2, &trace).ttft_attainment();
-        let a4 = run_policy("prism", 4, &trace).ttft_attainment();
-        assert!(a4 >= a2 - 0.08, "2gpu={a2} 4gpu={a4}");
-    }
-
-    #[test]
-    fn determinism_fixed_seed_metrics_identical() {
-        let trace = small_trace(6, 400.0, 13);
-        for p in ["prism", "qlm", "serverlessllm"] {
-            let a = run_policy(p, 2, &trace);
-            let b = run_policy(p, 2, &trace);
-            assert_eq!(a.total(), b.total(), "{}", p);
-            assert_eq!(a.ttft_attainment().to_bits(), b.ttft_attainment().to_bits(), "{}", p);
-            assert_eq!(
-                (a.activations, a.evictions, a.migrations, a.preemptions),
-                (b.activations, b.evictions, b.migrations, b.preemptions),
-                "{}",
-                p
-            );
-            assert_eq!(a.sim_events, b.sim_events, "{}", p);
-            assert!(a.sim_events > 0, "{}", p);
-        }
-    }
-
-    #[test]
-    fn streamed_arrivals_match_prepushed_heap() {
-        // The streamed-cursor event loop must be observationally identical
-        // to the legacy pre-pushed-arrival heap, for every policy.
-        let trace = small_trace(6, 400.0, 29);
-        for p in crate::sim::policies::registry().names() {
-            let specs = specs_for(&trace);
-            let mut cfg = SimConfig::new(p, 2);
-            cfg.slo_scale = 10.0;
-            let mut legacy_cfg = cfg.clone();
-            legacy_cfg.stream_arrivals = false;
-            let (a, _) = Simulator::new(cfg, specs.clone()).run(&trace);
-            let (b, _) = Simulator::new(legacy_cfg, specs).run(&trace);
-            assert_eq!(a.total(), b.total(), "{}", p);
-            assert_eq!(a.ttft_attainment().to_bits(), b.ttft_attainment().to_bits(), "{}", p);
-            assert_eq!(
-                (a.activations, a.evictions, a.migrations, a.preemptions),
-                (b.activations, b.evictions, b.migrations, b.preemptions),
-                "{}",
-                p
-            );
-            assert_eq!(a.sim_events, b.sim_events, "{}", p);
-            assert_eq!(a.wall_seconds.to_bits(), b.wall_seconds.to_bits(), "{}", p);
-        }
-    }
-
-    #[test]
-    fn lazy_rate_scaling_matches_materialized_run() {
-        // run_scaled(trace, f) must be observationally identical to
-        // run(&trace.scale_rate(f)) — same arrivals in the same order, so
-        // bitwise-equal metrics — for both streamed and pre-push loops.
-        let trace = small_trace(5, 300.0, 23);
-        let materialized = trace.scale_rate(2.5);
-        for p in ["prism", "serverlessllm"] {
-            for stream in [true, false] {
-                let specs = specs_for(&trace);
-                let mut cfg = SimConfig::new(p, 2);
-                cfg.slo_scale = 10.0;
-                cfg.stream_arrivals = stream;
-                let (a, _) = Simulator::new(cfg.clone(), specs.clone()).run_scaled(&trace, 2.5);
-                let (b, _) = Simulator::new(cfg, specs).run(&materialized);
-                assert_eq!(a.total(), b.total(), "{} stream={stream}", p);
-                assert_eq!(
-                    a.ttft_attainment().to_bits(),
-                    b.ttft_attainment().to_bits(),
-                    "{} stream={stream}",
-                    p
-                );
-                assert_eq!(a.sim_events, b.sim_events, "{} stream={stream}", p);
-                assert_eq!(
-                    (a.activations, a.evictions, a.migrations, a.preemptions),
-                    (b.activations, b.evictions, b.migrations, b.preemptions),
-                    "{} stream={stream}",
-                    p
-                );
-                assert_eq!(
-                    a.wall_seconds.to_bits(),
-                    b.wall_seconds.to_bits(),
-                    "{} stream={stream}",
-                    p
-                );
-            }
-        }
-    }
-
-    #[test]
-    fn lazy_rate_scaling_unsorted_trace_falls_back_to_materializing() {
-        // An unsorted base trace must not go through the lazy cursor (which
-        // assumes time order); run_scaled still matches the materialized run.
-        let mut trace = small_trace(4, 200.0, 37);
-        assert!(trace.events.len() > 4);
-        let n = trace.events.len();
-        trace.events.swap(1, n - 2); // break time order
-        assert!(!trace.is_sorted());
-        let specs = specs_for(&trace);
-        let mut cfg = SimConfig::new("prism", 2);
-        cfg.slo_scale = 10.0;
-        let (a, _) = Simulator::new(cfg.clone(), specs.clone()).run_scaled(&trace, 2.0);
-        let (b, _) = Simulator::new(cfg, specs).run(&trace.scale_rate(2.0));
-        assert_eq!(a.total(), b.total());
-        assert_eq!(a.sim_events, b.sim_events);
-        assert_eq!(a.ttft_attainment().to_bits(), b.ttft_attainment().to_bits());
-    }
-
-    #[test]
-    fn ensure_resident_bounded_retries_under_pressure() {
-        // GPUs too small for any model's weights: activation must give up
-        // (None), not spin.
-        let trace = small_trace(3, 60.0, 2);
-        let specs = specs_for(&trace);
-        let mut cfg = SimConfig::new("prism", 1);
-        cfg.gpu_bytes = 1 << 28; // 256 MiB
-        let mut sim = Simulator::new(cfg, specs);
-        assert_eq!(sim.ensure_resident(0, 0.0), None);
-    }
-
-    #[test]
-    fn memory_pressure_activation_terminates() {
-        // A full run on undersized GPUs completes (requests drop at cutoff)
-        // instead of hanging in the activation retry loop.
-        let trace = small_trace(4, 120.0, 3);
-        let specs = specs_for(&trace);
-        let mut cfg = SimConfig::new("prism", 1);
-        cfg.gpu_bytes = 1 << 28; // 256 MiB
-        let sim = Simulator::new(cfg, specs);
-        let (m, _) = sim.run(&trace);
-        assert!(m.total() > 0);
-        assert_eq!(m.completed(), 0, "all requests must be recorded as dropped");
-    }
-
-    #[test]
-    fn streaming_sink_matches_full_dump_aggregates() {
-        // Exact stats (counters, means) are identical between the default
-        // streaming sink and the opt-in full dump; percentiles agree to the
-        // sketch's documented resolution; only the full dump retains records.
-        let trace = small_trace(4, 240.0, 19);
-        let specs = specs_for(&trace);
-        let run = |full: bool| {
-            let mut cfg = SimConfig::new("prism", 2);
-            cfg.slo_scale = 10.0;
-            cfg.metrics_full_dump = full;
-            Simulator::new(cfg, specs.clone()).run(&trace).0
-        };
-        let s = run(false);
-        let f = run(true);
-        assert_eq!(s.total(), f.total());
-        assert!(s.completions().is_empty());
-        assert_eq!(f.completions().len(), f.total());
-        assert_eq!(s.ttft_attainment().to_bits(), f.ttft_attainment().to_bits());
-        assert_eq!(s.tpot_attainment().to_bits(), f.tpot_attainment().to_bits());
-        assert_eq!(s.mean_ttft().to_bits(), f.mean_ttft().to_bits());
-        assert_eq!(s.sim_events, f.sim_events);
-        let (sp, fp) = (s.p95_ttft(), f.p95_ttft());
-        assert!(
-            (sp - fp).abs() <= 0.01 * fp.max(1e-9),
-            "sketch p95 {sp} vs exact {fp}"
-        );
-    }
-
-    #[test]
-    fn timeline_sampling_works() {
-        let trace = small_trace(3, 120.0, 41);
-        let specs = specs_for(&trace);
-        let mut cfg = SimConfig::new("prism", 2);
-        cfg.sample_dt = 5.0;
-        let sim = Simulator::new(cfg, specs);
-        let (_, tl) = sim.run(&trace);
-        assert!(tl.len() >= 20, "timeline {} samples", tl.len());
-        assert!(tl.iter().any(|s| s.gpus.iter().any(|g| g.0 > 0)), "weights visible");
-    }
-
-    #[test]
-    fn slo_bases_in_paper_range() {
-        let perf = GpuPerf::default();
-        for s in catalog_subset(18) {
-            let (ttft, tpot) = base_slos(&perf, &s);
-            assert!(ttft > 0.02 && ttft < 0.3, "{}: ttft {ttft}", s.name);
-            assert!(tpot > 0.004 && tpot < 0.08, "{}: tpot {tpot}", s.name);
-        }
     }
 }

@@ -1,0 +1,111 @@
+//! Byte-identity regression for the policy-API refactor: the
+//! trait-dispatch simulator must produce **bitwise-identical** fixed-seed
+//! metrics to the pre-refactor enum-dispatch implementation, for each of
+//! the five original policies. The reference lives in `enum_reference.rs`
+//! — a frozen copy of the old simulator, compiled against the crate's
+//! public cluster/engine/kvcached/sched APIs, so the comparison is a live
+//! A/B run rather than a table of recorded constants.
+
+mod enum_reference;
+
+use enum_reference as refsim;
+use prism::experiments::e2e::assign_ids;
+use prism::metrics::RunMetrics;
+use prism::model::spec::{catalog_subset, table3_catalog, ModelSpec};
+use prism::sim::{SimConfig, Simulator};
+use prism::trace::gen::{generate, TraceGenConfig};
+use prism::trace::Trace;
+
+/// (old enum variant, registry name) for the five original policies.
+const POLICIES: [(refsim::PolicyKind, &str); 5] = [
+    (refsim::PolicyKind::Prism, "prism"),
+    (refsim::PolicyKind::StaticPartition, "s-partition"),
+    (refsim::PolicyKind::MuxServePlusPlus, "muxserve++"),
+    (refsim::PolicyKind::Qlm, "qlm"),
+    (refsim::PolicyKind::ServerlessLlm, "serverlessllm"),
+];
+
+/// Exact (bit-level) digest of everything the sweep tables report:
+/// attainments, exact p95 percentiles (full dump), counters, event and
+/// wall/busy accounting. Floats compare via `to_bits` — no tolerance.
+fn fingerprint(m: &RunMetrics) -> Vec<u64> {
+    vec![
+        m.total() as u64,
+        m.completed() as u64,
+        m.ttft_attainment().to_bits(),
+        m.tpot_attainment().to_bits(),
+        m.mean_ttft().to_bits(),
+        m.mean_tpot().to_bits(),
+        m.p95_ttft().to_bits(),
+        m.p95_tpot().to_bits(),
+        m.p95_e2e().to_bits(),
+        m.sim_events,
+        m.activations,
+        m.evictions,
+        m.migrations,
+        m.preemptions,
+        m.wall_seconds.to_bits(),
+        m.busy_seconds.to_bits(),
+    ]
+}
+
+fn compare_all_policies(
+    specs: &[ModelSpec],
+    trace: &Trace,
+    n_gpus: u32,
+    gpu_bytes: Option<u64>,
+    slo_scale: f64,
+) {
+    for (kind, name) in POLICIES {
+        let mut old_cfg = refsim::SimConfig::new(kind, n_gpus);
+        let mut new_cfg = SimConfig::new(name, n_gpus);
+        old_cfg.slo_scale = slo_scale;
+        new_cfg.slo_scale = slo_scale;
+        // Full dump keeps the p95 columns exact, not sketch estimates.
+        old_cfg.metrics_full_dump = true;
+        new_cfg.metrics_full_dump = true;
+        if let Some(b) = gpu_bytes {
+            old_cfg.gpu_bytes = b;
+            new_cfg.gpu_bytes = b;
+        }
+        let (old_m, _) = refsim::Simulator::new(old_cfg, specs.to_vec()).run(trace);
+        let (new_m, _) = Simulator::new(new_cfg, specs.to_vec()).run(trace);
+        assert_eq!(
+            fingerprint(&old_m),
+            fingerprint(&new_m),
+            "policy {name}: trait dispatch diverged from the enum-dispatch reference"
+        );
+    }
+}
+
+#[test]
+fn trait_dispatch_matches_enum_reference_8x8b_2gpus() {
+    // The SS7.2 contended regime: 8x 7-8B models on 2 GPUs at 2x rate —
+    // exercises Prism eviction+migration, QLM swaps, serverless cold
+    // starts, static quotas, and slack-aware vs FCFS admission.
+    let specs = assign_ids(
+        table3_catalog()
+            .into_iter()
+            .filter(|m| m.name.contains("8b") || m.name.contains("7b"))
+            .take(8)
+            .collect(),
+    );
+    let trace = generate(&TraceGenConfig::novita_like(8, 300.0, 1234)).scale_rate(2.0);
+    compare_all_policies(&specs, &trace, 2, None, 8.0);
+}
+
+#[test]
+fn trait_dispatch_matches_enum_reference_under_memory_pressure() {
+    // Small-model fleet squeezed onto undersized GPUs: activation retries,
+    // bounded give-ups, and heavy eviction traffic — the paths where a
+    // subtle dispatch-order difference would show up first.
+    let specs = assign_ids(
+        catalog_subset(30)
+            .into_iter()
+            .filter(|m| !m.is_tp() && m.params < 4_000_000_000)
+            .take(10)
+            .collect(),
+    );
+    let trace = generate(&TraceGenConfig::hyperbolic_like(10, 240.0, 77)).scale_rate(1.5);
+    compare_all_policies(&specs, &trace, 2, Some(10 * (1 << 30)), 6.0);
+}
