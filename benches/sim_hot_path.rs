@@ -3,7 +3,10 @@
 //! policy), written to `BENCH_sim.json` so the perf trajectory is tracked
 //! across changes. The `churn-*` scenarios squeeze a small-model fleet
 //! into a fraction of its working set (high preemption, small KV blocks)
-//! to isolate the kvcached allocator + engine per-token path.
+//! to isolate the kvcached allocator + engine per-token path. The
+//! `faulty-churn-*` scenarios add a seeded fault plan (GPU crashes,
+//! slowdowns, alloc faults, load failures - see `prism::fault`) on top of
+//! the churn squeeze, timing the recovery paths.
 //!
 //! Flags:
 //!   --smoke              tiny CI configuration (seconds, not minutes)
@@ -22,6 +25,7 @@
 //!                        events/sec regressed more than p percent
 //!                        (default 15). This is the CI perf gate.
 //!   --policy <name>      only run policies whose name contains <name>
+//!   --scenario <name>    only run scenarios whose name contains <name>
 
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -46,6 +50,9 @@ struct Scenario {
     /// Restrict the fleet to sub-4B models (small KV blocks, cheap weights:
     /// maximum page-slot churn per byte of memory).
     small_models: bool,
+    /// Fault spec resolved via `prism::fault::resolve` against this
+    /// scenario's GPU count and duration (`None` = fault-free).
+    faults: Option<&'static str>,
 }
 
 const GB: u64 = 1 << 30;
@@ -110,6 +117,7 @@ fn main() {
         })
     };
     let policy_filter = opt("--policy").unwrap_or_default();
+    let scenario_filter = opt("--scenario").unwrap_or_default();
     let jobs = prism::sweep::parse_jobs_flag(&args);
     let gate_pct: f64 = opt("--gate-pct")
         .map(|s| s.parse().expect("--gate-pct expects a number"))
@@ -133,6 +141,7 @@ fn main() {
                 duration: 120.0,
                 gpu_bytes: 80 * GB,
                 small_models: false,
+                faults: None,
             },
             Scenario {
                 name: "churn-12m-2g-2min",
@@ -141,6 +150,19 @@ fn main() {
                 duration: 120.0,
                 gpu_bytes: 8 * GB,
                 small_models: true,
+                faults: None,
+            },
+            // Churn squeeze + a seeded fault plan: crashes, slowdowns,
+            // alloc faults, and load failures exercise the recovery paths
+            // (re-routing, backoff retries, preempt-retry) under pressure.
+            Scenario {
+                name: "faulty-churn-12m-2g-2min",
+                n_models: 12,
+                n_gpus: 2,
+                duration: 120.0,
+                gpu_bytes: 8 * GB,
+                small_models: true,
+                faults: Some("churn:7"),
             },
         ]
     } else {
@@ -152,6 +174,7 @@ fn main() {
                 duration: 3600.0,
                 gpu_bytes: 80 * GB,
                 small_models: false,
+                faults: None,
             },
             Scenario {
                 name: "novita-100m-32g-2h",
@@ -160,6 +183,7 @@ fn main() {
                 duration: 7200.0,
                 gpu_bytes: 80 * GB,
                 small_models: false,
+                faults: None,
             },
             // KV churn at scale: a small-model fleet squeezed onto GPUs with
             // a fraction of its working set, so the allocator (block
@@ -171,6 +195,16 @@ fn main() {
                 duration: 3600.0,
                 gpu_bytes: 12 * GB,
                 small_models: true,
+                faults: None,
+            },
+            Scenario {
+                name: "faulty-churn-48m-4g-1h",
+                n_models: 48,
+                n_gpus: 4,
+                duration: 3600.0,
+                gpu_bytes: 12 * GB,
+                small_models: true,
+                faults: Some("churn:7"),
             },
         ]
     };
@@ -198,6 +232,9 @@ fn main() {
     };
 
     for sc in &scenarios {
+        if !scenario_filter.is_empty() && !sc.name.contains(&scenario_filter) {
+            continue;
+        }
         let trace = generate(&TraceGenConfig::novita_like(sc.n_models, sc.duration, 7));
         let specs = fleet(sc.n_models, sc.small_models);
         for policy in registry().names() {
@@ -211,6 +248,10 @@ fn main() {
                 cfg.slo_scale = 8.0;
                 cfg.stream_arrivals = stream;
                 cfg.gpu_bytes = sc.gpu_bytes;
+                if let Some(fs) = sc.faults {
+                    cfg.faults = prism::fault::resolve(fs, sc.n_gpus, sc.duration)
+                        .expect("scenario fault spec");
+                }
                 // Smoke rows gate CI: take the best of 3 sub-second reps so
                 // single-shot scheduler noise on shared runners does not trip
                 // the threshold. Runs are deterministic, so metrics are

@@ -13,7 +13,9 @@
 use std::collections::BTreeMap;
 
 use crate::engine::engine::{SimEngine, BLOCK_TOKENS};
-use crate::engine::loading::{activation_seconds, LoadStrategy};
+use crate::engine::loading::{
+    activation_seconds, retry_backoff_seconds, LoadStrategy, MAX_LOAD_ATTEMPTS,
+};
 use crate::engine::perf::GpuPerf;
 use crate::kvcached::Kvcached;
 use crate::model::spec::{ModelId, ModelSpec};
@@ -71,6 +73,22 @@ pub struct Cluster {
     pub activations: u64,
     pub evictions: u64,
     pub migrations: u64,
+    /// Fault-injection state (all inert by default; see `crate::fault`).
+    /// Down GPUs are crashed or spot-preempted: nothing may be placed on
+    /// them until the matching recovery event clears the flag.
+    gpu_down: Vec<bool>,
+    /// Per-GPU slowdown factor (>= 1.0; 1.0 = healthy). Engines serving a
+    /// group take the max factor over the group's GPUs.
+    gpu_slow: Vec<f64>,
+    /// Monotonic count of weight-load attempts (the injector's clock).
+    pub load_attempts: u64,
+    /// Sorted, deduped attempt ordinals that fail (from the `FaultPlan`).
+    load_fail_attempts: Vec<u64>,
+    load_fail_cursor: usize,
+    /// Backoff retries attempted after a failed load attempt.
+    pub load_retries: u64,
+    /// Loads that exhausted `MAX_LOAD_ATTEMPTS` and aborted the activation.
+    pub load_failures: u64,
 }
 
 impl Cluster {
@@ -96,7 +114,65 @@ impl Cluster {
             activations: 0,
             evictions: 0,
             migrations: 0,
+            gpu_down: vec![false; n_gpus as usize],
+            gpu_slow: vec![1.0; n_gpus as usize],
+            load_attempts: 0,
+            load_fail_attempts: Vec::new(),
+            load_fail_cursor: 0,
+            load_retries: 0,
+            load_failures: 0,
         }
+    }
+
+    /// Mark GPU `g` crashed (true) or recovered (false).
+    pub fn set_gpu_down(&mut self, g: usize, down: bool) {
+        self.gpu_down[g] = down;
+    }
+
+    pub fn gpu_available(&self, g: usize) -> bool {
+        !self.gpu_down[g]
+    }
+
+    pub fn any_gpu_down(&self) -> bool {
+        self.gpu_down.iter().any(|&d| d)
+    }
+
+    /// Set the slowdown factor for GPU `g` (1.0 restores full speed).
+    pub fn set_gpu_slow(&mut self, g: usize, factor: f64) {
+        self.gpu_slow[g] = factor;
+    }
+
+    pub fn gpu_slow_factor(&self, g: usize) -> f64 {
+        self.gpu_slow[g]
+    }
+
+    /// Max slowdown factor over a TP group (the whole group runs at the pace
+    /// of its slowest shard).
+    pub fn group_slow_factor(&self, gpus: &[GpuId]) -> f64 {
+        gpus.iter().map(|g| self.gpu_slow[g.0 as usize]).fold(1.0, f64::max)
+    }
+
+    /// Install the plan's failing load-attempt ordinals (sorted, deduped).
+    pub fn set_load_fail_attempts(&mut self, attempts: Vec<u64>) {
+        debug_assert!(attempts.windows(2).all(|w| w[0] < w[1]), "ordinals must be sorted/deduped");
+        self.load_fail_attempts = attempts;
+        self.load_fail_cursor = 0;
+    }
+
+    /// Advance the load-attempt clock; true if this attempt is scheduled to
+    /// fail. O(1): the ordinal list is sorted, so a cursor suffices. With an
+    /// empty list this only bumps a counter - behavior is otherwise
+    /// bit-identical to a fault-free run.
+    fn next_load_attempt_fails(&mut self) -> bool {
+        let ord = self.load_attempts;
+        self.load_attempts += 1;
+        if self.load_fail_cursor < self.load_fail_attempts.len()
+            && self.load_fail_attempts[self.load_fail_cursor] == ord
+        {
+            self.load_fail_cursor += 1;
+            return true;
+        }
+        false
     }
 
     pub fn n_gpus(&self) -> usize {
@@ -131,15 +207,45 @@ impl Cluster {
     }
 
     /// Activate `spec` on the given GPU group at time `now`.
-    /// Returns the residency ready time, or an error if memory is short.
+    /// Returns the residency ready time, or an error if memory is short or
+    /// the load failed terminally (`KvError::LoadFailed`, fault injection).
     pub fn activate(
         &mut self,
         spec: &ModelSpec,
         gpus: Vec<GpuId>,
         now: f64,
     ) -> Result<f64, crate::kvcached::KvError> {
+        self.activate_inner(spec, gpus, now, true)
+    }
+
+    fn activate_inner(
+        &mut self,
+        spec: &ModelSpec,
+        gpus: Vec<GpuId>,
+        now: f64,
+        inject_load_faults: bool,
+    ) -> Result<f64, crate::kvcached::KvError> {
         assert_eq!(gpus.len(), spec.tp as usize, "group size must equal TP degree");
         assert!(!self.is_resident(spec.id), "{} already resident", spec.id);
+
+        // Injected load failures are consulted BEFORE any memory is mapped,
+        // so a terminal failure needs no rollback: nothing was touched. Each
+        // non-terminal failure retries after exponential backoff, which is
+        // added to the ready latency. With no ordinals installed this loop
+        // exits on its first probe and `retry_delay` stays exactly 0.0.
+        let mut retry_delay = 0.0;
+        if inject_load_faults {
+            let mut attempt = 1u32;
+            while self.next_load_attempt_fails() {
+                if attempt >= MAX_LOAD_ATTEMPTS {
+                    self.load_failures += 1;
+                    return Err(crate::kvcached::KvError::LoadFailed { model: spec.id });
+                }
+                self.load_retries += 1;
+                retry_delay += retry_backoff_seconds(attempt);
+                attempt += 1;
+            }
+        }
 
         // Map weights on every GPU of the group.
         let per_gpu = spec.weight_bytes_per_gpu();
@@ -167,6 +273,9 @@ impl Cluster {
         };
         let node_gpus = self.gpus_per_node;
         let latency = activation_seconds(&self.perf, strategy, spec.weight_bytes(), node_gpus);
+        // `t0 == now` bitwise when no retries fired (x + 0.0 is exact for
+        // the non-negative times used here), preserving zero-fault identity.
+        let t0 = now + retry_delay;
 
         let engine_idx = self.engines.len();
         self.engines.push(SimEngine::new(spec.clone()));
@@ -181,12 +290,12 @@ impl Cluster {
                 model: spec.id,
                 gpus,
                 engine_idx,
-                ready_at: now + latency,
+                ready_at: t0 + latency,
                 last_active: now,
             },
         );
         self.activations += 1;
-        Ok(now + latency)
+        Ok(t0 + latency)
     }
 
     /// Evict a model: drain its engine, unmap weights + KV, return the engine
@@ -232,7 +341,11 @@ impl Cluster {
         assert_eq!(spec.tp, 1, "migration modelled for single-GPU models");
         let kv_bytes = self.engines[res.engine_idx].active_kv_bytes();
         let reqs = self.evict(spec.id);
-        let ready = match self.activate(spec, vec![to], now) {
+        // Migrations copy already-materialized weights over NVLink while the
+        // source keeps serving (paper SS6.1) - there is no cold load, so the
+        // load-fault injector does not apply. (This also guarantees injected
+        // faults can never strand the drained requests on the Err path.)
+        let ready = match self.activate_inner(spec, vec![to], now, false) {
             Ok(_) => {
                 // Overlapped migration: the exposed latency is the switch-over,
                 // not the full reload (paper SS7.5: ~tens of ms over NVLink).
@@ -434,6 +547,62 @@ mod tests {
             assert!(c.residents_on(g.0 as usize).is_empty());
         }
         assert!(c.check_residency_index());
+    }
+
+    #[test]
+    fn injected_load_failures_retry_with_backoff_then_abort() {
+        let cat = catalog_subset(8);
+        let m1 = cat.iter().find(|m| m.name.contains("1b-ft00")).unwrap();
+        let m2 = cat.iter().find(|m| m.name.contains("1b-ft01")).unwrap();
+
+        // Fault-free baseline for the same activation.
+        let mut healthy = cluster(2);
+        let r_ok = healthy.activate(m1, vec![GpuId(0)], 0.0).unwrap();
+
+        let mut c = cluster(2);
+        // Attempt ordinal 0 fails once (retry succeeds on ordinal 1);
+        // ordinals 2..=4 exhaust MAX_LOAD_ATTEMPTS for the next load.
+        c.set_load_fail_attempts(vec![0, 2, 3, 4]);
+        let r_retry = c.activate(m1, vec![GpuId(0)], 0.0).unwrap();
+        assert!(
+            (r_retry - r_ok - retry_backoff_seconds(1)).abs() < 1e-12,
+            "one retry adds exactly one base backoff: {r_retry} vs {r_ok}"
+        );
+        assert_eq!(c.load_retries, 1);
+        assert_eq!(c.load_failures, 0);
+
+        match c.activate(m2, vec![GpuId(1)], 10.0) {
+            Err(crate::kvcached::KvError::LoadFailed { model }) => assert_eq!(model, m2.id),
+            other => panic!("expected terminal LoadFailed, got {other:?}"),
+        }
+        assert_eq!(c.load_retries, 3);
+        assert_eq!(c.load_failures, 1);
+        assert!(!c.is_resident(m2.id));
+        // Terminal failure happens before any mapping: GPU 1 stays pristine.
+        assert_eq!(c.gpus[1].kvc.stats().weight_bytes, 0);
+        assert!(c.gpus[1].kvc.check_conservation());
+
+        // Migrations copy live weights (no cold load): exempt from injection.
+        c.set_load_fail_attempts(vec![c.load_attempts]);
+        c.migrate(m1, GpuId(1), 20.0, true).unwrap();
+        assert_eq!(c.load_failures, 1, "migration must not consume fault ordinals");
+    }
+
+    #[test]
+    fn gpu_down_mask_and_slow_factors() {
+        let mut c = cluster(4);
+        assert!(c.gpu_available(2));
+        assert!(!c.any_gpu_down());
+        c.set_gpu_down(2, true);
+        assert!(!c.gpu_available(2));
+        assert!(c.any_gpu_down());
+        c.set_gpu_down(2, false);
+        assert!(!c.any_gpu_down());
+        c.set_gpu_slow(1, 2.5);
+        assert_eq!(c.group_slow_factor(&[GpuId(0), GpuId(1)]), 2.5);
+        assert_eq!(c.group_slow_factor(&[GpuId(0)]), 1.0);
+        c.set_gpu_slow(1, 1.0);
+        assert_eq!(c.group_slow_factor(&[GpuId(0), GpuId(1)]), 1.0);
     }
 
     #[test]

@@ -168,6 +168,11 @@ pub struct SimEngine {
     pub iterations: u64,
     pub busy_seconds: f64,
     pub preemptions: u64,
+    /// Iteration-duration multiplier for degraded GPUs (fault injection's
+    /// slowdown windows). 1.0 — the default — is exact IEEE identity
+    /// (`x * 1.0 == x` bitwise for finite x), so fault-free runs are
+    /// unchanged bit for bit.
+    pub time_scale: f64,
 }
 
 impl SimEngine {
@@ -182,6 +187,7 @@ impl SimEngine {
             iterations: 0,
             busy_seconds: 0.0,
             preemptions: 0,
+            time_scale: 1.0,
         }
     }
 
@@ -323,7 +329,12 @@ impl SimEngine {
                         }
                         break;
                     }
-                    Err(KvError::OutOfPages(_)) | Err(KvError::LimitReached { .. }) => {
+                    Err(KvError::OutOfPages(_))
+                    | Err(KvError::LimitReached { .. })
+                    | Err(KvError::FaultInjected { .. }) => {
+                        // Injected transient faults route through the same
+                        // pressure path as real exhaustion: the stall /
+                        // preempt-and-retry discipline IS the recovery.
                         pressure = true;
                         // Victim order: a younger runner, else a queued
                         // partial prefill (not yet served, so younger in
@@ -342,6 +353,10 @@ impl SimEngine {
                         // older requests keep decoding and release memory.
                         break;
                     }
+                    // Invariant (documented panic): UnknownModel/LoadFailed
+                    // cannot reach a stepping engine — the cluster registers
+                    // KV before constructing the engine and load failures
+                    // abort activation before any engine exists.
                     Err(e) => panic!("unexpected kv error: {e}"),
                 }
             }
@@ -364,18 +379,22 @@ impl SimEngine {
             // KV for the newly prefetched tokens.
             match ensure_blocks(&mut self.table, kv, &mut self.queue[qi], done + take) {
                 Ok(()) => {}
-                Err(KvError::OutOfPages(_)) | Err(KvError::LimitReached { .. }) => {
-                    // Memory pressure. Prefill never preempts active decodes
-                    // (decode progress guarantees memory is eventually freed;
-                    // preempting it would allow prefill/decode livelock).
-                    // With nothing running, steal partial-prefill KV from the
-                    // queue tail so the head can make progress.
+                Err(KvError::OutOfPages(_))
+                | Err(KvError::LimitReached { .. })
+                | Err(KvError::FaultInjected { .. }) => {
+                    // Memory pressure (real or injected-transient). Prefill
+                    // never preempts active decodes (decode progress
+                    // guarantees memory is eventually freed; preempting it
+                    // would allow prefill/decode livelock). With nothing
+                    // running, steal partial-prefill KV from the queue tail
+                    // so the head can make progress.
                     if self.running.is_empty() && self.steal_from_queue_tail(kv, id) {
                         out.preempted += 1;
                         continue;
                     }
                     break;
                 }
+                // Invariant (documented panic): see the decode-loop arm.
                 Err(e) => panic!("unexpected kv error: {e}"),
             }
             let r = &mut self.queue[qi];
@@ -389,12 +408,14 @@ impl SimEngine {
 
         // ---- Iteration timing -------------------------------------------
         let decode_batch = self.running.len() as u32;
-        let duration = perf.iteration_seconds(
+        let base_duration = perf.iteration_seconds(
             &self.spec,
             prefill_tokens_done,
             decode_batch,
             self.active_kv_bytes() / self.spec.tp as u64,
         );
+        // Degraded-GPU slowdown; 1.0 (the default) is bitwise identity.
+        let duration = base_duration * self.time_scale;
         let end = now + duration;
         self.iterations += 1;
         self.busy_seconds += duration;
@@ -611,6 +632,76 @@ mod tests {
         assert_eq!(done, 4, "all requests must eventually finish");
         assert!(preempted > 0, "workload must have triggered preemption");
         assert_eq!(kvc.kv_used_blocks(ModelId(0)), 0);
+    }
+
+    /// Regression (satellite of the fault-injection PR): the
+    /// `Kvcached::alloc_blocks` partial-progress-on-failure contract,
+    /// exercised end-to-end through the engine's decode loop rather than
+    /// against the manager alone. Every failed batched allocation leaves
+    /// its partial progress in the request's block run; the decode loop's
+    /// retry must build on it without leaking or double-counting blocks.
+    #[test]
+    fn decode_loop_keeps_partial_progress_across_failed_batch_allocs() {
+        // Same pressure-cooker shape as the preemption test, with the
+        // transient injector armed on top so batched allocs ALSO fail
+        // mid-batch (not only at pool/limit boundaries).
+        let (mut e, mut kvc) = setup(24);
+        kvc.arm_alloc_faults(5);
+        for i in 0..4 {
+            e.admit(req(i, 256, 64));
+        }
+        let perf = GpuPerf::default();
+        let mut now = 0.0;
+        let mut done = 0;
+        for _ in 0..30_000 {
+            let mut kv = OneGpu { kvc: &mut kvc, model: ModelId(0) };
+            let o = e.step(now, &perf, &mut kv);
+            now += o.duration;
+            done += o.completions.len();
+            // Conservation after every iteration: the engine's view of held
+            // blocks must equal the manager's, even right after a batched
+            // alloc failed with partial progress.
+            assert_eq!(
+                e.held_blocks() as u64,
+                kvc.kv_used_blocks(ModelId(0)),
+                "engine/manager block accounting drifted"
+            );
+            assert!(kvc.check_conservation());
+            if !e.has_work() {
+                break;
+            }
+        }
+        assert_eq!(done, 4, "all requests finish despite injected faults");
+        assert!(kvc.alloc_faults_injected() > 0, "injector never fired");
+        assert_eq!(kvc.kv_used_blocks(ModelId(0)), 0);
+        assert_eq!(e.held_blocks(), 0);
+    }
+
+    #[test]
+    fn time_scale_stretches_iteration_duration() {
+        let run = |scale: f64| {
+            let (mut e, mut kvc) = setup(1024);
+            e.time_scale = scale;
+            e.admit(req(1, 100, 5));
+            let perf = GpuPerf::default();
+            let mut now = 0.0;
+            for _ in 0..50 {
+                let mut kv = OneGpu { kvc: &mut kvc, model: ModelId(0) };
+                let o = e.step(now, &perf, &mut kv);
+                now += o.duration;
+                if !e.has_work() {
+                    break;
+                }
+            }
+            now
+        };
+        let base = run(1.0);
+        let slow = run(2.5);
+        assert!(base > 0.0);
+        assert!(
+            (slow - base * 2.5).abs() < 1e-9,
+            "slowdown must scale duration: base {base}, slow {slow}"
+        );
     }
 
     #[test]

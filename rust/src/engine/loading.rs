@@ -21,6 +21,22 @@ pub const REALIGN_SECONDS: f64 = 0.050;
 /// Streaming buffer per GPU for parallel loading.
 pub const STREAM_BUFFER_BYTES: u64 = 30 << 20;
 
+/// First-retry delay after a failed weight load (fault-injection PR).
+pub const LOAD_RETRY_BASE_SECONDS: f64 = 0.5;
+/// Cap on any single retry delay.
+pub const LOAD_RETRY_MAX_SECONDS: f64 = 8.0;
+/// Attempts (initial + retries) before a load is declared failed and the
+/// activation aborts with `KvError::LoadFailed`.
+pub const MAX_LOAD_ATTEMPTS: u32 = 3;
+
+/// Exponential backoff before retry number `attempt` (1-based: `attempt = 1`
+/// is the delay between the first failure and the second try). Deterministic
+/// by design - no jitter, so injected load failures replay identically.
+pub fn retry_backoff_seconds(attempt: u32) -> f64 {
+    let shift = attempt.saturating_sub(1).min(30);
+    (LOAD_RETRY_BASE_SECONDS * (1u64 << shift) as f64).min(LOAD_RETRY_MAX_SECONDS)
+}
+
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum LoadStrategy {
     Naive,
@@ -110,6 +126,19 @@ mod tests {
         let naive = activation_seconds(&p, LoadStrategy::PooledNaive, 28 * GB, 8);
         let par = activation_seconds(&p, LoadStrategy::Parallel, 28 * GB, 8);
         assert!(par < naive / 3.0, "par={par} naive={naive}");
+    }
+
+    #[test]
+    fn retry_backoff_is_exponential_and_capped() {
+        assert_eq!(retry_backoff_seconds(1), 0.5);
+        assert_eq!(retry_backoff_seconds(2), 1.0);
+        assert_eq!(retry_backoff_seconds(3), 2.0);
+        assert_eq!(retry_backoff_seconds(4), 4.0);
+        assert_eq!(retry_backoff_seconds(5), 8.0);
+        assert_eq!(retry_backoff_seconds(6), LOAD_RETRY_MAX_SECONDS);
+        assert_eq!(retry_backoff_seconds(200), LOAD_RETRY_MAX_SECONDS);
+        // attempt 0 is treated as attempt 1 (defensive, not a real call site)
+        assert_eq!(retry_backoff_seconds(0), LOAD_RETRY_BASE_SECONDS);
     }
 
     #[test]

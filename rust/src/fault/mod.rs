@@ -1,0 +1,427 @@
+//! Deterministic fault injection: seeded, schedulable fault plans for the
+//! simulator (GPU crash/spot-preemption, slowdown windows, model-load
+//! failures, transient KV-allocation faults).
+//!
+//! # Determinism / purity contract
+//!
+//! **Faults are data, never RNG-in-the-loop.** A [`FaultPlan`] is fully
+//! materialized *before* `Simulator::run` starts: every crash, recovery,
+//! slowdown window, failing load attempt, and transient allocation fault
+//! is a plain value carried on `SimConfig` (and, as a spec string, on
+//! `SweepPoint`). The seeded generator ([`FaultPlan::seeded_churn`]) draws
+//! all of its randomness at plan-construction time from the crate's
+//! SplitMix64 PRNG; the simulator never samples randomness while events
+//! are in flight. A fixed `(config, trace, plan)` triple therefore replays
+//! bitwise-identically, and the sweep engine's `--jobs 1` ≡ `--jobs N`
+//! byte-identity contract extends to fault sweeps: the fault axis is just
+//! another pure input baked into the point key.
+//!
+//! An empty plan is the explicit no-op: the simulator pushes no fault
+//! events and arms none of the injection hooks, so zero-fault runs are
+//! bitwise-identical to runs from before this module existed (guarded by
+//! the `policy_identity` A/B tests).
+//!
+//! # Spec grammar
+//!
+//! Plans parse from compact `;`-separated clause strings:
+//!
+//! ```text
+//! crash@<t>:g<N>[+<dur>]      GPU N dies at t; with +dur it rejoins at t+dur
+//! slow@<a>-<b>:g<N>x<f>       GPU N runs f >= 1.0 times slower during [a, b)
+//! loadfail@<o1>,<o2>,...      global model-load attempt ordinals that fail
+//! allocfail@<a>-<b>:g<N>/<k>  every k-th (k >= 2) KV block alloc on GPU N
+//!                             fails during [a, b)
+//! drop                        drop a crashed GPU's in-flight requests
+//!                             (default: restart prefill elsewhere)
+//! churn:<seed>                seeded random churn (resolve() only: needs
+//!                             the fleet shape)
+//! ```
+//!
+//! Example: `crash@60:g0+90;slow@30-120:g1x2.0;loadfail@2,5`.
+
+use crate::util::rng::Rng;
+
+/// A GPU crash (hard failure or spot preemption) at `at`, optionally
+/// rejoining the placement pool at `recover_at`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GpuCrash {
+    pub gpu: u32,
+    pub at: f64,
+    pub recover_at: Option<f64>,
+}
+
+/// A degraded-performance window: iterations on `gpu` take `factor` times
+/// longer while `from <= t < until`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Slowdown {
+    pub gpu: u32,
+    pub from: f64,
+    pub until: f64,
+    /// Iteration-time multiplier, `>= 1.0`.
+    pub factor: f64,
+}
+
+/// A transient KV-allocation fault window: while armed, every `every`-th
+/// block allocation on `gpu` fails with an injected error (the engine
+/// treats it like memory pressure and retries).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AllocFault {
+    pub gpu: u32,
+    pub from: f64,
+    pub until: f64,
+    /// Injection period, `>= 2` (1 would fail every alloc and stall all
+    /// progress for the whole window).
+    pub every: u32,
+}
+
+/// What happens to requests in flight on a crashed GPU.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CrashedRequests {
+    /// Re-queue them for a fresh prefill on surviving GPUs (default).
+    #[default]
+    Restart,
+    /// Drop them; they count as failed completions.
+    Drop,
+}
+
+/// A complete, pure description of every fault a run will experience.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultPlan {
+    pub crashes: Vec<GpuCrash>,
+    pub slowdowns: Vec<Slowdown>,
+    /// Sorted, deduplicated global load-attempt ordinals (0-based, counted
+    /// across the whole run) whose model load fails and must be retried.
+    pub load_fail_attempts: Vec<u64>,
+    pub alloc_faults: Vec<AllocFault>,
+    pub on_crash: CrashedRequests,
+}
+
+/// One scheduled state transition, produced by [`FaultPlan::schedule`] and
+/// applied by the simulator when its event fires.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultAction {
+    Crash(u32),
+    Recover(u32),
+    SlowStart(u32, f64),
+    SlowEnd(u32),
+    AllocArm(u32, u32),
+    AllocDisarm(u32),
+}
+
+impl FaultPlan {
+    /// True when the plan injects nothing; the simulator takes the
+    /// pre-fault code path bit for bit.
+    pub fn is_empty(&self) -> bool {
+        self.crashes.is_empty()
+            && self.slowdowns.is_empty()
+            && self.load_fail_attempts.is_empty()
+            && self.alloc_faults.is_empty()
+    }
+
+    /// Flatten the plan into a time-sorted action list for the event heap.
+    /// The sort is stable over finite times (guaranteed by `parse` and the
+    /// generators), so same-time actions keep plan order and the schedule
+    /// is deterministic.
+    pub fn schedule(&self) -> Vec<(f64, FaultAction)> {
+        let mut s = Vec::new();
+        for c in &self.crashes {
+            s.push((c.at, FaultAction::Crash(c.gpu)));
+            if let Some(r) = c.recover_at {
+                s.push((r, FaultAction::Recover(c.gpu)));
+            }
+        }
+        for w in &self.slowdowns {
+            s.push((w.from, FaultAction::SlowStart(w.gpu, w.factor)));
+            s.push((w.until, FaultAction::SlowEnd(w.gpu)));
+        }
+        for a in &self.alloc_faults {
+            s.push((a.from, FaultAction::AllocArm(a.gpu, a.every)));
+            s.push((a.until, FaultAction::AllocDisarm(a.gpu)));
+        }
+        s.sort_by(|a, b| a.0.total_cmp(&b.0));
+        s
+    }
+
+    /// Parse the explicit clause grammar (everything except `churn:`,
+    /// which needs the fleet shape — see [`resolve`]). An empty or
+    /// whitespace-only spec is the empty plan.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::default();
+        for raw in spec.split(';') {
+            let clause = raw.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            if clause == "drop" {
+                plan.on_crash = CrashedRequests::Drop;
+            } else if let Some(rest) = clause.strip_prefix("crash@") {
+                let (t, g) = split2(rest, ':', clause)?;
+                let (g, dur) = match g.split_once('+') {
+                    Some((g, d)) => (g, Some(num(d, clause)?)),
+                    None => (g, None),
+                };
+                let at = num(t, clause)?;
+                plan.crashes.push(GpuCrash {
+                    gpu: gpu_idx(g, clause)?,
+                    at,
+                    recover_at: dur.map(|d| at + d),
+                });
+            } else if let Some(rest) = clause.strip_prefix("slow@") {
+                let (window, g) = split2(rest, ':', clause)?;
+                let (from, until) = window_of(window, clause)?;
+                let (g, f) = split2(g, 'x', clause)?;
+                let factor = num(f, clause)?;
+                if factor < 1.0 {
+                    return Err(format!("{clause:?}: slowdown factor must be >= 1.0"));
+                }
+                plan.slowdowns.push(Slowdown { gpu: gpu_idx(g, clause)?, from, until, factor });
+            } else if let Some(rest) = clause.strip_prefix("loadfail@") {
+                for o in rest.split(',') {
+                    let ord: u64 = o
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("{clause:?}: bad load-attempt ordinal {o:?}"))?;
+                    plan.load_fail_attempts.push(ord);
+                }
+                plan.load_fail_attempts.sort_unstable();
+                plan.load_fail_attempts.dedup();
+            } else if let Some(rest) = clause.strip_prefix("allocfail@") {
+                let (window, g) = split2(rest, ':', clause)?;
+                let (from, until) = window_of(window, clause)?;
+                let (g, k) = split2(g, '/', clause)?;
+                let every: u32 = k
+                    .trim()
+                    .parse()
+                    .map_err(|_| format!("{clause:?}: bad injection period {k:?}"))?;
+                if every < 2 {
+                    return Err(format!("{clause:?}: injection period must be >= 2"));
+                }
+                plan.alloc_faults.push(AllocFault { gpu: gpu_idx(g, clause)?, from, until, every });
+            } else {
+                return Err(format!(
+                    "unknown fault clause {clause:?} (expected crash@/slow@/loadfail@/allocfail@/drop)"
+                ));
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Check plan invariants against the fleet shape: GPU indices in
+    /// range, windows well-formed. `parse` enforces the rest.
+    pub fn validate(&self, n_gpus: u32) -> Result<(), String> {
+        let gpu_ok = |g: u32| -> Result<(), String> {
+            if g >= n_gpus {
+                return Err(format!("fault targets GPU g{g} but the fleet has {n_gpus} GPUs"));
+            }
+            Ok(())
+        };
+        for c in &self.crashes {
+            gpu_ok(c.gpu)?;
+            if let Some(r) = c.recover_at {
+                if r <= c.at {
+                    return Err(format!(
+                        "crash of g{} recovers at {r} <= crash time {}",
+                        c.gpu, c.at
+                    ));
+                }
+            }
+        }
+        for w in &self.slowdowns {
+            gpu_ok(w.gpu)?;
+            if w.until <= w.from {
+                return Err(format!(
+                    "slowdown window [{}, {}) on g{} is empty",
+                    w.from, w.until, w.gpu
+                ));
+            }
+        }
+        for a in &self.alloc_faults {
+            gpu_ok(a.gpu)?;
+            if a.until <= a.from {
+                return Err(format!(
+                    "allocfail window [{}, {}) on g{} is empty",
+                    a.from, a.until, a.gpu
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Seeded "churny fleet" generator: a few spot preemptions with
+    /// recovery, one slowdown window, one transient-alloc window, and a
+    /// handful of failing load attempts, all drawn here from a SplitMix64
+    /// stream — randomness is consumed at construction, never during the
+    /// run, so the same `(seed, n_gpus, duration)` always yields the same
+    /// plan.
+    pub fn seeded_churn(seed: u64, n_gpus: u32, duration: f64) -> FaultPlan {
+        let mut rng = Rng::new(seed ^ 0xFA17_0000_FA17_0000);
+        let n = n_gpus.max(1) as usize;
+        let mut plan = FaultPlan::default();
+        let n_crashes = (n / 4).clamp(1, 4);
+        for g in rng.sample_indices(n, n_crashes) {
+            let at = rng.range_f64(0.2, 0.6) * duration;
+            let outage = rng.range_f64(0.1, 0.25) * duration;
+            plan.crashes.push(GpuCrash { gpu: g as u32, at, recover_at: Some(at + outage) });
+        }
+        let from = rng.range_f64(0.1, 0.5) * duration;
+        plan.slowdowns.push(Slowdown {
+            gpu: rng.below(n) as u32,
+            from,
+            until: from + 0.2 * duration,
+            factor: rng.range_f64(1.5, 3.0),
+        });
+        let from = rng.range_f64(0.1, 0.6) * duration;
+        plan.alloc_faults.push(AllocFault {
+            gpu: rng.below(n) as u32,
+            from,
+            until: from + 0.25 * duration,
+            every: rng.range_usize(5, 12) as u32,
+        });
+        let mut fails: Vec<u64> = (0..3).map(|_| rng.below(40) as u64).collect();
+        fails.sort_unstable();
+        fails.dedup();
+        plan.load_fail_attempts = fails;
+        plan
+    }
+}
+
+/// Resolve a spec string into a concrete, validated plan. Handles the
+/// `churn:<seed>` shorthand (which needs the fleet shape) in addition to
+/// the explicit [`FaultPlan::parse`] grammar.
+pub fn resolve(spec: &str, n_gpus: u32, duration: f64) -> Result<FaultPlan, String> {
+    let plan = if let Some(seed) = spec.trim().strip_prefix("churn:") {
+        let seed: u64 = seed
+            .trim()
+            .parse()
+            .map_err(|_| format!("churn: expects an integer seed, got {spec:?}"))?;
+        FaultPlan::seeded_churn(seed, n_gpus, duration)
+    } else {
+        FaultPlan::parse(spec)?
+    };
+    plan.validate(n_gpus)?;
+    Ok(plan)
+}
+
+fn split2<'a>(s: &'a str, sep: char, clause: &str) -> Result<(&'a str, &'a str), String> {
+    s.split_once(sep).ok_or_else(|| format!("{clause:?}: expected {sep:?} separator"))
+}
+
+fn window_of(s: &str, clause: &str) -> Result<(f64, f64), String> {
+    let (a, b) = split2(s, '-', clause)?;
+    Ok((num(a, clause)?, num(b, clause)?))
+}
+
+fn num(s: &str, clause: &str) -> Result<f64, String> {
+    let v: f64 = s
+        .trim()
+        .parse()
+        .map_err(|_| format!("{clause:?}: expected a number, got {s:?}"))?;
+    if !v.is_finite() || v < 0.0 {
+        return Err(format!("{clause:?}: expected a finite non-negative number, got {s:?}"));
+    }
+    Ok(v)
+}
+
+fn gpu_idx(s: &str, clause: &str) -> Result<u32, String> {
+    s.trim()
+        .strip_prefix('g')
+        .and_then(|g| g.parse().ok())
+        .ok_or_else(|| format!("{clause:?}: expected a GPU as gN, got {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_spec_is_empty_plan() {
+        let p = FaultPlan::parse("").unwrap();
+        assert!(p.is_empty());
+        assert_eq!(p, FaultPlan::default());
+        assert!(p.schedule().is_empty());
+        assert!(FaultPlan::parse("  ; ;").unwrap().is_empty());
+    }
+
+    #[test]
+    fn parse_full_grammar() {
+        let p = FaultPlan::parse(
+            "crash@60:g0+90; slow@30-120:g1x2.5; loadfail@5,2,5; allocfail@10-40:g1/7; drop",
+        )
+        .unwrap();
+        assert_eq!(p.crashes, vec![GpuCrash { gpu: 0, at: 60.0, recover_at: Some(150.0) }]);
+        assert_eq!(p.slowdowns, vec![Slowdown { gpu: 1, from: 30.0, until: 120.0, factor: 2.5 }]);
+        assert_eq!(p.load_fail_attempts, vec![2, 5], "sorted and deduplicated");
+        assert_eq!(p.alloc_faults, vec![AllocFault { gpu: 1, from: 10.0, until: 40.0, every: 7 }]);
+        assert_eq!(p.on_crash, CrashedRequests::Drop);
+        p.validate(2).unwrap();
+    }
+
+    #[test]
+    fn crash_without_recovery_is_permanent() {
+        let p = FaultPlan::parse("crash@10:g3").unwrap();
+        assert_eq!(p.crashes[0].recover_at, None);
+        assert_eq!(p.schedule(), vec![(10.0, FaultAction::Crash(3))]);
+    }
+
+    #[test]
+    fn schedule_is_time_sorted() {
+        let p = FaultPlan::parse("crash@100:g0+50; slow@20-80:g1x2.0; allocfail@60-90:g0/3")
+            .unwrap();
+        let s = p.schedule();
+        assert_eq!(s.len(), 6);
+        assert!(s.windows(2).all(|w| w[0].0 <= w[1].0), "schedule not sorted: {s:?}");
+        assert_eq!(s[0], (20.0, FaultAction::SlowStart(1, 2.0)));
+        assert_eq!(s[5], (150.0, FaultAction::Recover(0)));
+    }
+
+    #[test]
+    fn parse_rejects_malformed_clauses() {
+        for bad in [
+            "explode@5:g0",         // unknown clause
+            "crash@x:g0",           // non-numeric time
+            "crash@5:q0",           // not a GPU
+            "slow@30-120:g0x0.5",   // speedup, not slowdown
+            "slow@30:g0x2.0",       // missing window end
+            "allocfail@0-10:g0/1",  // period 1 stalls the whole window
+            "loadfail@two",         // non-integer ordinal
+            "crash@-5:g0",          // negative time
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_gpus_and_empty_windows() {
+        assert!(FaultPlan::parse("crash@5:g4").unwrap().validate(4).is_err());
+        assert!(FaultPlan::parse("crash@5:g3").unwrap().validate(4).is_ok());
+        let mut p = FaultPlan::parse("slow@30-120:g0x2.0").unwrap();
+        p.slowdowns[0].until = 30.0;
+        assert!(p.validate(4).is_err());
+        let mut p = FaultPlan::parse("crash@5:g0+1").unwrap();
+        p.crashes[0].recover_at = Some(5.0);
+        assert!(p.validate(4).is_err());
+    }
+
+    #[test]
+    fn seeded_churn_is_deterministic_and_seed_sensitive() {
+        let a = FaultPlan::seeded_churn(7, 8, 3600.0);
+        let b = FaultPlan::seeded_churn(7, 8, 3600.0);
+        let c = FaultPlan::seeded_churn(8, 8, 3600.0);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert!(!a.is_empty());
+        a.validate(8).unwrap();
+        // Every generated crash recovers (churn, not permanent loss).
+        assert!(a.crashes.iter().all(|cr| cr.recover_at.is_some()));
+    }
+
+    #[test]
+    fn resolve_handles_churn_shorthand() {
+        let a = resolve("churn:7", 4, 600.0).unwrap();
+        assert_eq!(a, FaultPlan::seeded_churn(7, 4, 600.0));
+        assert!(resolve("churn:x", 4, 600.0).is_err());
+        // Explicit clauses go through parse + validate.
+        assert!(resolve("crash@5:g9", 4, 600.0).is_err());
+        assert!(resolve("", 4, 600.0).unwrap().is_empty());
+    }
+}

@@ -238,6 +238,14 @@ pub struct Kvcached {
     kv: BTreeMap<ModelId, ModelKv>,
     /// Microseconds of map/unmap work performed (timing model output).
     pub accrued_cost_us: f64,
+    /// Deterministic transient-fault injector: every `fault_every`-th block
+    /// allocation fails while armed (0 = disarmed, the default — one branch
+    /// of overhead on the hot path).
+    fault_every: u32,
+    /// Allocation attempts observed since the injector was (re)armed.
+    fault_counter: u64,
+    /// Total faults injected (harvested into `RunMetrics::faults`).
+    faults_injected: u64,
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -245,6 +253,15 @@ pub enum KvError {
     OutOfPages(OutOfPages),
     LimitReached { model: ModelId, limit_pages: u32 },
     UnknownModel(ModelId),
+    /// Deterministic fault injection (`fault::AllocFault`): a transient
+    /// allocation fault fired. Transient by construction — every retry
+    /// advances the injector's counter — so callers treat it exactly like
+    /// memory pressure (back off / preempt / retry), never as fatal.
+    FaultInjected { model: ModelId },
+    /// A model load failed after exhausting its retry budget
+    /// (`fault::FaultPlan::load_fail_attempts`); surfaced by
+    /// `Cluster::activate`, not by this manager.
+    LoadFailed { model: ModelId },
 }
 
 impl std::fmt::Display for KvError {
@@ -255,6 +272,12 @@ impl std::fmt::Display for KvError {
                 write!(f, "{model} at kv limit ({limit_pages} pages)")
             }
             KvError::UnknownModel(m) => write!(f, "unknown model {m}"),
+            KvError::FaultInjected { model } => {
+                write!(f, "injected transient alloc fault for {model}")
+            }
+            KvError::LoadFailed { model } => {
+                write!(f, "load of {model} failed after retries")
+            }
         }
     }
 }
@@ -268,6 +291,44 @@ impl Kvcached {
             weights: BTreeMap::new(),
             kv: BTreeMap::new(),
             accrued_cost_us: 0.0,
+            fault_every: 0,
+            fault_counter: 0,
+            faults_injected: 0,
+        }
+    }
+
+    // ----------------------------------------------------- fault injection
+
+    /// Arm the deterministic transient-fault injector: every `every`-th
+    /// block allocation (counted from now) fails with
+    /// [`KvError::FaultInjected`] until [`Kvcached::disarm_alloc_faults`].
+    /// `every` is clamped to >= 2 so progress is always possible between
+    /// consecutive faults. Re-arming resets the attempt counter.
+    pub fn arm_alloc_faults(&mut self, every: u32) {
+        self.fault_every = every.max(2);
+        self.fault_counter = 0;
+    }
+
+    pub fn disarm_alloc_faults(&mut self) {
+        self.fault_every = 0;
+    }
+
+    /// Total transient faults injected over this manager's lifetime.
+    pub fn alloc_faults_injected(&self) -> u64 {
+        self.faults_injected
+    }
+
+    /// One injector step: count the attempt, report whether it must fail.
+    fn injected_fault(&mut self) -> bool {
+        if self.fault_every == 0 {
+            return false;
+        }
+        self.fault_counter += 1;
+        if self.fault_counter % self.fault_every as u64 == 0 {
+            self.faults_injected += 1;
+            true
+        } else {
+            false
         }
     }
 
@@ -353,6 +414,9 @@ impl Kvcached {
     /// (D3); maps a new physical page only when no partial page has room and
     /// the model is under its limit. O(1), no heap allocation.
     pub fn alloc_block(&mut self, model: ModelId) -> Result<BlockRef, KvError> {
+        if self.injected_fault() {
+            return Err(KvError::FaultInjected { model });
+        }
         let mk = self.kv.get_mut(&model).ok_or(KvError::UnknownModel(model))?;
         let (r, cost) = alloc_block_in(&mut self.pool, mk, model)?;
         self.accrued_cost_us += cost;
@@ -371,10 +435,24 @@ impl Kvcached {
         n: u32,
         out: &mut Vec<BlockRef>,
     ) -> Result<(), KvError> {
+        // The injector counts per-block attempts (identical to repeated
+        // `alloc_block` calls); its state lives in locals for the duration
+        // of the loop because `mk` exclusively borrows `self.kv`.
+        let every = self.fault_every as u64;
+        let mut counter = self.fault_counter;
+        let mut injected = 0u64;
         let mk = self.kv.get_mut(&model).ok_or(KvError::UnknownModel(model))?;
         let mut cost = 0.0;
         let mut err = None;
         for _ in 0..n {
+            if every != 0 {
+                counter += 1;
+                if counter % every == 0 {
+                    injected += 1;
+                    err = Some(KvError::FaultInjected { model });
+                    break;
+                }
+            }
             match alloc_block_in(&mut self.pool, mk, model) {
                 Ok((r, c)) => {
                     cost += c;
@@ -386,6 +464,8 @@ impl Kvcached {
                 }
             }
         }
+        self.fault_counter = counter;
+        self.faults_injected += injected;
         self.accrued_cost_us += cost;
         match err {
             Some(e) => Err(e),
@@ -401,6 +481,10 @@ impl Kvcached {
         let page = mk.pages[r.page_idx as usize]
             .as_mut()
             .ok_or(KvError::UnknownModel(r.model))?;
+        // Invariant (deliberate panic, kept through the panic audit): a
+        // double free means a caller holds a forged or stale BlockRef.
+        // That is memory-accounting corruption, not a recoverable input
+        // error, and `double_free_detected` pins this behavior.
         assert!(page.bits.get(r.slot), "double free of {r:?}");
         page.bits.clear(r.slot);
         let was_full = page.used_count == mk.slots_per_page;
@@ -700,6 +784,48 @@ mod tests {
         let (partial_len, free_slots) = k.debug_partial(m);
         assert_eq!(free_slots, 2 * 128 - 130);
         assert!(partial_len >= 1);
+        assert!(k.check_conservation());
+    }
+
+    #[test]
+    fn injected_alloc_faults_are_transient_and_keep_partial_progress() {
+        let mut k = kvc();
+        let m = ModelId(1);
+        k.register_kv(m, 512 * 1024, u32::MAX); // 4 slots/page
+        k.arm_alloc_faults(3);
+        let mut out = Vec::new();
+        match k.alloc_blocks(m, 5, &mut out) {
+            Err(KvError::FaultInjected { model }) => assert_eq!(model, m),
+            other => panic!("expected injected fault, got {other:?}"),
+        }
+        assert_eq!(out.len(), 2, "blocks before the injected fault stay allocated");
+        assert_eq!(k.kv_used_blocks(m), 2);
+        assert_eq!(k.alloc_faults_injected(), 1);
+        // Transient: retrying advances the injector past the fault, so a
+        // bounded number of retries always reaches the full batch.
+        while out.len() < 5 {
+            let _ = k.alloc_blocks(m, (5 - out.len()) as u32, &mut out);
+        }
+        assert_eq!(k.kv_used_blocks(m), 5);
+        k.disarm_alloc_faults();
+        assert!(k.alloc_block(m).is_ok());
+        assert!(k.check_conservation());
+    }
+
+    #[test]
+    fn single_alloc_injector_counts_attempts() {
+        let mut k = kvc();
+        let m = ModelId(1);
+        k.register_kv(m, MB, u32::MAX);
+        k.arm_alloc_faults(2);
+        assert!(k.alloc_block(m).is_ok()); // attempt 1
+        assert!(matches!(k.alloc_block(m), Err(KvError::FaultInjected { .. }))); // attempt 2
+        assert!(k.alloc_block(m).is_ok()); // attempt 3
+        assert_eq!(k.alloc_faults_injected(), 1);
+        // Re-arming resets the attempt counter deterministically.
+        k.arm_alloc_faults(2);
+        assert!(k.alloc_block(m).is_ok());
+        assert!(matches!(k.alloc_block(m), Err(KvError::FaultInjected { .. })));
         assert!(k.check_conservation());
     }
 

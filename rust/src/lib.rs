@@ -14,6 +14,7 @@ pub mod model;
 
 pub mod cluster;
 pub mod engine;
+pub mod fault;
 pub mod request;
 
 pub mod sched;

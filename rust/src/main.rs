@@ -31,6 +31,7 @@ fn main() {
                  usage: prism <serve|sim|trace|exp|models> [options]\n\
                  \n  prism serve --models prism-nano,prism-micro --requests 12\
                  \n  prism sim --policy prism --gpus 4 --trace novita --minutes 10\
+                 \n  prism sim --policy prism --gpus 4 --faults churn:7\
                  \n  prism trace --kind novita --hours 2\
                  \n  prism exp fig5 [--quick] [--jobs N]\
                  \n  prism exp all --quick --jobs 8\n"
@@ -123,7 +124,13 @@ fn cmd_sim() -> Result<()> {
         .opt("minutes", "10", "trace duration")
         .opt("rate-scale", "1.0", "request-rate multiplier")
         .opt("slo-scale", "8.0", "SLO scale factor")
-        .opt("seed", "1", "trace seed");
+        .opt("seed", "1", "trace seed")
+        .opt(
+            "faults",
+            "",
+            "fault spec: crash@t:gN[+dur];slow@a-b:gNxF;loadfail@o1,o2;allocfail@a-b:gN/k;drop \
+             or churn:<seed> (empty = fault-free)",
+        );
     let a = cli.parse_env(1).map_err(anyhow::Error::msg)?;
     let policy_name = a.get_or("policy", "prism");
     let policy = registry().lookup(&policy_name).ok_or_else(|| {
@@ -147,8 +154,12 @@ fn cmd_sim() -> Result<()> {
             .take(n_models)
             .collect(),
     );
-    let mut cfg = SimConfig::with_policy(policy, a.get_usize("gpus", 2) as u32);
+    let n_gpus = a.get_usize("gpus", 2) as u32;
+    let mut cfg = SimConfig::with_policy(policy, n_gpus);
     cfg.slo_scale = a.get_f64("slo-scale", 8.0);
+    let fault_spec = a.get_or("faults", "");
+    cfg.faults = prism::fault::resolve(&fault_spec, n_gpus, trace.duration)
+        .map_err(|e| anyhow::anyhow!("invalid --faults spec: {e}"))?;
     // Single run whose table prints percentile columns: keep them exact
     // rather than sketch estimates.
     cfg.metrics_full_dump = true;
@@ -174,6 +185,17 @@ fn cmd_sim() -> Result<()> {
     t.row(vec!["evictions".into(), m.evictions.to_string()]);
     t.row(vec!["migrations".into(), m.migrations.to_string()]);
     t.row(vec!["preemptions".into(), m.preemptions.to_string()]);
+    if m.faults.any() {
+        t.row(vec!["gpu_crashes".into(), m.faults.gpu_crashes.to_string()]);
+        t.row(vec!["gpu_recoveries".into(), m.faults.gpu_recoveries.to_string()]);
+        t.row(vec!["reqs_restarted".into(), m.faults.requests_restarted.to_string()]);
+        t.row(vec!["reqs_dropped_by_crash".into(), m.faults.requests_dropped.to_string()]);
+        t.row(vec!["load_retries".into(), m.faults.load_retries.to_string()]);
+        t.row(vec!["load_failures".into(), m.faults.load_failures.to_string()]);
+        t.row(vec!["alloc_faults".into(), m.faults.alloc_faults_injected.to_string()]);
+        t.row(vec!["models_recovered".into(), m.faults.models_recovered.to_string()]);
+        t.row(vec!["recovery_s".into(), format!("{:.2}", m.faults.recovery_seconds)]);
+    }
     let wall = t0.elapsed().as_secs_f64();
     t.row(vec!["sim_wall_s".into(), format!("{wall:.2}")]);
     t.row(vec!["sim_events".into(), m.sim_events.to_string()]);

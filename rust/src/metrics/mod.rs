@@ -123,6 +123,55 @@ impl ModelStats {
     }
 }
 
+/// Fault-injection and recovery accounting (all zero on fault-free runs).
+///
+/// Populated by the simulator from the run's `FaultPlan`: crash/recovery
+/// event counts, how crashed GPUs' in-flight requests were handled
+/// (restarted elsewhere vs dropped), load retry/failure totals, injected
+/// transient allocation faults, and how long evicted models took to regain
+/// residency after a crash. Merging (sweep aggregation) is plain addition,
+/// so fault counters stay order-independent like every other counter.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultStats {
+    /// GPU crash events applied.
+    pub gpu_crashes: u64,
+    /// GPU recovery events applied.
+    pub gpu_recoveries: u64,
+    /// In-flight requests re-queued for a fresh prefill after a crash.
+    pub requests_restarted: u64,
+    /// In-flight requests dropped by a crash (plan `on_crash = Drop`).
+    pub requests_dropped: u64,
+    /// Model-load attempts that failed and were retried with backoff.
+    pub load_retries: u64,
+    /// Model loads that exhausted their retry budget.
+    pub load_failures: u64,
+    /// Transient KV-allocation faults injected.
+    pub alloc_faults_injected: u64,
+    /// Crash-evicted models that regained residency.
+    pub models_recovered: u64,
+    /// Total crash-to-reresidency time across recovered models.
+    pub recovery_seconds: f64,
+}
+
+impl FaultStats {
+    fn merge(&mut self, other: &FaultStats) {
+        self.gpu_crashes += other.gpu_crashes;
+        self.gpu_recoveries += other.gpu_recoveries;
+        self.requests_restarted += other.requests_restarted;
+        self.requests_dropped += other.requests_dropped;
+        self.load_retries += other.load_retries;
+        self.load_failures += other.load_failures;
+        self.alloc_faults_injected += other.alloc_faults_injected;
+        self.models_recovered += other.models_recovered;
+        self.recovery_seconds += other.recovery_seconds;
+    }
+
+    /// True when any fault machinery fired during the run.
+    pub fn any(&self) -> bool {
+        *self != FaultStats::default()
+    }
+}
+
 /// Aggregated results of one serving run (the default streaming sink).
 #[derive(Debug, Default)]
 pub struct RunMetrics {
@@ -150,6 +199,8 @@ pub struct RunMetrics {
     pub preemptions: u64,
     /// Total simulator events processed (hot-path events/sec benchmarking).
     pub sim_events: u64,
+    /// Fault-injection and recovery accounting (zero on fault-free runs).
+    pub faults: FaultStats,
     /// Exact sorted latency views (full-dump mode only), built lazily on the
     /// first percentile query and rebuilt if `completions` grew since.
     sorted: RefCell<Option<SortedCache>>,
@@ -171,6 +222,7 @@ impl Clone for RunMetrics {
             migrations: self.migrations,
             preemptions: self.preemptions,
             sim_events: self.sim_events,
+            faults: self.faults.clone(),
             // The lazy sorted views are not carried over: clones are
             // typically mutated further and a stale cache must not survive.
             sorted: RefCell::new(None),
@@ -276,6 +328,7 @@ impl RunMetrics {
         self.migrations += other.migrations;
         self.preemptions += other.preemptions;
         self.sim_events += other.sim_events;
+        self.faults.merge(&other.faults);
         if self.full_dump {
             self.completions.extend(other.completions);
         }
@@ -650,6 +703,25 @@ mod tests {
         let mut w: Vec<Completion> = vec![comp(0.2, 0.5, 0.01, 0.05)];
         MetricsSink::merge(&mut w, v);
         assert_eq!(w.len(), 2);
+    }
+
+    #[test]
+    fn fault_stats_merge_and_clone() {
+        let mut a = RunMetrics::streaming();
+        a.faults.gpu_crashes = 1;
+        a.faults.recovery_seconds = 2.5;
+        let mut b = RunMetrics::streaming();
+        b.faults.gpu_crashes = 2;
+        b.faults.requests_restarted = 7;
+        b.faults.recovery_seconds = 0.5;
+        assert!(b.faults.any());
+        assert!(!RunMetrics::streaming().faults.any());
+        let c = b.clone();
+        assert_eq!(c.faults, b.faults);
+        a.merge(b);
+        assert_eq!(a.faults.gpu_crashes, 3);
+        assert_eq!(a.faults.requests_restarted, 7);
+        assert!((a.faults.recovery_seconds - 3.0).abs() < 1e-12);
     }
 
     #[test]

@@ -133,7 +133,12 @@ pub trait SchedulingPolicy: Send + Sync + std::fmt::Debug {
 /// t=0): the default [`SchedulingPolicy::initial_placement`] body, shared
 /// by all space-sharing policies.
 fn place_all_uniform(ctx: &mut PolicyCtx<'_>) {
-    let caps: Vec<f64> = (0..ctx.n_gpus()).map(|g| ctx.shared_kv_bytes(g) as f64).collect();
+    // Crashed GPUs offer zero capacity: `place` scores them at infinite
+    // KVPR and routes around them. With every GPU healthy (every fault-free
+    // run) this is exactly the old capacity vector.
+    let caps: Vec<f64> = (0..ctx.n_gpus())
+        .map(|g| if ctx.gpu_available(g) { ctx.shared_kv_bytes(g) as f64 } else { 0.0 })
+        .collect();
     let inputs: Vec<PlacementInput> = ctx
         .specs()
         .iter()

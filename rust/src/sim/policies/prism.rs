@@ -65,6 +65,11 @@ fn kvpr_placement(ctx: &mut PolicyCtx<'_>, now: f64) {
     ctx.refresh_demand(now);
     let caps: Vec<f64> = (0..ctx.n_gpus())
         .map(|g| {
+            if !ctx.gpu_available(g) {
+                // Crashed/preempted GPU: zero capacity makes Algorithm 1
+                // steer every placement (and migration target) away from it.
+                return 0.0;
+            }
             let st = ctx.kv_stats(g);
             (st.total_bytes - st.kv_used_bytes) as f64
         })

@@ -55,6 +55,7 @@ use std::sync::Arc;
 use crate::cluster::gpu::GroupAlloc;
 use crate::cluster::{Cluster, GpuId, Residency};
 use crate::engine::perf::GpuPerf;
+use crate::fault::{CrashedRequests, FaultAction, FaultPlan};
 use crate::kvcached::{KvError, MemStats};
 use crate::metrics::{RunMetrics, TimelineSample};
 use crate::model::spec::{ModelId, ModelSpec};
@@ -105,6 +106,11 @@ pub struct SimConfig {
     /// holding every completion in memory. Opt in for tests/figures that
     /// need exact percentiles or per-request records.
     pub metrics_full_dump: bool,
+    /// Deterministic fault schedule (see `crate::fault`): faults are pure
+    /// config data, resolved before the run, never drawn from RNG inside
+    /// the event loop. The default (empty) plan is bit-identical to a
+    /// fault-free simulator.
+    pub faults: FaultPlan,
 }
 
 impl SimConfig {
@@ -134,6 +140,7 @@ impl SimConfig {
             slack_aware: policy.slack_aware() && std::env::var("PRISM_NO_MH").is_err(),
             stream_arrivals: true,
             metrics_full_dump: false,
+            faults: FaultPlan::default(),
             policy,
         }
     }
@@ -162,6 +169,10 @@ impl PartialOrd for Time {
 
 impl Ord for Time {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Invariant (documented panic): every event time is derived from
+        // finite trace timestamps, finite perf-model durations, and finite
+        // validated fault times (`FaultPlan::validate` rejects non-finite
+        // input), so a NaN here is a construction bug, not a runtime state.
         self.0.partial_cmp(&other.0).expect("no NaN times")
     }
 }
@@ -172,6 +183,9 @@ enum Ev {
     Step(ModelId),
     Epoch,
     Sample,
+    /// Index into `Simulator::fault_schedule`; pushed only when the plan is
+    /// non-empty, so a zero-fault run's heap is untouched.
+    Fault(usize),
 }
 
 pub struct Simulator {
@@ -196,6 +210,13 @@ pub struct Simulator {
     pub timeline: Vec<TimelineSample>,
     heap: BinaryHeap<Reverse<(Time, u64, u8, usize)>>, // (time, seq, kind, payload)
     step_scheduled: BTreeSet<ModelId>,
+    /// Time-sorted fault actions from `SimConfig::faults` (empty = no-op).
+    fault_schedule: Vec<(f64, FaultAction)>,
+    /// True iff the plan is non-empty: gates the (tiny) per-step degraded-
+    /// mode bookkeeping so zero-fault runs skip it entirely.
+    faults_enabled: bool,
+    /// Crash time per evicted-by-crash model, until it is re-placed.
+    crashed_at: BTreeMap<ModelId, f64>,
     seq: u64,
     next_req_id: u64,
     cum_violations: usize,
@@ -204,7 +225,14 @@ pub struct Simulator {
 
 impl Simulator {
     pub fn new(cfg: SimConfig, specs: Vec<ModelSpec>) -> Self {
-        let cluster = Cluster::new(cfg.n_gpus, cfg.gpu_bytes, cfg.gpus_per_node, cfg.perf.clone());
+        let mut cluster =
+            Cluster::new(cfg.n_gpus, cfg.gpu_bytes, cfg.gpus_per_node, cfg.perf.clone());
+        if let Err(e) = cfg.faults.validate(cfg.n_gpus) {
+            panic!("invalid fault plan: {e}"); // CLI/sweep surfaces pre-validate
+        }
+        cluster.set_load_fail_attempts(cfg.faults.load_fail_attempts.clone());
+        let fault_schedule = cfg.faults.schedule();
+        let faults_enabled = !cfg.faults.is_empty();
         let slos = specs
             .iter()
             .map(|s| {
@@ -229,6 +257,9 @@ impl Simulator {
             timeline: Vec::new(),
             heap: BinaryHeap::new(),
             step_scheduled: BTreeSet::new(),
+            fault_schedule,
+            faults_enabled,
+            crashed_at: BTreeMap::new(),
             seq: 0,
             next_req_id: 0,
             cum_violations: 0,
@@ -277,6 +308,7 @@ impl Simulator {
             Ev::Step(m) => (1, m.0 as usize),
             Ev::Epoch => (2, 0),
             Ev::Sample => (3, 0),
+            Ev::Fault(i) => (4, i),
         };
         self.seq += 1;
         self.heap.push(Reverse((Time(t), self.seq, kind, payload)));
@@ -291,9 +323,12 @@ impl Simulator {
     // ------------------------------------------------------------ placement
 
     /// Pick GPUs for activating `spec` (lowest KVPR first, paper SS6.1).
+    /// Crashed/preempted GPUs are excluded entirely (degraded mode); with
+    /// every GPU healthy the filter passes everything through unchanged.
     fn pick_gpus(&mut self, spec: &ModelSpec, now: f64) -> Vec<GpuId> {
         self.refresh_demand(now);
         let mut scored: Vec<(f64, usize)> = (0..self.cluster.n_gpus())
+            .filter(|&g| self.cluster.gpu_available(g))
             .map(|g| {
                 let shared = self.cluster.gpus[g].kvc.shared_kv_bytes() as f64;
                 let w: f64 = self
@@ -341,10 +376,15 @@ impl Simulator {
                 return None;
             }
             match self.cluster.activate(&spec, gpus, now) {
-                Ok(ready) => return Some(ready),
+                Ok(ready) => {
+                    self.note_recovered(spec.id, now);
+                    return Some(ready);
+                }
                 Err(KvError::OutOfPages(_)) => {
                     // Evict the least-recently-active other idle resident,
-                    // then retry with freshly re-picked GPUs.
+                    // then retry with freshly re-picked GPUs. Invariant
+                    // (documented panic): `last_active` holds finite event
+                    // times, so the comparison cannot hit NaN.
                     let victim = self
                         .cluster
                         .residency
@@ -375,6 +415,75 @@ impl Simulator {
             .map(|r| self.cluster.engines[r.engine_idx].preemptions)
             .unwrap_or(0);
         self.cluster.evict(m)
+    }
+
+    // --------------------------------------------------------------- faults
+
+    /// A model evicted by a GPU crash just became resident again: close its
+    /// outage window. No-op (empty map) in fault-free runs.
+    fn note_recovered(&mut self, m: ModelId, now: f64) {
+        if let Some(t0) = self.crashed_at.remove(&m) {
+            self.metrics.faults.models_recovered += 1;
+            self.metrics.faults.recovery_seconds += now - t0;
+        }
+    }
+
+    /// Apply one scheduled [`FaultAction`] (event kind 4). All state it
+    /// touches is plain simulator/cluster data - determinism is inherited,
+    /// faults never consult a clock or RNG at apply time.
+    fn on_fault(&mut self, idx: usize, now: f64) {
+        let (_, action) = self.fault_schedule[idx];
+        match action {
+            FaultAction::Crash(g) => self.on_gpu_crash(g as usize, now),
+            FaultAction::Recover(g) => {
+                self.cluster.set_gpu_down(g as usize, false);
+                self.metrics.faults.gpu_recoveries += 1;
+            }
+            FaultAction::SlowStart(g, factor) => self.cluster.set_gpu_slow(g as usize, factor),
+            FaultAction::SlowEnd(g) => self.cluster.set_gpu_slow(g as usize, 1.0),
+            FaultAction::AllocArm(g, every) => {
+                self.cluster.gpus[g as usize].kvc.arm_alloc_faults(every);
+            }
+            FaultAction::AllocDisarm(g) => {
+                self.cluster.gpus[g as usize].kvc.disarm_alloc_faults();
+            }
+        }
+    }
+
+    /// GPU `g` crashed (or was spot-preempted): every model whose TP group
+    /// touches it loses residency. In-flight and queued requests either
+    /// restart from scratch via `pending` (re-routed by the policy at the
+    /// next epoch, typically onto surviving GPUs) or are dropped and
+    /// recorded, per `FaultPlan::on_crash` - never silently lost, so
+    /// `completed + dropped == admitted` holds through crashes.
+    fn on_gpu_crash(&mut self, g: usize, now: f64) {
+        self.cluster.set_gpu_down(g, true);
+        self.metrics.faults.gpu_crashes += 1;
+        let victims: Vec<ModelId> = self.cluster.residents_on(g).to_vec();
+        let drop_mode = self.cfg.faults.on_crash == CrashedRequests::Drop;
+        for m in victims {
+            // Queued requests live on the group's lead GPU (not always `g`).
+            let lead = self.cluster.residency[&m].gpus[0].0 as usize;
+            let (mine, rest): (Vec<Request>, Vec<Request>) =
+                std::mem::take(&mut self.gpu_queues[lead]).into_iter().partition(|r| r.model == m);
+            self.gpu_queues[lead] = rest;
+            let mut reqs = self.evict_model(m);
+            reqs.extend(mine);
+            if drop_mode {
+                self.metrics.faults.requests_dropped += reqs.len() as u64;
+                for mut r in reqs {
+                    r.phase = Phase::Dropped;
+                    self.metrics.record(crate::request::Completion::from_request(&r));
+                }
+            } else {
+                // Restart-prefill semantics: `Cluster::evict` drained the
+                // engine and reset per-request progress; the requests
+                // re-route at the next epoch.
+                self.metrics.faults.requests_restarted += reqs.len() as u64;
+                self.pending.extend(reqs);
+            }
+            self.crashed_at.entry(m).or_insert(now);
+        }
     }
 
     // ------------------------------------------------------------- arrivals
@@ -414,6 +523,11 @@ impl Simulator {
     }
 
     fn enqueue_on_gpu(&mut self, req: Request, now: f64) {
+        // Invariant (documented panic): callers route here only after
+        // observing residency (`route` checks `is_resident`; policies use
+        // `enqueue_resident` under the same contract), and nothing between
+        // that check and this call can evict - crash events are separate
+        // heap events, never concurrent with routing.
         let res = self.cluster.residency.get(&req.model).expect("resident");
         let lead = res.gpus[0].0 as usize;
         let ready = res.ready_at;
@@ -454,6 +568,9 @@ impl Simulator {
                 order.insert(*id, i);
             }
             let mut adm: Vec<Request> = queue;
+            // Invariant (documented panic): `moore_hodgson` partitions its
+            // candidate set, so admitted + deferred is exactly the queue and
+            // the index covers every id.
             adm.sort_by_key(|r| order[&r.id]);
             (adm, Vec::new())
         } else {
@@ -531,6 +648,13 @@ impl Simulator {
         let group = res.gpus.clone();
         if !self.cluster.engines[eidx].has_work() {
             return; // idle; a future arrival re-kicks
+        }
+        if self.faults_enabled {
+            // Degraded mode: the group runs at its slowest shard's pace.
+            // Gated on `faults_enabled` so zero-fault runs never touch
+            // `time_scale` (which stays at its bitwise-identity default 1.0).
+            let scale = self.cluster.group_slow_factor(&group);
+            self.cluster.engines[eidx].time_scale = scale;
         }
         let outcome = {
             let (engines, gpus) = (&mut self.cluster.engines, &mut self.cluster.gpus);
@@ -704,6 +828,17 @@ impl Simulator {
 
         // Drain: keep processing until no work remains (bounded tail).
         let tail_limit = trace.duration + 600.0;
+
+        // Fault actions become ordinary heap events (kind 4). An empty plan
+        // pushes nothing, keeping the zero-fault heap (and `sim_events`)
+        // bit-identical to a build without fault support.
+        for i in 0..self.fault_schedule.len() {
+            let t = self.fault_schedule[i].0;
+            if t <= tail_limit {
+                self.push_ev(t, Ev::Fault(i));
+            }
+        }
+
         let mut last_now = 0.0;
         loop {
             // Arrivals win time ties: in the pre-push formulation they carry
@@ -761,6 +896,7 @@ impl Simulator {
                     }
                 }
                 3 => self.on_sample(now),
+                4 => self.on_fault(payload, now),
                 _ => unreachable!(),
             }
         }
@@ -781,6 +917,16 @@ impl Simulator {
         self.metrics.activations = self.cluster.activations;
         self.metrics.evictions = self.cluster.evictions;
         self.metrics.migrations = self.cluster.migrations;
+        // Fault/recovery accounting (all zero - the `FaultStats` default -
+        // in a fault-free run).
+        self.metrics.faults.load_retries = self.cluster.load_retries;
+        self.metrics.faults.load_failures = self.cluster.load_failures;
+        self.metrics.faults.alloc_faults_injected = self
+            .cluster
+            .gpus
+            .iter()
+            .map(|d| d.kvc.alloc_faults_injected())
+            .sum();
         (self.metrics, self.timeline)
     }
 
@@ -874,6 +1020,19 @@ impl<'a> PolicyCtx<'a> {
         self.sim.cluster.engines[r.engine_idx].has_work()
     }
 
+    /// Is GPU `g` healthy (not crashed/spot-preempted)? Policies must not
+    /// place, migrate to, or count capacity on unavailable GPUs; the
+    /// simulator's own placement paths already filter them out.
+    pub fn gpu_available(&self, g: usize) -> bool {
+        self.sim.cluster.gpu_available(g)
+    }
+
+    /// Any GPU currently down? Cheap degraded-mode gate: `false` for every
+    /// fault-free run, letting policies skip availability masking entirely.
+    pub fn any_gpu_down(&self) -> bool {
+        self.sim.cluster.any_gpu_down()
+    }
+
     /// kvcached memory stats for GPU `g`.
     pub fn kv_stats(&self, g: usize) -> MemStats {
         self.sim.cluster.gpus[g].kvc.stats()
@@ -926,11 +1085,17 @@ impl<'a> PolicyCtx<'a> {
         let _ = self.sim.cluster.gpus[g].kvc.set_kv_limit(m, pages);
     }
 
-    /// Activate `specs()[idx]` on `gpus`. Best-effort: if memory is short
-    /// the model simply stays non-resident (t=0 placement semantics).
+    /// Activate `specs()[idx]` on `gpus`. Best-effort: if memory is short,
+    /// the load fails terminally (fault injection), or any requested GPU is
+    /// down, the model simply stays non-resident (t=0 placement semantics).
     pub fn activate(&mut self, idx: usize, gpus: Vec<GpuId>, now: f64) {
+        if gpus.iter().any(|g| !self.sim.cluster.gpu_available(g.0 as usize)) {
+            return;
+        }
         let spec = self.sim.specs[idx].clone();
-        let _ = self.sim.cluster.activate(&spec, gpus, now);
+        if self.sim.cluster.activate(&spec, gpus, now).is_ok() {
+            self.sim.note_recovered(spec.id, now);
+        }
     }
 
     /// Make `specs()[idx]` resident (picking GPUs by lowest KVPR, evicting
@@ -966,10 +1131,13 @@ impl<'a> PolicyCtx<'a> {
         self.sim.enqueue_on_gpu(req, now);
     }
 
-    /// Migrate resident model `m` to GPU `to`; returns success. The caller
-    /// is responsible for moving `m`'s queued requests (see
-    /// [`take_gpu_queue`](Self::take_gpu_queue)).
+    /// Migrate resident model `m` to GPU `to`; returns success. A crashed
+    /// target is refused outright. The caller is responsible for moving
+    /// `m`'s queued requests (see [`take_gpu_queue`](Self::take_gpu_queue)).
     pub fn migrate(&mut self, m: ModelId, to: GpuId, now: f64) -> bool {
+        if !self.sim.cluster.gpu_available(to.0 as usize) {
+            return false;
+        }
         let spec = self.sim.specs[self.sim.model_index[&m]].clone();
         self.sim.cluster.migrate(&spec, to, now, true).is_ok()
     }
@@ -1237,6 +1405,79 @@ mod tests {
             (sp - fp).abs() <= 0.01 * fp.max(1e-9),
             "sketch p95 {sp} vs exact {fp}"
         );
+    }
+
+    fn run_with_faults(p: &str, n_gpus: u32, trace: &Trace, faults: &str) -> RunMetrics {
+        let specs = specs_for(trace);
+        let mut cfg = SimConfig::new(p, n_gpus);
+        cfg.slo_scale = 10.0;
+        cfg.faults = crate::fault::resolve(faults, n_gpus, trace.duration).unwrap();
+        let (m, _) = Simulator::new(cfg, specs).run(trace);
+        m
+    }
+
+    #[test]
+    fn gpu_crash_reroutes_requests_and_recovers() {
+        let trace = small_trace(4, 300.0, 11).scale_rate(2.0);
+        let m = run_with_faults("prism", 2, &trace, "crash@60:g0+40");
+        assert_eq!(m.faults.gpu_crashes, 1);
+        assert_eq!(m.faults.gpu_recoveries, 1);
+        assert!(m.faults.requests_restarted > 0, "crash at t=60 must catch work in flight");
+        assert_eq!(m.faults.requests_dropped, 0);
+        // No accounting leaks: every admitted request is recorded once.
+        assert_eq!(m.total(), trace.events.len());
+        assert_eq!(m.completed() + m.dropped(), m.total());
+        // Crashed models were re-placed on the surviving GPU.
+        assert!(m.faults.models_recovered > 0);
+        assert!(m.faults.recovery_seconds > 0.0);
+    }
+
+    #[test]
+    fn crash_drop_mode_records_dropped_completions() {
+        let trace = small_trace(4, 300.0, 11).scale_rate(2.0);
+        let m = run_with_faults("prism", 2, &trace, "crash@60:g0+40;drop");
+        assert_eq!(m.faults.gpu_crashes, 1);
+        assert!(m.faults.requests_dropped > 0);
+        assert_eq!(m.faults.requests_restarted, 0);
+        assert_eq!(m.total(), trace.events.len());
+        assert_eq!(m.completed() + m.dropped(), m.total());
+        assert!(m.dropped() as u64 >= m.faults.requests_dropped);
+    }
+
+    #[test]
+    fn slowdown_window_degrades_latency_but_completes() {
+        let trace = small_trace(4, 300.0, 11);
+        let base = run_with_faults("prism", 2, &trace, "");
+        let slow = run_with_faults("prism", 2, &trace, "slow@0-300:g0x8;slow@0-300:g1x8");
+        assert_eq!(slow.total(), base.total());
+        assert!(slow.completed() > 0);
+        assert!(
+            slow.mean_ttft() > base.mean_ttft(),
+            "8x slowdown must hurt TTFT: {} vs {}",
+            slow.mean_ttft(),
+            base.mean_ttft()
+        );
+    }
+
+    #[test]
+    fn alloc_fault_window_counts_injections_and_recovers() {
+        let trace = small_trace(4, 300.0, 11);
+        let m = run_with_faults("prism", 2, &trace, "allocfail@0-300:g0/3;allocfail@0-300:g1/3");
+        assert!(m.faults.alloc_faults_injected > 0);
+        assert_eq!(m.total(), trace.events.len());
+        assert!(m.completed() > 0, "transient alloc faults must not wedge the engine");
+    }
+
+    #[test]
+    fn terminal_load_failure_is_retried_at_next_epoch() {
+        let trace = small_trace(4, 300.0, 11);
+        // Ordinals 0..=2 exhaust MAX_LOAD_ATTEMPTS on the very first
+        // activation; the model re-activates successfully later.
+        let m = run_with_faults("prism", 2, &trace, "loadfail@0,1,2");
+        assert_eq!(m.faults.load_failures, 1);
+        assert_eq!(m.faults.load_retries, 2);
+        assert_eq!(m.total(), trace.events.len());
+        assert!(m.completed() > 0);
     }
 
     #[test]

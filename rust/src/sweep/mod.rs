@@ -23,13 +23,19 @@
 //!   path literally runs the same closure in a plain loop on the caller's
 //!   thread.
 //! * **Grid enumeration is fixed**: [`SweepGrid::points`] nests
-//!   trace → rate scale → SLO scale → GPU count → seed → policy, matching
-//!   the hand-rolled loops it replaced, so tables keep their historical row
-//!   order. The default policy axis is the registry's registration order
-//!   (`crate::sim::registry()`), and policies are keyed by name, so the
-//!   same determinism contract extends to any registered
+//!   trace → rate scale → SLO scale → GPU count → seed → fault spec →
+//!   policy, matching the hand-rolled loops it replaced, so tables keep
+//!   their historical row order (the fault axis defaults to a single
+//!   fault-free entry). The default policy axis is the registry's
+//!   registration order (`crate::sim::registry()`), and policies are keyed
+//!   by name, so the same determinism contract extends to any registered
 //!   `SchedulingPolicy` — policy hooks must be pure w.r.t. their
 //!   `PolicyCtx` (see `sim/policies`).
+//! * **Faults are data.** A point's fault spec resolves to a
+//!   `crate::fault::FaultPlan` before its simulator is constructed; all
+//!   randomness (the `churn:<seed>` shorthand) is consumed at resolution
+//!   time, never inside the event loop, so faulty points satisfy the same
+//!   purity requirement and the `--jobs` identity extends to fault sweeps.
 //!
 //! `jobs = 0` means "auto": the `PRISM_JOBS` env var if set, else
 //! `std::thread::available_parallelism()`.

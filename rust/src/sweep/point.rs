@@ -1,5 +1,6 @@
-//! Sweep points and grids: the (policy, trace, rate/SLO/GPU scale, seed)
-//! coordinates of one simulation run, plus a cartesian-product builder.
+//! Sweep points and grids: the (policy, trace, rate/SLO/GPU scale, seed,
+//! fault spec) coordinates of one simulation run, plus a cartesian-product
+//! builder.
 
 use crate::metrics::RunMetrics;
 use crate::model::spec::ModelSpec;
@@ -20,6 +21,12 @@ pub struct SweepPoint {
     pub rate_scale: f64,
     pub slo_scale: f64,
     pub seed: u64,
+    /// Fault-spec axis (see `crate::fault::resolve`): `None` is a
+    /// fault-free run and leaves the point's key unchanged, so pre-existing
+    /// grids keep their historical keys byte-for-byte. Resolved to a
+    /// `FaultPlan` when the point runs (deterministically - faults are
+    /// data, so the `--jobs 1` ≡ `--jobs N` identity holds per point).
+    pub faults: Option<&'static str>,
 }
 
 impl SweepPoint {
@@ -27,15 +34,32 @@ impl SweepPoint {
     /// run order - result rows are attributed by key, never by completion
     /// order.
     pub fn key(&self) -> String {
+        let fault_seg = match self.faults {
+            // ','/';' would collide with CSV cells and spec separators.
+            Some(spec) => format!("-f{}", spec.replace([',', ';'], "+")),
+            None => String::new(),
+        };
         format!(
-            "t{}-g{}-rs{}-ss{}-s{}-{}",
+            "t{}-g{}-rs{}-ss{}-s{}{}-{}",
             self.trace,
             self.n_gpus,
             self.rate_scale,
             self.slo_scale,
             self.seed,
+            fault_seg,
             self.policy
         )
+    }
+
+    /// Resolve the point's fault spec (if any) into `cfg.faults`.
+    /// Fault specs in grids are programmatic, so an invalid one is a bug in
+    /// the experiment definition - surfaced loudly (documented panic), not
+    /// folded into a best-effort run.
+    fn apply_faults(&self, cfg: &mut SimConfig, trace: &Trace) {
+        if let Some(spec) = self.faults {
+            cfg.faults = crate::fault::resolve(spec, self.n_gpus, trace.duration)
+                .unwrap_or_else(|e| panic!("invalid fault spec {spec:?}: {e}"));
+        }
     }
 
     /// Run this point: policy + GPU count + SLO scale from the point, rate
@@ -53,7 +77,8 @@ impl SweepPoint {
     /// As [`run`](Self::run) but with a caller-tuned `SimConfig` (tau,
     /// sampling, eviction knobs); the point's rate scale is still applied
     /// (lazily, at the arrival cursor).
-    pub fn run_with(&self, cfg: SimConfig, specs: &[ModelSpec], trace: &Trace) -> RunMetrics {
+    pub fn run_with(&self, mut cfg: SimConfig, specs: &[ModelSpec], trace: &Trace) -> RunMetrics {
+        self.apply_faults(&mut cfg, trace);
         Simulator::new(cfg, specs.to_vec()).run_scaled(trace, self.rate_scale).0
     }
 
@@ -64,15 +89,17 @@ impl SweepPoint {
     pub fn run_prescaled(&self, specs: &[ModelSpec], trace: &Trace) -> RunMetrics {
         let mut cfg = SimConfig::new(self.policy, self.n_gpus);
         cfg.slo_scale = self.slo_scale;
+        self.apply_faults(&mut cfg, trace);
         Simulator::new(cfg, specs.to_vec()).run(trace).0
     }
 }
 
 /// Cartesian-product builder over sweep axes. Enumeration order is part of
 /// the contract (see module docs in `sweep`): trace → rate scale → SLO
-/// scale → GPU count → seed → policy, policies innermost so each table row
-/// group compares systems side by side exactly like the hand-rolled loops
-/// this replaced.
+/// scale → GPU count → seed → fault spec → policy, policies innermost so
+/// each table row group compares systems side by side exactly like the
+/// hand-rolled loops this replaced. The fault axis defaults to the single
+/// fault-free entry, leaving existing grids unchanged.
 #[derive(Debug, Clone)]
 pub struct SweepGrid {
     policies: Vec<&'static str>,
@@ -81,6 +108,7 @@ pub struct SweepGrid {
     rate_scales: Vec<f64>,
     slo_scales: Vec<f64>,
     seeds: Vec<u64>,
+    faults: Vec<Option<&'static str>>,
 }
 
 impl Default for SweepGrid {
@@ -102,6 +130,7 @@ impl SweepGrid {
             rate_scales: vec![1.0],
             slo_scales: vec![8.0],
             seeds: vec![0],
+            faults: vec![None],
         }
     }
 
@@ -142,6 +171,16 @@ impl SweepGrid {
         self
     }
 
+    /// Fault-spec axis (`crate::fault::resolve` grammar, including the
+    /// `churn:<seed>` shorthand, which expands against each point's GPU
+    /// count and trace duration). Replaces the default fault-free entry;
+    /// include `""` (the empty spec) to keep a healthy-cluster column next
+    /// to the faulty ones.
+    pub fn faults(mut self, fs: &[&'static str]) -> Self {
+        self.faults = fs.iter().map(|&f| Some(f)).collect();
+        self
+    }
+
     /// Number of points the grid enumerates.
     pub fn len(&self) -> usize {
         self.traces.len()
@@ -149,6 +188,7 @@ impl SweepGrid {
             * self.slo_scales.len()
             * self.gpus.len()
             * self.seeds.len()
+            * self.faults.len()
             * self.policies.len()
     }
 
@@ -164,15 +204,18 @@ impl SweepGrid {
                 for &slo_scale in &self.slo_scales {
                     for &n_gpus in &self.gpus {
                         for &seed in &self.seeds {
-                            for &policy in &self.policies {
-                                out.push(SweepPoint {
-                                    policy,
-                                    trace,
-                                    n_gpus,
-                                    rate_scale,
-                                    slo_scale,
-                                    seed,
-                                });
+                            for &faults in &self.faults {
+                                for &policy in &self.policies {
+                                    out.push(SweepPoint {
+                                        policy,
+                                        trace,
+                                        n_gpus,
+                                        rate_scale,
+                                        slo_scale,
+                                        seed,
+                                        faults,
+                                    });
+                                }
                             }
                         }
                     }
@@ -202,6 +245,31 @@ mod tests {
         assert_eq!(pts[4].trace, 1);
         // Enumeration is deterministic.
         assert_eq!(pts, g.points());
+    }
+
+    #[test]
+    fn fault_axis_multiplies_grid_and_keys_stay_csv_safe() {
+        // Default axis: fault-free points whose keys match the historical
+        // format exactly (no `-f` segment).
+        let base = SweepGrid::new().policies(&["prism"]);
+        let p0 = base.points()[0];
+        assert_eq!(p0.faults, None);
+        assert!(!p0.key().contains("-f"), "fault-free key changed: {}", p0.key());
+
+        let g = SweepGrid::new().policies(&["prism", "qlm"]).faults(&["", "loadfail@0,1"]);
+        assert_eq!(g.len(), 4);
+        let pts = g.points();
+        // Fault specs nest outside the policy axis.
+        assert_eq!((pts[0].faults, pts[0].policy), (Some(""), "prism"));
+        assert_eq!((pts[1].faults, pts[1].policy), (Some(""), "qlm"));
+        assert_eq!(pts[2].faults, Some("loadfail@0,1"));
+        let k = pts[2].key();
+        assert!(k.contains("-floadfail@0+1"), "sanitized spec in key: {k}");
+        assert!(!k.contains(','), "keys must stay CSV-safe: {k}");
+        let mut keys: Vec<String> = pts.iter().map(|p| p.key()).collect();
+        keys.sort();
+        keys.dedup();
+        assert_eq!(keys.len(), 4, "fault axis must keep keys unique");
     }
 
     #[test]

@@ -187,6 +187,80 @@ fn sweep_jobs_byte_identical_fig5() {
 }
 
 #[test]
+fn fault_sweep_jobs_byte_identical() {
+    // Faults are data: adding a seeded fault axis to a sweep must preserve
+    // the engine's `--jobs` identity contract. Every fault plan (including
+    // the `churn:<seed>` shorthand) is resolved before its simulator is
+    // constructed, so faulty points are as pure as fault-free ones and
+    // `--jobs 1` vs `--jobs 8` stays byte-identical, fault counters and all.
+    let specs = models_8x8b();
+    let trace = generate(&TraceGenConfig::novita_like(8, 240.0, 42)).scale_rate(1.5);
+    let grid = prism::sweep::SweepGrid::new()
+        .gpus(&[2])
+        .slo_scales(&[8.0])
+        .faults(&["churn:3", "crash@60:g0+30;slow@100-180:g1x2"]);
+    let points = grid.points();
+    assert_eq!(points.len(), 2 * prism::sim::registry().names().len());
+    let digest = |jobs: usize| -> Vec<(String, Vec<u64>)> {
+        prism::sweep::run_points(&points, jobs, |_, pt| pt.run(&specs, &trace))
+            .iter()
+            .zip(&points)
+            .map(|(m, pt)| {
+                (
+                    pt.key(),
+                    vec![
+                        m.total() as u64,
+                        m.completed() as u64,
+                        m.ttft_attainment().to_bits(),
+                        m.mean_ttft().to_bits(),
+                        m.sim_events,
+                        m.preemptions,
+                        m.faults.gpu_crashes,
+                        m.faults.gpu_recoveries,
+                        m.faults.requests_restarted,
+                        m.faults.load_retries,
+                        m.faults.alloc_faults_injected,
+                        m.faults.recovery_seconds.to_bits(),
+                    ],
+                )
+            })
+            .collect()
+    };
+    assert_eq!(digest(1), digest(8), "fault sweep diverged between --jobs 1 and --jobs 8");
+}
+
+#[test]
+fn gpu_crash_recovery_accounting_across_policies() {
+    // A crash + recovery window mid-run must leave no accounting leaks for
+    // ANY registered policy: every admitted request reaches a terminal
+    // state (completed, or dropped-by-crash in drop mode), and the crash /
+    // recovery counters fire exactly once each.
+    let specs = models_8x8b();
+    let trace = generate(&TraceGenConfig::novita_like(8, 300.0, 11)).scale_rate(2.0);
+    for name in prism::sim::registry().names() {
+        let mut cfg = SimConfig::new(name, 2);
+        cfg.slo_scale = 8.0;
+        cfg.faults = prism::fault::resolve("crash@60:g0+40", 2, trace.duration).unwrap();
+        let (m, _) = Simulator::new(cfg, specs.clone()).run(&trace);
+        assert_eq!(m.faults.gpu_crashes, 1, "{name}");
+        assert_eq!(m.faults.gpu_recoveries, 1, "{name}");
+        assert_eq!(m.faults.requests_dropped, 0, "{name}: restart mode must not drop at crash");
+        // No leak: every admitted request reaches a terminal record, whether
+        // completed, restarted-then-completed, or tail-cutoff dropped.
+        assert_eq!(m.total(), trace.events.len(), "{name}: request accounting leak");
+    }
+    // Drop mode: crashed in-flight work is counted, not silently lost.
+    let mut cfg = SimConfig::new("prism", 2);
+    cfg.slo_scale = 8.0;
+    cfg.faults = prism::fault::resolve("crash@60:g0+40;drop", 2, trace.duration).unwrap();
+    let (m, _) = Simulator::new(cfg, specs.clone()).run(&trace);
+    assert!(m.faults.requests_dropped > 0, "drop mode saw no in-flight work at crash time");
+    // >= because the tail cutoff can also drop stragglers unrelated to the crash.
+    assert!(m.dropped() as u64 >= m.faults.requests_dropped);
+    assert_eq!(m.total(), trace.events.len(), "drop mode: completed + dropped != admitted");
+}
+
+#[test]
 fn experiment_drivers_smoke() {
     // The cheapest three drivers run end to end and save CSVs.
     for id in ["fig10", "fig13", "overhead"] {

@@ -95,6 +95,41 @@ fn trait_dispatch_matches_enum_reference_8x8b_2gpus() {
 }
 
 #[test]
+fn empty_fault_plan_matches_enum_reference() {
+    // Acceptance check for the fault-injection subsystem: an explicitly
+    // resolved empty `--faults` spec must leave every policy
+    // bitwise-identical to the PRE-fault-subsystem simulator. The frozen
+    // enum reference predates the fault module entirely, so this proves
+    // "no faults" means "no behavior change", not merely "same as another
+    // faultless run of the new code".
+    let specs = assign_ids(
+        table3_catalog()
+            .into_iter()
+            .filter(|m| m.name.contains("8b") || m.name.contains("7b"))
+            .take(8)
+            .collect(),
+    );
+    let trace = generate(&TraceGenConfig::novita_like(8, 300.0, 1234)).scale_rate(2.0);
+    for (kind, name) in POLICIES {
+        let mut old_cfg = refsim::SimConfig::new(kind, 2);
+        let mut new_cfg = SimConfig::new(name, 2);
+        old_cfg.slo_scale = 8.0;
+        new_cfg.slo_scale = 8.0;
+        old_cfg.metrics_full_dump = true;
+        new_cfg.metrics_full_dump = true;
+        new_cfg.faults = prism::fault::resolve("", 2, trace.duration).expect("empty spec");
+        assert!(new_cfg.faults.is_empty(), "empty spec must resolve to the empty plan");
+        let (old_m, _) = refsim::Simulator::new(old_cfg, specs.to_vec()).run(&trace);
+        let (new_m, _) = Simulator::new(new_cfg, specs.to_vec()).run(&trace);
+        assert_eq!(
+            fingerprint(&old_m),
+            fingerprint(&new_m),
+            "policy {name}: an empty FaultPlan changed behavior vs the pre-fault reference"
+        );
+    }
+}
+
+#[test]
 fn trait_dispatch_matches_enum_reference_under_memory_pressure() {
     // Small-model fleet squeezed onto undersized GPUs: activation retries,
     // bounded give-ups, and heavy eviction traffic — the paths where a
