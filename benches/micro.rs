@@ -148,7 +148,7 @@ fn bench_trace_and_sim() {
         1,
         8,
         |_| {
-            let cfg = SimConfig::new("prism", 2);
+            let cfg = SimConfig::for_policy("prism").gpus(2);
             let (m, _) = Simulator::new(cfg, specs.clone()).run(&trace);
             black_box(m.total())
         },

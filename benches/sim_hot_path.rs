@@ -6,7 +6,10 @@
 //! to isolate the kvcached allocator + engine per-token path. The
 //! `faulty-churn-*` scenarios add a seeded fault plan (GPU crashes,
 //! slowdowns, alloc faults, load failures - see `prism::fault`) on top of
-//! the churn squeeze, timing the recovery paths.
+//! the churn squeeze, timing the recovery paths. The `het-fleet-*`
+//! scenarios run a mixed `FleetSpec` (A100s + L4s) so the per-GPU
+//! perf/memory lookups and cost accounting on the heterogeneous path stay
+//! on the perf radar too.
 //!
 //! Flags:
 //!   --smoke              tiny CI configuration (seconds, not minutes)
@@ -31,6 +34,7 @@ use std::collections::BTreeMap;
 use std::time::Instant;
 
 use prism::bench::harness::Table;
+use prism::cluster::FleetSpec;
 use prism::metrics::RunMetrics;
 use prism::model::spec::{catalog_subset, ModelId, ModelSpec};
 use prism::sim::{registry, SimConfig, Simulator};
@@ -53,6 +57,11 @@ struct Scenario {
     /// Fault spec resolved via `prism::fault::resolve` against this
     /// scenario's GPU count and duration (`None` = fault-free).
     faults: Option<&'static str>,
+    /// Heterogeneous fleet spec (`prism::cluster::FleetSpec` grammar, e.g.
+    /// `2xa100+4xl4`). When set it overrides `n_gpus` and `gpu_bytes` with
+    /// the fleet's own size and per-kind memory; `None` = uniform H100
+    /// cluster sized by `n_gpus`.
+    fleet: Option<&'static str>,
 }
 
 const GB: u64 = 1 << 30;
@@ -142,6 +151,7 @@ fn main() {
                 gpu_bytes: 80 * GB,
                 small_models: false,
                 faults: None,
+                fleet: None,
             },
             Scenario {
                 name: "churn-12m-2g-2min",
@@ -151,6 +161,7 @@ fn main() {
                 gpu_bytes: 8 * GB,
                 small_models: true,
                 faults: None,
+                fleet: None,
             },
             // Churn squeeze + a seeded fault plan: crashes, slowdowns,
             // alloc faults, and load failures exercise the recovery paths
@@ -163,6 +174,21 @@ fn main() {
                 gpu_bytes: 8 * GB,
                 small_models: true,
                 faults: Some("churn:7"),
+                fleet: None,
+            },
+            // Mixed-kind fleet churn: small models squeezed across two
+            // A100s (40 GiB) and four L4s (24 GiB). Exercises the per-GPU
+            // perf/memory indirection, kind-aware placement (melange), and
+            // the CostLedger pricing on every step of the hot path.
+            Scenario {
+                name: "het-fleet-12m-6g-2min",
+                n_models: 12,
+                n_gpus: 6, // overridden by `fleet` (2 + 4 GPUs)
+                duration: 120.0,
+                gpu_bytes: 8 * GB, // overridden by `fleet` per-kind memory
+                small_models: true,
+                faults: None,
+                fleet: Some("2xa100+4xl4"),
             },
         ]
     } else {
@@ -175,6 +201,7 @@ fn main() {
                 gpu_bytes: 80 * GB,
                 small_models: false,
                 faults: None,
+                fleet: None,
             },
             Scenario {
                 name: "novita-100m-32g-2h",
@@ -184,6 +211,7 @@ fn main() {
                 gpu_bytes: 80 * GB,
                 small_models: false,
                 faults: None,
+                fleet: None,
             },
             // KV churn at scale: a small-model fleet squeezed onto GPUs with
             // a fraction of its working set, so the allocator (block
@@ -196,6 +224,7 @@ fn main() {
                 gpu_bytes: 12 * GB,
                 small_models: true,
                 faults: None,
+                fleet: None,
             },
             Scenario {
                 name: "faulty-churn-48m-4g-1h",
@@ -205,6 +234,19 @@ fn main() {
                 gpu_bytes: 12 * GB,
                 small_models: true,
                 faults: Some("churn:7"),
+                fleet: None,
+            },
+            // Full-scale heterogeneous fleet: mixed A100/L4 kinds under the
+            // same hour-long small-model load as the churn scenarios.
+            Scenario {
+                name: "het-fleet-48m-12g-1h",
+                n_models: 48,
+                n_gpus: 12, // overridden by `fleet` (4 + 8 GPUs)
+                duration: 3600.0,
+                gpu_bytes: 12 * GB, // overridden by `fleet` per-kind memory
+                small_models: true,
+                faults: None,
+                fleet: Some("4xa100+8xl4"),
             },
         ]
     };
@@ -248,8 +290,13 @@ fn main() {
                 cfg.slo_scale = 8.0;
                 cfg.stream_arrivals = stream;
                 cfg.gpu_bytes = sc.gpu_bytes;
+                if let Some(fs) = sc.fleet {
+                    cfg = cfg.fleet(FleetSpec::parse(fs).expect("scenario fleet spec"));
+                }
+                // Resolve faults against the post-fleet GPU count so fault
+                // GPU indices stay valid on heterogeneous scenarios.
                 if let Some(fs) = sc.faults {
-                    cfg.faults = prism::fault::resolve(fs, sc.n_gpus, sc.duration)
+                    cfg.faults = prism::fault::resolve(fs, cfg.n_gpus, sc.duration)
                         .expect("scenario fault spec");
                 }
                 // Smoke rows gate CI: take the best of 3 sub-second reps so

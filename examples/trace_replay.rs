@@ -2,8 +2,9 @@
 //!
 //! Replays a novita-like synthetic trace (bursty groups, heavy-tailed idles,
 //! volatile rates - SS3 statistics) over a simulated 4-GPU cluster under
-//! every registered policy (Prism, the four paper baselines, and the
-//! seallm latency-aware sharing baseline), printing the attainment table.
+//! every registered policy (Prism, the four paper baselines, the seallm
+//! latency-aware sharing baseline, and the melange cost-aware placer),
+//! printing the attainment table.
 //!
 //! Run: `cargo run --release --example trace_replay`
 
@@ -42,10 +43,11 @@ fn main() {
     let workers = default_jobs().min(points.len());
     let t0 = std::time::Instant::now();
     let results = run_points(&points, 0, |_, pt| {
-        let mut cfg = SimConfig::new(pt.policy, pt.n_gpus);
-        cfg.slo_scale = pt.slo_scale;
-        // The table prints a percentile column: keep it exact.
-        cfg.metrics_full_dump = true;
+        // The table prints a percentile column: full dump keeps it exact.
+        let cfg = SimConfig::for_policy(pt.policy)
+            .gpus(pt.n_gpus)
+            .slo_scale(pt.slo_scale)
+            .full_dump(true);
         pt.run_with(cfg, &specs, &trace)
     });
     eprintln!(

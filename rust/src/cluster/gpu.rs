@@ -9,6 +9,27 @@
 //! strict scheduling boundary (paper SS4). `Cluster` tracks residency and
 //! performs the activation / eviction / migration mechanics whose latencies
 //! come from `engine::loading`.
+//!
+//! ## Heterogeneous fleets: `GpuKind` + `FleetSpec`
+//!
+//! A fleet is an **ordered list of `(GpuKind, count)` segments** — e.g.
+//! `4xh100+8xl4` — parsed by `FleetSpec::parse` (grammar mirrors the fault
+//! spec: CSV-safe, `+`-separated, strict errors) and expanded left-to-right
+//! into per-GPU profiles: memory bytes, a `GpuPerf` roofline, and $/hour.
+//! `Cluster::from_fleet` is the general constructor; the historical
+//! positional `Cluster::new(n_gpus, gpu_bytes, gpus_per_node, perf)` stays
+//! as a uniform-fleet wrapper (prefer `from_fleet`; kept so frozen
+//! byte-identity references compile unchanged — it prices GPUs at the H100
+//! rate and records no kind).
+//!
+//! **Determinism rule:** kind profiles are *static data* — a `GpuKind`'s
+//! memory/perf/cost tables are compile-time constants, never
+//! runtime-configured per-GPU mutation. A `FleetSpec` therefore fully
+//! determines the cluster, so fleet specs can ride sweep keys the way fault
+//! specs do and `--jobs 1` ≡ `--jobs N` byte-identity extends to the fleet
+//! axis. `FleetSpec::uniform(n, GpuKind::H100)` performs bit-identical
+//! arithmetic to the historical uniform path (same memory bytes, same
+//! `GpuPerf` values through the same operations).
 
 use std::collections::BTreeMap;
 
@@ -26,6 +47,159 @@ pub struct GpuId(pub u32);
 impl std::fmt::Display for GpuId {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(f, "gpu{}", self.0)
+    }
+}
+
+/// A GPU SKU with a static profile: memory, roofline perf, and $/hour.
+///
+/// Profiles are compile-time constants (see the module-level determinism
+/// rule). Rates are representative on-demand cloud prices — they only need
+/// to be *relatively* right for cost-aware placement and the `CostLedger`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum GpuKind {
+    L4,
+    A10G,
+    A100,
+    H100,
+}
+
+impl GpuKind {
+    pub const ALL: [GpuKind; 4] = [GpuKind::L4, GpuKind::A10G, GpuKind::A100, GpuKind::H100];
+
+    /// Lower-case spec-grammar name (`4xh100` etc.).
+    pub fn name(self) -> &'static str {
+        match self {
+            GpuKind::L4 => "l4",
+            GpuKind::A10G => "a10g",
+            GpuKind::A100 => "a100",
+            GpuKind::H100 => "h100",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<GpuKind> {
+        GpuKind::ALL.into_iter().find(|k| k.name() == s)
+    }
+
+    /// Device memory available to kvcached.
+    pub fn mem_bytes(self) -> u64 {
+        match self {
+            GpuKind::L4 => 24 * (1 << 30),
+            GpuKind::A10G => 24 * (1 << 30),
+            GpuKind::A100 => 40 * (1 << 30),
+            // Exactly the historical uniform default (80 GiB) — load-bearing
+            // for the `FleetSpec::uniform(n, H100)` bitwise-identity contract.
+            GpuKind::H100 => 80 * (1 << 30),
+        }
+    }
+
+    /// Roofline profile feeding activation/step/admission timing.
+    pub fn perf(self) -> GpuPerf {
+        match self {
+            GpuKind::L4 => GpuPerf::l4(),
+            GpuKind::A10G => GpuPerf::a10g(),
+            GpuKind::A100 => GpuPerf::a100_40g(),
+            GpuKind::H100 => GpuPerf::h100(),
+        }
+    }
+
+    /// Representative on-demand rate, $/hour.
+    pub fn cost_per_hour(self) -> f64 {
+        match self {
+            GpuKind::L4 => 0.70,
+            GpuKind::A10G => 1.20,
+            GpuKind::A100 => 2.40,
+            GpuKind::H100 => 4.80,
+        }
+    }
+}
+
+impl std::fmt::Display for GpuKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// An ordered heterogeneous fleet: `(kind, count)` segments, expanded
+/// left-to-right into GPU ids. Parsed from / displayed as the CSV-safe
+/// grammar `<count>x<kind>[+<count>x<kind>…]`, e.g. `4xh100+8xl4` — safe to
+/// embed in sweep point keys (no `,`/`;`/whitespace).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FleetSpec {
+    pub segments: Vec<(GpuKind, u32)>,
+}
+
+impl FleetSpec {
+    /// The historical uniform cluster, as a fleet.
+    pub fn uniform(n: u32, kind: GpuKind) -> Self {
+        FleetSpec { segments: vec![(kind, n)] }
+    }
+
+    /// Parse `4xh100+8xl4`. Rejects empty specs, zero counts, unknown
+    /// kinds, and malformed segments — errors name the offending segment,
+    /// like the fault grammar.
+    pub fn parse(spec: &str) -> Result<FleetSpec, String> {
+        let spec = spec.trim();
+        if spec.is_empty() {
+            return Err("empty fleet spec (want e.g. `4xh100+8xl4`)".into());
+        }
+        let mut segments = Vec::new();
+        for seg in spec.split('+') {
+            let seg = seg.trim();
+            let Some((count, kind)) = seg.split_once('x') else {
+                return Err(format!("{seg:?}: want `<count>x<kind>`, e.g. `4xh100`"));
+            };
+            let count: u32 = count
+                .parse()
+                .map_err(|_| format!("{seg:?}: bad count {count:?}"))?;
+            if count == 0 {
+                return Err(format!("{seg:?}: count must be >= 1"));
+            }
+            let kind = GpuKind::parse(kind).ok_or_else(|| {
+                let known: Vec<&str> = GpuKind::ALL.iter().map(|k| k.name()).collect();
+                format!("{seg:?}: unknown GPU kind {kind:?} (known: {})", known.join(", "))
+            })?;
+            segments.push((kind, count));
+        }
+        Ok(FleetSpec { segments })
+    }
+
+    pub fn n_gpus(&self) -> u32 {
+        self.segments.iter().map(|&(_, n)| n).sum()
+    }
+
+    /// Total fleet rate, $/hour (feeds the `CostLedger`).
+    pub fn cost_per_hour(&self) -> f64 {
+        self.segments.iter().map(|&(k, n)| k.cost_per_hour() * n as f64).sum()
+    }
+
+    /// Per-GPU kinds in id order (segment expansion).
+    pub fn kinds(&self) -> Vec<GpuKind> {
+        let mut v = Vec::with_capacity(self.n_gpus() as usize);
+        for &(k, n) in &self.segments {
+            for _ in 0..n {
+                v.push(k);
+            }
+        }
+        v
+    }
+
+    /// The reference kind for fleet-wide defaults (SLO baselines are derived
+    /// from one profile per run): the first segment's kind.
+    pub fn reference_kind(&self) -> GpuKind {
+        self.segments[0].0
+    }
+}
+
+impl std::fmt::Display for FleetSpec {
+    /// Canonical form re-parses to the same spec (round-trip tested).
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for (i, (k, n)) in self.segments.iter().enumerate() {
+            if i > 0 {
+                f.write_str("+")?;
+            }
+            write!(f, "{n}x{k}")?;
+        }
+        Ok(())
     }
 }
 
@@ -66,7 +240,20 @@ pub struct Cluster {
     /// activate/evict (and therefore migrate); lets per-GPU queries run in
     /// O(residents on that GPU) instead of scanning every model.
     gpu_residents: Vec<Vec<ModelId>>,
+    /// Fleet-reference roofline (uniform fleets: THE perf; heterogeneous
+    /// fleets: the first segment's kind). Per-GPU timing uses `perf_of`.
     pub perf: GpuPerf,
+    /// Per-GPU rooflines in id order. Uniform fleets hold clones of `perf`,
+    /// so per-GPU lookups do bit-identical arithmetic to the historical
+    /// single-perf path. `pub(crate)` so the simulator's step loop can take
+    /// a disjoint field borrow alongside `&mut engines`/`&mut gpus`.
+    pub(crate) gpu_perfs: Vec<GpuPerf>,
+    /// Per-GPU $/hour (static kind data; H100 rate for the kind-less
+    /// positional constructor).
+    gpu_costs: Vec<f64>,
+    /// Per-GPU kind; `None` for clusters built via the positional
+    /// constructor (arbitrary perf/memory, no SKU attached).
+    gpu_kinds: Vec<Option<GpuKind>>,
     pub gpus_per_node: u32,
     pub load_strategy: LoadStrategy,
     /// Counters for SS7.5-style reporting.
@@ -92,16 +279,55 @@ pub struct Cluster {
 }
 
 impl Cluster {
+    /// Uniform positional constructor (pre-`FleetSpec` API). Prefer
+    /// `from_fleet`; this stays so frozen byte-identity references and
+    /// existing call sites compile unchanged. Kind-less: GPUs are priced at
+    /// the H100 rate and report `kind_of == None`.
     pub fn new(n_gpus: u32, gpu_bytes: u64, gpus_per_node: u32, perf: GpuPerf) -> Self {
-        let gpus = (0..n_gpus)
-            .map(|i| GpuDevice {
-                id: GpuId(i),
-                kvc: Kvcached::new(gpu_bytes, crate::kvcached::DEFAULT_PAGE_BYTES, 64),
+        let per_gpu: Vec<(u64, GpuPerf, f64, Option<GpuKind>)> = (0..n_gpus)
+            .map(|_| (gpu_bytes, perf.clone(), GpuKind::H100.cost_per_hour(), None))
+            .collect();
+        Cluster::build(per_gpu, gpus_per_node, perf)
+    }
+
+    /// Build a (possibly heterogeneous) cluster from a `FleetSpec`: GPU ids
+    /// are assigned by left-to-right segment expansion, each with its kind's
+    /// static memory/perf/cost profile. The fleet-reference `perf` is the
+    /// first segment's kind (feeds fleet-wide SLO baselines).
+    pub fn from_fleet(fleet: &FleetSpec, gpus_per_node: u32) -> Self {
+        let per_gpu: Vec<(u64, GpuPerf, f64, Option<GpuKind>)> = fleet
+            .kinds()
+            .into_iter()
+            .map(|k| (k.mem_bytes(), k.perf(), k.cost_per_hour(), Some(k)))
+            .collect();
+        Cluster::build(per_gpu, gpus_per_node, fleet.reference_kind().perf())
+    }
+
+    fn build(
+        per_gpu: Vec<(u64, GpuPerf, f64, Option<GpuKind>)>,
+        gpus_per_node: u32,
+        perf: GpuPerf,
+    ) -> Self {
+        let n_gpus = per_gpu.len() as u32;
+        let gpus = per_gpu
+            .iter()
+            .enumerate()
+            .map(|(i, (bytes, _, _, _))| GpuDevice {
+                id: GpuId(i as u32),
+                kvc: Kvcached::new(*bytes, crate::kvcached::DEFAULT_PAGE_BYTES, 64),
                 engine_pool_free: 8,
-                node: i / gpus_per_node.max(1),
+                node: i as u32 / gpus_per_node.max(1),
             })
             .collect();
         let n_nodes = n_gpus.div_ceil(gpus_per_node.max(1));
+        let mut gpu_perfs = Vec::with_capacity(per_gpu.len());
+        let mut gpu_costs = Vec::with_capacity(per_gpu.len());
+        let mut gpu_kinds = Vec::with_capacity(per_gpu.len());
+        for (_, p, c, k) in per_gpu {
+            gpu_perfs.push(p);
+            gpu_costs.push(c);
+            gpu_kinds.push(k);
+        }
         Cluster {
             gpus,
             node_pools: vec![8 * gpus_per_node.max(1); n_nodes as usize],
@@ -109,6 +335,9 @@ impl Cluster {
             residency: BTreeMap::new(),
             gpu_residents: vec![Vec::new(); n_gpus as usize],
             perf,
+            gpu_perfs,
+            gpu_costs,
+            gpu_kinds,
             gpus_per_node,
             load_strategy: LoadStrategy::Parallel,
             activations: 0,
@@ -122,6 +351,26 @@ impl Cluster {
             load_retries: 0,
             load_failures: 0,
         }
+    }
+
+    /// Roofline of GPU `g` (uniform fleets: a clone of `perf`).
+    pub fn perf_of(&self, g: usize) -> &GpuPerf {
+        &self.gpu_perfs[g]
+    }
+
+    /// $/hour of GPU `g`.
+    pub fn cost_per_hour_of(&self, g: usize) -> f64 {
+        self.gpu_costs[g]
+    }
+
+    /// Kind of GPU `g` (`None` on kind-less positional clusters).
+    pub fn kind_of(&self, g: usize) -> Option<GpuKind> {
+        self.gpu_kinds[g]
+    }
+
+    /// Total fleet rate, $/hour — the `CostLedger` numerator's rate.
+    pub fn fleet_cost_per_hour(&self) -> f64 {
+        self.gpu_costs.iter().sum()
     }
 
     /// Mark GPU `g` crashed (true) or recovered (false).
@@ -272,7 +521,11 @@ impl Cluster {
             LoadStrategy::Naive
         };
         let node_gpus = self.gpus_per_node;
-        let latency = activation_seconds(&self.perf, strategy, spec.weight_bytes(), node_gpus);
+        // Load timing follows the lead GPU's profile (PCIe/NVLink bandwidth
+        // differs by kind); on uniform fleets this is a clone of `perf`, so
+        // the arithmetic — and the result bits — match the historical path.
+        let lead_perf = &self.gpu_perfs[gpus[0].0 as usize];
+        let latency = activation_seconds(lead_perf, strategy, spec.weight_bytes(), node_gpus);
         // `t0 == now` bitwise when no retries fired (x + 0.0 is exact for
         // the non-negative times used here), preserving zero-fault identity.
         let t0 = now + retry_delay;
@@ -349,8 +602,9 @@ impl Cluster {
             Ok(_) => {
                 // Overlapped migration: the exposed latency is the switch-over,
                 // not the full reload (paper SS7.5: ~tens of ms over NVLink).
+                // Switch-over is bounded by the *target* GPU's link speed.
                 let sw = crate::engine::loading::migration_switchover_seconds(
-                    &self.perf,
+                    &self.gpu_perfs[to.0 as usize],
                     spec.weight_bytes() + kv_bytes,
                     nvlink,
                 );
@@ -603,6 +857,62 @@ mod tests {
         assert_eq!(c.group_slow_factor(&[GpuId(0)]), 1.0);
         c.set_gpu_slow(1, 1.0);
         assert_eq!(c.group_slow_factor(&[GpuId(0), GpuId(1)]), 1.0);
+    }
+
+    #[test]
+    fn fleet_spec_round_trips_through_display() {
+        for spec in ["4xh100", "4xh100+8xl4", "2xa100+4xl4+1xa10g", "1xl4+1xl4"] {
+            let f = FleetSpec::parse(spec).unwrap();
+            assert_eq!(f.to_string(), spec, "canonical form");
+            assert_eq!(FleetSpec::parse(&f.to_string()).unwrap(), f, "round trip");
+        }
+        let f = FleetSpec::parse(" 2xh100 + 1xl4 ").unwrap();
+        assert_eq!(f.to_string(), "2xh100+1xl4", "whitespace normalizes away");
+    }
+
+    #[test]
+    fn fleet_spec_rejects_malformed() {
+        for bad in ["", "0xh100", "4xh200", "h100", "4x", "x4", "4xh100+", "-1xl4", "4xh100;1xl4"]
+        {
+            assert!(FleetSpec::parse(bad).is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn fleet_spec_accounting() {
+        let f = FleetSpec::parse("2xa100+4xl4").unwrap();
+        assert_eq!(f.n_gpus(), 6);
+        assert_eq!(f.reference_kind(), GpuKind::A100);
+        let want = 2.0 * GpuKind::A100.cost_per_hour() + 4.0 * GpuKind::L4.cost_per_hour();
+        assert_eq!(f.cost_per_hour().to_bits(), want.to_bits());
+        assert_eq!(
+            f.kinds(),
+            vec![GpuKind::A100, GpuKind::A100, GpuKind::L4, GpuKind::L4, GpuKind::L4, GpuKind::L4]
+        );
+        // Uniform shorthand expands like a single segment.
+        let u = FleetSpec::uniform(3, GpuKind::H100);
+        assert_eq!(u.to_string(), "3xh100");
+        assert_eq!(u.n_gpus(), 3);
+    }
+
+    #[test]
+    fn from_fleet_builds_per_kind_profiles() {
+        let f = FleetSpec::parse("1xh100+2xl4").unwrap();
+        let c = Cluster::from_fleet(&f, 8);
+        assert_eq!(c.n_gpus(), 3);
+        assert_eq!(c.kind_of(0), Some(GpuKind::H100));
+        assert_eq!(c.kind_of(1), Some(GpuKind::L4));
+        assert_eq!(c.kind_of(2), Some(GpuKind::L4));
+        assert!(c.gpus[0].kvc.stats().total_bytes > c.gpus[1].kvc.stats().total_bytes);
+        assert_eq!(c.cost_per_hour_of(0), GpuKind::H100.cost_per_hour());
+        assert_eq!(c.fleet_cost_per_hour().to_bits(), f.cost_per_hour().to_bits());
+        // Reference perf = first segment's kind; per-GPU perf follows kinds.
+        assert_eq!(c.perf.peak_flops.to_bits(), GpuPerf::h100().peak_flops.to_bits());
+        assert_eq!(c.perf_of(2).peak_flops.to_bits(), GpuPerf::l4().peak_flops.to_bits());
+        // Kind-less positional clusters: no kind, H100 pricing.
+        let legacy = cluster(2);
+        assert_eq!(legacy.kind_of(0), None);
+        assert_eq!(legacy.cost_per_hour_of(1), GpuKind::H100.cost_per_hour());
     }
 
     #[test]

@@ -4,4 +4,4 @@
 
 pub mod gpu;
 
-pub use gpu::{Cluster, GpuDevice, GpuId, Residency};
+pub use gpu::{Cluster, FleetSpec, GpuDevice, GpuId, GpuKind, Residency};

@@ -46,11 +46,42 @@ impl Default for GpuPerf {
 }
 
 impl GpuPerf {
-    /// A100-40G variant (used by the Fig 14 overhead experiment).
+    /// H100-80G profile. Bit-identical to `GpuPerf::default()` — the
+    /// `GpuKind::H100` fleet path must reproduce the historical uniform
+    /// cluster bitwise, so this constructor IS the default, spelled out.
+    pub fn h100() -> Self {
+        GpuPerf::default()
+    }
+
+    /// A100-40G variant (used by the Fig 14 overhead experiment and the
+    /// `GpuKind::A100` fleet profile).
     pub fn a100_40g() -> Self {
         GpuPerf {
             peak_flops: 312e12,
             hbm_bw: 1.55e12,
+            ..Default::default()
+        }
+    }
+
+    /// A10G-24G profile (`GpuKind::A10G`): mid-tier inference card. No
+    /// NVLink — peer transfers fall back to PCIe-class bandwidth.
+    pub fn a10g() -> Self {
+        GpuPerf {
+            peak_flops: 125e12, // dense bf16
+            hbm_bw: 600e9,      // GDDR6
+            pcie_stream_bw: 12e9,
+            nvlink_bw: 12e9,
+            ..Default::default()
+        }
+    }
+
+    /// L4-24G profile (`GpuKind::L4`): cheap long-tail card. No NVLink.
+    pub fn l4() -> Self {
+        GpuPerf {
+            peak_flops: 60e12, // dense bf16
+            hbm_bw: 300e9,     // GDDR6
+            pcie_stream_bw: 12e9,
+            nvlink_bw: 12e9,
             ..Default::default()
         }
     }
@@ -146,6 +177,27 @@ mod tests {
         let both = p.iteration_seconds(&m, 512, 4, 1 << 30);
         assert!(both > pre.max(dec));
         assert!(both < pre + dec); // overhead charged once
+    }
+
+    #[test]
+    fn kind_profiles_are_ordered_and_h100_is_default() {
+        let m = model_8b();
+        let h100 = GpuPerf::h100();
+        let d = GpuPerf::default();
+        // The fleet path's bitwise-identity contract: h100 == default, exactly.
+        assert_eq!(h100.peak_flops.to_bits(), d.peak_flops.to_bits());
+        assert_eq!(h100.hbm_bw.to_bits(), d.hbm_bw.to_bits());
+        let tiers = [GpuPerf::l4(), GpuPerf::a10g(), GpuPerf::a100_40g(), h100];
+        for w in tiers.windows(2) {
+            assert!(
+                w[0].prefill_tokens_per_sec(&m) < w[1].prefill_tokens_per_sec(&m),
+                "prefill speed must rise with the tier"
+            );
+            assert!(
+                w[0].decode_tpot(&m, 8, 1 << 30) > w[1].decode_tpot(&m, 8, 1 << 30),
+                "decode latency must fall with the tier"
+            );
+        }
     }
 
     #[test]

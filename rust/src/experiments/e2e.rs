@@ -90,11 +90,9 @@ pub fn tab2_muxserve(quick: bool, jobs: usize) -> Vec<Table> {
     );
     let points = [("muxserve", "s-partition"), ("muxserve++", "muxserve++")];
     let results = run_points(&points, jobs, |_, &(_, policy)| {
-        let mut cfg = SimConfig::new(policy, 1);
-        cfg.slo_scale = 8.0;
-        // Tab 2 is percentile-heavy (p95 e2e/ttft/tpot columns): keep the
-        // raw records so those columns stay exact, not sketch estimates.
-        cfg.metrics_full_dump = true;
+        // Tab 2 is percentile-heavy (p95 e2e/ttft/tpot columns): full dump
+        // keeps those columns exact, not sketch estimates.
+        let cfg = SimConfig::for_policy(policy).slo_scale(8.0).full_dump(true);
         Simulator::new(cfg, specs.clone()).run(&trace).0
     });
     for ((name, _), m) in points.iter().zip(&results) {
@@ -218,10 +216,8 @@ pub fn fig7_placement_ablation(quick: bool, jobs: usize) -> Vec<Table> {
     // infinite tau = never migrate = no global scheduling
     let points = [("global-sched-on", 0.2), ("global-sched-off", f64::INFINITY)];
     let results = run_points(&points, jobs, |_, &(_, tau)| {
-        let mut cfg = SimConfig::new("prism", 2);
-        cfg.slo_scale = 8.0;
+        let mut cfg = SimConfig::for_policy("prism").gpus(2).slo_scale(8.0).sample_dt(10.0);
         cfg.tau = tau;
-        cfg.sample_dt = 10.0;
         Simulator::new(cfg, specs.clone()).run(&trace)
     });
     let mut tl_tables = Vec::new();
@@ -296,8 +292,7 @@ pub fn fig8_arbitration_ablation(quick: bool, jobs: usize) -> Vec<Table> {
         }
     }
     let results = run_points(&points, jobs, |_, &(s2, _, policy)| {
-        let mut cfg = SimConfig::new(policy, 1);
-        cfg.slo_scale = 1.0; // per-model scales set below via slos
+        let cfg = SimConfig::for_policy(policy).slo_scale(1.0); // per-model scales set below
         let mut sim = Simulator::new(cfg, specs.clone());
         // Override SLOs: model0 scale 8, model1 scale s2.
         let (t0, p0) = sim.slo_of(0);
@@ -389,8 +384,7 @@ pub fn fig11_production(quick: bool, jobs: usize) -> Vec<Table> {
         }
     }
     let results = run_points(&points, jobs, |_, &(ci, _, p)| {
-        let mut cfg = SimConfig::new(p, n_gpus);
-        cfg.slo_scale = 10.0;
+        let cfg = SimConfig::for_policy(p).gpus(n_gpus).slo_scale(10.0);
         Simulator::new(cfg, specs.clone()).run(&traces[ci]).0
     });
     let mut t = Table::new(
@@ -419,8 +413,7 @@ pub fn fig15_sensitivity(quick: bool, jobs: usize) -> Vec<Table> {
     let thresholds: &[f64] =
         if quick { &[10.0, 45.0, 120.0] } else { &[10.0, 20.0, 45.0, 60.0, 80.0, 120.0] };
     let th_results = run_points(thresholds, jobs, |_, &th| {
-        let mut cfg = SimConfig::new("prism", 2);
-        cfg.slo_scale = 8.0;
+        let mut cfg = SimConfig::for_policy("prism").gpus(2).slo_scale(8.0);
         cfg.eviction.idle_threshold = th;
         Simulator::new(cfg, specs.clone()).run(&trace).0
     });
@@ -439,8 +432,7 @@ pub fn fig15_sensitivity(quick: bool, jobs: usize) -> Vec<Table> {
     let windows: &[f64] =
         if quick { &[10.0, 60.0, 300.0] } else { &[10.0, 30.0, 60.0, 120.0, 300.0] };
     let w_results = run_points(windows, jobs, |_, &w| {
-        let mut cfg = SimConfig::new("prism", 2);
-        cfg.slo_scale = 8.0;
+        let mut cfg = SimConfig::for_policy("prism").gpus(2).slo_scale(8.0);
         cfg.monitor_window = w;
         Simulator::new(cfg, specs.clone()).run(&trace).0
     });
@@ -463,8 +455,7 @@ pub fn overhead_frequency(quick: bool) -> Vec<Table> {
     let specs = eight_models();
     let dur = if quick { 240.0 } else { 600.0 };
     let trace = generate(&TraceGenConfig::novita_like(specs.len(), dur, 81)).scale_rate(2.0);
-    let mut cfg = SimConfig::new("prism", 2);
-    cfg.slo_scale = 8.0;
+    let cfg = SimConfig::for_policy("prism").gpus(2).slo_scale(8.0);
     let sim = Simulator::new(cfg, specs.clone());
     let (m, _) = sim.run(&trace);
     let mut t = Table::new(

@@ -149,9 +149,7 @@ pub fn fig2_pure_sharing(quick: bool, jobs: usize) -> Vec<Table> {
     let mut out = Vec::new();
     let policies = ["qlm", "s-partition"];
     let results = run_points(&policies, jobs, |_, &policy| {
-        let mut cfg = SimConfig::new(policy, 1);
-        cfg.sample_dt = 2.0;
-        cfg.slo_scale = 5.0;
+        let mut cfg = SimConfig::for_policy(policy).sample_dt(2.0).slo_scale(5.0);
         cfg.control_epoch = 1.0;
         Simulator::new(cfg, specs.clone()).run(&trace)
     });
@@ -185,9 +183,7 @@ pub fn fig6_memory_coordination(quick: bool, jobs: usize) -> Vec<Table> {
     let mut out = Vec::new();
     let policies = ["prism", "s-partition"];
     let results = run_points(&policies, jobs, |_, &policy| {
-        let mut cfg = SimConfig::new(policy, 1);
-        cfg.sample_dt = 2.0;
-        cfg.slo_scale = 6.0;
+        let mut cfg = SimConfig::for_policy(policy).sample_dt(2.0).slo_scale(6.0);
         cfg.control_epoch = 1.0;
         Simulator::new(cfg, specs.clone()).run(&trace)
     });

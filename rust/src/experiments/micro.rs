@@ -2,6 +2,7 @@
 //! memory worst-case overhead).
 
 use crate::bench::harness::Table;
+use crate::cluster::{FleetSpec, GpuKind};
 use crate::engine::loading::{activation_seconds, LoadStrategy};
 use crate::engine::perf::GpuPerf;
 use crate::experiments::e2e::assign_ids;
@@ -71,10 +72,10 @@ pub fn fig14_elastic_overhead(quick: bool) -> Vec<Table> {
         }
         let trace = Trace { name: "fig14".into(), n_models: 2, events, duration: dur };
         for name in ["prism", "s-partition"] {
-            let mut cfg = SimConfig::new(name, 1);
-            cfg.gpu_bytes = 40 * (1 << 30);
-            cfg.perf = GpuPerf::a100_40g();
-            cfg.slo_scale = 10.0;
+            // The A100 kind carries the 40 GiB + `GpuPerf::a100_40g()`
+            // profile this experiment used to poke in by hand.
+            let cfg = SimConfig::from_fleet(name, FleetSpec::uniform(1, GpuKind::A100))
+                .slo_scale(10.0);
             let sim = Simulator::new(cfg, specs.clone());
             let (m, _) = sim.run(&trace);
             t.row(vec![

@@ -32,6 +32,7 @@ fn main() {
                  \n  prism serve --models prism-nano,prism-micro --requests 12\
                  \n  prism sim --policy prism --gpus 4 --trace novita --minutes 10\
                  \n  prism sim --policy prism --gpus 4 --faults churn:7\
+                 \n  prism sim --fleet 4xh100+8xl4 --policy melange\
                  \n  prism trace --kind novita --hours 2\
                  \n  prism exp fig5 [--quick] [--jobs N]\
                  \n  prism exp all --quick --jobs 8\n"
@@ -118,7 +119,13 @@ fn cmd_sim() -> Result<()> {
     // list can never drift from what the lookup below resolves.
     let cli = Cli::new("prism sim", "simulate a policy on a synthetic trace")
         .opt("policy", "prism", registry().names_joined())
-        .opt("gpus", "2", "GPU count")
+        .opt("gpus", "2", "GPU count (uniform H100 cluster; see --fleet)")
+        .opt(
+            "fleet",
+            "",
+            "heterogeneous fleet spec, e.g. 4xh100+8xl4 (kinds: l4|a10g|a100|h100; \
+             overrides --gpus; empty = uniform cluster)",
+        )
         .opt("models", "8", "number of models")
         .opt("trace", "novita", "novita|hyperbolic|arena-chat|arena-battle")
         .opt("minutes", "10", "trace duration")
@@ -156,9 +163,15 @@ fn cmd_sim() -> Result<()> {
     );
     let n_gpus = a.get_usize("gpus", 2) as u32;
     let mut cfg = SimConfig::with_policy(policy, n_gpus);
+    let fleet_spec = a.get_or("fleet", "");
+    if !fleet_spec.is_empty() {
+        let f = prism::cluster::FleetSpec::parse(&fleet_spec)
+            .map_err(|e| anyhow::anyhow!("invalid --fleet spec: {e}"))?;
+        cfg = cfg.fleet(f);
+    }
     cfg.slo_scale = a.get_f64("slo-scale", 8.0);
     let fault_spec = a.get_or("faults", "");
-    cfg.faults = prism::fault::resolve(&fault_spec, n_gpus, trace.duration)
+    cfg.faults = prism::fault::resolve(&fault_spec, cfg.n_gpus, trace.duration)
         .map_err(|e| anyhow::anyhow!("invalid --faults spec: {e}"))?;
     // Single run whose table prints percentile columns: keep them exact
     // rather than sketch estimates.
@@ -185,6 +198,18 @@ fn cmd_sim() -> Result<()> {
     t.row(vec!["evictions".into(), m.evictions.to_string()]);
     t.row(vec!["migrations".into(), m.migrations.to_string()]);
     t.row(vec!["preemptions".into(), m.preemptions.to_string()]);
+    // Cost ledger: fleet rate x simulated wall time, plus the $-per-quality
+    // ratios (kind-less uniform clusters price at the H100 rate).
+    t.row(vec!["fleet_cost_per_hr".into(), format!("${:.2}", m.cost.fleet_cost_per_hour)]);
+    t.row(vec!["run_cost".into(), format!("${:.4}", m.cost.cost_dollars)]);
+    t.row(vec![
+        "cost_per_1k_req_slo".into(),
+        format!("${:.4}", m.cost_per_1k_requests_at_slo()),
+    ]);
+    t.row(vec![
+        "cost_per_attain_pt".into(),
+        format!("${:.5}", m.cost_per_attainment_point()),
+    ]);
     if m.faults.any() {
         t.row(vec!["gpu_crashes".into(), m.faults.gpu_crashes.to_string()]);
         t.row(vec!["gpu_recoveries".into(), m.faults.gpu_recoveries.to_string()]);

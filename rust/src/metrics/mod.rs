@@ -172,6 +172,37 @@ impl FaultStats {
     }
 }
 
+/// First-class cost accounting over a (possibly heterogeneous) fleet.
+///
+/// Populated by the simulator from the cluster's static per-GPU $/hour
+/// rates (`GpuKind` tables; kind-less positional clusters price at the H100
+/// rate). Merge semantics keep sweep aggregation associative and
+/// order-independent: accrued dollars add (total spend across shards /
+/// points), while the fleet *rate* folds by max — shards of one run share a
+/// fleet, so max is idempotent there, mirroring `wall_seconds`. Derived
+/// quantities ($/1k requests at SLO, $/attainment-point) live on
+/// [`RunMetrics`], computed from merged counters so they stay consistent
+/// under any merge order.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CostLedger {
+    /// Fleet rate, $/hour: sum of per-GPU kind rates.
+    pub fleet_cost_per_hour: f64,
+    /// Accrued spend, $: rate x wall-clock hours of the run.
+    pub cost_dollars: f64,
+}
+
+impl CostLedger {
+    fn merge(&mut self, other: &CostLedger) {
+        self.fleet_cost_per_hour = self.fleet_cost_per_hour.max(other.fleet_cost_per_hour);
+        self.cost_dollars += other.cost_dollars;
+    }
+
+    /// True when the run carried pricing (fleet rate known).
+    pub fn is_priced(&self) -> bool {
+        self.fleet_cost_per_hour > 0.0
+    }
+}
+
 /// Aggregated results of one serving run (the default streaming sink).
 #[derive(Debug, Default)]
 pub struct RunMetrics {
@@ -201,6 +232,8 @@ pub struct RunMetrics {
     pub sim_events: u64,
     /// Fault-injection and recovery accounting (zero on fault-free runs).
     pub faults: FaultStats,
+    /// Fleet pricing and accrued spend (see `CostLedger` merge semantics).
+    pub cost: CostLedger,
     /// Exact sorted latency views (full-dump mode only), built lazily on the
     /// first percentile query and rebuilt if `completions` grew since.
     sorted: RefCell<Option<SortedCache>>,
@@ -223,6 +256,7 @@ impl Clone for RunMetrics {
             preemptions: self.preemptions,
             sim_events: self.sim_events,
             faults: self.faults.clone(),
+            cost: self.cost,
             // The lazy sorted views are not carried over: clones are
             // typically mutated further and a stale cache must not survive.
             sorted: RefCell::new(None),
@@ -329,6 +363,7 @@ impl RunMetrics {
         self.preemptions += other.preemptions;
         self.sim_events += other.sim_events;
         self.faults.merge(&other.faults);
+        self.cost.merge(&other.cost);
         if self.full_dump {
             self.completions.extend(other.completions);
         }
@@ -492,10 +527,51 @@ impl RunMetrics {
 
     /// Revenue proxy (Fig 11b): prefill + decode tokens priced per 1k tokens,
     /// normalized by GPU count.
+    ///
+    /// Uniform-fleet shim kept for the historical call sites: it treats
+    /// every GPU as one interchangeable denominator unit, which is wrong on
+    /// heterogeneous fleets (an L4 and an H100 are not the same dollar).
+    /// Prefer [`RunMetrics::revenue_per_dollar`], which consumes the
+    /// [`CostLedger`].
     pub fn revenue_per_gpu(&self, in_price: f64, out_price: f64, n_gpus: usize) -> f64 {
         let rev = self.prompt_tokens as f64 / 1000.0 * in_price
             + self.output_tokens as f64 / 1000.0 * out_price;
         rev / n_gpus.max(1) as f64
+    }
+
+    // ----------------------------------------------------------------- cost
+
+    /// Token revenue per dollar of fleet spend — the `CostLedger`
+    /// generalization of [`RunMetrics::revenue_per_gpu`]; fleet-composition
+    /// sweeps compare on this. `INFINITY` when the run accrued no cost.
+    pub fn revenue_per_dollar(&self, in_price: f64, out_price: f64) -> f64 {
+        let rev = self.prompt_tokens as f64 / 1000.0 * in_price
+            + self.output_tokens as f64 / 1000.0 * out_price;
+        if self.cost.cost_dollars <= 0.0 {
+            return f64::INFINITY;
+        }
+        rev / self.cost.cost_dollars
+    }
+
+    /// Dollars per 1k requests served within their TTFT SLO (the paper's
+    /// "cost savings" headline as a measured quantity). `INFINITY` when no
+    /// request met its SLO — serving nothing well is infinitely expensive.
+    pub fn cost_per_1k_requests_at_slo(&self) -> f64 {
+        let ok = self.global.ttft_ok as f64;
+        if ok <= 0.0 {
+            return f64::INFINITY;
+        }
+        self.cost.cost_dollars / (ok / 1000.0)
+    }
+
+    /// Dollars per TTFT-attainment percentage point: what each point of SLO
+    /// attainment cost on this fleet. `INFINITY` at zero attainment.
+    pub fn cost_per_attainment_point(&self) -> f64 {
+        let pts = 100.0 * self.ttft_attainment();
+        if pts <= 0.0 {
+            return f64::INFINITY;
+        }
+        self.cost.cost_dollars / pts
     }
 }
 
@@ -722,6 +798,64 @@ mod tests {
         assert_eq!(a.faults.gpu_crashes, 3);
         assert_eq!(a.faults.requests_restarted, 7);
         assert!((a.faults.recovery_seconds - 3.0).abs() < 1e-12);
+    }
+
+    /// Sweep shards can merge in any association order; the ledger (and the
+    /// metrics derived from it) must not care.
+    #[test]
+    fn cost_ledger_merge_is_associative() {
+        let shard = |rate: f64, dollars: f64, n_ok: usize| {
+            let mut m = RunMetrics::streaming();
+            m.cost = CostLedger { fleet_cost_per_hour: rate, cost_dollars: dollars };
+            for _ in 0..n_ok {
+                m.record(comp(0.1, 0.5, 0.01, 0.05));
+            }
+            m
+        };
+        // (a ⊔ b) ⊔ c  vs  a ⊔ (b ⊔ c), bitwise.
+        let mut left = shard(12.6, 0.50, 3);
+        left.merge(shard(4.8, 0.25, 1));
+        left.merge(shard(12.6, 1.00, 6));
+        let mut right_tail = shard(4.8, 0.25, 1);
+        right_tail.merge(shard(12.6, 1.00, 6));
+        let mut right = shard(12.6, 0.50, 3);
+        right.merge(right_tail);
+        assert_eq!(left.cost, right.cost);
+        assert_eq!(
+            left.cost.cost_dollars.to_bits(),
+            right.cost.cost_dollars.to_bits(),
+            "dollar accumulation must be bitwise order-independent"
+        );
+        assert_eq!(
+            left.cost_per_1k_requests_at_slo().to_bits(),
+            right.cost_per_1k_requests_at_slo().to_bits()
+        );
+        assert_eq!(
+            left.cost_per_attainment_point().to_bits(),
+            right.cost_per_attainment_point().to_bits()
+        );
+        assert!((left.cost.fleet_cost_per_hour - 12.6).abs() < 1e-12, "rate folds by max");
+        assert!((left.cost.cost_dollars - 1.75).abs() < 1e-12);
+        assert!(left.cost.is_priced());
+        assert!(!RunMetrics::streaming().cost.is_priced());
+        // Clone carries the ledger.
+        assert_eq!(left.clone().cost, left.cost);
+    }
+
+    #[test]
+    fn cost_derived_metrics_guard_empty_denominators() {
+        let mut m = RunMetrics::streaming();
+        m.cost = CostLedger { fleet_cost_per_hour: 9.6, cost_dollars: 2.0 };
+        // No request at SLO yet: infinitely expensive, not NaN or panic.
+        assert!(m.cost_per_1k_requests_at_slo().is_infinite());
+        m.record(comp(0.1, 0.5, 0.01, 0.05));
+        assert!((m.cost_per_1k_requests_at_slo() - 2000.0).abs() < 1e-9);
+        // One request, 100% attainment: $2 / 100 points.
+        assert!((m.cost_per_attainment_point() - 0.02).abs() < 1e-12);
+        // Revenue per dollar consumes the ledger, not a GPU count.
+        let rev = 0.1 * 1.0 + 0.05 * 3.0; // 100 in-tokens, 50 out-tokens
+        assert!((m.revenue_per_dollar(1.0, 3.0) - rev / 2.0).abs() < 1e-12);
+        assert!(RunMetrics::streaming().revenue_per_dollar(1.0, 3.0).is_infinite());
     }
 
     #[test]

@@ -1,0 +1,203 @@
+//! Mélange-inspired cost-aware placement for heterogeneous fleets.
+//!
+//! The paper's fleets are uniform H100 boxes; real deployments mix SKUs
+//! because $/hour spans ~7x between an L4 and an H100 (see
+//! `cluster::gpu::GpuKind`). This policy exploits that spread: long-tail
+//! (idle) models drift onto cheap GPUs, big iron is reserved for hot
+//! models. On a kind-less uniform cluster every GPU costs the same and the
+//! rebalance pass is a no-op, so melange degrades to on-demand activation
+//! plus Prism-style idle eviction.
+//!
+//! Like every policy, hooks are pure functions of the `PolicyCtx` view:
+//! GPU $/hour is static kind data (module docs in `cluster/gpu.rs`), so
+//! branching on it preserves the sweep engine's byte-identity contract.
+
+use crate::cluster::GpuId;
+use crate::model::spec::ModelId;
+use crate::request::Request;
+
+use super::{PolicyCtx, SchedulingPolicy};
+
+/// Max migrations per control epoch: rebalancing is a slow background
+/// drift, not a thrash source (same spirit as Prism's tau threshold).
+const MIGRATION_BUDGET: usize = 2;
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Melange;
+
+impl SchedulingPolicy for Melange {
+    fn name(&self) -> &'static str {
+        "melange"
+    }
+
+    fn slack_aware(&self) -> bool {
+        true
+    }
+
+    /// Cost-aware greedy at t=0: no rate information exists yet, so each
+    /// model (largest weights first) takes the *cheapest* healthy GPU that
+    /// fits. Big models fail the fit check on 24G cards and fall through to
+    /// big iron; small models pack the cheap tier — exactly the split the
+    /// epoch rebalance maintains once rates are known.
+    fn initial_placement(&self, ctx: &mut PolicyCtx<'_>) {
+        let mut order: Vec<usize> = (0..ctx.specs().len()).collect();
+        order.sort_by(|&a, &b| {
+            ctx.spec(b)
+                .weight_bytes()
+                .cmp(&ctx.spec(a).weight_bytes())
+                .then(a.cmp(&b))
+        });
+        for i in order {
+            let spec = ctx.spec(i).clone();
+            // Fit = weights + ~1k tokens of KV headroom, so nothing is
+            // placed with zero serving room.
+            let need = spec.weight_bytes_per_gpu() + spec.kv_bytes_per_token() * 1024;
+            let mut fits: Vec<usize> = (0..ctx.n_gpus())
+                .filter(|&g| ctx.gpu_available(g) && ctx.shared_kv_bytes(g) >= need)
+                .collect();
+            sort_by_cost(ctx, &mut fits, CostOrder::CheapFirst);
+            if fits.len() < spec.tp as usize {
+                continue; // cannot fit now; on-demand routing handles it later
+            }
+            let group: Vec<GpuId> =
+                fits.iter().take(spec.tp as usize).map(|&g| GpuId(g as u32)).collect();
+            ctx.activate(i, group, 0.0);
+        }
+    }
+
+    fn on_epoch(&self, ctx: &mut PolicyCtx<'_>, now: f64) {
+        idle_evictions(ctx, now);
+        cost_rebalance(ctx, now);
+    }
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum CostOrder {
+    CheapFirst,
+    ExpensiveFirst,
+}
+
+/// Order GPU indices by $/hour (ties by id, so the order is total and
+/// deterministic).
+fn sort_by_cost(ctx: &PolicyCtx<'_>, gpus: &mut [usize], order: CostOrder) {
+    gpus.sort_by(|&a, &b| {
+        let (ca, cb) = (ctx.gpu_cost_per_hour(a), ctx.gpu_cost_per_hour(b));
+        let by_cost = match order {
+            CostOrder::CheapFirst => ca.partial_cmp(&cb).unwrap(),
+            CostOrder::ExpensiveFirst => cb.partial_cmp(&ca).unwrap(),
+        };
+        by_cost.then(a.cmp(&b))
+    });
+}
+
+/// Prism-style idle eviction (SS6.1): idle models on pressured GPUs give
+/// their memory back to the shared pool.
+fn idle_evictions(ctx: &mut PolicyCtx<'_>, now: f64) {
+    if ctx.no_evict() {
+        return;
+    }
+    let candidates: Vec<(ModelId, f64, Vec<GpuId>)> =
+        ctx.residency().values().map(|r| (r.model, r.last_active, r.gpus.clone())).collect();
+    for (m, last_active, gpus) in candidates {
+        if ctx.engine_has_work(m) {
+            continue;
+        }
+        let min_free = gpus
+            .iter()
+            .map(|g| {
+                let st = ctx.kv_stats(g.0 as usize);
+                ctx.shared_kv_bytes(g.0 as usize) as f64 / st.total_bytes as f64
+            })
+            .fold(1.0, f64::min);
+        if ctx.eviction().should_evict(now, last_active, min_free) {
+            ctx.evict_to_pending(m);
+        }
+    }
+}
+
+/// Drift models across cost tiers: hot models (above-mean memory demand)
+/// sitting on cheap GPUs move up to big iron; models with zero traffic in
+/// the monitor window sitting on expensive GPUs move down to the cheap
+/// tier. Only idle-engine single-GPU models move (migration is modelled
+/// for tp=1, and busy engines keep serving), and at most
+/// [`MIGRATION_BUDGET`] per epoch.
+fn cost_rebalance(ctx: &mut PolicyCtx<'_>, now: f64) {
+    if ctx.no_migrate() {
+        return;
+    }
+    let costs: Vec<f64> = (0..ctx.n_gpus()).map(|g| ctx.gpu_cost_per_hour(g)).collect();
+    let min_cost = costs.iter().copied().fold(f64::INFINITY, f64::min);
+    let max_cost = costs.iter().copied().fold(0.0, f64::max);
+    if max_cost <= min_cost {
+        return; // uniform fleet: every GPU costs the same, nothing to drift
+    }
+    ctx.refresh_demand(now);
+    let resident: Vec<(ModelId, GpuId)> = ctx
+        .residency()
+        .values()
+        .filter(|r| r.gpus.len() == 1)
+        .map(|r| (r.model, r.gpus[0]))
+        .collect();
+    if resident.is_empty() {
+        return;
+    }
+    // Hotness threshold: mean w_token_rate over residents (the same
+    // demand-weighted pressure KVPR uses, units bytes/s).
+    let ws: Vec<f64> = resident
+        .iter()
+        .map(|&(m, _)| {
+            let d = ctx.demand_of(m, now);
+            d.token_rate * d.token_size / d.slo.max(1e-6)
+        })
+        .collect();
+    let mean_w = ws.iter().sum::<f64>() / ws.len() as f64;
+
+    let mut budget = MIGRATION_BUDGET;
+    for (&(m, from), &w) in resident.iter().zip(&ws) {
+        if budget == 0 {
+            break;
+        }
+        if ctx.engine_has_work(m) {
+            continue;
+        }
+        let d = ctx.demand_of(m, now);
+        let from_cost = costs[from.0 as usize];
+        let order = if w > mean_w && from_cost < max_cost {
+            CostOrder::ExpensiveFirst // hot on cheap: move up
+        } else if d.token_rate == 0.0 && from_cost > min_cost {
+            CostOrder::CheapFirst // cold on big iron: move down
+        } else {
+            continue;
+        };
+        let need = d.weight_bytes_per_gpu + d.token_size as u64 * 1024;
+        let mut fits: Vec<usize> = (0..ctx.n_gpus())
+            .filter(|&g| g != from.0 as usize)
+            .filter(|&g| ctx.gpu_available(g) && ctx.shared_kv_bytes(g) >= need)
+            .collect();
+        sort_by_cost(ctx, &mut fits, order);
+        let Some(&to) = fits.first() else { continue };
+        // Migration must actually cross a cost tier in the right direction.
+        let dir_ok = match order {
+            CostOrder::ExpensiveFirst => costs[to] > from_cost,
+            CostOrder::CheapFirst => costs[to] < from_cost,
+        };
+        if !dir_ok {
+            continue;
+        }
+        let to = GpuId(to as u32);
+        if ctx.migrate(m, to, now) {
+            budget -= 1;
+            // Move queued requests with the model (same as Prism): waiting
+            // an epoch would burn the TTFT budget.
+            let old_q = ctx.take_gpu_queue(from.0 as usize);
+            let (mine, rest): (Vec<Request>, Vec<Request>) =
+                old_q.into_iter().partition(|r| r.model == m);
+            ctx.put_gpu_queue(from.0 as usize, rest);
+            if !mine.is_empty() {
+                ctx.extend_gpu_queue(to.0 as usize, mine);
+                let ready = ctx.residency_of(m).unwrap().ready_at;
+                ctx.schedule_step(m, ready.max(now));
+            }
+        }
+    }
+}

@@ -33,13 +33,16 @@
 //!
 //! # Registry
 //!
-//! [`registry()`] is the process-wide instance holding the six built-ins
+//! [`registry()`] is the process-wide instance holding the seven built-ins
 //! in fixed order: the paper's five systems (`prism`, `s-partition`,
-//! `muxserve++`, `qlm`, `serverlessllm`) plus the SeaLLM-inspired
-//! latency-aware sharing baseline (`seallm`). `prism sim --policy`,
-//! `SweepGrid`'s default policy axis, and the benches all resolve names
-//! against it, so the accepted-name list cannot drift between surfaces.
+//! `muxserve++`, `qlm`, `serverlessllm`), the SeaLLM-inspired
+//! latency-aware sharing baseline (`seallm`), and the Mélange-inspired
+//! cost-aware heterogeneous-fleet policy (`melange`). `prism sim
+//! --policy`, `SweepGrid`'s default policy axis, and the benches all
+//! resolve names against it, so the accepted-name list cannot drift
+//! between surfaces.
 
+mod melange;
 mod muxserve_pp;
 mod prism;
 mod qlm;
@@ -56,6 +59,7 @@ use crate::sched::kvpr::ModelDemand;
 use crate::sched::placement::{place, PlacementInput};
 
 pub use crate::sim::simulator::PolicyCtx;
+pub use melange::Melange;
 pub use muxserve_pp::MuxServePlusPlus;
 pub use prism::Prism;
 pub use qlm::Qlm;
@@ -183,17 +187,18 @@ impl PolicyRegistry {
         PolicyRegistry { entries: Vec::new(), joined: String::new() }
     }
 
-    /// All six built-in policies in fixed order: the paper's five systems,
-    /// then the `seallm` baseline.
+    /// All seven built-in policies in fixed order: the paper's five
+    /// systems, the `seallm` baseline, then the cost-aware `melange`.
     pub fn with_builtins() -> Self {
         let mut r = Self::new();
-        let builtins: [PolicyHandle; 6] = [
+        let builtins: [PolicyHandle; 7] = [
             Arc::new(Prism),
             Arc::new(StaticPartition),
             Arc::new(MuxServePlusPlus),
             Arc::new(Qlm),
             Arc::new(ServerlessLlm),
             Arc::new(SeaLlm),
+            Arc::new(Melange),
         ];
         for p in builtins {
             r.register(p).expect("built-in policy names are unique");
@@ -238,8 +243,8 @@ impl PolicyRegistry {
     }
 }
 
-/// The process-wide registry holding the six built-in policies, built once
-/// on first use.
+/// The process-wide registry holding the seven built-in policies, built
+/// once on first use.
 pub fn registry() -> &'static PolicyRegistry {
     static REG: OnceLock<PolicyRegistry> = OnceLock::new();
     REG.get_or_init(PolicyRegistry::with_builtins)
@@ -261,23 +266,23 @@ mod tests {
 
     #[test]
     fn registry_round_trips_every_builtin_name() {
-        // register → lookup → name() round-trip, for all six policies
-        // including the new `seallm` baseline.
+        // register → lookup → name() round-trip, for all seven policies
+        // including the cost-aware `melange`.
         let names = registry().names();
         assert_eq!(
             names,
-            vec!["prism", "s-partition", "muxserve++", "qlm", "serverlessllm", "seallm"]
+            vec!["prism", "s-partition", "muxserve++", "qlm", "serverlessllm", "seallm", "melange"]
         );
         for name in names {
             let p = registry().lookup(name).expect("registered name resolves");
             assert_eq!(p.name(), name);
             assert_eq!(by_name(name).name(), name, "lookup and by_name agree");
         }
-        assert_eq!(registry().len(), 6);
+        assert_eq!(registry().len(), 7);
         assert!(!registry().is_empty());
         assert_eq!(
             registry().names_joined(),
-            "prism|s-partition|muxserve++|qlm|serverlessllm|seallm"
+            "prism|s-partition|muxserve++|qlm|serverlessllm|seallm|melange"
         );
     }
 
@@ -302,6 +307,8 @@ mod tests {
         assert!(!by_name("prism").static_residency());
         assert!(by_name("prism").slack_aware());
         assert!(by_name("seallm").slack_aware());
+        assert!(by_name("melange").slack_aware());
+        assert!(!by_name("melange").static_residency());
         assert!(!by_name("qlm").slack_aware());
         assert!(matches!(by_name("qlm").load_strategy(), LoadStrategy::Naive));
         assert!(matches!(by_name("serverlessllm").load_strategy(), LoadStrategy::Naive));

@@ -53,7 +53,7 @@ use std::collections::{BTreeMap, BTreeSet, BinaryHeap, HashMap};
 use std::sync::Arc;
 
 use crate::cluster::gpu::GroupAlloc;
-use crate::cluster::{Cluster, GpuId, Residency};
+use crate::cluster::{Cluster, FleetSpec, GpuId, GpuKind, Residency};
 use crate::engine::perf::GpuPerf;
 use crate::fault::{CrashedRequests, FaultAction, FaultPlan};
 use crate::kvcached::{KvError, MemStats};
@@ -111,6 +111,13 @@ pub struct SimConfig {
     /// the event loop. The default (empty) plan is bit-identical to a
     /// fault-free simulator.
     pub faults: FaultPlan,
+    /// Heterogeneous fleet (ordered `GpuKind` segments, see
+    /// `crate::cluster::FleetSpec`). `None` — the historical default —
+    /// builds the uniform cluster from `n_gpus`/`gpu_bytes`/`perf`. Set via
+    /// the [`fleet`](Self::fleet) builder, which also syncs `n_gpus`,
+    /// `gpu_bytes`, and `perf` (fleet-wide SLO baselines derive from the
+    /// fleet's reference kind: its first segment).
+    pub fleet: Option<FleetSpec>,
 }
 
 impl SimConfig {
@@ -141,8 +148,87 @@ impl SimConfig {
             stream_arrivals: true,
             metrics_full_dump: false,
             faults: FaultPlan::default(),
+            fleet: None,
             policy,
         }
+    }
+
+    // --------------------------------------------------------- fluent builder
+    //
+    // `SimConfig::for_policy("prism").gpus(4).slo_scale(8.0)` replaces the
+    // field-poking sprawl at call sites. The positional constructors above
+    // stay as thin wrappers so frozen byte-identity references compile
+    // unchanged; new code should prefer the builder.
+
+    /// Builder entry point: the named policy with every other knob at its
+    /// default (1 GPU until [`gpus`](Self::gpus) or [`fleet`](Self::fleet)
+    /// sizes the cluster).
+    pub fn for_policy(policy: &str) -> Self {
+        Self::new(policy, 1)
+    }
+
+    /// Builder entry point for a heterogeneous fleet:
+    /// `SimConfig::from_fleet("melange", FleetSpec::parse("4xh100+8xl4")?)`.
+    pub fn from_fleet(policy: &str, fleet: FleetSpec) -> Self {
+        Self::for_policy(policy).fleet(fleet)
+    }
+
+    /// Uniform cluster size (ignored when a [`fleet`](Self::fleet) is set —
+    /// the fleet's own GPU count wins).
+    pub fn gpus(mut self, n_gpus: u32) -> Self {
+        self.n_gpus = n_gpus;
+        self
+    }
+
+    /// Serve on this fleet. Syncs the uniform knobs to the fleet's
+    /// *reference kind* (first segment): `n_gpus`, `gpu_bytes`, and `perf`
+    /// — fleet-wide SLO baselines derive from that reference profile, while
+    /// per-GPU timing follows each GPU's own kind.
+    pub fn fleet(mut self, fleet: FleetSpec) -> Self {
+        let k = fleet.reference_kind();
+        self.n_gpus = fleet.n_gpus();
+        self.gpu_bytes = k.mem_bytes();
+        self.perf = k.perf();
+        self.fleet = Some(fleet);
+        self
+    }
+
+    /// Deterministic fault schedule for this run.
+    pub fn faults(mut self, plan: FaultPlan) -> Self {
+        self.faults = plan;
+        self
+    }
+
+    /// SLO scale factor applied to the per-model base SLOs.
+    pub fn slo_scale(mut self, scale: f64) -> Self {
+        self.slo_scale = scale;
+        self
+    }
+
+    /// Uniform per-GPU memory (positional-cluster path only; a fleet's
+    /// per-kind memory always wins).
+    pub fn gpu_bytes(mut self, bytes: u64) -> Self {
+        self.gpu_bytes = bytes;
+        self
+    }
+
+    /// Timeline sampling interval (s); 0 disables sampling.
+    pub fn sample_dt(mut self, dt: f64) -> Self {
+        self.sample_dt = dt;
+        self
+    }
+
+    /// Retain every raw `Completion` in the run's metrics (tests/figures).
+    pub fn full_dump(mut self, on: bool) -> Self {
+        self.metrics_full_dump = on;
+        self
+    }
+
+    /// Stream arrivals from the trace cursor (default true; `false` is the
+    /// legacy pre-push formulation kept for A/B regression).
+    pub fn stream(mut self, on: bool) -> Self {
+        self.stream_arrivals = on;
+        self
     }
 }
 
@@ -225,8 +311,16 @@ pub struct Simulator {
 
 impl Simulator {
     pub fn new(cfg: SimConfig, specs: Vec<ModelSpec>) -> Self {
-        let mut cluster =
-            Cluster::new(cfg.n_gpus, cfg.gpu_bytes, cfg.gpus_per_node, cfg.perf.clone());
+        let mut cfg = cfg;
+        if let Some(f) = &cfg.fleet {
+            // The fleet is authoritative for cluster size even if a caller
+            // poked `n_gpus` after setting it.
+            cfg.n_gpus = f.n_gpus();
+        }
+        let mut cluster = match &cfg.fleet {
+            Some(f) => Cluster::from_fleet(f, cfg.gpus_per_node),
+            None => Cluster::new(cfg.n_gpus, cfg.gpu_bytes, cfg.gpus_per_node, cfg.perf.clone()),
+        };
         if let Err(e) = cfg.faults.validate(cfg.n_gpus) {
             panic!("invalid fault plan: {e}"); // CLI/sweep surfaces pre-validate
         }
@@ -546,11 +640,14 @@ impl Simulator {
         let queue = std::mem::take(&mut self.gpu_queues[g]);
         let (mut admit, mut keep): (Vec<Request>, Vec<Request>) = if self.cfg.slack_aware {
             // Algorithm 2: Moore-Hodgson over prefill deadlines.
+            // Deadline feasibility uses THIS GPU's roofline (uniform fleets:
+            // a clone of `cfg.perf`, so the arithmetic is bit-identical).
+            let gpu_perf = self.cluster.perf_of(g);
             let cands: Vec<Candidate> = queue
                 .iter()
                 .map(|r| {
                     let idx = self.idx_of(r.model);
-                    let c = self.cfg.perf.prefill_tokens_per_sec(&self.specs[idx]);
+                    let c = gpu_perf.prefill_tokens_per_sec(&self.specs[idx]);
                     Candidate {
                         id: r.id,
                         arrival: r.arrival,
@@ -657,9 +754,15 @@ impl Simulator {
             self.cluster.engines[eidx].time_scale = scale;
         }
         let outcome = {
+            // Iteration timing follows the lead GPU's roofline (disjoint
+            // field borrows: `gpu_perfs` is read-only while `engines`/`gpus`
+            // are mutated). Uniform fleets hold clones of `cfg.perf`, so the
+            // step arithmetic — and the result bits — match the historical
+            // single-perf path.
+            let lead_perf = &self.cluster.gpu_perfs[lead];
             let (engines, gpus) = (&mut self.cluster.engines, &mut self.cluster.gpus);
             let mut ga = GroupAlloc::new(gpus, &group, m);
-            engines[eidx].step(now, &self.cfg.perf, &mut ga)
+            engines[eidx].step(now, lead_perf, &mut ga)
         };
         // Track violations for timelines, then stream each record into the
         // metrics sink (counters + sketches; raw retention is opt-in).
@@ -682,7 +785,8 @@ impl Simulator {
         if outcome.duration > 0.0 {
             self.schedule_step(m, now + outcome.duration);
         } else if self.cluster.engines[eidx].has_work() {
-            self.schedule_step(m, now + self.cfg.perf.iter_overhead);
+            let t = now + self.cluster.gpu_perfs[lead].iter_overhead;
+            self.schedule_step(m, t);
         }
     }
 
@@ -927,6 +1031,12 @@ impl Simulator {
             .iter()
             .map(|d| d.kvc.alloc_faults_injected())
             .sum();
+        // Cost ledger: the fleet's $/hour rate x simulated wall time.
+        // Kind-less positional clusters price at the H100 rate, so every run
+        // is comparable; metric fingerprints exclude cost, so the historical
+        // byte-identity contracts are unaffected.
+        self.metrics.cost.fleet_cost_per_hour = self.cluster.fleet_cost_per_hour();
+        self.metrics.cost.cost_dollars = self.metrics.cost.fleet_cost_per_hour * last_now / 3600.0;
         (self.metrics, self.timeline)
     }
 
@@ -1031,6 +1141,29 @@ impl<'a> PolicyCtx<'a> {
     /// fault-free run, letting policies skip availability masking entirely.
     pub fn any_gpu_down(&self) -> bool {
         self.sim.cluster.any_gpu_down()
+    }
+
+    /// Kind of GPU `g` (`None` on kind-less uniform clusters built through
+    /// the positional constructor). Static fleet data — safe for policies
+    /// to branch on without breaking determinism.
+    pub fn gpu_kind(&self, g: usize) -> Option<GpuKind> {
+        self.sim.cluster.kind_of(g)
+    }
+
+    /// $/hour of GPU `g` (static kind data; H100 rate on kind-less
+    /// clusters). Cost-aware policies rank GPUs by this.
+    pub fn gpu_cost_per_hour(&self, g: usize) -> f64 {
+        self.sim.cluster.cost_per_hour_of(g)
+    }
+
+    /// Total device memory of GPU `g` (heterogeneous fleets differ per GPU).
+    pub fn gpu_mem_bytes(&self, g: usize) -> u64 {
+        self.sim.cluster.gpus[g].kvc.stats().total_bytes
+    }
+
+    /// Roofline profile of GPU `g` (per-kind on heterogeneous fleets).
+    pub fn gpu_perf(&self, g: usize) -> &GpuPerf {
+        self.sim.cluster.perf_of(g)
     }
 
     /// kvcached memory stats for GPU `g`.
@@ -1490,6 +1623,76 @@ mod tests {
         let (_, tl) = sim.run(&trace);
         assert!(tl.len() >= 20, "timeline {} samples", tl.len());
         assert!(tl.iter().any(|s| s.gpus.iter().any(|g| g.0 > 0)), "weights visible");
+    }
+
+    #[test]
+    fn builder_matches_positional_constructor_bitwise() {
+        // The fluent builder must be a pure spelling change: same config,
+        // same run, same bits — for every registered policy.
+        let trace = small_trace(4, 240.0, 17);
+        for p in crate::sim::policies::registry().names() {
+            let mut old = SimConfig::new(p, 2);
+            old.slo_scale = 10.0;
+            let new = SimConfig::for_policy(p).gpus(2).slo_scale(10.0);
+            let (a, _) = Simulator::new(old, specs_for(&trace)).run(&trace);
+            let (b, _) = Simulator::new(new, specs_for(&trace)).run(&trace);
+            assert_eq!(a.total(), b.total(), "{p}");
+            assert_eq!(a.ttft_attainment().to_bits(), b.ttft_attainment().to_bits(), "{p}");
+            assert_eq!(a.sim_events, b.sim_events, "{p}");
+            assert_eq!(a.wall_seconds.to_bits(), b.wall_seconds.to_bits(), "{p}");
+        }
+    }
+
+    #[test]
+    fn uniform_h100_fleet_matches_legacy_cluster_bitwise() {
+        // `FleetSpec::uniform(n, H100)` must reproduce the historical
+        // uniform cluster bitwise for every registered policy: same memory,
+        // same perf values, through the same arithmetic.
+        let trace = small_trace(4, 240.0, 7);
+        for p in crate::sim::policies::registry().names() {
+            let legacy = SimConfig::for_policy(p).gpus(2).slo_scale(10.0);
+            let fleet = SimConfig::from_fleet(p, FleetSpec::uniform(2, GpuKind::H100))
+                .slo_scale(10.0);
+            let (a, _) = Simulator::new(legacy, specs_for(&trace)).run(&trace);
+            let (b, _) = Simulator::new(fleet, specs_for(&trace)).run(&trace);
+            assert_eq!(a.total(), b.total(), "{p}");
+            assert_eq!(a.completed(), b.completed(), "{p}");
+            assert_eq!(a.ttft_attainment().to_bits(), b.ttft_attainment().to_bits(), "{p}");
+            assert_eq!(a.mean_ttft().to_bits(), b.mean_ttft().to_bits(), "{p}");
+            assert_eq!(a.sim_events, b.sim_events, "{p}");
+            assert_eq!(a.wall_seconds.to_bits(), b.wall_seconds.to_bits(), "{p}");
+            assert_eq!(
+                (a.activations, a.evictions, a.migrations, a.preemptions),
+                (b.activations, b.evictions, b.migrations, b.preemptions),
+                "{p}"
+            );
+            // Same rate (H100 pricing either way), same wall time, same cost.
+            assert_eq!(
+                a.cost.fleet_cost_per_hour.to_bits(),
+                b.cost.fleet_cost_per_hour.to_bits(),
+                "{p}"
+            );
+            assert_eq!(a.cost.cost_dollars.to_bits(), b.cost.cost_dollars.to_bits(), "{p}");
+        }
+    }
+
+    #[test]
+    fn het_fleet_runs_end_to_end_with_cost_ledger() {
+        let trace = small_trace(4, 240.0, 13);
+        let fleet = FleetSpec::parse("1xa100+1xl4").unwrap();
+        let want_rate = fleet.cost_per_hour();
+        for p in crate::sim::policies::registry().names() {
+            let cfg = SimConfig::from_fleet(p, fleet.clone()).slo_scale(10.0);
+            assert_eq!(cfg.n_gpus, 2, "{p}: fleet sizes the cluster");
+            let (m, _) = Simulator::new(cfg, specs_for(&trace)).run(&trace);
+            assert!(m.total() > 0, "{p} recorded nothing");
+            assert!(m.completed() > 0, "{p} finished nothing on the het fleet");
+            assert!(m.cost.is_priced(), "{p}: ledger must carry the fleet rate");
+            assert_eq!(m.cost.fleet_cost_per_hour.to_bits(), want_rate.to_bits(), "{p}");
+            let want_dollars = want_rate * m.wall_seconds / 3600.0;
+            assert_eq!(m.cost.cost_dollars.to_bits(), want_dollars.to_bits(), "{p}");
+            assert!(m.cost_per_1k_requests_at_slo() > 0.0, "{p}");
+        }
     }
 
     #[test]

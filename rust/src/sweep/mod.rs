@@ -24,18 +24,25 @@
 //!   thread.
 //! * **Grid enumeration is fixed**: [`SweepGrid::points`] nests
 //!   trace → rate scale → SLO scale → GPU count → seed → fault spec →
-//!   policy, matching the hand-rolled loops it replaced, so tables keep
-//!   their historical row order (the fault axis defaults to a single
-//!   fault-free entry). The default policy axis is the registry's
-//!   registration order (`crate::sim::registry()`), and policies are keyed
-//!   by name, so the same determinism contract extends to any registered
-//!   `SchedulingPolicy` — policy hooks must be pure w.r.t. their
-//!   `PolicyCtx` (see `sim/policies`).
+//!   fleet spec → policy, matching the hand-rolled loops it replaced, so
+//!   tables keep their historical row order (the fault and fleet axes
+//!   default to a single inert entry each). The default policy axis is the
+//!   registry's registration order (`crate::sim::registry()`), and
+//!   policies are keyed by name, so the same determinism contract extends
+//!   to any registered `SchedulingPolicy` — policy hooks must be pure
+//!   w.r.t. their `PolicyCtx` (see `sim/policies`).
 //! * **Faults are data.** A point's fault spec resolves to a
 //!   `crate::fault::FaultPlan` before its simulator is constructed; all
 //!   randomness (the `churn:<seed>` shorthand) is consumed at resolution
 //!   time, never inside the event loop, so faulty points satisfy the same
 //!   purity requirement and the `--jobs` identity extends to fault sweeps.
+//! * **Fleets are data too.** A point's fleet spec
+//!   (`crate::cluster::FleetSpec`, grammar `4xh100+8xl4`) expands to
+//!   static per-kind GPU profiles before the simulator is constructed —
+//!   kind tables are compile-time constants, never runtime-configured
+//!   per-GPU mutation — so heterogeneous points satisfy the same purity
+//!   requirement and the `--jobs` identity extends to fleet sweeps
+//!   (enforced by the integration fleet-sweep regression test).
 //!
 //! `jobs = 0` means "auto": the `PRISM_JOBS` env var if set, else
 //! `std::thread::available_parallelism()`.

@@ -1,7 +1,8 @@
 //! Sweep points and grids: the (policy, trace, rate/SLO/GPU scale, seed,
-//! fault spec) coordinates of one simulation run, plus a cartesian-product
-//! builder.
+//! fault spec, fleet spec) coordinates of one simulation run, plus a
+//! cartesian-product builder.
 
+use crate::cluster::FleetSpec;
 use crate::metrics::RunMetrics;
 use crate::model::spec::ModelSpec;
 use crate::sim::{registry, SimConfig, Simulator};
@@ -27,6 +28,13 @@ pub struct SweepPoint {
     /// `FaultPlan` when the point runs (deterministically - faults are
     /// data, so the `--jobs 1` ≡ `--jobs N` identity holds per point).
     pub faults: Option<&'static str>,
+    /// Fleet-spec axis (see `crate::cluster::FleetSpec::parse`, grammar
+    /// `4xh100+8xl4`): `None` keeps the uniform cluster sized by `n_gpus`
+    /// and leaves the key unchanged. A fleet **overrides the GPU axis** —
+    /// its own GPU count is authoritative. Kind profiles are static data,
+    /// so the spec fully determines the cluster and the `--jobs 1` ≡
+    /// `--jobs N` identity holds per point.
+    pub fleet: Option<&'static str>,
 }
 
 impl SweepPoint {
@@ -39,16 +47,35 @@ impl SweepPoint {
             Some(spec) => format!("-f{}", spec.replace([',', ';'], "+")),
             None => String::new(),
         };
+        let fleet_seg = match self.fleet {
+            // Grammar is already CSV-safe; sanitize defensively anyway.
+            Some(spec) => format!("-F{}", spec.replace([',', ';'], "+")),
+            None => String::new(),
+        };
         format!(
-            "t{}-g{}-rs{}-ss{}-s{}{}-{}",
+            "t{}-g{}-rs{}-ss{}-s{}{}{}-{}",
             self.trace,
             self.n_gpus,
             self.rate_scale,
             self.slo_scale,
             self.seed,
             fault_seg,
+            fleet_seg,
             self.policy
         )
+    }
+
+    /// Resolve the point's fleet spec (if any) into the config. Like fault
+    /// specs, grid fleet specs are programmatic: an invalid one is a bug in
+    /// the experiment definition, surfaced loudly (documented panic). Must
+    /// run before [`apply_faults`](Self::apply_faults), which validates
+    /// against the effective GPU count.
+    fn apply_fleet(&self, cfg: &mut SimConfig) {
+        if let Some(spec) = self.fleet {
+            let f = FleetSpec::parse(spec)
+                .unwrap_or_else(|e| panic!("invalid fleet spec {spec:?}: {e}"));
+            *cfg = cfg.clone().fleet(f);
+        }
     }
 
     /// Resolve the point's fault spec (if any) into `cfg.faults`.
@@ -57,7 +84,10 @@ impl SweepPoint {
     /// folded into a best-effort run.
     fn apply_faults(&self, cfg: &mut SimConfig, trace: &Trace) {
         if let Some(spec) = self.faults {
-            cfg.faults = crate::fault::resolve(spec, self.n_gpus, trace.duration)
+            // A fleet overrides the GPU axis, so fault GPU indices resolve
+            // against the fleet's own count.
+            let n_gpus = cfg.fleet.as_ref().map_or(self.n_gpus, |f| f.n_gpus());
+            cfg.faults = crate::fault::resolve(spec, n_gpus, trace.duration)
                 .unwrap_or_else(|e| panic!("invalid fault spec {spec:?}: {e}"));
         }
     }
@@ -78,6 +108,7 @@ impl SweepPoint {
     /// sampling, eviction knobs); the point's rate scale is still applied
     /// (lazily, at the arrival cursor).
     pub fn run_with(&self, mut cfg: SimConfig, specs: &[ModelSpec], trace: &Trace) -> RunMetrics {
+        self.apply_fleet(&mut cfg);
         self.apply_faults(&mut cfg, trace);
         Simulator::new(cfg, specs.to_vec()).run_scaled(trace, self.rate_scale).0
     }
@@ -89,6 +120,7 @@ impl SweepPoint {
     pub fn run_prescaled(&self, specs: &[ModelSpec], trace: &Trace) -> RunMetrics {
         let mut cfg = SimConfig::new(self.policy, self.n_gpus);
         cfg.slo_scale = self.slo_scale;
+        self.apply_fleet(&mut cfg);
         self.apply_faults(&mut cfg, trace);
         Simulator::new(cfg, specs.to_vec()).run(trace).0
     }
@@ -96,10 +128,11 @@ impl SweepPoint {
 
 /// Cartesian-product builder over sweep axes. Enumeration order is part of
 /// the contract (see module docs in `sweep`): trace → rate scale → SLO
-/// scale → GPU count → seed → fault spec → policy, policies innermost so
-/// each table row group compares systems side by side exactly like the
-/// hand-rolled loops this replaced. The fault axis defaults to the single
-/// fault-free entry, leaving existing grids unchanged.
+/// scale → GPU count → seed → fault spec → fleet spec → policy, policies
+/// innermost so each table row group compares systems side by side exactly
+/// like the hand-rolled loops this replaced. The fault and fleet axes
+/// default to their single inert entry (fault-free, uniform cluster),
+/// leaving existing grids unchanged.
 #[derive(Debug, Clone)]
 pub struct SweepGrid {
     policies: Vec<&'static str>,
@@ -109,6 +142,7 @@ pub struct SweepGrid {
     slo_scales: Vec<f64>,
     seeds: Vec<u64>,
     faults: Vec<Option<&'static str>>,
+    fleets: Vec<Option<&'static str>>,
 }
 
 impl Default for SweepGrid {
@@ -131,6 +165,7 @@ impl SweepGrid {
             slo_scales: vec![8.0],
             seeds: vec![0],
             faults: vec![None],
+            fleets: vec![None],
         }
     }
 
@@ -181,6 +216,16 @@ impl SweepGrid {
         self
     }
 
+    /// Fleet-spec axis (`FleetSpec::parse` grammar, e.g. `4xh100+8xl4`).
+    /// Replaces the default uniform-cluster entry; each fleet overrides the
+    /// GPU axis for its points (the fleet's own GPU count is authoritative,
+    /// and `n_gpus` merely labels the key). Mix heterogeneous and uniform
+    /// specs (`2xh100`) to compare fleets at matching key shapes.
+    pub fn fleets(mut self, fs: &[&'static str]) -> Self {
+        self.fleets = fs.iter().map(|&f| Some(f)).collect();
+        self
+    }
+
     /// Number of points the grid enumerates.
     pub fn len(&self) -> usize {
         self.traces.len()
@@ -189,6 +234,7 @@ impl SweepGrid {
             * self.gpus.len()
             * self.seeds.len()
             * self.faults.len()
+            * self.fleets.len()
             * self.policies.len()
     }
 
@@ -205,16 +251,19 @@ impl SweepGrid {
                     for &n_gpus in &self.gpus {
                         for &seed in &self.seeds {
                             for &faults in &self.faults {
-                                for &policy in &self.policies {
-                                    out.push(SweepPoint {
-                                        policy,
-                                        trace,
-                                        n_gpus,
-                                        rate_scale,
-                                        slo_scale,
-                                        seed,
-                                        faults,
-                                    });
+                                for &fleet in &self.fleets {
+                                    for &policy in &self.policies {
+                                        out.push(SweepPoint {
+                                            policy,
+                                            trace,
+                                            n_gpus,
+                                            rate_scale,
+                                            slo_scale,
+                                            seed,
+                                            faults,
+                                            fleet,
+                                        });
+                                    }
                                 }
                             }
                         }
@@ -270,6 +319,55 @@ mod tests {
         keys.sort();
         keys.dedup();
         assert_eq!(keys.len(), 4, "fault axis must keep keys unique");
+    }
+
+    #[test]
+    fn fleet_axis_multiplies_grid_and_keys_stay_distinct() {
+        // Default axis: uniform-cluster points whose keys match the
+        // historical format exactly (no `-F` segment).
+        let base = SweepGrid::new().policies(&["prism"]);
+        let p0 = base.points()[0];
+        assert_eq!(p0.fleet, None);
+        assert!(!p0.key().contains("-F"), "fleet-free key changed: {}", p0.key());
+
+        let g = SweepGrid::new().policies(&["prism", "melange"]).fleets(&["2xa100", "1xh100+1xl4"]);
+        assert_eq!(g.len(), 4);
+        let pts = g.points();
+        // Fleet specs nest outside the policy axis, inside faults.
+        assert_eq!((pts[0].fleet, pts[0].policy), (Some("2xa100"), "prism"));
+        assert_eq!((pts[1].fleet, pts[1].policy), (Some("2xa100"), "melange"));
+        assert_eq!(pts[2].fleet, Some("1xh100+1xl4"));
+        let k = pts[2].key();
+        assert!(k.contains("-F1xh100+1xl4"), "fleet spec in key: {k}");
+        assert!(!k.contains(','), "keys must stay CSV-safe: {k}");
+        let mut keys: Vec<String> = pts.iter().map(|p| p.key()).collect();
+        keys.sort();
+        keys.dedup();
+        assert_eq!(keys.len(), 4, "fleet axis must keep keys unique");
+    }
+
+    #[test]
+    fn het_fleet_point_runs_and_prices_the_ledger() {
+        use crate::experiments::e2e::assign_ids;
+        use crate::model::spec::catalog_subset;
+        use crate::trace::gen::{generate, TraceGenConfig};
+        let g = SweepGrid::new()
+            .policies(&["melange"])
+            .gpus(&[4]) // overridden by the fleet (2 GPUs); labels the key only
+            .slo_scales(&[10.0])
+            .fleets(&["1xa100+1xl4"]);
+        let pts = g.points();
+        assert_eq!(pts.len(), 1);
+        let trace = generate(&TraceGenConfig::novita_like(4, 180.0, 11));
+        let specs = assign_ids(
+            catalog_subset(30).into_iter().filter(|m| !m.is_tp()).take(4).collect(),
+        );
+        let m = pts[0].run(&specs, &trace);
+        assert!(m.total() > 0, "melange het-fleet point produced no completions");
+        assert!(m.completed() > 0, "melange het-fleet point finished nothing");
+        let want = crate::cluster::FleetSpec::parse("1xa100+1xl4").unwrap().cost_per_hour();
+        assert_eq!(m.cost.fleet_cost_per_hour.to_bits(), want.to_bits());
+        assert!(m.cost.cost_dollars > 0.0);
     }
 
     #[test]

@@ -230,6 +230,60 @@ fn fault_sweep_jobs_byte_identical() {
 }
 
 #[test]
+fn fleet_sweep_jobs_byte_identical() {
+    // Fleets are data: a heterogeneous fleet axis must preserve the sweep
+    // engine's `--jobs` identity contract. Kind profiles are static tables
+    // expanded before the simulator is constructed, so heterogeneous points
+    // are as pure as uniform ones and `--jobs 1` vs `--jobs 8` stays
+    // byte-identical — cost ledger included.
+    let specs = models_8x8b();
+    let trace = generate(&TraceGenConfig::novita_like(8, 240.0, 42)).scale_rate(1.5);
+    let grid = prism::sweep::SweepGrid::new()
+        .slo_scales(&[8.0])
+        .fleets(&["2xa100", "1xh100+1xl4"]);
+    let points = grid.points();
+    assert_eq!(points.len(), 2 * prism::sim::registry().names().len());
+    let digest = |jobs: usize| -> Vec<(String, Vec<u64>)> {
+        prism::sweep::run_points(&points, jobs, |_, pt| pt.run(&specs, &trace))
+            .iter()
+            .zip(&points)
+            .map(|(m, pt)| {
+                (
+                    pt.key(),
+                    vec![
+                        m.total() as u64,
+                        m.completed() as u64,
+                        m.ttft_attainment().to_bits(),
+                        m.mean_ttft().to_bits(),
+                        m.sim_events,
+                        m.activations,
+                        m.evictions,
+                        m.migrations,
+                        m.preemptions,
+                        m.cost.fleet_cost_per_hour.to_bits(),
+                        m.cost.cost_dollars.to_bits(),
+                    ],
+                )
+            })
+            .collect()
+    };
+    let d1 = digest(1);
+    assert_eq!(d1, digest(8), "fleet sweep diverged between --jobs 1 and --jobs 8");
+    // Sanity: the two fleets actually price differently, and keys are unique.
+    let rate_of = |key_frag: &str| {
+        d1.iter()
+            .find(|(k, _)| k.contains(key_frag))
+            .map(|(_, v)| v[9])
+            .expect("fleet key present")
+    };
+    assert_ne!(rate_of("-F2xa100"), rate_of("-F1xh100+1xl4"));
+    let mut keys: Vec<&String> = d1.iter().map(|(k, _)| k).collect();
+    keys.sort();
+    keys.dedup();
+    assert_eq!(keys.len(), points.len(), "fleet keys must be unique");
+}
+
+#[test]
 fn gpu_crash_recovery_accounting_across_policies() {
     // A crash + recovery window mid-run must leave no accounting leaks for
     // ANY registered policy: every admitted request reaches a terminal

@@ -130,6 +130,72 @@ fn empty_fault_plan_matches_enum_reference() {
 }
 
 #[test]
+fn uniform_h100_fleet_matches_enum_reference() {
+    // Acceptance check for the heterogeneous-fleet subsystem: a
+    // `FleetSpec::uniform(n, H100)` cluster must be bitwise-identical to
+    // the pre-fleet uniform simulator. The frozen enum reference predates
+    // `GpuKind`/`FleetSpec` entirely, so this proves the per-GPU perf/cost
+    // threading changed no arithmetic on the uniform path — the H100 kind
+    // IS the historical default (80 GiB, `GpuPerf::default()`), and
+    // per-GPU profile lookups hit clones of the same values.
+    let specs = assign_ids(
+        table3_catalog()
+            .into_iter()
+            .filter(|m| m.name.contains("8b") || m.name.contains("7b"))
+            .take(8)
+            .collect(),
+    );
+    let trace = generate(&TraceGenConfig::novita_like(8, 300.0, 1234)).scale_rate(2.0);
+    for (kind, name) in POLICIES {
+        let mut old_cfg = refsim::SimConfig::new(kind, 2);
+        old_cfg.slo_scale = 8.0;
+        old_cfg.metrics_full_dump = true;
+        let new_cfg = SimConfig::from_fleet(
+            name,
+            prism::cluster::FleetSpec::uniform(2, prism::cluster::GpuKind::H100),
+        )
+        .slo_scale(8.0)
+        .full_dump(true);
+        assert_eq!(new_cfg.n_gpus, 2, "{name}: fleet sizes the cluster");
+        let (old_m, _) = refsim::Simulator::new(old_cfg, specs.to_vec()).run(&trace);
+        let (new_m, _) = Simulator::new(new_cfg, specs.to_vec()).run(&trace);
+        assert_eq!(
+            fingerprint(&old_m),
+            fingerprint(&new_m),
+            "policy {name}: the uniform H100 fleet diverged from the pre-fleet reference"
+        );
+    }
+}
+
+#[test]
+fn builder_matches_positional_config_against_enum_reference() {
+    // The fluent `SimConfig` builder is a pure spelling change: configs
+    // built with `for_policy(..).gpus(..).slo_scale(..)` must reproduce
+    // the frozen reference exactly, like the positional constructor does.
+    let specs = assign_ids(
+        table3_catalog()
+            .into_iter()
+            .filter(|m| m.name.contains("8b") || m.name.contains("7b"))
+            .take(8)
+            .collect(),
+    );
+    let trace = generate(&TraceGenConfig::novita_like(8, 300.0, 1234)).scale_rate(2.0);
+    for (kind, name) in POLICIES {
+        let mut old_cfg = refsim::SimConfig::new(kind, 2);
+        old_cfg.slo_scale = 8.0;
+        old_cfg.metrics_full_dump = true;
+        let new_cfg = SimConfig::for_policy(name).gpus(2).slo_scale(8.0).full_dump(true);
+        let (old_m, _) = refsim::Simulator::new(old_cfg, specs.to_vec()).run(&trace);
+        let (new_m, _) = Simulator::new(new_cfg, specs.to_vec()).run(&trace);
+        assert_eq!(
+            fingerprint(&old_m),
+            fingerprint(&new_m),
+            "policy {name}: the fluent builder diverged from the enum-dispatch reference"
+        );
+    }
+}
+
+#[test]
 fn trait_dispatch_matches_enum_reference_under_memory_pressure() {
     // Small-model fleet squeezed onto undersized GPUs: activation retries,
     // bounded give-ups, and heavy eviction traffic — the paths where a
