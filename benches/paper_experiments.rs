@@ -5,17 +5,30 @@
 //! Flags:
 //!   <substr>    only run experiment ids containing <substr>
 //!   --jobs N    sweep worker count (default: auto; 1 = sequential)
+//!   --shards N  intra-run event-loop shard count applied to every
+//!               experiment config (default: 1 = sequential; 0 = auto)
 
 use std::time::Instant;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let jobs = prism::sweep::parse_jobs_flag(&args);
+    let shards: u32 = args
+        .iter()
+        .position(|a| a == "--shards")
+        .map(|i| args.get(i + 1).expect("--shards requires a value").clone())
+        .or_else(|| args.iter().find_map(|a| a.strip_prefix("--shards=").map(str::to_string)))
+        .map(|v| v.parse().expect("--shards expects a non-negative integer (0 = auto)"))
+        .unwrap_or(1);
+    // Experiments construct their SimConfigs internally; the shard knob
+    // travels as the process-wide construction default (set once, up front).
+    prism::sim::SimConfig::set_default_shards(shards);
     let filter = args
         .iter()
         .enumerate()
         .filter(|(i, a)| {
-            !a.starts_with('-') && !(*i > 0 && args[i - 1] == "--jobs")
+            !a.starts_with('-')
+                && !(*i > 0 && (args[i - 1] == "--jobs" || args[i - 1] == "--shards"))
         })
         .map(|(_, a)| a.clone())
         .next()

@@ -9,7 +9,11 @@
 //! the churn squeeze, timing the recovery paths. The `het-fleet-*`
 //! scenarios run a mixed `FleetSpec` (A100s + L4s) so the per-GPU
 //! perf/memory lookups and cost accounting on the heterogeneous path stay
-//! on the perf radar too.
+//! on the perf radar too. The `giant-*` pair (full set) runs the same
+//! 100-model/32-GPU/2-hour load once on the historical sequential event
+//! loop and once on the GPU-group-sharded loop (`SimConfig::shards = 4`)
+//! — the intra-run parallelism A/B; the sharded row's acceptance target is
+//! >= 2x the sequential row's events/sec on an 8-core-plus runner.
 //!
 //! Flags:
 //!   --smoke              tiny CI configuration (seconds, not minutes)
@@ -29,6 +33,8 @@
 //!                        (default 15). This is the CI perf gate.
 //!   --policy <name>      only run policies whose name contains <name>
 //!   --scenario <name>    only run scenarios whose name contains <name>
+//!   --shards N           override every scenario's intra-run shard count
+//!                        (0 = auto, 1 = sequential; default: per-scenario)
 
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -62,6 +68,10 @@ struct Scenario {
     /// the fleet's own size and per-kind memory; `None` = uniform H100
     /// cluster sized by `n_gpus`.
     fleet: Option<&'static str>,
+    /// Intra-run shard count (`SimConfig::shards`): `1` = the historical
+    /// sequential event loop, `N > 1` = GPU-group-sharded, `0` = auto.
+    /// Overridden globally by the `--shards` flag.
+    shards: u32,
 }
 
 const GB: u64 = 1 << 30;
@@ -128,6 +138,8 @@ fn main() {
     let policy_filter = opt("--policy").unwrap_or_default();
     let scenario_filter = opt("--scenario").unwrap_or_default();
     let jobs = prism::sweep::parse_jobs_flag(&args);
+    let shards_override: Option<u32> = opt("--shards")
+        .map(|s| s.parse().expect("--shards expects a non-negative integer (0 = auto)"));
     let gate_pct: f64 = opt("--gate-pct")
         .map(|s| s.parse().expect("--gate-pct expects a number"))
         .unwrap_or(15.0);
@@ -152,6 +164,7 @@ fn main() {
                 small_models: false,
                 faults: None,
                 fleet: None,
+                shards: 1,
             },
             Scenario {
                 name: "churn-12m-2g-2min",
@@ -162,6 +175,7 @@ fn main() {
                 small_models: true,
                 faults: None,
                 fleet: None,
+                shards: 1,
             },
             // Churn squeeze + a seeded fault plan: crashes, slowdowns,
             // alloc faults, and load failures exercise the recovery paths
@@ -175,6 +189,7 @@ fn main() {
                 small_models: true,
                 faults: Some("churn:7"),
                 fleet: None,
+                shards: 1,
             },
             // Mixed-kind fleet churn: small models squeezed across two
             // A100s (40 GiB) and four L4s (24 GiB). Exercises the per-GPU
@@ -189,6 +204,7 @@ fn main() {
                 small_models: true,
                 faults: None,
                 fleet: Some("2xa100+4xl4"),
+                shards: 1,
             },
         ]
     } else {
@@ -202,6 +218,7 @@ fn main() {
                 small_models: false,
                 faults: None,
                 fleet: None,
+                shards: 1,
             },
             Scenario {
                 name: "novita-100m-32g-2h",
@@ -212,6 +229,7 @@ fn main() {
                 small_models: false,
                 faults: None,
                 fleet: None,
+                shards: 1,
             },
             // KV churn at scale: a small-model fleet squeezed onto GPUs with
             // a fraction of its working set, so the allocator (block
@@ -225,6 +243,7 @@ fn main() {
                 small_models: true,
                 faults: None,
                 fleet: None,
+                shards: 1,
             },
             Scenario {
                 name: "faulty-churn-48m-4g-1h",
@@ -235,6 +254,7 @@ fn main() {
                 small_models: true,
                 faults: Some("churn:7"),
                 fleet: None,
+                shards: 1,
             },
             // Full-scale heterogeneous fleet: mixed A100/L4 kinds under the
             // same hour-long small-model load as the churn scenarios.
@@ -247,6 +267,33 @@ fn main() {
                 small_models: true,
                 faults: None,
                 fleet: Some("4xa100+8xl4"),
+                shards: 1,
+            },
+            // Intra-run parallelism A/B (see module docs): identical load
+            // to novita-100m-32g-2h, sequential vs 4-shard event loop. The
+            // pair shares a trace and fleet, so the events/sec ratio
+            // giant-sharded : giant isolates the sharding win.
+            Scenario {
+                name: "giant-100m-32g-2h",
+                n_models: 100,
+                n_gpus: 32,
+                duration: 7200.0,
+                gpu_bytes: 80 * GB,
+                small_models: false,
+                faults: None,
+                fleet: None,
+                shards: 1,
+            },
+            Scenario {
+                name: "giant-sharded-100m-32g-2h",
+                n_models: 100,
+                n_gpus: 32,
+                duration: 7200.0,
+                gpu_bytes: 80 * GB,
+                small_models: false,
+                faults: None,
+                fleet: None,
+                shards: 4,
             },
         ]
     };
@@ -290,6 +337,11 @@ fn main() {
                 cfg.slo_scale = 8.0;
                 cfg.stream_arrivals = stream;
                 cfg.gpu_bytes = sc.gpu_bytes;
+                // Prepush mode predates streamed arrivals, which the sharded
+                // loop requires; the simulator falls back to the sequential
+                // loop there, so prepush rows time the historical path at
+                // any shard count.
+                cfg = cfg.shards(shards_override.unwrap_or(sc.shards));
                 if let Some(fs) = sc.fleet {
                     cfg = cfg.fleet(FleetSpec::parse(fs).expect("scenario fleet spec"));
                 }

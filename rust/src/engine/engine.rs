@@ -26,7 +26,18 @@
 //!   [`KvAlloc::alloc_n`] call per request, not a `Vec`-returning call per
 //!   block;
 //! * the prefill queue is a `VecDeque`, so a preemption's re-queue at the
-//!   front is O(1) instead of shifting the whole queue.
+//!   front is O(1) instead of shifting the whole queue;
+//! * hot per-request decode state lives in struct-of-arrays form indexed
+//!   by the request's dense `kv_slot` (`slot_tokens`/`slot_goal`/
+//!   `slot_accum`, with `running_slots` parallel to `running`): the decode
+//!   scan, the finish test, the KV-token sum, and latency accrual all walk
+//!   flat arrays instead of chasing 100+-byte `Request` structs — the
+//!   layout the sharded event loop's per-shard decode scans are sized for.
+//!   A running request's `decoded_tokens`/`decode_time_accum` fields are
+//!   stale while it runs; they are synced **by assignment** (not
+//!   re-derivation) when the request leaves `running` (completion,
+//!   preemption, drain), so the f64 accrual stream is bit-identical to the
+//!   historical per-request layout.
 //!
 //! Work proportional to the batch is allowed only per *iteration* (timing,
 //! latency accrual) or per *completion* (order-preserving removal), never
@@ -160,6 +171,17 @@ pub struct SimEngine {
     queue: VecDeque<Request>,
     /// Requests in decode.
     running: Vec<Request>,
+    /// `kv_slot` of each running request, parallel to `running` (every
+    /// running request holds KV: promotion requires a completed — hence
+    /// block-backed — prefill, and preemption/drain remove from `running`).
+    running_slots: Vec<u32>,
+    /// Struct-of-arrays decode state, indexed by `kv_slot`: resident
+    /// tokens (prompt + decoded), finish goal (prompt + output), and the
+    /// decode-latency accumulator. Seeded at promotion, authoritative
+    /// while the request runs, synced back by assignment at exit.
+    slot_tokens: Vec<u32>,
+    slot_goal: Vec<u32>,
+    slot_accum: Vec<f64>,
     /// Per-request KV block runs, keyed by each request's dense `kv_slot`.
     table: BlockTable,
     pub chunk_tokens: u32,
@@ -181,6 +203,10 @@ impl SimEngine {
             spec,
             queue: VecDeque::new(),
             running: Vec::new(),
+            running_slots: Vec::new(),
+            slot_tokens: Vec::new(),
+            slot_goal: Vec::new(),
+            slot_accum: Vec::new(),
             table: BlockTable::default(),
             chunk_tokens: CHUNK_TOKENS,
             max_batch: MAX_BATCH,
@@ -210,14 +236,14 @@ impl SimEngine {
         self.running.len()
     }
 
-    /// Tokens of KV currently resident (for KVPR / memory plots).
+    /// Tokens of KV currently resident (for KVPR / memory plots). The
+    /// running half reads the slot table (`slot_tokens[s]` == prompt +
+    /// decoded), which is current mid-iteration too — the per-request
+    /// fields are stale while a request runs.
     pub fn active_kv_tokens(&self) -> u64 {
         let q: u64 = self.queue.iter().map(|r| r.prefill_done_tokens as u64).sum();
-        let d: u64 = self
-            .running
-            .iter()
-            .map(|r| (r.prompt_tokens + r.decoded_tokens) as u64)
-            .sum();
+        let d: u64 =
+            self.running_slots.iter().map(|&s| self.slot_tokens[s as usize] as u64).sum();
         q + d
     }
 
@@ -243,6 +269,8 @@ impl SimEngine {
             return false; // requester is the youngest: it must wait instead
         }
         let mut r = self.running.pop().expect("younger victim exists");
+        let s = self.running_slots.pop().expect("slot parallel to running");
+        self.sync_from_slot(&mut r, s);
         release_blocks(&mut self.table, kv, &mut r);
         r.preemptions += 1;
         r.preemptions_apply();
@@ -283,7 +311,9 @@ impl SimEngine {
             r.prefill_done_tokens = 0;
             out.push(r);
         }
-        for mut r in std::mem::take(&mut self.running) {
+        let slots = std::mem::take(&mut self.running_slots);
+        for (mut r, s) in std::mem::take(&mut self.running).into_iter().zip(slots) {
+            self.sync_from_slot(&mut r, s);
             release_blocks(&mut self.table, kv, &mut r);
             r.phase = Phase::Queued;
             r.preemptions += 1;
@@ -291,6 +321,26 @@ impl SimEngine {
             out.push(r);
         }
         out
+    }
+
+    /// Sync a request leaving `running`: copy its slot's decode state back
+    /// **by assignment** (bit-exact — never re-derived arithmetic; see the
+    /// module docs). Must run before `release_blocks` clears `kv_slot`.
+    fn sync_from_slot(&self, r: &mut Request, slot: u32) {
+        let s = slot as usize;
+        r.decoded_tokens = self.slot_tokens[s] - r.prompt_tokens;
+        r.decode_time_accum = self.slot_accum[s];
+    }
+
+    /// Grow the slot-indexed arrays to cover `slot` (recycled slots reuse
+    /// their entries; seeding at promotion overwrites stale state).
+    fn ensure_slot(&mut self, slot: u32) {
+        let need = slot as usize + 1;
+        if self.slot_tokens.len() < need {
+            self.slot_tokens.resize(need, 0);
+            self.slot_goal.resize(need, 0);
+            self.slot_accum.resize(need, 0.0);
+        }
     }
 
     /// Execute one iteration at simulation time `now`.
@@ -316,15 +366,18 @@ impl SimEngine {
         // that preemption just freed (that re-consumption livelocks).
         let mut pressure = false;
         let mut i = 0usize;
+        debug_assert_eq!(self.running.len(), self.running_slots.len());
         while i < self.running.len() {
-            let tokens_after = self.running[i].prompt_tokens + self.running[i].decoded_tokens + 1;
+            // Hot scan over the flat slot arrays (`slot_tokens[s]` ==
+            // prompt + decoded), not the Request structs.
+            let s = self.running_slots[i] as usize;
+            let tokens_after = self.slot_tokens[s] + 1;
             let mut attempts = 0;
             loop {
                 match ensure_blocks(&mut self.table, kv, &mut self.running[i], tokens_after) {
                     Ok(()) => {
-                        let r = &mut self.running[i];
-                        r.decoded_tokens += 1;
-                        if r.decoded_tokens >= r.output_tokens {
+                        self.slot_tokens[s] += 1;
+                        if self.slot_tokens[s] >= self.slot_goal[s] {
                             finished.push(i);
                         }
                         break;
@@ -421,12 +474,13 @@ impl SimEngine {
         self.busy_seconds += duration;
         out.duration = duration;
 
-        // Decode latency accounting: every running request that decoded this
-        // iteration accrues the iteration duration.
-        for r in self.running.iter_mut() {
-            if r.decoded_tokens > 0 {
-                r.decode_time_accum += duration;
-            }
+        // Decode latency accounting: every running request accrues the
+        // iteration duration. (Every running request has decoded at least
+        // one token — promotion guarantees `decoded_tokens >= 1` — so the
+        // historical `decoded_tokens > 0` guard was always true here; the
+        // accrual stream over the slot array is the same f64 sequence.)
+        for &s in &self.running_slots {
+            self.slot_accum[s as usize] += duration;
         }
 
         // Completions: `finished` holds increasing, still-valid indices
@@ -436,7 +490,9 @@ impl SimEngine {
         let mut removed = 0usize;
         for &fi in &finished {
             let mut r = self.running.remove(fi - removed);
+            let s = self.running_slots.remove(fi - removed);
             removed += 1;
+            self.sync_from_slot(&mut r, s);
             r.phase = Phase::Finished;
             r.finish_time = Some(end);
             if r.first_token_time.is_none() {
@@ -469,6 +525,17 @@ impl SimEngine {
                     out.completions.push(Completion::from_request(&r));
                 } else {
                     r.phase = Phase::Decode;
+                    // Seed the slot arrays: the request's fields are
+                    // authoritative up to this point, the slot entries from
+                    // here until it leaves `running`.
+                    let slot = r.kv_slot;
+                    debug_assert_ne!(slot, NO_KV_SLOT, "promoted request holds KV");
+                    self.ensure_slot(slot);
+                    let s = slot as usize;
+                    self.slot_tokens[s] = r.prompt_tokens + r.decoded_tokens;
+                    self.slot_goal[s] = r.prompt_tokens + r.output_tokens;
+                    self.slot_accum[s] = r.decode_time_accum;
+                    self.running_slots.push(slot);
                     self.running.push(r);
                 }
             } else {
@@ -767,8 +834,13 @@ mod tests {
 }
 
 impl SimEngine {
-    /// Debug helper: (id, decoded_tokens) of the oldest running request.
+    /// Debug helper: (id, decoded_tokens) of the oldest running request
+    /// (decoded count read from the slot table — the `Request` field is
+    /// stale while it runs).
     pub fn debug_oldest(&self) -> Option<(u64, u32)> {
-        self.running.first().map(|r| (r.id.0, r.decoded_tokens))
+        self.running.first().map(|r| {
+            let s = self.running_slots[0] as usize;
+            (r.id.0, self.slot_tokens[s] - r.prompt_tokens)
+        })
     }
 }

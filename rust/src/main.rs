@@ -33,8 +33,9 @@ fn main() {
                  \n  prism sim --policy prism --gpus 4 --trace novita --minutes 10\
                  \n  prism sim --policy prism --gpus 4 --faults churn:7\
                  \n  prism sim --fleet 4xh100+8xl4 --policy melange\
+                 \n  prism sim --gpus 32 --models 100 --shards 4\
                  \n  prism trace --kind novita --hours 2\
-                 \n  prism exp fig5 [--quick] [--jobs N]\
+                 \n  prism exp fig5 [--quick] [--jobs N] [--shards N]\
                  \n  prism exp all --quick --jobs 8\n"
             );
             Ok(())
@@ -133,6 +134,12 @@ fn cmd_sim() -> Result<()> {
         .opt("slo-scale", "8.0", "SLO scale factor")
         .opt("seed", "1", "trace seed")
         .opt(
+            "shards",
+            "1",
+            "intra-run event-loop shards: 1 = historical sequential loop, \
+             0 = auto (available parallelism), N>1 = GPU-group-sharded",
+        )
+        .opt(
             "faults",
             "",
             "fault spec: crash@t:gN[+dur];slow@a-b:gNxF;loadfail@o1,o2;allocfail@a-b:gN/k;drop \
@@ -170,6 +177,7 @@ fn cmd_sim() -> Result<()> {
         cfg = cfg.fleet(f);
     }
     cfg.slo_scale = a.get_f64("slo-scale", 8.0);
+    cfg = cfg.shards(a.get_usize("shards", 1) as u32);
     let fault_spec = a.get_or("faults", "");
     cfg.faults = prism::fault::resolve(&fault_spec, cfg.n_gpus, trace.duration)
         .map_err(|e| anyhow::anyhow!("invalid --faults spec: {e}"))?;
@@ -285,6 +293,12 @@ fn cmd_exp() -> Result<()> {
     // Sweep worker count: 0 = auto (PRISM_JOBS or available parallelism);
     // --jobs 1 reproduces the sequential behavior bit-for-bit.
     let mut jobs = 0usize;
+    // Intra-run shard count (SimConfig::shards): 1 = historical sequential
+    // event loop, 0 = auto, N>1 = GPU-group-sharded. Sharded runs keep
+    // metric-fingerprint identity to --shards 1, but full-dump f64 means can
+    // differ in the last ulp (summation order), so experiment tables are
+    // byte-stable only at a fixed shard count.
+    let mut shards = 1u32;
     let mut id: Option<String> = None;
     let mut it = raw.into_iter();
     while let Some(tok) = it.next() {
@@ -295,8 +309,13 @@ fn cmd_exp() -> Result<()> {
             jobs = parse_jobs(&v)?;
         } else if let Some(v) = tok.strip_prefix("--jobs=") {
             jobs = parse_jobs(v)?;
+        } else if tok == "--shards" {
+            let v = it.next().ok_or_else(|| anyhow::anyhow!("--shards requires a value"))?;
+            shards = parse_shards(&v)?;
+        } else if let Some(v) = tok.strip_prefix("--shards=") {
+            shards = parse_shards(v)?;
         } else if tok.starts_with("--") {
-            anyhow::bail!("unknown option {tok} (expected --quick or --jobs N)");
+            anyhow::bail!("unknown option {tok} (expected --quick, --jobs N, or --shards N)");
         } else if id.is_none() {
             id = Some(tok);
         } else {
@@ -304,6 +323,9 @@ fn cmd_exp() -> Result<()> {
         }
     }
     let id = id.unwrap_or_else(|| "all".to_string());
+    // Experiments build their SimConfigs internally, so the shard knob
+    // travels as the process-wide construction default (set once, up front).
+    SimConfig::set_default_shards(shards);
     experiments::run_jobs(&id, quick, jobs)?;
     eprintln!("valid experiment ids: {:?}", experiments::ids());
     Ok(())
@@ -313,6 +335,13 @@ fn parse_jobs(v: &str) -> Result<usize> {
     // 0 = auto, matching the bench binaries and the run_jobs docs.
     v.parse().map_err(|_| {
         anyhow::anyhow!("--jobs expects a non-negative integer (0 = auto), got {v}")
+    })
+}
+
+fn parse_shards(v: &str) -> Result<u32> {
+    // 0 = auto, 1 = the historical sequential event loop.
+    v.parse().map_err(|_| {
+        anyhow::anyhow!("--shards expects a non-negative integer (0 = auto), got {v}")
     })
 }
 

@@ -36,9 +36,17 @@ pub struct Request {
     // ---- runtime state ----
     pub phase: Phase,
     pub prefill_done_tokens: u32,
+    /// Tokens decoded so far. **Stale while the request is in an engine's
+    /// decode batch**: `SimEngine` keeps the live count in its flat
+    /// struct-of-arrays slot tables (indexed by [`kv_slot`](Self::kv_slot))
+    /// and syncs this field back whenever the request leaves the batch
+    /// (completion, preemption, drain).
     pub decoded_tokens: u32,
     pub first_token_time: Option<f64>,
     pub finish_time: Option<f64>,
+    /// Accumulated decode-phase seconds. Stale while decoding in an engine,
+    /// exactly like [`decoded_tokens`](Self::decoded_tokens): the live value
+    /// is the engine's `slot_accum` entry, assigned back on batch exit.
     pub decode_time_accum: f64,
     /// Times this request was preempted (memory pressure).
     pub preemptions: u32,

@@ -3,6 +3,7 @@
 //! implementations selected by name through the [`PolicyRegistry`].
 
 pub mod policies;
+pub mod shard;
 pub mod simulator;
 
 pub use policies::{by_name, registry, PolicyHandle, PolicyRegistry, SchedulingPolicy};

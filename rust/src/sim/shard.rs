@@ -1,0 +1,989 @@
+//! Intra-run parallelism: the GPU-group-sharded event loop (`--shards N`).
+//!
+//! Between two consecutive *control events* (epoch, timeline sample, fault
+//! action, or non-resident arrival — anything that can change residency or
+//! observe cross-GPU state), the simulator's event stream factors into
+//! independent per-GPU-group sub-streams: an engine step for model `m`
+//! touches only `m`'s TP group (engine, KV allocators, lead-GPU queue,
+//! monitor), and a resident arrival touches only its model's group. This
+//! module exploits that: it partitions the GPUs into shards, replays each
+//! shard's slice of the window on its own thread with disjoint `&mut`
+//! borrows of the simulator state, and re-merges at every barrier before
+//! the control event runs globally on the master.
+//!
+//! # Why the result is the same as `--shards 1`
+//!
+//! * **Residency is frozen inside a window.** Activation, eviction, and
+//!   migration happen only in `on_epoch`, `on_fault`, and non-resident
+//!   arrival routing — all barriers. Shard workers only run `on_step`,
+//!   resident-arrival enqueue, and admission, none of which move models.
+//! * **The shard partition closes over every cross-GPU edge.** A union-find
+//!   over GPUs links (a) each resident model's full TP group and (b) each
+//!   GPU queue to the *current* lead GPU of every queued request's model
+//!   (admission's "model moved, re-route the request" arm crosses exactly
+//!   that edge after a barrier migration). Components are numbered by
+//!   their minimum GPU index and dealt round-robin onto shards, so the
+//!   assignment is a pure function of pre-window state.
+//! * **Window events are seeded in exact sequential order.** The master
+//!   pops its heap and arrival cursor with the very same merge rule as the
+//!   sequential loop (arrivals win time ties; heap key `(time, seq, ...)`
+//!   pops FIFO at equal times — see `Simulator::push_ev`) until it meets a
+//!   barrier. Each popped event is appended to its shard's seed queue, so
+//!   per shard the seeds are already sorted by `(time, class, seq)` with
+//!   class arrival=0 < step=1.
+//! * **Intra-window pushes sort after every seed.** A shard's local event
+//!   heap orders by `(time, seq)` with a local counter starting at the
+//!   master's sequence snapshot, which is ≥ every seed's seq — exactly the
+//!   order the sequential loop would have used for the same pushes.
+//! * **Request ids are pre-assigned.** The master assigns `next_req_id` to
+//!   resident arrivals while building the window, in global consumption
+//!   order, so ids are independent of shard interleaving.
+//! * **Barriers recompose in a fixed order**: union the `step_scheduled`
+//!   partitions, re-push surviving (post-barrier) local events shard-major
+//!   through `push_ev` (fresh master seqs — relative survivor order is
+//!   preserved, and barrier-time pushes sort after them, as sequentially),
+//!   fold the `sim_events`/violation/token deltas (commutative integer
+//!   adds; `on_sample` reads them at barriers), take the max `last_now`,
+//!   and invalidate the demand cache (`refresh_demand` is a pure function
+//!   of monitor state at a given time, so an extra recompute is bitwise
+//!   harmless). Then the control event runs via the ordinary sequential
+//!   `&mut self` methods.
+//! * **Per-shard metric sinks merge exactly.** Shard sinks receive only
+//!   `record()` data; completion counters and quantile sketches merge
+//!   order-independently (bucket-wise adds — see `metrics::sketch`), and
+//!   whole-run scalars (busy/wall/cost/counters) are assigned master-side
+//!   in the finale, identical to the sequential loop.
+//!
+//! One documented epsilon: two *surviving* events from different shards at
+//! bitwise-equal times are re-pushed shard-major rather than in original
+//! push order. The orders can differ only if a barrier later re-colocates
+//! their models onto one GPU *and* the equal-time steps then contend for
+//! the same KV pool — beyond realistic (generated traces have distinct
+//! float arrival times, and step times include per-model durations), and
+//! accepted as out of contract; the identity tests cover policies, faults,
+//! and heterogeneous fleets, not adversarially-equal timestamps.
+//!
+//! # Complexity budget (extends the one in `sim::simulator`)
+//!
+//! * **O(log heap)** per window event at build (one master pop each — the
+//!   same pops the sequential loop would do) plus O(log local-heap) per
+//!   intra-window push on the worker.
+//! * **O(gpus · α + queued requests)** union-find per window.
+//! * **O(shards · (gpus + engines + models))** borrow distribution per
+//!   window — linear bookkeeping, no clones of engines/GPUs/queues.
+//! * **Zero per-event synchronization**: workers share nothing mutable;
+//!   the only joins are the per-window `std::thread::scope` barriers.
+//!
+//! Anything super-linear per window in models × gpus, or any per-event
+//! locking, is a regression (`benches/sim_hot_path.rs`, giant-* scenarios).
+
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BTreeSet, BinaryHeap, HashMap, VecDeque};
+use std::sync::Arc;
+
+use crate::cluster::gpu::GpuDevice;
+use crate::cluster::{Cluster, GpuId, Residency};
+use crate::engine::engine::{KvAlloc, SimEngine};
+use crate::engine::perf::GpuPerf;
+use crate::kvcached::BlockRef;
+use crate::metrics::{MetricsSink, RunMetrics, TimelineSample};
+use crate::model::spec::{ModelId, ModelSpec};
+use crate::request::{Phase, Request, RequestId};
+use crate::sched::arbitration::{moore_hodgson, Candidate};
+use crate::sched::kvpr::RateMonitor;
+use crate::sim::simulator::{Ev, PolicyCtx, Simulator, Time};
+use crate::trace::{ScaledEvents, Trace, TraceEvent};
+
+// --------------------------------------------------------------- partition
+
+/// Union-find with path halving; roots are kept at the smallest member
+/// index so component identity is a pure function of the edge set.
+struct Dsu(Vec<usize>);
+
+impl Dsu {
+    fn new(n: usize) -> Self {
+        Dsu((0..n).collect())
+    }
+
+    fn find(&mut self, mut x: usize) -> usize {
+        while self.0[x] != x {
+            self.0[x] = self.0[self.0[x]];
+            x = self.0[x];
+        }
+        x
+    }
+
+    fn union(&mut self, a: usize, b: usize) {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra != rb {
+            let (lo, hi) = if ra < rb { (ra, rb) } else { (rb, ra) };
+            self.0[hi] = lo;
+        }
+    }
+}
+
+/// The per-window shard assignment: GPU -> shard, derived from the
+/// union-find described in the module docs. Recomputed at every window
+/// (residency and queues change at barriers).
+struct WindowPlan {
+    gpu_shard: Vec<usize>,
+}
+
+impl WindowPlan {
+    fn build(cluster: &Cluster, gpu_queues: &[Vec<Request>], n_shards: usize) -> Self {
+        let n = cluster.n_gpus();
+        let mut dsu = Dsu::new(n);
+        for res in cluster.residency.values() {
+            let lead = res.gpus[0].0 as usize;
+            for g in &res.gpus[1..] {
+                dsu.union(lead, g.0 as usize);
+            }
+        }
+        // Close the admission "moved" edge: a queued request's model may
+        // have migrated; re-routing walks from the queue's GPU to the
+        // model's current lead.
+        for (g, q) in gpu_queues.iter().enumerate() {
+            for req in q {
+                if let Some(res) = cluster.residency.get(&req.model) {
+                    dsu.union(g, res.gpus[0].0 as usize);
+                }
+            }
+        }
+        // Components in min-GPU-index order, dealt round-robin.
+        let mut comp_idx = vec![usize::MAX; n];
+        let mut next_comp = 0usize;
+        let mut gpu_shard = vec![0usize; n];
+        for g in 0..n {
+            let r = dsu.find(g);
+            if comp_idx[r] == usize::MAX {
+                comp_idx[r] = next_comp;
+                next_comp += 1;
+            }
+            gpu_shard[g] = comp_idx[r] % n_shards;
+        }
+        WindowPlan { gpu_shard }
+    }
+
+    /// Shard owning model `m`'s events: its lead GPU's shard if resident,
+    /// else shard 0 (a step for an evicted model is a no-op everywhere, it
+    /// just needs exactly one deterministic home; its `step_scheduled`
+    /// entry is partitioned by the same rule).
+    fn shard_of_model(&self, m: ModelId, residency: &BTreeMap<ModelId, Residency>) -> usize {
+        residency.get(&m).map_or(0, |r| self.gpu_shard[r.gpus[0].0 as usize])
+    }
+}
+
+// ------------------------------------------------------------------ events
+
+/// A window event seeded by the master, already in sequential merged order.
+enum SeedEv {
+    /// Resident arrival: the request is pre-built (id pre-assigned in
+    /// global order). `raw_prompt_tokens` is the *trace* token count —
+    /// `Request::new` clamps to ≥ 1 but the monitor records the raw value.
+    Arrival { model_idx: usize, raw_prompt_tokens: u32, req: Request },
+    /// Engine step popped from the master heap; keeps its master seq.
+    Step { t: f64, seq: u64, model: ModelId },
+}
+
+impl SeedEv {
+    /// Merge key vs intra-window pushes: arrivals (class 0) win time ties,
+    /// matching the sequential cursor's `at <= ht` rule; steps carry their
+    /// master seq, which is below every local seq (see module docs).
+    fn key(&self) -> (Time, u8, u64) {
+        match self {
+            SeedEv::Arrival { req, .. } => (Time(req.arrival), 0, 0),
+            SeedEv::Step { t, seq, .. } => (Time(*t), 1, *seq),
+        }
+    }
+}
+
+/// The control event that ended a window, processed on the master after
+/// recompose.
+enum Boundary {
+    /// Epoch / sample / fault popped from the master heap.
+    Heap { t: f64, kind: u8, payload: usize },
+    /// Arrival for a non-resident model: routing is a policy decision that
+    /// may activate (residency change), so it is a barrier.
+    Arrival(TraceEvent),
+    /// Sources exhausted or past the drain tail.
+    End,
+}
+
+// ----------------------------------------------------------------- alloc
+
+/// [`KvAlloc`] over a shard's distributed GPU borrows. Mirrors
+/// `cluster::gpu::GroupAlloc` operation-for-operation (same fast path,
+/// same rollback, same free fan-out) so allocator behavior — and failure
+/// order — is identical; it only differs in holding `Option<&mut
+/// GpuDevice>` slots instead of the whole `[GpuDevice]` slice. GroupAlloc
+/// itself stays untouched: wrapping the sequential path in per-GPU
+/// `Option`s would tax the `--shards 1` hot loop.
+struct ShardAlloc<'s, 'a> {
+    gpus: &'s mut [Option<&'a mut GpuDevice>],
+    group: &'s [GpuId],
+    model: ModelId,
+    scratch: Vec<BlockRef>,
+}
+
+impl<'s, 'a> ShardAlloc<'s, 'a> {
+    fn new(gpus: &'s mut [Option<&'a mut GpuDevice>], group: &'s [GpuId], model: ModelId) -> Self {
+        ShardAlloc { gpus, group, model, scratch: Vec::new() }
+    }
+
+    fn dev(&mut self, g: usize) -> &mut GpuDevice {
+        self.gpus[g].as_deref_mut().expect("group GPU owned by this shard")
+    }
+}
+
+impl<'s, 'a> KvAlloc for ShardAlloc<'s, 'a> {
+    fn width(&self) -> usize {
+        self.group.len()
+    }
+
+    fn alloc_n(&mut self, n: u32, out: &mut Vec<BlockRef>) -> Result<(), crate::kvcached::KvError> {
+        if self.group.len() == 1 {
+            let g = self.group[0].0 as usize;
+            let model = self.model;
+            return self.dev(g).kvc.alloc_blocks(model, n, out);
+        }
+        for _ in 0..n {
+            self.scratch.clear();
+            for i in 0..self.group.len() {
+                let g = self.group[i].0 as usize;
+                let model = self.model;
+                match self.dev(g).kvc.alloc_block(model) {
+                    Ok(b) => self.scratch.push(b),
+                    Err(e) => {
+                        let partial: Vec<BlockRef> = self.scratch.drain(..).collect();
+                        for (j, b) in partial.into_iter().enumerate() {
+                            let gj = self.group[j].0 as usize;
+                            let _ = self.dev(gj).kvc.free_block(b);
+                        }
+                        return Err(e);
+                    }
+                }
+            }
+            out.extend_from_slice(&self.scratch);
+        }
+        Ok(())
+    }
+
+    fn free_run(&mut self, refs: &[BlockRef]) {
+        let width = self.group.len();
+        for (i, &r) in refs.iter().enumerate() {
+            let g = self.group[i % width].0 as usize;
+            self.dev(g).kvc.free_block(r).expect("group free");
+        }
+    }
+}
+
+// ----------------------------------------------------------------- worker
+
+/// What a shard hands back at the barrier.
+struct ShardOut {
+    /// This shard's partition of `step_scheduled` (post-window).
+    step_scheduled: BTreeSet<ModelId>,
+    /// Local events at/after the barrier, in pop order; re-pushed into the
+    /// master heap (always Steps — shards only push via `schedule_step`).
+    survivors: Vec<(f64, ModelId)>,
+    sim_events: u64,
+    violations: usize,
+    tokens: u64,
+    /// Time of the last processed event; `NEG_INFINITY` if none.
+    last_t: f64,
+}
+
+/// One shard's disjoint view of the simulator between two barriers. Every
+/// method is a line-for-line replica of the corresponding
+/// `sim::simulator` method (`on_arrival` resident path, `admit_gpu`,
+/// `on_step`, `schedule_step`) against distributed borrows — behavioral
+/// drift between the two is a correctness bug, caught by
+/// `tests/shard_identity.rs`.
+struct ShardCtx<'a> {
+    specs: &'a [ModelSpec],
+    model_index: &'a HashMap<ModelId, usize>,
+    gpu_perfs: &'a [GpuPerf],
+    /// Per-GPU slow factors snapshotted at window start (fault actions are
+    /// barriers, so these are constant inside a window).
+    slow: &'a [f64],
+    slack_aware: bool,
+    faults_enabled: bool,
+    engines: Vec<Option<&'a mut SimEngine>>,
+    gpus: Vec<Option<&'a mut GpuDevice>>,
+    queues: Vec<Option<&'a mut Vec<Request>>>,
+    monitors: Vec<Option<&'a mut RateMonitor>>,
+    last_request_at: Vec<Option<&'a mut f64>>,
+    residency: BTreeMap<ModelId, &'a mut Residency>,
+    metrics: &'a mut RunMetrics,
+    step_scheduled: BTreeSet<ModelId>,
+    seeds: VecDeque<SeedEv>,
+    /// Intra-window pushes: `(time, local seq, model id)`.
+    local: BinaryHeap<Reverse<(Time, u64, u32)>>,
+    seq: u64,
+    sim_events: u64,
+    violations: usize,
+    tokens: u64,
+    last_t: f64,
+}
+
+impl<'a> ShardCtx<'a> {
+    /// Replay this shard's window slice. `limit` is the barrier time:
+    /// local events run while `t < limit` (a local push at exactly the
+    /// barrier time has a seq above the barrier's, so sequentially it
+    /// would pop *after* the barrier — it must survive). For the final
+    /// drain (`inclusive`), events run while `t <= limit` (the tail
+    /// cutoff), matching the sequential `now > tail_limit` break. Seeds
+    /// are always fully consumed: the master already popped them in
+    /// pre-barrier merged order.
+    fn run_window(mut self, limit: f64, inclusive: bool) -> ShardOut {
+        loop {
+            let seed_key = self.seeds.front().map(SeedEv::key);
+            let local_key = self.local.peek().map(|Reverse((t, s, _))| (*t, 1u8, *s));
+            let take_local = match (&seed_key, &local_key) {
+                (None, None) => break,
+                (Some(_), None) => false,
+                (None, Some(_)) => true,
+                (Some(sk), Some(lk)) => lk < sk,
+            };
+            if take_local {
+                let &Reverse((Time(t), _, mid)) = self.local.peek().expect("peeked");
+                let past = if inclusive { t > limit } else { t >= limit };
+                if past {
+                    // Only local (post-barrier) events can remain: a seed
+                    // never sorts after a local event past the barrier.
+                    debug_assert!(seed_key.is_none(), "seed past the window barrier");
+                    break;
+                }
+                self.local.pop();
+                self.sim_events += 1;
+                self.last_t = t;
+                self.on_step(ModelId(mid), t);
+            } else {
+                match self.seeds.pop_front().expect("peeked") {
+                    SeedEv::Arrival { model_idx, raw_prompt_tokens, req } => {
+                        self.sim_events += 1;
+                        self.last_t = req.arrival;
+                        self.on_arrival(model_idx, raw_prompt_tokens, req);
+                    }
+                    SeedEv::Step { t, model, .. } => {
+                        self.sim_events += 1;
+                        self.last_t = t;
+                        self.on_step(model, t);
+                    }
+                }
+            }
+        }
+        let mut survivors = Vec::new();
+        while let Some(Reverse((Time(t), _, mid))) = self.local.pop() {
+            survivors.push((t, ModelId(mid)));
+        }
+        ShardOut {
+            step_scheduled: self.step_scheduled,
+            survivors,
+            sim_events: self.sim_events,
+            violations: self.violations,
+            tokens: self.tokens,
+            last_t: self.last_t,
+        }
+    }
+
+    /// Replica of `Simulator::schedule_step` against the local heap.
+    fn schedule_step(&mut self, m: ModelId, t: f64) {
+        if self.step_scheduled.insert(m) {
+            self.seq += 1;
+            self.local.push(Reverse((Time(t), self.seq, m.0)));
+        }
+    }
+
+    /// Replica of `Simulator::on_arrival`'s resident path (the request is
+    /// pre-built master-side; non-resident arrivals are barriers and never
+    /// reach a shard). The demand-cache invalidation is represented by the
+    /// master's unconditional invalidation at recompose.
+    fn on_arrival(&mut self, model_idx: usize, raw_prompt_tokens: u32, req: Request) {
+        let now = req.arrival;
+        self.monitors[model_idx]
+            .as_deref_mut()
+            .expect("arrival model's monitor owned by this shard")
+            .record(now, raw_prompt_tokens as u64);
+        *self.last_request_at[model_idx]
+            .as_deref_mut()
+            .expect("arrival model's last_request_at owned by this shard") = now;
+        if let Some(r) = self.residency.get_mut(&req.model) {
+            r.last_active = now;
+        }
+        // enqueue_on_gpu: seeded arrivals were resident at window build and
+        // residency is frozen until the barrier.
+        let res = self.residency.get(&req.model).expect("resident");
+        let lead = res.gpus[0].0 as usize;
+        let ready = res.ready_at;
+        let m = req.model;
+        self.queues[lead].as_deref_mut().expect("lead queue owned by this shard").push(req);
+        self.schedule_step(m, now.max(ready));
+    }
+
+    /// Replica of `Simulator::admit_gpu`.
+    fn admit_gpu(&mut self, g: usize, now: f64) {
+        if self.queues[g].as_deref().expect("queue owned by this shard").is_empty() {
+            return;
+        }
+        let queue = std::mem::take(self.queues[g].as_deref_mut().expect("queue owned"));
+        let (mut admit, mut keep): (Vec<Request>, Vec<Request>) = if self.slack_aware {
+            let gpu_perf = &self.gpu_perfs[g];
+            let cands: Vec<Candidate> = queue
+                .iter()
+                .map(|r| {
+                    let idx = self.model_index[&r.model];
+                    let c = gpu_perf.prefill_tokens_per_sec(&self.specs[idx]);
+                    Candidate {
+                        id: r.id,
+                        arrival: r.arrival,
+                        deadline: r.ttft_deadline(),
+                        exec: r.prompt_tokens as f64 / c,
+                    }
+                })
+                .collect();
+            let sched = moore_hodgson(now, &cands);
+            let mut order: BTreeMap<RequestId, usize> = BTreeMap::new();
+            for (i, id) in sched.admitted.iter().chain(sched.deferred.iter()).enumerate() {
+                order.insert(*id, i);
+            }
+            let mut adm: Vec<Request> = queue;
+            adm.sort_by_key(|r| order[&r.id]);
+            (adm, Vec::new())
+        } else {
+            (queue, Vec::new())
+        };
+
+        let mut still: Vec<Request> = Vec::new();
+        let mut moved: Vec<(usize, Request)> = Vec::new();
+        for req in admit.drain(..) {
+            // An in-shard residency miss means *globally* non-resident: the
+            // window plan links every queue to its queued models' current
+            // lead GPUs, so "resident on another shard" cannot occur here.
+            if let Some(res) = self.residency.get(&req.model) {
+                let lead = res.gpus[0].0 as usize;
+                if lead != g {
+                    let m = req.model;
+                    let t = res.ready_at.max(now);
+                    moved.push((lead, req));
+                    self.schedule_step(m, t);
+                    continue;
+                }
+            }
+            match self.residency.get(&req.model) {
+                Some(res) if res.ready_at <= now + 1e-9 => {
+                    let eidx = res.engine_idx;
+                    let eng = self.engines[eidx].as_deref().expect("engine owned");
+                    let cap = eng.max_batch as usize * 2;
+                    let load = eng.queue_len() + eng.running_len();
+                    if load < cap {
+                        let m = req.model;
+                        self.engines[eidx].as_deref_mut().expect("engine owned").admit(req);
+                        self.schedule_step(m, now);
+                    } else {
+                        still.push(req);
+                    }
+                }
+                Some(res) => {
+                    let t = res.ready_at;
+                    let m = req.model;
+                    still.push(req);
+                    self.schedule_step(m, t);
+                }
+                None => still.push(req),
+            }
+        }
+        keep.extend(still);
+        *self.queues[g].as_deref_mut().expect("queue owned") = keep;
+        for (lead, req) in moved {
+            self.queues[lead].as_deref_mut().expect("lead queue owned").push(req);
+        }
+    }
+
+    /// Replica of `Simulator::on_step`.
+    fn on_step(&mut self, m: ModelId, now: f64) {
+        self.step_scheduled.remove(&m);
+        let Some(res) = self.residency.get(&m) else {
+            return;
+        };
+        if res.ready_at > now + 1e-9 {
+            let t = res.ready_at;
+            self.schedule_step(m, t);
+            return;
+        }
+        let lead = res.gpus[0].0 as usize;
+        self.admit_gpu(lead, now);
+
+        let Some(res) = self.residency.get(&m) else {
+            return;
+        };
+        let eidx = res.engine_idx;
+        let group = res.gpus.clone();
+        if !self.engines[eidx].as_deref().expect("engine owned").has_work() {
+            return;
+        }
+        if self.faults_enabled {
+            // Replica of `Cluster::group_slow_factor` over the snapshot.
+            let scale = group.iter().map(|g| self.slow[g.0 as usize]).fold(1.0, f64::max);
+            self.engines[eidx].as_deref_mut().expect("engine owned").time_scale = scale;
+        }
+        let outcome = {
+            let lead_perf = &self.gpu_perfs[lead];
+            let (engines, gpus) = (&mut self.engines, &mut self.gpus);
+            let mut ga = ShardAlloc::new(gpus, &group, m);
+            engines[eidx].as_deref_mut().expect("engine owned").step(now, lead_perf, &mut ga)
+        };
+        for c in outcome.completions {
+            if !c.ttft_ok() {
+                self.violations += 1;
+            }
+            self.tokens += (c.prompt_tokens + c.output_tokens) as u64;
+            let idx = self.model_index[&c.model];
+            self.monitors[idx]
+                .as_deref_mut()
+                .expect("completion model's monitor owned by this shard")
+                .record(now, c.output_tokens as u64);
+            self.metrics.record(c);
+        }
+        if let Some(r) = self.residency.get_mut(&m) {
+            r.last_active = now;
+        }
+        if outcome.duration > 0.0 {
+            self.schedule_step(m, now + outcome.duration);
+        } else if self.engines[eidx].as_deref().expect("engine owned").has_work() {
+            let t = now + self.gpu_perfs[lead].iter_overhead;
+            self.schedule_step(m, t);
+        }
+    }
+}
+
+// ----------------------------------------------------------------- driver
+
+impl Simulator {
+    /// The sharded counterpart of `run_inner`'s streamed event loop.
+    /// Dispatched from `run_inner` when `shards > 1` (streamed arrivals
+    /// over a sorted source only); preamble and finale are statement-for-
+    /// statement the sequential ones.
+    pub(crate) fn run_sharded<'a>(
+        mut self,
+        trace: &'a Trace,
+        mut scaled: Option<ScaledEvents<'a>>,
+        n_shards: usize,
+    ) -> (RunMetrics, Vec<TimelineSample>) {
+        let policy = Arc::clone(&self.cfg.policy);
+        policy.initial_placement(&mut PolicyCtx::new(&mut self));
+
+        let mut next_arrival = 0usize;
+        let mut t = 0.0;
+        while t < trace.duration {
+            t += self.cfg.control_epoch;
+            self.push_ev(t, Ev::Epoch);
+        }
+        if self.cfg.sample_dt > 0.0 {
+            let mut t = 0.0;
+            while t < trace.duration {
+                self.push_ev(t, Ev::Sample);
+                t += self.cfg.sample_dt;
+            }
+        }
+        let tail_limit = trace.duration + 600.0;
+        for i in 0..self.fault_schedule.len() {
+            let t = self.fault_schedule[i].0;
+            if t <= tail_limit {
+                self.push_ev(t, Ev::Fault(i));
+            }
+        }
+
+        // One sink per shard for the whole run (merged in the finale);
+        // per-window they are lent to the shard contexts.
+        let mut shard_sinks: Vec<RunMetrics> = (0..n_shards)
+            .map(|_| RunMetrics::with_full_dump(self.cfg.metrics_full_dump))
+            .collect();
+
+        let mut last_now = 0.0f64;
+        loop {
+            // -------- window build: pop sources in sequential merged order
+            let plan = WindowPlan::build(&self.cluster, &self.gpu_queues, n_shards);
+            let mut seeds: Vec<VecDeque<SeedEv>> =
+                (0..n_shards).map(|_| VecDeque::new()).collect();
+            let boundary = loop {
+                let heap_head = self.heap.peek().map(|Reverse((t, ..))| t.0);
+                let arrival_head = match &mut scaled {
+                    Some(c) => c.peek_t(),
+                    None => (next_arrival < trace.events.len())
+                        .then(|| trace.events[next_arrival].t),
+                };
+                let take_arrival = match (arrival_head, heap_head) {
+                    (Some(at), Some(ht)) => at <= ht,
+                    (Some(_), None) => true,
+                    (None, _) => false,
+                };
+                if take_arrival {
+                    let at = arrival_head.expect("take_arrival implies a head");
+                    if at > tail_limit {
+                        break Boundary::End;
+                    }
+                    let e = match &mut scaled {
+                        Some(c) => c.next_event().expect("peeked event exists"),
+                        None => {
+                            let i = next_arrival;
+                            next_arrival += 1;
+                            trace.events[i].clone()
+                        }
+                    };
+                    let idx = e.model_idx;
+                    let m = self.specs[idx].id;
+                    if !self.cluster.is_resident(m) {
+                        break Boundary::Arrival(e);
+                    }
+                    // Pre-build the request exactly as `on_arrival` would,
+                    // assigning ids in global consumption order.
+                    let (ttft_slo, tpot_slo) = self.slos[idx];
+                    let req = Request::new(
+                        self.next_req_id,
+                        m,
+                        e.t,
+                        e.prompt_tokens,
+                        e.output_tokens,
+                        ttft_slo,
+                        tpot_slo,
+                    );
+                    self.next_req_id += 1;
+                    let lead = self.cluster.residency[&m].gpus[0].0 as usize;
+                    seeds[plan.gpu_shard[lead]].push_back(SeedEv::Arrival {
+                        model_idx: idx,
+                        raw_prompt_tokens: e.prompt_tokens,
+                        req,
+                    });
+                    continue;
+                }
+                let Some(head) = self.heap.peek().map(|Reverse((t, s, k, p))| (t.0, *s, *k, *p))
+                else {
+                    break Boundary::End;
+                };
+                let (ht, seq, kind, payload) = head;
+                if ht > tail_limit {
+                    break Boundary::End;
+                }
+                self.heap.pop();
+                match kind {
+                    1 => {
+                        let m = ModelId(payload as u32);
+                        let s = plan.shard_of_model(m, &self.cluster.residency);
+                        seeds[s].push_back(SeedEv::Step { t: ht, seq, model: m });
+                    }
+                    2 | 3 | 4 => break Boundary::Heap { t: ht, kind, payload },
+                    // Pre-pushed arrivals (kind 0) only exist in the legacy
+                    // `stream_arrivals = false` mode, which never dispatches
+                    // to the sharded loop.
+                    _ => unreachable!("unexpected heap event kind in sharded loop"),
+                }
+            };
+
+            // -------- run the window on worker threads
+            let window_events: usize = seeds.iter().map(|s| s.len()).sum();
+            if window_events > 0 {
+                let (limit, inclusive) = match &boundary {
+                    Boundary::End => (tail_limit, true),
+                    Boundary::Arrival(e) => (e.t, false),
+                    Boundary::Heap { t, .. } => (*t, false),
+                };
+                // Partition `step_scheduled` by the same model -> shard rule
+                // as Step events, before taking field borrows.
+                let mut ss_parts: Vec<BTreeSet<ModelId>> =
+                    (0..n_shards).map(|_| BTreeSet::new()).collect();
+                for m in std::mem::take(&mut self.step_scheduled) {
+                    ss_parts[plan.shard_of_model(m, &self.cluster.residency)].insert(m);
+                }
+                let seq_snapshot = self.seq;
+                let n_gpus = self.cluster.n_gpus();
+                let n_eng = self.cluster.engines.len();
+                let n_models = self.specs.len();
+                let slow: Vec<f64> =
+                    (0..n_gpus).map(|g| self.cluster.gpu_slow_factor(g)).collect();
+                let mut eng_shard = vec![usize::MAX; n_eng];
+                let mut model_shard = vec![usize::MAX; n_models];
+                for (m, r) in &self.cluster.residency {
+                    let s = plan.gpu_shard[r.gpus[0].0 as usize];
+                    eng_shard[r.engine_idx] = s;
+                    model_shard[self.model_index[m]] = s;
+                }
+
+                let outs: Vec<ShardOut> = {
+                    // Disjoint borrow distribution: every `&mut` lands in
+                    // exactly one shard's context (per-slot `Option`s built
+                    // from one `iter_mut` pass each).
+                    let specs: &[ModelSpec] = &self.specs;
+                    let model_index = &self.model_index;
+                    let slack_aware = self.cfg.slack_aware;
+                    let faults_enabled = self.faults_enabled;
+                    let cluster = &mut self.cluster;
+                    let gpu_perfs: &[GpuPerf] = &cluster.gpu_perfs;
+                    let mut eng_refs: Vec<Vec<Option<&mut SimEngine>>> =
+                        (0..n_shards).map(|_| (0..n_eng).map(|_| None).collect()).collect();
+                    for (i, e) in cluster.engines.iter_mut().enumerate() {
+                        if eng_shard[i] != usize::MAX {
+                            eng_refs[eng_shard[i]][i] = Some(e);
+                        }
+                    }
+                    let mut gpu_refs: Vec<Vec<Option<&mut GpuDevice>>> =
+                        (0..n_shards).map(|_| (0..n_gpus).map(|_| None).collect()).collect();
+                    for (g, d) in cluster.gpus.iter_mut().enumerate() {
+                        gpu_refs[plan.gpu_shard[g]][g] = Some(d);
+                    }
+                    let mut queue_refs: Vec<Vec<Option<&mut Vec<Request>>>> =
+                        (0..n_shards).map(|_| (0..n_gpus).map(|_| None).collect()).collect();
+                    for (g, q) in self.gpu_queues.iter_mut().enumerate() {
+                        queue_refs[plan.gpu_shard[g]][g] = Some(q);
+                    }
+                    let mut mon_refs: Vec<Vec<Option<&mut RateMonitor>>> =
+                        (0..n_shards).map(|_| (0..n_models).map(|_| None).collect()).collect();
+                    for (i, mo) in self.monitors.iter_mut().enumerate() {
+                        if model_shard[i] != usize::MAX {
+                            mon_refs[model_shard[i]][i] = Some(mo);
+                        }
+                    }
+                    let mut lra_refs: Vec<Vec<Option<&mut f64>>> =
+                        (0..n_shards).map(|_| (0..n_models).map(|_| None).collect()).collect();
+                    for (i, v) in self.last_request_at.iter_mut().enumerate() {
+                        if model_shard[i] != usize::MAX {
+                            lra_refs[model_shard[i]][i] = Some(v);
+                        }
+                    }
+                    let mut res_maps: Vec<BTreeMap<ModelId, &mut Residency>> =
+                        (0..n_shards).map(|_| BTreeMap::new()).collect();
+                    for (m, r) in cluster.residency.iter_mut() {
+                        res_maps[plan.gpu_shard[r.gpus[0].0 as usize]].insert(*m, r);
+                    }
+
+                    let mut ctxs: Vec<ShardCtx<'_>> = Vec::with_capacity(n_shards);
+                    let mut eng_it = eng_refs.into_iter();
+                    let mut gpu_it = gpu_refs.into_iter();
+                    let mut q_it = queue_refs.into_iter();
+                    let mut mon_it = mon_refs.into_iter();
+                    let mut lra_it = lra_refs.into_iter();
+                    let mut res_it = res_maps.into_iter();
+                    let mut ss_it = ss_parts.into_iter();
+                    let mut seed_it = seeds.into_iter();
+                    let mut sink_it = shard_sinks.iter_mut();
+                    for _ in 0..n_shards {
+                        ctxs.push(ShardCtx {
+                            specs,
+                            model_index,
+                            gpu_perfs,
+                            slow: &slow,
+                            slack_aware,
+                            faults_enabled,
+                            engines: eng_it.next().expect("one per shard"),
+                            gpus: gpu_it.next().expect("one per shard"),
+                            queues: q_it.next().expect("one per shard"),
+                            monitors: mon_it.next().expect("one per shard"),
+                            last_request_at: lra_it.next().expect("one per shard"),
+                            residency: res_it.next().expect("one per shard"),
+                            metrics: sink_it.next().expect("one per shard"),
+                            step_scheduled: ss_it.next().expect("one per shard"),
+                            seeds: seed_it.next().expect("one per shard"),
+                            local: BinaryHeap::new(),
+                            seq: seq_snapshot,
+                            sim_events: 0,
+                            violations: 0,
+                            tokens: 0,
+                            last_t: f64::NEG_INFINITY,
+                        });
+                    }
+                    let active = ctxs.iter().filter(|c| !c.seeds.is_empty()).count();
+                    if active <= 1 {
+                        // Nothing to overlap: run inline, no thread spawns.
+                        ctxs.into_iter().map(|c| c.run_window(limit, inclusive)).collect()
+                    } else {
+                        std::thread::scope(|scope| {
+                            let handles: Vec<_> = ctxs
+                                .into_iter()
+                                .map(|c| {
+                                    if c.seeds.is_empty() {
+                                        // Trivially empty: resolve inline.
+                                        Err(c.run_window(limit, inclusive))
+                                    } else {
+                                        Ok(scope.spawn(move || c.run_window(limit, inclusive)))
+                                    }
+                                })
+                                .collect();
+                            handles
+                                .into_iter()
+                                .map(|h| match h {
+                                    Ok(j) => j.join().expect("shard worker panicked"),
+                                    Err(o) => o,
+                                })
+                                .collect()
+                        })
+                    }
+                };
+
+                // -------- recompose (order matters; see module docs)
+                for out in outs {
+                    self.step_scheduled.extend(out.step_scheduled);
+                    self.metrics.sim_events += out.sim_events;
+                    self.cum_violations += out.violations;
+                    self.tokens_since_sample += out.tokens;
+                    if out.last_t > last_now {
+                        last_now = out.last_t;
+                    }
+                    for (t, m) in out.survivors {
+                        // The model is still in the merged `step_scheduled`
+                        // (its shard never removed it), so push directly.
+                        self.push_ev(t, Ev::Step(m));
+                    }
+                }
+                self.demand_cache_at = f64::NEG_INFINITY;
+            }
+
+            // -------- the control event itself, sequentially on the master
+            match boundary {
+                Boundary::End => break,
+                Boundary::Arrival(e) => {
+                    last_now = e.t;
+                    self.metrics.sim_events += 1;
+                    self.on_arrival(&e);
+                }
+                Boundary::Heap { t, kind, payload } => {
+                    last_now = t;
+                    self.metrics.sim_events += 1;
+                    match kind {
+                        2 => {
+                            self.on_epoch(t);
+                            if t + self.cfg.control_epoch <= tail_limit
+                                && (self.has_outstanding() || t < trace.duration)
+                            {
+                                self.push_ev(t + self.cfg.control_epoch, Ev::Epoch);
+                            }
+                        }
+                        3 => self.on_sample(t),
+                        4 => self.on_fault(payload, t),
+                        _ => unreachable!(),
+                    }
+                }
+            }
+        }
+
+        // -------- finale: statement-for-statement `run_inner`'s, plus the
+        // shard-sink fold (record-only data; the whole-run scalars below
+        // are assigned afterwards, overwriting the fold's zero-valued
+        // contributions to them).
+        let mut leftovers: Vec<Request> = std::mem::take(&mut self.pending);
+        for q in &mut self.gpu_queues {
+            leftovers.append(q);
+        }
+        for mut r in leftovers {
+            r.phase = Phase::Dropped;
+            self.metrics.record(crate::request::Completion::from_request(&r));
+        }
+        for sink in shard_sinks {
+            self.metrics.merge(sink);
+        }
+
+        self.metrics.busy_seconds = self.cluster.engines.iter().map(|e| e.busy_seconds).sum();
+        self.metrics.preemptions += self.cluster.engines.iter().map(|e| e.preemptions).sum::<u64>();
+        self.metrics.wall_seconds = last_now;
+        self.metrics.activations = self.cluster.activations;
+        self.metrics.evictions = self.cluster.evictions;
+        self.metrics.migrations = self.cluster.migrations;
+        self.metrics.faults.load_retries = self.cluster.load_retries;
+        self.metrics.faults.load_failures = self.cluster.load_failures;
+        self.metrics.faults.alloc_faults_injected = self
+            .cluster
+            .gpus
+            .iter()
+            .map(|d| d.kvc.alloc_faults_injected())
+            .sum();
+        self.metrics.cost.fleet_cost_per_hour = self.cluster.fleet_cost_per_hour();
+        self.metrics.cost.cost_dollars = self.metrics.cost.fleet_cost_per_hour * last_now / 3600.0;
+        (self.metrics, self.timeline)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::{catalog_subset, GB};
+    use crate::sim::simulator::SimConfig;
+    use crate::trace::gen::{generate, TraceGenConfig};
+
+    #[test]
+    fn dsu_roots_at_min_index() {
+        let mut d = Dsu::new(6);
+        d.union(4, 2);
+        d.union(2, 5);
+        d.union(1, 3);
+        assert_eq!(d.find(4), 2);
+        assert_eq!(d.find(5), 2);
+        assert_eq!(d.find(3), 1);
+        assert_eq!(d.find(0), 0);
+        // Merge the two components: the root is the global min member.
+        d.union(5, 1);
+        for g in [1, 2, 3, 4, 5] {
+            assert_eq!(d.find(g), 1);
+        }
+    }
+
+    #[test]
+    fn empty_cluster_plan_deals_gpus_round_robin() {
+        let cluster = Cluster::new(5, 80 * GB, 8, GpuPerf::default());
+        let queues: Vec<Vec<Request>> = (0..5).map(|_| Vec::new()).collect();
+        let plan = WindowPlan::build(&cluster, &queues, 2);
+        // No residency, no queues: each GPU is its own component, numbered
+        // by index, dealt alternately.
+        assert_eq!(plan.gpu_shard, vec![0, 1, 0, 1, 0]);
+        let plan1 = WindowPlan::build(&cluster, &queues, 1);
+        assert!(plan1.gpu_shard.iter().all(|&s| s == 0));
+    }
+
+    #[test]
+    fn nonresident_model_routes_to_shard_zero() {
+        let cluster = Cluster::new(4, 80 * GB, 8, GpuPerf::default());
+        let queues: Vec<Vec<Request>> = (0..4).map(|_| Vec::new()).collect();
+        let plan = WindowPlan::build(&cluster, &queues, 4);
+        assert_eq!(plan.shard_of_model(ModelId(7), &cluster.residency), 0);
+    }
+
+    /// Fast in-module smoke of the headline contract (`--shards 1` vs
+    /// `--shards 4` identical metrics); the cross-policy / fault / fleet
+    /// matrix lives in `tests/shard_identity.rs`.
+    #[test]
+    fn sharded_run_matches_sequential_smoke() {
+        let trace = generate(&TraceGenConfig::novita_like(6, 240.0, 17));
+        let cat = catalog_subset(30);
+        let specs: Vec<ModelSpec> = (0..trace.n_models)
+            .map(|i| {
+                let mut s = cat[3 + i].clone();
+                s.id = ModelId(i as u32);
+                s
+            })
+            .collect();
+        let run = |shards: u32| {
+            let mut cfg = SimConfig::new("prism", 2).shards(shards);
+            cfg.slo_scale = 10.0;
+            let (m, tl) = Simulator::new(cfg, specs.clone()).run(&trace);
+            (m, tl)
+        };
+        let (a, tla) = run(1);
+        let (b, tlb) = run(4);
+        assert_eq!(a.total(), b.total());
+        assert_eq!(a.completed(), b.completed());
+        assert_eq!(a.sim_events, b.sim_events);
+        assert_eq!(a.ttft_attainment().to_bits(), b.ttft_attainment().to_bits());
+        assert_eq!(a.tpot_attainment().to_bits(), b.tpot_attainment().to_bits());
+        assert_eq!(a.busy_seconds.to_bits(), b.busy_seconds.to_bits());
+        assert_eq!(a.wall_seconds.to_bits(), b.wall_seconds.to_bits());
+        assert_eq!(
+            (a.activations, a.evictions, a.migrations, a.preemptions),
+            (b.activations, b.evictions, b.migrations, b.preemptions)
+        );
+        assert_eq!(tla.len(), tlb.len());
+        for (sa, sb) in tla.iter().zip(&tlb) {
+            assert_eq!(sa.t.to_bits(), sb.t.to_bits());
+            assert_eq!(sa.cum_violations, sb.cum_violations);
+            assert_eq!(sa.queue_lens, sb.queue_lens);
+            assert_eq!(sa.inst_token_tput.to_bits(), sb.inst_token_tput.to_bits());
+        }
+    }
+}

@@ -118,7 +118,19 @@ pub struct SimConfig {
     /// `gpu_bytes`, and `perf` (fleet-wide SLO baselines derive from the
     /// fleet's reference kind: its first segment).
     pub fleet: Option<FleetSpec>,
+    /// Intra-run shard count for the GPU-group-sharded event loop (see
+    /// `sim::shard`): `1` — the default — is the historical single-threaded
+    /// loop, bit-for-bit; `0` resolves to [`crate::util::parallelism`] (the
+    /// same auto rule as the sweep engine's `--jobs 0`); `N > 1` runs
+    /// per-GPU-group event streams on N worker threads between control-epoch
+    /// barriers, with metric-fingerprint identity to `shards = 1`
+    /// (regression-tested in `tests/shard_identity.rs`).
+    pub shards: u32,
 }
+
+/// Process-wide default for [`SimConfig::shards`], consumed at config
+/// construction time (see [`SimConfig::set_default_shards`]).
+static DEFAULT_SHARDS: std::sync::atomic::AtomicU32 = std::sync::atomic::AtomicU32::new(1);
 
 impl SimConfig {
     /// Config for the named policy, resolved against the global
@@ -149,6 +161,7 @@ impl SimConfig {
             metrics_full_dump: false,
             faults: FaultPlan::default(),
             fleet: None,
+            shards: DEFAULT_SHARDS.load(std::sync::atomic::Ordering::Relaxed),
             policy,
         }
     }
@@ -230,6 +243,24 @@ impl SimConfig {
         self.stream_arrivals = on;
         self
     }
+
+    /// Intra-run shard count: `1` = historical single-threaded loop,
+    /// `0` = auto (`util::parallelism`), `N > 1` = sharded event loop.
+    pub fn shards(mut self, n: u32) -> Self {
+        self.shards = n;
+        self
+    }
+
+    /// Set the process-wide default for [`shards`](Self::shards), applied to
+    /// every `SimConfig` constructed afterwards. This is how
+    /// `prism exp --shards N` reaches the experiment sweeps, whose configs
+    /// are built deep inside the experiment modules; explicit `.shards(n)`
+    /// calls and a non-default `SweepPoint` shard axis still override it.
+    /// Call once, before any simulations run — flipping it mid-process would
+    /// make config construction order-dependent.
+    pub fn set_default_shards(n: u32) {
+        DEFAULT_SHARDS.store(n, std::sync::atomic::Ordering::Relaxed);
+    }
 }
 
 /// Per-model base SLOs from dedicated-GPU latency (paper SS7.1: P95 TTFT
@@ -243,7 +274,7 @@ pub fn base_slos(perf: &GpuPerf, spec: &ModelSpec) -> (f64, f64) {
 }
 
 #[derive(Debug, Clone, Copy, PartialEq)]
-struct Time(f64);
+pub(crate) struct Time(pub(crate) f64);
 
 impl Eq for Time {}
 
@@ -264,7 +295,7 @@ impl Ord for Time {
 }
 
 #[derive(Debug, Clone, PartialEq, Eq)]
-enum Ev {
+pub(crate) enum Ev {
     Arrival(usize),
     Step(ModelId),
     Epoch,
@@ -278,35 +309,38 @@ pub struct Simulator {
     pub cfg: SimConfig,
     pub specs: Vec<ModelSpec>,
     /// ModelId -> index into `specs`: O(1) hot-path lookups.
-    model_index: HashMap<ModelId, usize>,
-    slos: Vec<(f64, f64)>,
-    cluster: Cluster,
+    /// (Fields below are `pub(crate)` for the sharded event loop in
+    /// `sim::shard`, which distributes disjoint `&mut` borrows of them to
+    /// worker threads between barriers; everything else stays private.)
+    pub(crate) model_index: HashMap<ModelId, usize>,
+    pub(crate) slos: Vec<(f64, f64)>,
+    pub(crate) cluster: Cluster,
     /// Per-GPU shared admission queues (lead GPU for TP groups).
-    gpu_queues: Vec<Vec<Request>>,
+    pub(crate) gpu_queues: Vec<Vec<Request>>,
     /// Requests waiting for model activation (policy-dependent).
-    pending: Vec<Request>,
-    monitors: Vec<RateMonitor>,
-    last_request_at: Vec<f64>,
+    pub(crate) pending: Vec<Request>,
+    pub(crate) monitors: Vec<RateMonitor>,
+    pub(crate) last_request_at: Vec<f64>,
     /// Per-model w_token_rate snapshot valid at `demand_cache_at`: one
     /// O(models) refresh per distinct event time instead of recomputing
     /// (and formerly cloning a monitor) per GPU x per model.
     demand_rates: Vec<f64>,
-    demand_cache_at: f64,
-    metrics: RunMetrics,
+    pub(crate) demand_cache_at: f64,
+    pub(crate) metrics: RunMetrics,
     pub timeline: Vec<TimelineSample>,
-    heap: BinaryHeap<Reverse<(Time, u64, u8, usize)>>, // (time, seq, kind, payload)
-    step_scheduled: BTreeSet<ModelId>,
+    pub(crate) heap: BinaryHeap<Reverse<(Time, u64, u8, usize)>>, // (time, seq, kind, payload)
+    pub(crate) step_scheduled: BTreeSet<ModelId>,
     /// Time-sorted fault actions from `SimConfig::faults` (empty = no-op).
-    fault_schedule: Vec<(f64, FaultAction)>,
+    pub(crate) fault_schedule: Vec<(f64, FaultAction)>,
     /// True iff the plan is non-empty: gates the (tiny) per-step degraded-
     /// mode bookkeeping so zero-fault runs skip it entirely.
-    faults_enabled: bool,
+    pub(crate) faults_enabled: bool,
     /// Crash time per evicted-by-crash model, until it is re-placed.
     crashed_at: BTreeMap<ModelId, f64>,
-    seq: u64,
-    next_req_id: u64,
-    cum_violations: usize,
-    tokens_since_sample: u64,
+    pub(crate) seq: u64,
+    pub(crate) next_req_id: u64,
+    pub(crate) cum_violations: usize,
+    pub(crate) tokens_since_sample: u64,
 }
 
 impl Simulator {
@@ -376,7 +410,7 @@ impl Simulator {
         self.demand_cache_at = f64::NEG_INFINITY; // w_token_rate depends on SLOs
     }
 
-    fn idx_of(&self, m: ModelId) -> usize {
+    pub(crate) fn idx_of(&self, m: ModelId) -> usize {
         self.model_index[&m]
     }
 
@@ -396,7 +430,26 @@ impl Simulator {
         self.demand_cache_at = now;
     }
 
-    fn push_ev(&mut self, t: f64, ev: Ev) {
+    /// Push a heap event.
+    ///
+    /// # Tie-break contract (load-bearing for the sharded loop)
+    ///
+    /// The heap key is `(time, seq, kind, payload)`: at equal timestamps
+    /// events pop in **push order** (`seq` is a monotone counter bumped per
+    /// push), NOT by kind priority — `kind` exists in the key only to break
+    /// the (impossible, since `seq` is unique) tie deterministically. The
+    /// canonical same-timestamp order Arrival < Step < Epoch < Sample <
+    /// Fault therefore comes from the *push sites*, not this function: the
+    /// preamble in `run_inner` pushes arrivals (pre-push mode), then
+    /// epochs, then samples, then faults, and the streamed-arrival cursor
+    /// wins time ties against the heap head (`at <= ht`) because pre-pushed
+    /// arrivals would carry the lowest seqs. `sim::shard` reconstructs
+    /// per-shard event order from exactly this FIFO-at-equal-time rule
+    /// (seed events keep their master seqs; intra-window pushes get local
+    /// seqs above the master snapshot), so changing the key — e.g. to
+    /// kind-major — would silently break `--shards 1 ≡ --shards N`.
+    /// Regression-tested by `event_heap_ties_pop_in_push_order`.
+    pub(crate) fn push_ev(&mut self, t: f64, ev: Ev) {
         let (kind, payload) = match ev {
             Ev::Arrival(i) => (0u8, i),
             Ev::Step(m) => (1, m.0 as usize),
@@ -408,7 +461,7 @@ impl Simulator {
         self.heap.push(Reverse((Time(t), self.seq, kind, payload)));
     }
 
-    fn schedule_step(&mut self, m: ModelId, t: f64) {
+    pub(crate) fn schedule_step(&mut self, m: ModelId, t: f64) {
         if self.step_scheduled.insert(m) {
             self.push_ev(t, Ev::Step(m));
         }
@@ -525,7 +578,7 @@ impl Simulator {
     /// Apply one scheduled [`FaultAction`] (event kind 4). All state it
     /// touches is plain simulator/cluster data - determinism is inherited,
     /// faults never consult a clock or RNG at apply time.
-    fn on_fault(&mut self, idx: usize, now: f64) {
+    pub(crate) fn on_fault(&mut self, idx: usize, now: f64) {
         let (_, action) = self.fault_schedule[idx];
         match action {
             FaultAction::Crash(g) => self.on_gpu_crash(g as usize, now),
@@ -582,7 +635,7 @@ impl Simulator {
 
     // ------------------------------------------------------------- arrivals
 
-    fn on_arrival(&mut self, e: &TraceEvent) {
+    pub(crate) fn on_arrival(&mut self, e: &TraceEvent) {
         let now = e.t;
         let idx = e.model_idx;
         let (ttft_slo, tpot_slo) = self.slos[idx];
@@ -792,7 +845,7 @@ impl Simulator {
 
     // ---------------------------------------------------------------- epoch
 
-    fn on_epoch(&mut self, now: f64) {
+    pub(crate) fn on_epoch(&mut self, now: f64) {
         // Monitor housekeeping: actually drop expired rate events once per
         // epoch (reads between epochs skip them without mutating).
         for mon in &mut self.monitors {
@@ -818,7 +871,7 @@ impl Simulator {
         }
     }
 
-    fn on_sample(&mut self, now: f64) {
+    pub(crate) fn on_sample(&mut self, now: f64) {
         let gpus: Vec<(u64, u64, u64, u64)> = (0..self.cluster.n_gpus())
             .map(|g| {
                 let st = self.cluster.gpus[g].kvc.stats();
@@ -887,6 +940,21 @@ impl Simulator {
         trace: &'a Trace,
         mut scaled: Option<ScaledEvents<'a>>,
     ) -> (RunMetrics, Vec<TimelineSample>) {
+        // Intra-run parallelism (`--shards`): the GPU-group-sharded loop in
+        // `sim::shard` handles shards > 1. It needs the streamed-arrival
+        // formulation over a time-sorted source (the lazy cursor is sorted
+        // by construction); the legacy pre-push mode and unsorted traces
+        // silently fall back to this sequential loop. `shards <= 1` never
+        // enters the sharded path, so the historical loop below is the
+        // bit-for-bit `--shards 1` reference by construction.
+        let shards = match self.cfg.shards {
+            0 => crate::util::parallelism(),
+            n => n as usize,
+        };
+        if shards > 1 && self.cfg.stream_arrivals && (scaled.is_some() || trace.is_sorted()) {
+            return self.run_sharded(trace, scaled, shards);
+        }
+
         // Policy decision: t=0 placement (space sharers pre-place
         // everything that fits; time sharers start empty).
         let policy = Arc::clone(&self.cfg.policy);
@@ -1040,7 +1108,7 @@ impl Simulator {
         (self.metrics, self.timeline)
     }
 
-    fn has_outstanding(&self) -> bool {
+    pub(crate) fn has_outstanding(&self) -> bool {
         !self.pending.is_empty()
             || self.gpu_queues.iter().any(|q| !q.is_empty())
             || self.cluster.engines.iter().any(|e| e.has_work())
@@ -1693,6 +1761,48 @@ mod tests {
             assert_eq!(m.cost.cost_dollars.to_bits(), want_dollars.to_bits(), "{p}");
             assert!(m.cost_per_1k_requests_at_slo() > 0.0, "{p}");
         }
+    }
+
+    #[test]
+    fn event_heap_ties_pop_in_push_order() {
+        // The tie-break contract documented on `push_ev`: the heap key is
+        // (time, seq, kind, payload), so same-timestamp events pop in FIFO
+        // push order — seq dominates kind. Pushing the canonical preamble
+        // order Arrival, Step, Epoch, Sample, Fault at one timestamp must
+        // pop in exactly that order...
+        let canonical = [
+            Ev::Arrival(7),
+            Ev::Step(ModelId(3)),
+            Ev::Epoch,
+            Ev::Sample,
+            Ev::Fault(0),
+        ];
+        let pop_kinds = |evs: &[Ev]| -> Vec<(u8, usize)> {
+            let mut sim = Simulator::new(SimConfig::new("prism", 1), Vec::new());
+            for ev in evs {
+                sim.push_ev(42.0, ev.clone());
+            }
+            let mut out = Vec::new();
+            while let Some(Reverse((Time(t), _, kind, payload))) = sim.heap.pop() {
+                assert_eq!(t, 42.0);
+                out.push((kind, payload));
+            }
+            out
+        };
+        assert_eq!(
+            pop_kinds(&canonical),
+            vec![(0, 7), (1, 3), (2, 0), (3, 0), (4, 0)],
+            "Arrival < Step < Epoch < Sample < Fault at equal time"
+        );
+        // ...and reversing the push order reverses the pop order, proving
+        // the ordering is seq-FIFO (push order), not kind priority. A
+        // kind-major key would pass the first assertion and fail this one.
+        let reversed: Vec<Ev> = canonical.iter().rev().cloned().collect();
+        assert_eq!(
+            pop_kinds(&reversed),
+            vec![(4, 0), (3, 0), (2, 0), (1, 3), (0, 7)],
+            "equal-time ordering must be FIFO push order, not kind-major"
+        );
     }
 
     #[test]

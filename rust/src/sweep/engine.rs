@@ -8,14 +8,10 @@ use crate::metrics::MetricsSink;
 
 /// Worker count used when the caller passes `jobs = 0`: the `PRISM_JOBS`
 /// env var if set to a positive integer, else available parallelism.
+/// Delegates to the shared [`crate::util::parallelism`] helper so `--jobs 0`
+/// and the simulator's `--shards 0` can never resolve "auto" differently.
 pub fn default_jobs() -> usize {
-    std::env::var("PRISM_JOBS")
-        .ok()
-        .and_then(|s| s.parse::<usize>().ok())
-        .filter(|&n| n > 0)
-        .unwrap_or_else(|| {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-        })
+    crate::util::parallelism()
 }
 
 /// Resolve a user-facing `--jobs` value: 0 → auto, anything else verbatim.

@@ -35,6 +35,15 @@ pub struct SweepPoint {
     /// so the spec fully determines the cluster and the `--jobs 1` ≡
     /// `--jobs N` identity holds per point.
     pub fleet: Option<&'static str>,
+    /// Intra-run shard axis (`SimConfig::shards`): `1` — the default —
+    /// leaves the config untouched (so the process-wide default set by
+    /// `prism exp --shards` still applies) and keeps the point's key
+    /// unchanged; any other value overrides the config and stamps a `-shN`
+    /// key segment (`0` = auto). Sharded runs keep metric-fingerprint
+    /// identity to `shards = 1` (`tests/shard_identity.rs`), but full-dump
+    /// f64 means can differ in the last ulp (summation order), so tables
+    /// are byte-stable per shard count, not across the axis.
+    pub shards: u32,
 }
 
 impl SweepPoint {
@@ -52,8 +61,14 @@ impl SweepPoint {
             Some(spec) => format!("-F{}", spec.replace([',', ';'], "+")),
             None => String::new(),
         };
+        let shard_seg = if self.shards != 1 {
+            format!("-sh{}", self.shards)
+        } else {
+            // The sequential default keeps historical keys byte-for-byte.
+            String::new()
+        };
         format!(
-            "t{}-g{}-rs{}-ss{}-s{}{}{}-{}",
+            "t{}-g{}-rs{}-ss{}-s{}{}{}{}-{}",
             self.trace,
             self.n_gpus,
             self.rate_scale,
@@ -61,6 +76,7 @@ impl SweepPoint {
             self.seed,
             fault_seg,
             fleet_seg,
+            shard_seg,
             self.policy
         )
     }
@@ -110,7 +126,17 @@ impl SweepPoint {
     pub fn run_with(&self, mut cfg: SimConfig, specs: &[ModelSpec], trace: &Trace) -> RunMetrics {
         self.apply_fleet(&mut cfg);
         self.apply_faults(&mut cfg, trace);
+        self.apply_shards(&mut cfg);
         Simulator::new(cfg, specs.to_vec()).run_scaled(trace, self.rate_scale).0
+    }
+
+    /// Resolve the point's shard axis into the config. The default (`1`)
+    /// leaves the config alone so a process-wide `set_default_shards` (the
+    /// `prism exp --shards` path) still applies to grid points.
+    fn apply_shards(&self, cfg: &mut SimConfig) {
+        if self.shards != 1 {
+            *cfg = cfg.clone().shards(self.shards);
+        }
     }
 
     /// Run against a trace the caller has already rate-scaled (shared
@@ -122,17 +148,18 @@ impl SweepPoint {
         cfg.slo_scale = self.slo_scale;
         self.apply_fleet(&mut cfg);
         self.apply_faults(&mut cfg, trace);
+        self.apply_shards(&mut cfg);
         Simulator::new(cfg, specs.to_vec()).run(trace).0
     }
 }
 
 /// Cartesian-product builder over sweep axes. Enumeration order is part of
 /// the contract (see module docs in `sweep`): trace → rate scale → SLO
-/// scale → GPU count → seed → fault spec → fleet spec → policy, policies
-/// innermost so each table row group compares systems side by side exactly
-/// like the hand-rolled loops this replaced. The fault and fleet axes
-/// default to their single inert entry (fault-free, uniform cluster),
-/// leaving existing grids unchanged.
+/// scale → GPU count → seed → fault spec → fleet spec → shard count →
+/// policy, policies innermost so each table row group compares systems side
+/// by side exactly like the hand-rolled loops this replaced. The fault,
+/// fleet, and shard axes default to their single inert entry (fault-free,
+/// uniform cluster, sequential loop), leaving existing grids unchanged.
 #[derive(Debug, Clone)]
 pub struct SweepGrid {
     policies: Vec<&'static str>,
@@ -143,6 +170,7 @@ pub struct SweepGrid {
     seeds: Vec<u64>,
     faults: Vec<Option<&'static str>>,
     fleets: Vec<Option<&'static str>>,
+    shards: Vec<u32>,
 }
 
 impl Default for SweepGrid {
@@ -166,6 +194,7 @@ impl SweepGrid {
             seeds: vec![0],
             faults: vec![None],
             fleets: vec![None],
+            shards: vec![1],
         }
     }
 
@@ -226,6 +255,14 @@ impl SweepGrid {
         self
     }
 
+    /// Intra-run shard axis (`SimConfig::shards` values; `0` = auto).
+    /// Replaces the default sequential entry — include `1` to keep the
+    /// historical single-threaded loop next to the sharded columns.
+    pub fn shards(mut self, ss: &[u32]) -> Self {
+        self.shards = ss.to_vec();
+        self
+    }
+
     /// Number of points the grid enumerates.
     pub fn len(&self) -> usize {
         self.traces.len()
@@ -235,6 +272,7 @@ impl SweepGrid {
             * self.seeds.len()
             * self.faults.len()
             * self.fleets.len()
+            * self.shards.len()
             * self.policies.len()
     }
 
@@ -252,17 +290,20 @@ impl SweepGrid {
                         for &seed in &self.seeds {
                             for &faults in &self.faults {
                                 for &fleet in &self.fleets {
-                                    for &policy in &self.policies {
-                                        out.push(SweepPoint {
-                                            policy,
-                                            trace,
-                                            n_gpus,
-                                            rate_scale,
-                                            slo_scale,
-                                            seed,
-                                            faults,
-                                            fleet,
-                                        });
+                                    for &shards in &self.shards {
+                                        for &policy in &self.policies {
+                                            out.push(SweepPoint {
+                                                policy,
+                                                trace,
+                                                n_gpus,
+                                                rate_scale,
+                                                slo_scale,
+                                                seed,
+                                                faults,
+                                                fleet,
+                                                shards,
+                                            });
+                                        }
                                     }
                                 }
                             }
@@ -368,6 +409,30 @@ mod tests {
         let want = crate::cluster::FleetSpec::parse("1xa100+1xl4").unwrap().cost_per_hour();
         assert_eq!(m.cost.fleet_cost_per_hour.to_bits(), want.to_bits());
         assert!(m.cost.cost_dollars > 0.0);
+    }
+
+    #[test]
+    fn shard_axis_multiplies_grid_and_default_keys_unchanged() {
+        // Default axis: sequential points whose keys match the historical
+        // format exactly (no `-sh` segment).
+        let base = SweepGrid::new().policies(&["prism"]);
+        let p0 = base.points()[0];
+        assert_eq!(p0.shards, 1);
+        assert!(!p0.key().contains("-sh"), "shard-free key changed: {}", p0.key());
+
+        let g = SweepGrid::new().policies(&["prism", "qlm"]).shards(&[1, 4]);
+        assert_eq!(g.len(), 4);
+        let pts = g.points();
+        // Shard counts nest outside the policy axis, inside fleets.
+        assert_eq!((pts[0].shards, pts[0].policy), (1, "prism"));
+        assert_eq!((pts[1].shards, pts[1].policy), (1, "qlm"));
+        assert_eq!(pts[2].shards, 4);
+        let k = pts[2].key();
+        assert!(k.ends_with("-sh4-prism"), "shard segment in key: {k}");
+        let mut keys: Vec<String> = pts.iter().map(|p| p.key()).collect();
+        keys.sort();
+        keys.dedup();
+        assert_eq!(keys.len(), 4, "shard axis must keep keys unique");
     }
 
     #[test]

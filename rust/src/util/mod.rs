@@ -4,6 +4,9 @@
 pub mod cli;
 pub mod json;
 pub mod logger;
+pub mod parallelism;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+
+pub use parallelism::parallelism;

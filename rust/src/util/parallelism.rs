@@ -1,0 +1,38 @@
+//! Shared auto-parallelism detection for every `0 = auto` worker knob.
+//!
+//! Two knobs fan work across threads: the sweep engine's `--jobs` (workers
+//! across `SweepPoint`s) and the simulator's `--shards` (GPU-group shards
+//! inside one run). Both treat `0` as "auto"; both MUST resolve "auto" the
+//! same way, or the two knobs drift (e.g. one honoring `PRISM_JOBS`, the
+//! other not). This module is the single resolution point.
+
+/// Worker/shard count used when a caller passes `0 = auto`: the
+/// `PRISM_JOBS` env var if set to a positive integer, else the machine's
+/// available parallelism (1 if that cannot be determined).
+pub fn parallelism() -> usize {
+    std::env::var("PRISM_JOBS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallelism_is_positive() {
+        assert!(parallelism() >= 1);
+    }
+
+    #[test]
+    fn sweep_default_jobs_delegates_here() {
+        // The two auto knobs must resolve identically (no drift): the sweep
+        // engine's default is this helper, observed under whatever
+        // PRISM_JOBS environment the test process happens to run in.
+        assert_eq!(parallelism(), crate::sweep::default_jobs());
+    }
+}

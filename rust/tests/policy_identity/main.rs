@@ -196,6 +196,38 @@ fn builder_matches_positional_config_against_enum_reference() {
 }
 
 #[test]
+fn explicit_shards_one_matches_enum_reference() {
+    // Acceptance check for the intra-run parallelism subsystem: an
+    // explicitly requested sequential shard count (`--shards 1`) must be
+    // bitwise-identical to the frozen PRE-shard enum-dispatch reference.
+    // The sharded dispatch in `run_inner` never engages at `shards <= 1`,
+    // so this proves the shard plumbing (config knob, dispatch guard,
+    // `pub(crate)` surface changes) left the historical loop untouched —
+    // not merely "same as another run of the new code".
+    let specs = assign_ids(
+        table3_catalog()
+            .into_iter()
+            .filter(|m| m.name.contains("8b") || m.name.contains("7b"))
+            .take(8)
+            .collect(),
+    );
+    let trace = generate(&TraceGenConfig::novita_like(8, 300.0, 1234)).scale_rate(2.0);
+    for (kind, name) in POLICIES {
+        let mut old_cfg = refsim::SimConfig::new(kind, 2);
+        old_cfg.slo_scale = 8.0;
+        old_cfg.metrics_full_dump = true;
+        let new_cfg = SimConfig::for_policy(name).gpus(2).slo_scale(8.0).full_dump(true).shards(1);
+        let (old_m, _) = refsim::Simulator::new(old_cfg, specs.to_vec()).run(&trace);
+        let (new_m, _) = Simulator::new(new_cfg, specs.to_vec()).run(&trace);
+        assert_eq!(
+            fingerprint(&old_m),
+            fingerprint(&new_m),
+            "policy {name}: explicit --shards 1 diverged from the pre-shard reference"
+        );
+    }
+}
+
+#[test]
 fn trait_dispatch_matches_enum_reference_under_memory_pressure() {
     // Small-model fleet squeezed onto undersized GPUs: activation retries,
     // bounded give-ups, and heavy eviction traffic — the paths where a

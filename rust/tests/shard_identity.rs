@@ -1,0 +1,183 @@
+//! `--shards 1` ≡ `--shards N` identity regression for the GPU-group-
+//! sharded event loop (`sim::shard`). Every registered policy runs the
+//! same fixed-seed config twice — once on the historical sequential loop
+//! (`shards = 1`) and once sharded four ways — and the metric fingerprints
+//! must match exactly.
+//!
+//! The fingerprint is **order-insensitive**: it covers every integer
+//! counter, count-ratio attainments, percentiles (exact under
+//! `metrics_full_dump`, bucket-count sketches otherwise — both depend only
+//! on the *set* of recorded values), and the master-side wall/busy/cost
+//! accounting, all compared bitwise (`to_bits`, no tolerance). It excludes
+//! f64 *means*, which sum records in record order — sharding merges
+//! per-shard sinks in shard order, so sums can differ in the last ulp
+//! while every individual record is identical. That summation-order
+//! epsilon is the documented limit of the contract (see `sim/shard.rs`).
+//!
+//! Config coverage mirrors the regimes that stress shard seams: a
+//! contended 2-GPU cluster (cross-shard queue/migration traffic), a
+//! memory-pressure churn squeeze (preemption + eviction), a seeded
+//! `churn:<seed>` fault plan (crash re-routing at fault barriers), and a
+//! heterogeneous `2xa100+4xl4` fleet (per-GPU perf/cost threading).
+
+use prism::cluster::FleetSpec;
+use prism::experiments::e2e::assign_ids;
+use prism::metrics::RunMetrics;
+use prism::model::spec::{catalog_subset, table3_catalog, ModelSpec};
+use prism::sim::{registry, SimConfig, Simulator};
+use prism::trace::gen::{generate, TraceGenConfig};
+use prism::trace::Trace;
+
+/// Order-insensitive bit-level digest: counters, attainments, percentiles,
+/// wall/busy/cost, and the fault-recovery ledger. No f64 means (see module
+/// docs).
+fn fingerprint(m: &RunMetrics) -> Vec<u64> {
+    vec![
+        m.total() as u64,
+        m.completed() as u64,
+        m.ttft_attainment().to_bits(),
+        m.tpot_attainment().to_bits(),
+        m.p95_ttft().to_bits(),
+        m.p95_tpot().to_bits(),
+        m.p95_e2e().to_bits(),
+        m.sim_events,
+        m.activations,
+        m.evictions,
+        m.migrations,
+        m.preemptions,
+        m.wall_seconds.to_bits(),
+        m.busy_seconds.to_bits(),
+        m.cost.fleet_cost_per_hour.to_bits(),
+        m.cost.cost_dollars.to_bits(),
+        m.faults.gpu_crashes,
+        m.faults.gpu_recoveries,
+        m.faults.requests_restarted,
+        m.faults.requests_dropped,
+        m.faults.load_retries,
+        m.faults.load_failures,
+        m.faults.alloc_faults_injected,
+        m.faults.models_recovered,
+        m.faults.recovery_seconds.to_bits(),
+    ]
+}
+
+/// Run `cfg` sequentially and with four shards; assert fingerprint
+/// identity. The caller leaves `cfg.shards` at its default.
+fn assert_shard_identity(cfg: &SimConfig, specs: &[ModelSpec], trace: &Trace, label: &str) {
+    let (seq, _) = Simulator::new(cfg.clone().shards(1), specs.to_vec()).run(trace);
+    let (par, _) = Simulator::new(cfg.clone().shards(4), specs.to_vec()).run(trace);
+    assert_eq!(
+        fingerprint(&seq),
+        fingerprint(&par),
+        "{label}: 4-shard run diverged from the sequential loop"
+    );
+}
+
+/// 8x 7-8B models contended on 2 GPUs at 2x rate: eviction, migration,
+/// and cross-shard queue traffic, with exact (full-dump) percentiles.
+#[test]
+fn contended_two_gpu_cluster_all_policies() {
+    let specs = assign_ids(
+        table3_catalog()
+            .into_iter()
+            .filter(|m| m.name.contains("8b") || m.name.contains("7b"))
+            .take(8)
+            .collect(),
+    );
+    let trace = generate(&TraceGenConfig::novita_like(8, 300.0, 1234)).scale_rate(2.0);
+    for name in registry().names() {
+        let mut cfg = SimConfig::new(name, 2);
+        cfg.slo_scale = 8.0;
+        cfg.metrics_full_dump = true;
+        assert_shard_identity(&cfg, &specs, &trace, name);
+    }
+}
+
+/// Small-model fleet squeezed onto undersized GPUs (streaming sketches):
+/// activation retries, preemption storms, heavy eviction — the paths where
+/// a shard-boundary ordering bug would surface first.
+#[test]
+fn memory_pressure_churn_all_policies() {
+    let specs = assign_ids(
+        catalog_subset(30)
+            .into_iter()
+            .filter(|m| !m.is_tp() && m.params < 4_000_000_000)
+            .take(10)
+            .collect(),
+    );
+    let trace = generate(&TraceGenConfig::hyperbolic_like(10, 240.0, 77)).scale_rate(1.5);
+    for name in registry().names() {
+        let mut cfg = SimConfig::new(name, 2);
+        cfg.slo_scale = 6.0;
+        cfg.gpu_bytes = 10 * (1 << 30);
+        assert_shard_identity(&cfg, &specs, &trace, name);
+    }
+}
+
+/// Seeded fault churn (GPU crashes, slowdowns, alloc faults, load
+/// failures): faults are barrier events handled master-side, so the whole
+/// recovery ledger must be shard-invariant.
+#[test]
+fn seeded_fault_churn_all_policies() {
+    let specs = assign_ids(
+        catalog_subset(30)
+            .into_iter()
+            .filter(|m| !m.is_tp() && m.params < 4_000_000_000)
+            .take(12)
+            .collect(),
+    );
+    let trace = generate(&TraceGenConfig::novita_like(12, 300.0, 7));
+    for name in registry().names() {
+        let mut cfg = SimConfig::new(name, 4);
+        cfg.slo_scale = 8.0;
+        cfg.gpu_bytes = 12 * (1 << 30);
+        cfg.faults = prism::fault::resolve("churn:5", 4, trace.duration).expect("churn spec");
+        assert_shard_identity(&cfg, &specs, &trace, name);
+    }
+}
+
+/// Heterogeneous 2xa100+4xl4 fleet: per-GPU perf snapshots, kind-aware
+/// placement (melange), and the cost ledger across shard merges.
+#[test]
+fn heterogeneous_fleet_all_policies() {
+    let specs = assign_ids(
+        catalog_subset(30)
+            .into_iter()
+            .filter(|m| !m.is_tp() && m.params < 4_000_000_000)
+            .take(12)
+            .collect(),
+    );
+    let trace = generate(&TraceGenConfig::novita_like(12, 300.0, 11));
+    for name in registry().names() {
+        let cfg = SimConfig::from_fleet(
+            name,
+            FleetSpec::parse("2xa100+4xl4").expect("fleet spec"),
+        )
+        .slo_scale(8.0);
+        assert_shard_identity(&cfg, &specs, &trace, name);
+    }
+}
+
+/// `shards = 0` resolves to available parallelism and must land on the
+/// same fingerprints as the sequential loop (on a single-core runner it
+/// degenerates to the sequential path, which is exactly the contract).
+#[test]
+fn auto_shard_count_matches_sequential() {
+    let specs = assign_ids(
+        table3_catalog()
+            .into_iter()
+            .filter(|m| m.name.contains("8b") || m.name.contains("7b"))
+            .take(8)
+            .collect(),
+    );
+    let trace = generate(&TraceGenConfig::novita_like(8, 300.0, 1234)).scale_rate(2.0);
+    let mut cfg = SimConfig::new("prism", 2);
+    cfg.slo_scale = 8.0;
+    let (seq, _) = Simulator::new(cfg.clone().shards(1), specs.to_vec()).run(&trace);
+    let (auto, _) = Simulator::new(cfg.shards(0), specs.to_vec()).run(&trace);
+    assert_eq!(
+        fingerprint(&seq),
+        fingerprint(&auto),
+        "prism: auto shard count diverged from the sequential loop"
+    );
+}
