@@ -13,7 +13,13 @@
 //! 100-model/32-GPU/2-hour load once on the historical sequential event
 //! loop and once on the GPU-group-sharded loop (`SimConfig::shards = 4`)
 //! — the intra-run parallelism A/B; the sharded row's acceptance target is
-//! >= 2x the sequential row's events/sec on an 8-core-plus runner.
+//! >= 2x the sequential row's events/sec on an 8-core-plus runner. The
+//! `barrier-heavy-*` scenarios pile dense timeline samples, slowdown-only
+//! fault windows, and near-continuous (mostly no-op) control epochs onto
+//! the sharded loop: before window batching and cached shard plans every
+//! one of those control events forced a full worker recompose, so these
+//! rows isolate exactly the batching/caching win (target >= 1.5x the
+//! pre-batching sharded events/sec on an 8-core runner).
 //!
 //! Flags:
 //!   --smoke              tiny CI configuration (seconds, not minutes)
@@ -72,6 +78,15 @@ struct Scenario {
     /// sequential event loop, `N > 1` = GPU-group-sharded, `0` = auto.
     /// Overridden globally by the `--shards` flag.
     shards: u32,
+    /// Timeline sample cadence (`SimConfig::sample_dt`); `0.0` keeps the
+    /// config default (sampling off). Dense cadences make samples the
+    /// dominant control event — the sharded loop's batch-internal pause
+    /// fast path.
+    sample_dt: f64,
+    /// Control-epoch override (`SimConfig::control_epoch`); `0.0` keeps
+    /// the config default. Short epochs over a stable placement are
+    /// mostly no-ops — the cached-window-plan fast path.
+    control_epoch: f64,
 }
 
 const GB: u64 = 1 << 30;
@@ -165,6 +180,8 @@ fn main() {
                 faults: None,
                 fleet: None,
                 shards: 1,
+                sample_dt: 0.0,
+                control_epoch: 0.0,
             },
             Scenario {
                 name: "churn-12m-2g-2min",
@@ -176,6 +193,8 @@ fn main() {
                 faults: None,
                 fleet: None,
                 shards: 1,
+                sample_dt: 0.0,
+                control_epoch: 0.0,
             },
             // Churn squeeze + a seeded fault plan: crashes, slowdowns,
             // alloc faults, and load failures exercise the recovery paths
@@ -190,6 +209,8 @@ fn main() {
                 faults: Some("churn:7"),
                 fleet: None,
                 shards: 1,
+                sample_dt: 0.0,
+                control_epoch: 0.0,
             },
             // Mixed-kind fleet churn: small models squeezed across two
             // A100s (40 GiB) and four L4s (24 GiB). Exercises the per-GPU
@@ -205,6 +226,25 @@ fn main() {
                 faults: None,
                 fleet: Some("2xa100+4xl4"),
                 shards: 1,
+                sample_dt: 0.0,
+                control_epoch: 0.0,
+            },
+            // Barrier-heavy smoke: dense samples + slowdown-only fault
+            // windows + 2-second epochs on an uncontended fleet, so the
+            // run is dominated by control events that the windowed sharded
+            // loop turns into batch-internal pauses / cached-plan no-ops.
+            Scenario {
+                name: "barrier-heavy-12m-4g-2min",
+                n_models: 12,
+                n_gpus: 4,
+                duration: 120.0,
+                gpu_bytes: 80 * GB,
+                small_models: false,
+                faults: Some("slow@20-60:g0x2;slow@40-100:g2x1.5"),
+                fleet: None,
+                shards: 2,
+                sample_dt: 0.25,
+                control_epoch: 2.0,
             },
         ]
     } else {
@@ -219,6 +259,8 @@ fn main() {
                 faults: None,
                 fleet: None,
                 shards: 1,
+                sample_dt: 0.0,
+                control_epoch: 0.0,
             },
             Scenario {
                 name: "novita-100m-32g-2h",
@@ -230,6 +272,8 @@ fn main() {
                 faults: None,
                 fleet: None,
                 shards: 1,
+                sample_dt: 0.0,
+                control_epoch: 0.0,
             },
             // KV churn at scale: a small-model fleet squeezed onto GPUs with
             // a fraction of its working set, so the allocator (block
@@ -244,6 +288,8 @@ fn main() {
                 faults: None,
                 fleet: None,
                 shards: 1,
+                sample_dt: 0.0,
+                control_epoch: 0.0,
             },
             Scenario {
                 name: "faulty-churn-48m-4g-1h",
@@ -255,6 +301,8 @@ fn main() {
                 faults: Some("churn:7"),
                 fleet: None,
                 shards: 1,
+                sample_dt: 0.0,
+                control_epoch: 0.0,
             },
             // Full-scale heterogeneous fleet: mixed A100/L4 kinds under the
             // same hour-long small-model load as the churn scenarios.
@@ -268,6 +316,8 @@ fn main() {
                 faults: None,
                 fleet: Some("4xa100+8xl4"),
                 shards: 1,
+                sample_dt: 0.0,
+                control_epoch: 0.0,
             },
             // Intra-run parallelism A/B (see module docs): identical load
             // to novita-100m-32g-2h, sequential vs 4-shard event loop. The
@@ -283,6 +333,8 @@ fn main() {
                 faults: None,
                 fleet: None,
                 shards: 1,
+                sample_dt: 0.0,
+                control_epoch: 0.0,
             },
             Scenario {
                 name: "giant-sharded-100m-32g-2h",
@@ -294,6 +346,31 @@ fn main() {
                 faults: None,
                 fleet: None,
                 shards: 4,
+                sample_dt: 0.0,
+                control_epoch: 0.0,
+            },
+            // Barrier-heavy stress (see module docs): the giant sharded
+            // load with a dense sample cadence, slowdown-only fault
+            // windows, and 2-second control epochs (mostly no-ops). Before
+            // window batching + plan caching, every one of these control
+            // events was a full recompose barrier; this row isolates
+            // exactly that win (acceptance: >= 1.5x the PR 7 sharded
+            // events/sec on an 8-core runner).
+            Scenario {
+                name: "barrier-heavy-100m-32g-2h",
+                n_models: 100,
+                n_gpus: 32,
+                duration: 7200.0,
+                gpu_bytes: 80 * GB,
+                small_models: false,
+                faults: Some(
+                    "slow@600-1800:g0x2;slow@2000-3200:g5x1.5;\
+                     slow@3600-5400:g11x3;slow@5000-6600:g17x2.5",
+                ),
+                fleet: None,
+                shards: 4,
+                sample_dt: 1.0,
+                control_epoch: 2.0,
             },
         ]
     };
@@ -342,6 +419,12 @@ fn main() {
                 // loop there, so prepush rows time the historical path at
                 // any shard count.
                 cfg = cfg.shards(shards_override.unwrap_or(sc.shards));
+                if sc.sample_dt > 0.0 {
+                    cfg.sample_dt = sc.sample_dt;
+                }
+                if sc.control_epoch > 0.0 {
+                    cfg.control_epoch = sc.control_epoch;
+                }
                 if let Some(fs) = sc.fleet {
                     cfg = cfg.fleet(FleetSpec::parse(fs).expect("scenario fleet spec"));
                 }

@@ -276,6 +276,14 @@ pub struct Cluster {
     pub load_retries: u64,
     /// Loads that exhausted `MAX_LOAD_ATTEMPTS` and aborted the activation.
     pub load_failures: u64,
+    /// Monotonic residency-topology version: bumped whenever the set of
+    /// resident models or their GPU groups changes (activate/evict; migrate
+    /// composes both). Together with the simulator's queue version it keys
+    /// the sharded loop's `WindowPlan` cache — the plan partitions GPUs by
+    /// residency TP-groups plus queue edges, so an unchanged version means
+    /// the cached partition is still exact. Data-only: never read on the
+    /// sequential (`shards = 1`) path.
+    pub(crate) topo_version: u64,
 }
 
 impl Cluster {
@@ -350,6 +358,7 @@ impl Cluster {
             load_fail_cursor: 0,
             load_retries: 0,
             load_failures: 0,
+            topo_version: 0,
         }
     }
 
@@ -548,6 +557,7 @@ impl Cluster {
             },
         );
         self.activations += 1;
+        self.topo_version += 1;
         Ok(t0 + latency)
     }
 
@@ -574,6 +584,7 @@ impl Cluster {
         let node = self.gpus[res.gpus[0].0 as usize].node as usize;
         self.node_pools[node] += 1;
         self.evictions += 1;
+        self.topo_version += 1;
         for r in &mut reqs {
             r.phase = crate::request::Phase::Queued;
         }

@@ -108,6 +108,19 @@ pub enum FaultAction {
     AllocDisarm(u32),
 }
 
+impl FaultAction {
+    /// True for actions that only scale step latency (`SlowStart` /
+    /// `SlowEnd` -> `Cluster::set_gpu_slow`) and can never change model
+    /// residency, GPU grouping, queue contents, or worker-owned allocator
+    /// state. The sharded event loop treats these as batch-internal
+    /// *pauses* (workers apply the factor locally and keep running on the
+    /// same window plan); everything else — crash/recover re-routing and
+    /// alloc-fault arming — stays a full recompose barrier.
+    pub fn is_slowdown_only(&self) -> bool {
+        matches!(self, FaultAction::SlowStart(..) | FaultAction::SlowEnd(_))
+    }
+}
+
 impl FaultPlan {
     /// True when the plan injects nothing; the simulator takes the
     /// pre-fault code path bit for bit.

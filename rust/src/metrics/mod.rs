@@ -599,6 +599,69 @@ pub struct TimelineSample {
     pub inst_token_tput: f64,
 }
 
+/// A shard worker's contribution to one timeline sample, taken at a
+/// batch-internal sample *pause* without recomposing the window. Each
+/// worker fills only the slots for GPUs its window plan owns (everything
+/// else stays zero), plus its shard-local cumulative violation/token
+/// counts at pause time; [`merge_partial_samples`] folds the per-shard
+/// parts — disjoint by construction — into one [`TimelineSample`].
+#[derive(Debug, Clone, Default)]
+pub struct PartialSample {
+    pub t: f64,
+    /// Per-GPU kvcached stats for owned GPUs; `(0, 0, 0, 0)` elsewhere.
+    pub gpus: Vec<(u64, u64, u64, u64)>,
+    /// Per-GPU queue depth (shared queue + resident-engine queue/running
+    /// for leads) for owned GPUs; `0` elsewhere.
+    pub queue_lens: Vec<usize>,
+    /// This shard's TTFT violations since the window opened.
+    pub window_violations: usize,
+    /// This shard's completed tokens since the window opened.
+    pub window_tokens: u64,
+}
+
+impl PartialSample {
+    /// Reset to the all-zero state for `n_gpus`, reusing the buffers.
+    pub fn reset(&mut self, t: f64, n_gpus: usize) {
+        self.t = t;
+        self.gpus.clear();
+        self.gpus.resize(n_gpus, (0, 0, 0, 0));
+        self.queue_lens.clear();
+        self.queue_lens.resize(n_gpus, 0);
+        self.window_violations = 0;
+        self.window_tokens = 0;
+    }
+}
+
+/// Fold per-shard [`PartialSample`]s into one [`TimelineSample`]. GPU slots
+/// are owned by exactly one shard per window, so element-wise addition over
+/// the zero-initialised parts reconstructs the sequential sample exactly
+/// (all quantities are integers; no float summation-order issues).
+/// `cum_violations` and `inst_token_tput` carry window-base offsets the
+/// master owns, so they are passed in pre-combined.
+pub fn merge_partial_samples<'a>(
+    t: f64,
+    n_gpus: usize,
+    parts: impl IntoIterator<Item = &'a PartialSample>,
+    cum_violations: usize,
+    inst_token_tput: f64,
+) -> TimelineSample {
+    let mut gpus = vec![(0u64, 0u64, 0u64, 0u64); n_gpus];
+    let mut queue_lens = vec![0usize; n_gpus];
+    for p in parts {
+        for (g, src) in p.gpus.iter().enumerate() {
+            let dst = &mut gpus[g];
+            dst.0 += src.0;
+            dst.1 += src.1;
+            dst.2 += src.2;
+            dst.3 += src.3;
+        }
+        for (g, q) in p.queue_lens.iter().enumerate() {
+            queue_lens[g] += q;
+        }
+    }
+    TimelineSample { t, gpus, queue_lens, cum_violations, inst_token_tput }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,36 +1,90 @@
 //! Intra-run parallelism: the GPU-group-sharded event loop (`--shards N`).
 //!
-//! Between two consecutive *control events* (epoch, timeline sample, fault
-//! action, or non-resident arrival — anything that can change residency or
-//! observe cross-GPU state), the simulator's event stream factors into
-//! independent per-GPU-group sub-streams: an engine step for model `m`
-//! touches only `m`'s TP group (engine, KV allocators, lead-GPU queue,
-//! monitor), and a resident arrival touches only its model's group. This
-//! module exploits that: it partitions the GPUs into shards, replays each
-//! shard's slice of the window on its own thread with disjoint `&mut`
-//! borrows of the simulator state, and re-merges at every barrier before
-//! the control event runs globally on the master.
+//! Between two consecutive *recompose barriers*, the simulator's event
+//! stream factors into independent per-GPU-group sub-streams: an engine
+//! step for model `m` touches only `m`'s TP group (engine, KV allocators,
+//! lead-GPU queue, monitor), and a resident arrival touches only its
+//! model's group. This module exploits that: it partitions the GPUs into
+//! shards, replays each shard's slice of the window on its own thread with
+//! disjoint `&mut` borrows of the simulator state, and re-merges at every
+//! barrier before the control event runs globally on the master.
+//!
+//! # Barrier classes
+//!
+//! Control events are classified by what they can actually mutate:
+//!
+//! * **Recompose barriers** — epochs, crash/recover/alloc fault actions,
+//!   and non-resident arrivals. These can move models, change GPU
+//!   grouping, or touch worker-owned allocator state, so workers must
+//!   join, state must re-merge, and the event runs via the ordinary
+//!   sequential `&mut self` methods.
+//! * **Batch-internal pauses** — timeline samples and slowdown-only fault
+//!   actions (`FaultAction::is_slowdown_only`). A sample only *reads*
+//!   per-GPU memory/queue state plus two master counters; a slowdown only
+//!   scales step latency. Neither changes residency or grouping, so the
+//!   master records them (with their heap `(time, seq)` key) while
+//!   building the window and keeps popping seeds. Workers fire each pause
+//!   exactly where the sequential loop would have popped it — when the
+//!   next event's `(time, class, seq)` key exceeds the pause's — emitting
+//!   a [`PartialSample`] of their owned GPUs (samples) or updating their
+//!   local slow-factor copy (slowdowns), then continue on the *same*
+//!   window plan with no join. After the window the master replays the
+//!   pauses in order: merged-on-demand partials become `TimelineSample`s
+//!   (disjoint integer slot-sums — bitwise equal to the sequential read)
+//!   and slow factors are applied to the master cluster.
 //!
 //! # Why the result is the same as `--shards 1`
 //!
 //! * **Residency is frozen inside a window.** Activation, eviction, and
-//!   migration happen only in `on_epoch`, `on_fault`, and non-resident
-//!   arrival routing — all barriers. Shard workers only run `on_step`,
-//!   resident-arrival enqueue, and admission, none of which move models.
+//!   migration happen only in `on_epoch`, residency-mutating `on_fault`
+//!   arms, and non-resident arrival routing — all recompose barriers.
+//!   Shard workers only run `on_step`, resident-arrival enqueue,
+//!   admission, and pause reads, none of which move models.
 //! * **The shard partition closes over every cross-GPU edge.** A union-find
 //!   over GPUs links (a) each resident model's full TP group and (b) each
 //!   GPU queue to the *current* lead GPU of every queued request's model
 //!   (admission's "model moved, re-route the request" arm crosses exactly
 //!   that edge after a barrier migration). Components are numbered by
-//!   their minimum GPU index and dealt round-robin onto shards, so the
-//!   assignment is a pure function of pre-window state.
+//!   their minimum GPU index and dealt longest-processing-time-first onto
+//!   shards (see "LPT dealing" below), so the assignment is a pure
+//!   function of pre-window state.
+//! * **The window plan is cached across barriers.** The plan is a pure
+//!   function of (residency topology, master-side queue contents), so it
+//!   is keyed by `(Cluster::topo_version, Simulator::queue_version)` and
+//!   reused verbatim while the key is unchanged. The invalidation rule:
+//!   every master-side mutation that can *add* a cross-GPU edge bumps a
+//!   version — activate/evict (and migrate, which composes them) bump
+//!   `topo_version`; `enqueue_on_gpu` and `PolicyCtx::{put,extend}_gpu_queue`
+//!   bump `queue_version`. Mutations that only *remove* edges (queue pops,
+//!   worker-side admission, `take_gpu_queue`) never bump: a plan built
+//!   from an edge superset is coarser-or-equal, which is still a valid
+//!   disjoint partition. Worker-side enqueues are self-edges (a request
+//!   only ever lands on its model's current lead, inside the model's own
+//!   component), so windows never invalidate their own plan.
+//! * **LPT dealing is deterministic.** Each component's load estimate —
+//!   queued requests plus resident engines' queue + running slots, summed
+//!   over member GPUs — is integer arithmetic over pre-window state.
+//!   Components are processed in (load descending, min-GPU-index
+//!   ascending) order and each goes to the shard minimizing the strict
+//!   total order (assigned load, assigned count, shard index); no float
+//!   compares, no iteration-order dependence, and with all-zero loads it
+//!   degenerates to the historical round-robin deal. Any deterministic
+//!   dealing yields the same metrics (shards only group *independent*
+//!   components); LPT just stops one hot component's shard from capping
+//!   the window.
 //! * **Window events are seeded in exact sequential order.** The master
 //!   pops its heap and arrival cursor with the very same merge rule as the
 //!   sequential loop (arrivals win time ties; heap key `(time, seq, ...)`
 //!   pops FIFO at equal times — see `Simulator::push_ev`) until it meets a
-//!   barrier. Each popped event is appended to its shard's seed queue, so
-//!   per shard the seeds are already sorted by `(time, class, seq)` with
-//!   class arrival=0 < step=1.
+//!   *recompose* barrier, recording pauses in pop order as it goes. Each
+//!   popped event is appended to its shard's seed queue, so per shard the
+//!   seeds are already sorted by `(time, class, seq)` with class arrival=0
+//!   < step=1. A pause keeps its heap key `(t, class 1, master seq)`,
+//!   which is below every local seq (preamble pushes precede the window's
+//!   `seq` snapshot) — so "fire every pause whose key precedes the next
+//!   event's key" reproduces exactly the sequential pop position of the
+//!   sample/fault event, including same-time ties against seeds and
+//!   intra-window pushes.
 //! * **Intra-window pushes sort after every seed.** A shard's local event
 //!   heap orders by `(time, seq)` with a local counter starting at the
 //!   master's sequence snapshot, which is ≥ every seed's seq — exactly the
@@ -54,6 +108,12 @@
 //!   whole-run scalars (busy/wall/cost/counters) are assigned master-side
 //!   in the finale, identical to the sequential loop.
 //!
+//! Batch-internal pauses re-push nothing: workers keep their local heaps
+//! live across a pause, so local events that straddle a sample or slowdown
+//! keep their exact `(time, seq)` order — the survivor re-push (and its
+//! epsilon below) happens only at recompose barriers, same as before
+//! batching (regression-tested next to `event_heap_ties_pop_in_push_order`).
+//!
 //! One documented epsilon: two *surviving* events from different shards at
 //! bitwise-equal times are re-pushed shard-major rather than in original
 //! push order. The orders can differ only if a barrier later re-colocates
@@ -68,14 +128,28 @@
 //! * **O(log heap)** per window event at build (one master pop each — the
 //!   same pops the sequential loop would do) plus O(log local-heap) per
 //!   intra-window push on the worker.
-//! * **O(gpus · α + queued requests)** union-find per window.
+//! * **O(gpus · α + queued requests + components log components)** plan
+//!   rebuild — union-find plus the LPT sort — paid only on a
+//!   `(topo_version, queue_version)` miss; a cache hit is O(1). Samples
+//!   and slowdown-only faults never miss (they mutate neither key), so
+//!   sample-dense runs rebuild at most once per epoch/crash.
 //! * **O(shards · (gpus + engines + models))** borrow distribution per
-//!   window — linear bookkeeping, no clones of engines/GPUs/queues.
+//!   window — linear bookkeeping, no clones of engines/GPUs/queues. (The
+//!   per-slot `Option<&mut _>` vectors are rebuilt each window by
+//!   necessity: they hold window-lifetime borrows and cannot outlive the
+//!   `thread::scope`.)
+//! * **O(shards · gpus)** per sample pause (each worker reads its owned
+//!   GPUs; the master sums disjoint slots) — no join, no recompose.
+//! * **Amortized zero allocation** in the steady state: seed queues,
+//!   local heaps, survivor buffers, slow-factor copies, partial-sample
+//!   buffers, KV-alloc scratch, and plan scratch are all persistent
+//!   per-worker/master scratch recycled across windows.
 //! * **Zero per-event synchronization**: workers share nothing mutable;
 //!   the only joins are the per-window `std::thread::scope` barriers.
 //!
 //! Anything super-linear per window in models × gpus, or any per-event
-//! locking, is a regression (`benches/sim_hot_path.rs`, giant-* scenarios).
+//! locking, is a regression (`benches/sim_hot_path.rs`, giant-* and
+//! barrier-heavy-* scenarios).
 
 use std::cmp::Reverse;
 use std::collections::{BTreeMap, BTreeSet, BinaryHeap, HashMap, VecDeque};
@@ -85,8 +159,9 @@ use crate::cluster::gpu::GpuDevice;
 use crate::cluster::{Cluster, GpuId, Residency};
 use crate::engine::engine::{KvAlloc, SimEngine};
 use crate::engine::perf::GpuPerf;
+use crate::fault::FaultAction;
 use crate::kvcached::BlockRef;
-use crate::metrics::{MetricsSink, RunMetrics, TimelineSample};
+use crate::metrics::{merge_partial_samples, MetricsSink, PartialSample, RunMetrics, TimelineSample};
 use crate::model::spec::{ModelId, ModelSpec};
 use crate::request::{Phase, Request, RequestId};
 use crate::sched::arbitration::{moore_hodgson, Candidate};
@@ -103,6 +178,12 @@ struct Dsu(Vec<usize>);
 impl Dsu {
     fn new(n: usize) -> Self {
         Dsu((0..n).collect())
+    }
+
+    /// Reset to `n` singleton sets, reusing the parent vector's capacity.
+    fn reset(&mut self, n: usize) {
+        self.0.clear();
+        self.0.extend(0..n);
     }
 
     fn find(&mut self, mut x: usize) -> usize {
@@ -123,45 +204,20 @@ impl Dsu {
 }
 
 /// The per-window shard assignment: GPU -> shard, derived from the
-/// union-find described in the module docs. Recomputed at every window
-/// (residency and queues change at barriers).
+/// union-find described in the module docs. Built through [`PlanCache`],
+/// which memoizes it across barriers while the residency/queue topology
+/// version is unchanged.
 struct WindowPlan {
     gpu_shard: Vec<usize>,
 }
 
 impl WindowPlan {
+    /// One-shot build (tests): a throwaway cache forced to rebuild.
+    #[cfg(test)]
     fn build(cluster: &Cluster, gpu_queues: &[Vec<Request>], n_shards: usize) -> Self {
-        let n = cluster.n_gpus();
-        let mut dsu = Dsu::new(n);
-        for res in cluster.residency.values() {
-            let lead = res.gpus[0].0 as usize;
-            for g in &res.gpus[1..] {
-                dsu.union(lead, g.0 as usize);
-            }
-        }
-        // Close the admission "moved" edge: a queued request's model may
-        // have migrated; re-routing walks from the queue's GPU to the
-        // model's current lead.
-        for (g, q) in gpu_queues.iter().enumerate() {
-            for req in q {
-                if let Some(res) = cluster.residency.get(&req.model) {
-                    dsu.union(g, res.gpus[0].0 as usize);
-                }
-            }
-        }
-        // Components in min-GPU-index order, dealt round-robin.
-        let mut comp_idx = vec![usize::MAX; n];
-        let mut next_comp = 0usize;
-        let mut gpu_shard = vec![0usize; n];
-        for g in 0..n {
-            let r = dsu.find(g);
-            if comp_idx[r] == usize::MAX {
-                comp_idx[r] = next_comp;
-                next_comp += 1;
-            }
-            gpu_shard[g] = comp_idx[r] % n_shards;
-        }
-        WindowPlan { gpu_shard }
+        let mut cache = PlanCache::new();
+        cache.plan_for(cluster, gpu_queues, 0, n_shards);
+        WindowPlan { gpu_shard: cache.plan.gpu_shard.clone() }
     }
 
     /// Shard owning model `m`'s events: its lead GPU's shard if resident,
@@ -171,6 +227,173 @@ impl WindowPlan {
     fn shard_of_model(&self, m: ModelId, residency: &BTreeMap<ModelId, Residency>) -> usize {
         residency.get(&m).map_or(0, |r| self.gpu_shard[r.gpus[0].0 as usize])
     }
+}
+
+/// Memoized window plan + reusable build scratch. The plan is a pure
+/// function of residency topology and master-side queue contents, both
+/// version-counted (`Cluster::topo_version`, `Simulator::queue_version`);
+/// an unchanged key across a barrier reuses the previous assignment
+/// verbatim — a no-op epoch, a timeline sample, or a slowdown window no
+/// longer costs a union-find. All intermediate vectors are hoisted here so
+/// even a rebuild allocates nothing in the steady state.
+struct PlanCache {
+    plan: WindowPlan,
+    /// `(topo_version, queue_version)` the plan was built at.
+    key: Option<(u64, u64)>,
+    /// Rebuild count (exposed for the invalidation unit tests and the
+    /// bench-side cache-hit accounting).
+    rebuilds: u64,
+    dsu: Dsu,
+    /// DSU root -> dense component index (min-GPU-index order).
+    comp_idx: Vec<usize>,
+    /// Per-component deterministic load estimate: queued requests plus
+    /// resident engines' queue + running slots over member GPUs.
+    comp_load: Vec<u64>,
+    /// Component indices in (load desc, component asc) deal order.
+    comp_order: Vec<usize>,
+    comp_shard: Vec<usize>,
+    shard_load: Vec<u64>,
+    shard_cnt: Vec<u32>,
+}
+
+impl PlanCache {
+    fn new() -> Self {
+        PlanCache {
+            plan: WindowPlan { gpu_shard: Vec::new() },
+            key: None,
+            rebuilds: 0,
+            dsu: Dsu::new(0),
+            comp_idx: Vec::new(),
+            comp_load: Vec::new(),
+            comp_order: Vec::new(),
+            comp_shard: Vec::new(),
+            shard_load: Vec::new(),
+            shard_cnt: Vec::new(),
+        }
+    }
+
+    /// The window plan for the current topology: cached when
+    /// `(cluster.topo_version, queue_version)` matches the last build,
+    /// rebuilt into the reusable scratch otherwise.
+    fn plan_for(
+        &mut self,
+        cluster: &Cluster,
+        gpu_queues: &[Vec<Request>],
+        queue_version: u64,
+        n_shards: usize,
+    ) -> &WindowPlan {
+        let key = (cluster.topo_version, queue_version);
+        if self.key != Some(key) {
+            self.rebuild(cluster, gpu_queues, n_shards);
+            self.key = Some(key);
+        }
+        &self.plan
+    }
+
+    fn rebuild(&mut self, cluster: &Cluster, gpu_queues: &[Vec<Request>], n_shards: usize) {
+        self.rebuilds += 1;
+        let n = cluster.n_gpus();
+        self.dsu.reset(n);
+        for res in cluster.residency.values() {
+            let lead = res.gpus[0].0 as usize;
+            for g in &res.gpus[1..] {
+                self.dsu.union(lead, g.0 as usize);
+            }
+        }
+        // Close the admission "moved" edge: a queued request's model may
+        // have migrated; re-routing walks from the queue's GPU to the
+        // model's current lead.
+        for (g, q) in gpu_queues.iter().enumerate() {
+            for req in q {
+                if let Some(res) = cluster.residency.get(&req.model) {
+                    self.dsu.union(g, res.gpus[0].0 as usize);
+                }
+            }
+        }
+        // Components in min-GPU-index order; `gpu_shard` temporarily holds
+        // the dense component index until the deal below remaps it.
+        self.comp_idx.clear();
+        self.comp_idx.resize(n, usize::MAX);
+        self.plan.gpu_shard.clear();
+        self.plan.gpu_shard.resize(n, 0);
+        let mut next_comp = 0usize;
+        for g in 0..n {
+            let r = self.dsu.find(g);
+            if self.comp_idx[r] == usize::MAX {
+                self.comp_idx[r] = next_comp;
+                next_comp += 1;
+            }
+            self.plan.gpu_shard[g] = self.comp_idx[r];
+        }
+        // Deterministic per-component load: queued requests + resident
+        // engines' queue/running slots (integer counts of pre-window state).
+        self.comp_load.clear();
+        self.comp_load.resize(next_comp, 0);
+        for g in 0..n {
+            let mut load = gpu_queues[g].len() as u64;
+            for m in cluster.residents_on(g) {
+                let r = &cluster.residency[m];
+                if r.gpus[0].0 as usize == g {
+                    let e = &cluster.engines[r.engine_idx];
+                    load += (e.queue_len() + e.running_len()) as u64;
+                }
+            }
+            self.comp_load[self.plan.gpu_shard[g]] += load;
+        }
+        // LPT deal: heaviest component first (min-GPU-index breaks load
+        // ties), each onto the shard minimizing (load, count, index). With
+        // all-zero loads this is exactly the historical round-robin deal.
+        self.comp_order.clear();
+        self.comp_order.extend(0..next_comp);
+        let loads = &self.comp_load;
+        self.comp_order.sort_by_key(|&c| (Reverse(loads[c]), c));
+        self.shard_load.clear();
+        self.shard_load.resize(n_shards, 0);
+        self.shard_cnt.clear();
+        self.shard_cnt.resize(n_shards, 0);
+        self.comp_shard.clear();
+        self.comp_shard.resize(next_comp, 0);
+        for &c in &self.comp_order {
+            let mut best = 0usize;
+            for s in 1..n_shards {
+                if (self.shard_load[s], self.shard_cnt[s], s)
+                    < (self.shard_load[best], self.shard_cnt[best], best)
+                {
+                    best = s;
+                }
+            }
+            self.comp_shard[c] = best;
+            self.shard_load[best] += self.comp_load[c];
+            self.shard_cnt[best] += 1;
+        }
+        for g in 0..n {
+            self.plan.gpu_shard[g] = self.comp_shard[self.plan.gpu_shard[g]];
+        }
+    }
+}
+
+// ------------------------------------------------------------------ pauses
+
+/// A batch-internal control event: recorded by the master at window build
+/// (in heap pop order, keeping its `(time, seq)` key), fired by every
+/// worker at exactly its sequential pop position, replayed by the master
+/// after the window. See "Barrier classes" in the module docs.
+struct Pause {
+    t: f64,
+    /// Master heap seq — below the window's `seq` snapshot, so the pause
+    /// key `(t, class 1, seq)` sorts against seeds and intra-window pushes
+    /// exactly as the heap event itself would have.
+    seq: u64,
+    kind: PauseKind,
+}
+
+enum PauseKind {
+    /// Timeline sample: workers emit a [`PartialSample`]; the master
+    /// merges them on demand at replay.
+    Sample,
+    /// Slowdown-only fault action, pre-resolved to the factor
+    /// `Cluster::set_gpu_slow` would receive (`SlowEnd` -> 1.0).
+    Slow { g: usize, factor: f64 },
 }
 
 // ------------------------------------------------------------------ events
@@ -222,12 +445,21 @@ struct ShardAlloc<'s, 'a> {
     gpus: &'s mut [Option<&'a mut GpuDevice>],
     group: &'s [GpuId],
     model: ModelId,
-    scratch: Vec<BlockRef>,
+    /// Per-worker persistent scratch (one TP group's block refs per alloc
+    /// round); lives in [`WorkerScratch`] so repeated steps — and repeated
+    /// windows — reuse one allocation instead of a fresh `Vec` per step.
+    scratch: &'s mut Vec<BlockRef>,
 }
 
 impl<'s, 'a> ShardAlloc<'s, 'a> {
-    fn new(gpus: &'s mut [Option<&'a mut GpuDevice>], group: &'s [GpuId], model: ModelId) -> Self {
-        ShardAlloc { gpus, group, model, scratch: Vec::new() }
+    fn new(
+        gpus: &'s mut [Option<&'a mut GpuDevice>],
+        group: &'s [GpuId],
+        model: ModelId,
+        scratch: &'s mut Vec<BlockRef>,
+    ) -> Self {
+        scratch.clear();
+        ShardAlloc { gpus, group, model, scratch }
     }
 
     fn dev(&mut self, g: usize) -> &mut GpuDevice {
@@ -279,18 +511,44 @@ impl<'s, 'a> KvAlloc for ShardAlloc<'s, 'a> {
 
 // ----------------------------------------------------------------- worker
 
-/// What a shard hands back at the barrier.
+/// Persistent per-worker scratch, recycled across windows (tentpole
+/// "scratch reuse"): the master refills these each window instead of
+/// allocating fresh containers, and workers hand them back through
+/// [`ShardOut`]. Capacities grow to the run's high-water mark once and
+/// stay there.
+#[derive(Default)]
+struct WorkerScratch {
+    /// Seed queue (master-filled, worker-drained; empty between windows).
+    seeds: VecDeque<SeedEv>,
+    /// Intra-window local heap storage (empty between windows).
+    local: BinaryHeap<Reverse<(Time, u64, u32)>>,
+    /// Survivor buffer (drained by the master at recompose).
+    survivors: Vec<(f64, ModelId)>,
+    /// Worker-local copy of the per-GPU slow factors (master-refreshed at
+    /// window start; mutated by `Slow` pauses mid-window).
+    slow: Vec<f64>,
+    /// One partial per `Sample` pause fired this window, in pause order.
+    partials: Vec<PartialSample>,
+    /// KV block-ref scratch for `ShardAlloc` (see there).
+    alloc: Vec<BlockRef>,
+}
+
+/// What a shard hands back at the barrier: the window's deltas plus the
+/// recycled scratch containers (moved back into [`WorkerScratch`]).
 struct ShardOut {
     /// This shard's partition of `step_scheduled` (post-window).
     step_scheduled: BTreeSet<ModelId>,
-    /// Local events at/after the barrier, in pop order; re-pushed into the
-    /// master heap (always Steps — shards only push via `schedule_step`).
-    survivors: Vec<(f64, ModelId)>,
     sim_events: u64,
     violations: usize,
     tokens: u64,
     /// Time of the last processed event; `NEG_INFINITY` if none.
     last_t: f64,
+    /// Returned scratch. `scratch.survivors` holds the local events
+    /// at/after the barrier, in pop order; re-pushed into the master heap
+    /// (always Steps — shards only push via `schedule_step`).
+    /// `scratch.partials[k]` is this shard's contribution to the window's
+    /// k-th sample pause.
+    scratch: WorkerScratch,
 }
 
 /// One shard's disjoint view of the simulator between two barriers. Every
@@ -303,9 +561,6 @@ struct ShardCtx<'a> {
     specs: &'a [ModelSpec],
     model_index: &'a HashMap<ModelId, usize>,
     gpu_perfs: &'a [GpuPerf],
-    /// Per-GPU slow factors snapshotted at window start (fault actions are
-    /// barriers, so these are constant inside a window).
-    slow: &'a [f64],
     slack_aware: bool,
     faults_enabled: bool,
     engines: Vec<Option<&'a mut SimEngine>>,
@@ -316,9 +571,20 @@ struct ShardCtx<'a> {
     residency: BTreeMap<ModelId, &'a mut Residency>,
     metrics: &'a mut RunMetrics,
     step_scheduled: BTreeSet<ModelId>,
-    seeds: VecDeque<SeedEv>,
-    /// Intra-window pushes: `(time, local seq, model id)`.
-    local: BinaryHeap<Reverse<(Time, u64, u32)>>,
+    /// This window's batch-internal pauses (shared, read-only), and the
+    /// cursor over them. `scratch.slow` starts as the window-start
+    /// snapshot and tracks `Slow` pauses as they fire; `scratch.partials`
+    /// gains one entry per `Sample` pause fired.
+    pauses: &'a [Pause],
+    pause_idx: usize,
+    /// Sample pauses fired this window == valid prefix of
+    /// `scratch.partials` (the vector itself is recycled, never truncated).
+    sample_no: usize,
+    /// Owned per-worker scratch: seed queue (`scratch.seeds`), local heap
+    /// of intra-window pushes `(time, local seq, model id)`
+    /// (`scratch.local`), survivor buffer, slow factors, sample partials,
+    /// and KV-alloc scratch. Returned via `ShardOut` for recycling.
+    scratch: WorkerScratch,
     seq: u64,
     sim_events: u64,
     violations: usize,
@@ -337,16 +603,22 @@ impl<'a> ShardCtx<'a> {
     /// pre-barrier merged order.
     fn run_window(mut self, limit: f64, inclusive: bool) -> ShardOut {
         loop {
-            let seed_key = self.seeds.front().map(SeedEv::key);
-            let local_key = self.local.peek().map(|Reverse((t, s, _))| (*t, 1u8, *s));
+            let seed_key = self.scratch.seeds.front().map(SeedEv::key);
+            let local_key = self.scratch.local.peek().map(|Reverse((t, s, _))| (*t, 1u8, *s));
             let take_local = match (&seed_key, &local_key) {
                 (None, None) => break,
                 (Some(_), None) => false,
                 (None, Some(_)) => true,
                 (Some(sk), Some(lk)) => lk < sk,
             };
+            // Fire every pause the sequential loop would have popped before
+            // this event (pause keys `(t, 1, master seq)` sort below every
+            // local push at equal times — master seqs predate the window's
+            // seq snapshot — and against seeds in exact heap pop order).
+            let next_key = if take_local { local_key.unwrap() } else { seed_key.unwrap() };
+            self.fire_pauses_before(next_key);
             if take_local {
-                let &Reverse((Time(t), _, mid)) = self.local.peek().expect("peeked");
+                let &Reverse((Time(t), _, mid)) = self.scratch.local.peek().expect("peeked");
                 let past = if inclusive { t > limit } else { t >= limit };
                 if past {
                     // Only local (post-barrier) events can remain: a seed
@@ -354,12 +626,12 @@ impl<'a> ShardCtx<'a> {
                     debug_assert!(seed_key.is_none(), "seed past the window barrier");
                     break;
                 }
-                self.local.pop();
+                self.scratch.local.pop();
                 self.sim_events += 1;
                 self.last_t = t;
                 self.on_step(ModelId(mid), t);
             } else {
-                match self.seeds.pop_front().expect("peeked") {
+                match self.scratch.seeds.pop_front().expect("peeked") {
                     SeedEv::Arrival { model_idx, raw_prompt_tokens, req } => {
                         self.sim_events += 1;
                         self.last_t = req.arrival;
@@ -373,17 +645,82 @@ impl<'a> ShardCtx<'a> {
                 }
             }
         }
-        let mut survivors = Vec::new();
-        while let Some(Reverse((Time(t), _, mid))) = self.local.pop() {
-            survivors.push((t, ModelId(mid)));
+        // Pauses not overtaken by any event (trailing samples/slowdowns, or
+        // an entirely idle shard) fire now: every pause key precedes the
+        // window boundary, which precedes every surviving local event.
+        while self.pause_idx < self.pauses.len() {
+            self.fire_pause(self.pause_idx);
+            self.pause_idx += 1;
+        }
+        self.scratch.survivors.clear();
+        while let Some(Reverse((Time(t), _, mid))) = self.scratch.local.pop() {
+            self.scratch.survivors.push((t, ModelId(mid)));
         }
         ShardOut {
             step_scheduled: self.step_scheduled,
-            survivors,
             sim_events: self.sim_events,
             violations: self.violations,
             tokens: self.tokens,
             last_t: self.last_t,
+            scratch: self.scratch,
+        }
+    }
+
+    /// Fire pauses whose key `(t, class 1, master seq)` precedes `key`.
+    fn fire_pauses_before(&mut self, key: (Time, u8, u64)) {
+        while self.pause_idx < self.pauses.len() {
+            let p = &self.pauses[self.pause_idx];
+            if (Time(p.t), 1u8, p.seq) >= key {
+                break;
+            }
+            self.fire_pause(self.pause_idx);
+            self.pause_idx += 1;
+        }
+    }
+
+    /// Apply pause `i` shard-locally: `Slow` updates this worker's slow-
+    /// factor copy (replica of `Cluster::set_gpu_slow`); `Sample` captures
+    /// a [`PartialSample`] of the owned GPUs — the replica of the
+    /// `Simulator::on_sample` reads restricted to slots this shard owns,
+    /// plus the window-cumulative violation/token counters the master
+    /// needs to reconstruct `cum_violations` / `inst_token_tput` exactly.
+    fn fire_pause(&mut self, i: usize) {
+        match self.pauses[i].kind {
+            PauseKind::Slow { g, factor } => {
+                self.scratch.slow[g] = factor;
+            }
+            PauseKind::Sample => {
+                let t = self.pauses[i].t;
+                let n = self.gpus.len();
+                // `partials` is never truncated: entry `k` (and its inner
+                // buffers) is recycled window after window; `sample_no`
+                // bounds the entries valid for THIS window.
+                let k = self.sample_no;
+                self.sample_no += 1;
+                if self.scratch.partials.len() <= k {
+                    self.scratch.partials.push(PartialSample::default());
+                }
+                let mut part = std::mem::take(&mut self.scratch.partials[k]);
+                part.reset(t, n);
+                for g in 0..n {
+                    if let Some(dev) = self.gpus[g].as_deref_mut() {
+                        let st = dev.kvc.stats();
+                        part.gpus[g] =
+                            (st.weight_bytes, st.kv_mapped_bytes, st.kv_used_bytes, st.free_bytes);
+                    }
+                    if let Some(q) = self.queues[g].as_deref() {
+                        part.queue_lens[g] = q.len();
+                    }
+                }
+                for r in self.residency.values() {
+                    let lead = r.gpus[0].0 as usize;
+                    let eng = self.engines[r.engine_idx].as_deref().expect("engine owned");
+                    part.queue_lens[lead] += eng.queue_len() + eng.running_len();
+                }
+                part.window_violations = self.violations;
+                part.window_tokens = self.tokens;
+                self.scratch.partials[k] = part;
+            }
         }
     }
 
@@ -391,7 +728,7 @@ impl<'a> ShardCtx<'a> {
     fn schedule_step(&mut self, m: ModelId, t: f64) {
         if self.step_scheduled.insert(m) {
             self.seq += 1;
-            self.local.push(Reverse((Time(t), self.seq, m.0)));
+            self.scratch.local.push(Reverse((Time(t), self.seq, m.0)));
         }
     }
 
@@ -523,14 +860,17 @@ impl<'a> ShardCtx<'a> {
             return;
         }
         if self.faults_enabled {
-            // Replica of `Cluster::group_slow_factor` over the snapshot.
-            let scale = group.iter().map(|g| self.slow[g.0 as usize]).fold(1.0, f64::max);
+            // Replica of `Cluster::group_slow_factor` over the worker-local
+            // copy (updated in place by `Slow` pauses mid-window).
+            let scale =
+                group.iter().map(|g| self.scratch.slow[g.0 as usize]).fold(1.0, f64::max);
             self.engines[eidx].as_deref_mut().expect("engine owned").time_scale = scale;
         }
         let outcome = {
             let lead_perf = &self.gpu_perfs[lead];
-            let (engines, gpus) = (&mut self.engines, &mut self.gpus);
-            let mut ga = ShardAlloc::new(gpus, &group, m);
+            let (engines, gpus, alloc) =
+                (&mut self.engines, &mut self.gpus, &mut self.scratch.alloc);
+            let mut ga = ShardAlloc::new(gpus, &group, m, alloc);
             engines[eidx].as_deref_mut().expect("engine owned").step(now, lead_perf, &mut ga)
         };
         for c in outcome.completions {
@@ -600,12 +940,19 @@ impl Simulator {
             .map(|_| RunMetrics::with_full_dump(self.cfg.metrics_full_dump))
             .collect();
 
+        // Run-lifetime plan cache + per-worker scratch + pause list, all
+        // recycled window after window (tentpoles 2 and 4).
+        let mut plan_cache = PlanCache::new();
+        let mut scratch: Vec<WorkerScratch> =
+            (0..n_shards).map(|_| WorkerScratch::default()).collect();
+        let mut pauses: Vec<Pause> = Vec::new();
+
         let mut last_now = 0.0f64;
         loop {
             // -------- window build: pop sources in sequential merged order
-            let plan = WindowPlan::build(&self.cluster, &self.gpu_queues, n_shards);
-            let mut seeds: Vec<VecDeque<SeedEv>> =
-                (0..n_shards).map(|_| VecDeque::new()).collect();
+            let plan =
+                plan_cache.plan_for(&self.cluster, &self.gpu_queues, self.queue_version, n_shards);
+            pauses.clear();
             let boundary = loop {
                 let heap_head = self.heap.peek().map(|Reverse((t, ..))| t.0);
                 let arrival_head = match &mut scaled {
@@ -650,7 +997,7 @@ impl Simulator {
                     );
                     self.next_req_id += 1;
                     let lead = self.cluster.residency[&m].gpus[0].0 as usize;
-                    seeds[plan.gpu_shard[lead]].push_back(SeedEv::Arrival {
+                    scratch[plan.gpu_shard[lead]].seeds.push_back(SeedEv::Arrival {
                         model_idx: idx,
                         raw_prompt_tokens: e.prompt_tokens,
                         req,
@@ -670,9 +1017,24 @@ impl Simulator {
                     1 => {
                         let m = ModelId(payload as u32);
                         let s = plan.shard_of_model(m, &self.cluster.residency);
-                        seeds[s].push_back(SeedEv::Step { t: ht, seq, model: m });
+                        scratch[s].seeds.push_back(SeedEv::Step { t: ht, seq, model: m });
                     }
-                    2 | 3 | 4 => break Boundary::Heap { t: ht, kind, payload },
+                    // Timeline samples never mutate residency/grouping:
+                    // batch-internal pause, keep popping on the same plan.
+                    3 => pauses.push(Pause { t: ht, seq, kind: PauseKind::Sample }),
+                    // Slowdown-only fault actions likewise; resolve the
+                    // factor `on_fault` would pass to `set_gpu_slow` now.
+                    4 if self.fault_schedule[payload].1.is_slowdown_only() => {
+                        let (g, factor) = match self.fault_schedule[payload].1 {
+                            FaultAction::SlowStart(g, f) => (g as usize, f),
+                            FaultAction::SlowEnd(g) => (g as usize, 1.0),
+                            _ => unreachable!("is_slowdown_only"),
+                        };
+                        pauses.push(Pause { t: ht, seq, kind: PauseKind::Slow { g, factor } });
+                    }
+                    // Epochs and residency/allocator-mutating faults stay
+                    // full recompose barriers.
+                    2 | 4 => break Boundary::Heap { t: ht, kind, payload },
                     // Pre-pushed arrivals (kind 0) only exist in the legacy
                     // `stream_arrivals = false` mode, which never dispatches
                     // to the sharded loop.
@@ -681,7 +1043,12 @@ impl Simulator {
             };
 
             // -------- run the window on worker threads
-            let window_events: usize = seeds.iter().map(|s| s.len()).sum();
+            let window_events: usize = scratch.iter().map(|s| s.seeds.len()).sum();
+            // Window-base counter snapshots: partial samples report
+            // *window-cumulative* violations/tokens, so pause replay below
+            // reconstructs each sequential sample read as base + Σ shards.
+            let base_violations = self.cum_violations;
+            let base_tokens = self.tokens_since_sample;
             if window_events > 0 {
                 let (limit, inclusive) = match &boundary {
                     Boundary::End => (tail_limit, true),
@@ -699,8 +1066,12 @@ impl Simulator {
                 let n_gpus = self.cluster.n_gpus();
                 let n_eng = self.cluster.engines.len();
                 let n_models = self.specs.len();
-                let slow: Vec<f64> =
-                    (0..n_gpus).map(|g| self.cluster.gpu_slow_factor(g)).collect();
+                // Per-worker slow-factor copies (not one shared snapshot):
+                // `Slow` pauses mutate them mid-window, worker-locally.
+                for ws in &mut scratch {
+                    ws.slow.clear();
+                    ws.slow.extend((0..n_gpus).map(|g| self.cluster.gpu_slow_factor(g)));
+                }
                 let mut eng_shard = vec![usize::MAX; n_eng];
                 let mut model_shard = vec![usize::MAX; n_models];
                 for (m, r) in &self.cluster.residency {
@@ -764,14 +1135,14 @@ impl Simulator {
                     let mut lra_it = lra_refs.into_iter();
                     let mut res_it = res_maps.into_iter();
                     let mut ss_it = ss_parts.into_iter();
-                    let mut seed_it = seeds.into_iter();
                     let mut sink_it = shard_sinks.iter_mut();
+                    let mut scratch_it = scratch.iter_mut();
+                    let pauses: &[Pause] = &pauses;
                     for _ in 0..n_shards {
                         ctxs.push(ShardCtx {
                             specs,
                             model_index,
                             gpu_perfs,
-                            slow: &slow,
                             slack_aware,
                             faults_enabled,
                             engines: eng_it.next().expect("one per shard"),
@@ -782,8 +1153,10 @@ impl Simulator {
                             residency: res_it.next().expect("one per shard"),
                             metrics: sink_it.next().expect("one per shard"),
                             step_scheduled: ss_it.next().expect("one per shard"),
-                            seeds: seed_it.next().expect("one per shard"),
-                            local: BinaryHeap::new(),
+                            pauses,
+                            pause_idx: 0,
+                            sample_no: 0,
+                            scratch: std::mem::take(scratch_it.next().expect("one per shard")),
                             seq: seq_snapshot,
                             sim_events: 0,
                             violations: 0,
@@ -791,16 +1164,18 @@ impl Simulator {
                             last_t: f64::NEG_INFINITY,
                         });
                     }
-                    let active = ctxs.iter().filter(|c| !c.seeds.is_empty()).count();
+                    let active = ctxs.iter().filter(|c| !c.scratch.seeds.is_empty()).count();
                     if active <= 1 {
                         // Nothing to overlap: run inline, no thread spawns.
+                        // (Empty-seed shards still run: they fire every
+                        // pause, contributing their owned GPUs' partials.)
                         ctxs.into_iter().map(|c| c.run_window(limit, inclusive)).collect()
                     } else {
                         std::thread::scope(|scope| {
                             let handles: Vec<_> = ctxs
                                 .into_iter()
                                 .map(|c| {
-                                    if c.seeds.is_empty() {
+                                    if c.scratch.seeds.is_empty() {
                                         // Trivially empty: resolve inline.
                                         Err(c.run_window(limit, inclusive))
                                     } else {
@@ -820,7 +1195,7 @@ impl Simulator {
                 };
 
                 // -------- recompose (order matters; see module docs)
-                for out in outs {
+                for (s, out) in outs.into_iter().enumerate() {
                     self.step_scheduled.extend(out.step_scheduled);
                     self.metrics.sim_events += out.sim_events;
                     self.cum_violations += out.violations;
@@ -828,13 +1203,77 @@ impl Simulator {
                     if out.last_t > last_now {
                         last_now = out.last_t;
                     }
-                    for (t, m) in out.survivors {
+                    for &(t, m) in &out.scratch.survivors {
                         // The model is still in the merged `step_scheduled`
                         // (its shard never removed it), so push directly.
                         self.push_ev(t, Ev::Step(m));
                     }
+                    // Hand the scratch containers back for the next window.
+                    scratch[s] = out.scratch;
                 }
                 self.demand_cache_at = f64::NEG_INFINITY;
+
+                // -------- pause replay: apply the batch-internal control
+                // events in pop order, exactly as the sequential loop
+                // interleaved them (each already *observed* mid-window by
+                // the workers; this is the master-side half).
+                let mut consumed: u64 = 0;
+                let mut sample_no = 0usize;
+                for p in &pauses {
+                    self.metrics.sim_events += 1;
+                    if p.t > last_now {
+                        last_now = p.t;
+                    }
+                    match p.kind {
+                        PauseKind::Slow { g, factor } => self.cluster.set_gpu_slow(g, factor),
+                        PauseKind::Sample => {
+                            let k = sample_no;
+                            sample_no += 1;
+                            // Sequential reads at this sample, recomposed
+                            // from disjoint integer parts: cumulative
+                            // counters are window base + Σ shard deltas at
+                            // pause k; the throughput numerator is "tokens
+                            // since the previous sample" = cumulative at k
+                            // minus what earlier samples consumed.
+                            let cum_viol = base_violations
+                                + scratch
+                                    .iter()
+                                    .map(|ws| ws.partials[k].window_violations)
+                                    .sum::<usize>();
+                            let cum_tok = base_tokens
+                                + scratch.iter().map(|ws| ws.partials[k].window_tokens).sum::<u64>();
+                            let tput =
+                                (cum_tok - consumed) as f64 / self.cfg.sample_dt.max(1e-9);
+                            consumed = cum_tok;
+                            self.timeline.push(merge_partial_samples(
+                                p.t,
+                                self.cluster.n_gpus(),
+                                scratch.iter().map(|ws| &ws.partials[k]),
+                                cum_viol,
+                                tput,
+                            ));
+                        }
+                    }
+                }
+                // The recompose fold above re-added every window token;
+                // settle the "since last sample" counter to its sequential
+                // value (total minus what the samples consumed).
+                self.tokens_since_sample -= consumed;
+            } else {
+                // No window events: the batch was pure control traffic.
+                // Replay pauses with the ordinary sequential methods — the
+                // master owns all state, so `on_sample` reads it directly.
+                for i in 0..pauses.len() {
+                    let (t, kind) = (pauses[i].t, &pauses[i].kind);
+                    self.metrics.sim_events += 1;
+                    if t > last_now {
+                        last_now = t;
+                    }
+                    match *kind {
+                        PauseKind::Sample => self.on_sample(t),
+                        PauseKind::Slow { g, factor } => self.cluster.set_gpu_slow(g, factor),
+                    }
+                }
             }
 
             // -------- the control event itself, sequentially on the master
@@ -857,7 +1296,9 @@ impl Simulator {
                                 self.push_ev(t + self.cfg.control_epoch, Ev::Epoch);
                             }
                         }
-                        3 => self.on_sample(t),
+                        // Samples (kind 3) and slowdown-only faults are
+                        // batch-internal pauses now — they never break a
+                        // window, so only hard fault actions land here.
                         4 => self.on_fault(payload, t),
                         _ => unreachable!(),
                     }
@@ -935,6 +1376,52 @@ mod tests {
         assert_eq!(plan.gpu_shard, vec![0, 1, 0, 1, 0]);
         let plan1 = WindowPlan::build(&cluster, &queues, 1);
         assert!(plan1.gpu_shard.iter().all(|&s| s == 0));
+    }
+
+    #[test]
+    fn lpt_deal_splits_skewed_queue_load() {
+        let cluster = Cluster::new(5, 80 * GB, 8, GpuPerf::default());
+        let mut queues: Vec<Vec<Request>> = (0..5).map(|_| Vec::new()).collect();
+        let mut id = 0u64;
+        for (g, n) in [5usize, 0, 3, 1, 0].into_iter().enumerate() {
+            for _ in 0..n {
+                queues[g].push(Request::new(id, ModelId(99), 0.0, 64, 16, 1.0, 0.1));
+                id += 1;
+            }
+        }
+        let plan = WindowPlan::build(&cluster, &queues, 2);
+        // Loads [5, 0, 3, 1, 0]: LPT isolates hot GPU 0 on shard 0 and
+        // groups the rest (3 + 1 + 0 + 0) on shard 1. The historical
+        // round-robin deal [0, 1, 0, 1, 0] would have stacked 8 of the 9
+        // queued requests on shard 0.
+        assert_eq!(plan.gpu_shard, vec![0, 1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn plan_cache_invalidates_on_topology_and_queue_versions() {
+        let mut cluster = Cluster::new(2, 80 * GB, 8, GpuPerf::default());
+        let queues: Vec<Vec<Request>> = (0..2).map(|_| Vec::new()).collect();
+        let mut cache = PlanCache::new();
+        cache.plan_for(&cluster, &queues, 0, 2);
+        assert_eq!(cache.rebuilds, 1);
+        // Same key across a no-op barrier: the plan is reused verbatim.
+        cache.plan_for(&cluster, &queues, 0, 2);
+        cache.plan_for(&cluster, &queues, 0, 2);
+        assert_eq!(cache.rebuilds, 1);
+        // A master-side enqueue bumps `queue_version` -> rebuild.
+        cache.plan_for(&cluster, &queues, 1, 2);
+        assert_eq!(cache.rebuilds, 2);
+        // A residency-mutating epoch (activation) bumps `topo_version`.
+        let spec = catalog_subset(30).into_iter().find(|s| s.tp == 1).unwrap();
+        let v0 = cluster.topo_version;
+        cluster.activate(&spec, vec![GpuId(0)], 0.0).unwrap();
+        assert!(cluster.topo_version > v0);
+        cache.plan_for(&cluster, &queues, 1, 2);
+        assert_eq!(cache.rebuilds, 3);
+        // ... and so does eviction.
+        cluster.evict(spec.id);
+        cache.plan_for(&cluster, &queues, 1, 2);
+        assert_eq!(cache.rebuilds, 4);
     }
 
     #[test]

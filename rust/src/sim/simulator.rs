@@ -341,6 +341,15 @@ pub struct Simulator {
     pub(crate) next_req_id: u64,
     pub(crate) cum_violations: usize,
     pub(crate) tokens_since_sample: u64,
+    /// Monotonic master-side queue-topology version: bumped whenever a
+    /// request is *added* to a shared GPU queue outside the shard workers
+    /// (`enqueue_on_gpu`, `PolicyCtx::{put,extend}_gpu_queue`). Removals
+    /// never invalidate a cached `WindowPlan` (fewer edges only coarsen the
+    /// union-find partition, which stays a valid superset-grouping), so
+    /// `take_gpu_queue` and worker-side pops don't bump. Paired with
+    /// `Cluster::topo_version` to key the sharded loop's plan cache; never
+    /// read on the sequential path.
+    pub(crate) queue_version: u64,
 }
 
 impl Simulator {
@@ -392,6 +401,7 @@ impl Simulator {
             next_req_id: 0,
             cum_violations: 0,
             tokens_since_sample: 0,
+            queue_version: 0,
             cluster,
             slos,
             specs,
@@ -680,6 +690,7 @@ impl Simulator {
         let ready = res.ready_at;
         let m = req.model;
         self.gpu_queues[lead].push(req);
+        self.queue_version += 1;
         self.schedule_step(m, now.max(ready));
     }
 
@@ -1351,10 +1362,12 @@ impl<'a> PolicyCtx<'a> {
     /// Re-attach a queue taken via [`take_gpu_queue`](Self::take_gpu_queue).
     pub fn put_gpu_queue(&mut self, g: usize, q: Vec<Request>) {
         self.sim.gpu_queues[g] = q;
+        self.sim.queue_version += 1;
     }
 
     pub fn extend_gpu_queue(&mut self, g: usize, reqs: Vec<Request>) {
         self.sim.gpu_queues[g].extend(reqs);
+        self.sim.queue_version += 1;
     }
 
     /// Schedule an engine step for model `m` at time `t` (deduplicated:
@@ -1803,6 +1816,44 @@ mod tests {
             vec![(4, 0), (3, 0), (2, 0), (1, 3), (0, 7)],
             "equal-time ordering must be FIFO push order, not kind-major"
         );
+    }
+
+    /// Companion of `event_heap_ties_pop_in_push_order` for the windowed
+    /// sharded loop: batch-internal pauses (samples, slowdown-only fault
+    /// actions) must not perturb local event order. With a sample cadence
+    /// dense enough that hundreds of pauses land *between* step events —
+    /// plus overlapping slowdown windows — shard workers keep their local
+    /// heaps live across each pause; a survivor re-push at a paused
+    /// (non-recompose) barrier would re-sequence equal-time `(time, seq)`
+    /// pairs and shift the bits asserted here.
+    #[test]
+    fn paused_barriers_preserve_local_event_order() {
+        let trace = small_trace(4, 300.0, 11).scale_rate(2.0);
+        let run = |shards: u32| {
+            let mut cfg = SimConfig::new("prism", 2).shards(shards);
+            cfg.slo_scale = 10.0;
+            cfg.sample_dt = 0.25; // ~1200 samples, nearly all mid-window
+            cfg.faults =
+                crate::fault::resolve("slow@20-120:g0x3;slow@60-180:g1x1.5", 2, trace.duration)
+                    .unwrap();
+            Simulator::new(cfg, specs_for(&trace)).run(&trace)
+        };
+        let (a, tla) = run(1);
+        let (b, tlb) = run(4);
+        assert_eq!(a.sim_events, b.sim_events);
+        assert_eq!(a.total(), b.total());
+        assert_eq!(a.completed(), b.completed());
+        assert_eq!(a.ttft_attainment().to_bits(), b.ttft_attainment().to_bits());
+        assert_eq!(a.wall_seconds.to_bits(), b.wall_seconds.to_bits());
+        assert_eq!(a.busy_seconds.to_bits(), b.busy_seconds.to_bits());
+        assert_eq!(tla.len(), tlb.len());
+        for (sa, sb) in tla.iter().zip(&tlb) {
+            assert_eq!(sa.t.to_bits(), sb.t.to_bits());
+            assert_eq!(sa.gpus, sb.gpus);
+            assert_eq!(sa.queue_lens, sb.queue_lens);
+            assert_eq!(sa.cum_violations, sb.cum_violations);
+            assert_eq!(sa.inst_token_tput.to_bits(), sb.inst_token_tput.to_bits());
+        }
     }
 
     #[test]

@@ -18,7 +18,11 @@
 //! contended 2-GPU cluster (cross-shard queue/migration traffic), a
 //! memory-pressure churn squeeze (preemption + eviction), a seeded
 //! `churn:<seed>` fault plan (crash re-routing at fault barriers), and a
-//! heterogeneous `2xa100+4xl4` fleet (per-GPU perf/cost threading).
+//! heterogeneous `2xa100+4xl4` fleet (per-GPU perf/cost threading) — plus
+//! one config per windowed-loop fast path: dense samples + slowdown-only
+//! fault windows (batch-internal pauses, timeline compared bitwise),
+//! rapid no-op epochs (cached window plans), and a skewed-load fleet
+//! (LPT dealing).
 
 use prism::cluster::FleetSpec;
 use prism::experiments::e2e::assign_ids;
@@ -154,6 +158,113 @@ fn heterogeneous_fleet_all_policies() {
             FleetSpec::parse("2xa100+4xl4").expect("fleet spec"),
         )
         .slo_scale(8.0);
+        assert_shard_identity(&cfg, &specs, &trace, name);
+    }
+}
+
+/// Like [`assert_shard_identity`], but additionally requires the timeline
+/// to match bitwise — samples on the sharded path are reconstructed from
+/// per-shard [`prism::metrics::PartialSample`]s at batch-internal pauses,
+/// and every reconstructed field must equal the sequential read exactly.
+fn assert_shard_identity_with_timeline(
+    cfg: &SimConfig,
+    specs: &[ModelSpec],
+    trace: &Trace,
+    label: &str,
+) {
+    let (seq, tl_seq) = Simulator::new(cfg.clone().shards(1), specs.to_vec()).run(trace);
+    let (par, tl_par) = Simulator::new(cfg.clone().shards(4), specs.to_vec()).run(trace);
+    assert_eq!(
+        fingerprint(&seq),
+        fingerprint(&par),
+        "{label}: 4-shard run diverged from the sequential loop"
+    );
+    assert_eq!(tl_seq.len(), tl_par.len(), "{label}: timeline length diverged");
+    for (a, b) in tl_seq.iter().zip(&tl_par) {
+        assert_eq!(a.t.to_bits(), b.t.to_bits(), "{label}: sample time");
+        assert_eq!(a.gpus, b.gpus, "{label}: per-GPU memory stats at t={}", a.t);
+        assert_eq!(a.queue_lens, b.queue_lens, "{label}: queue lens at t={}", a.t);
+        assert_eq!(a.cum_violations, b.cum_violations, "{label}: violations at t={}", a.t);
+        assert_eq!(
+            a.inst_token_tput.to_bits(),
+            b.inst_token_tput.to_bits(),
+            "{label}: throughput at t={}",
+            a.t
+        );
+    }
+}
+
+/// Fast path 1 — window batching: a sample cadence dense enough that most
+/// control events are batch-internal pauses, plus overlapping
+/// slowdown-only fault windows (the other pause class). Workers pause
+/// mid-window and the master reconstructs each `TimelineSample` from
+/// disjoint per-shard partials; the timeline must match the sequential
+/// loop bitwise.
+#[test]
+fn sample_dense_slowdown_batches_all_policies() {
+    let specs = assign_ids(
+        table3_catalog()
+            .into_iter()
+            .filter(|m| m.name.contains("8b") || m.name.contains("7b"))
+            .take(8)
+            .collect(),
+    );
+    let trace = generate(&TraceGenConfig::novita_like(8, 300.0, 42)).scale_rate(2.0);
+    for name in registry().names() {
+        let mut cfg = SimConfig::new(name, 2);
+        cfg.slo_scale = 8.0;
+        cfg.sample_dt = 0.5;
+        cfg.faults = prism::fault::resolve(
+            "slow@30-150:g0x2.5;slow@90-240:g1x1.5",
+            2,
+            trace.duration,
+        )
+        .expect("slowdown spec");
+        assert_shard_identity_with_timeline(&cfg, &specs, &trace, name);
+    }
+}
+
+/// Fast path 2 — cached window plans: control epochs dense enough that
+/// most are no-ops over a stable placement, so consecutive windows reuse
+/// the `(topo_version, queue_version)`-keyed plan verbatim, while the
+/// epochs that *do* move models must invalidate it (the unit test for the
+/// counter mechanics is `sim::shard::tests`).
+#[test]
+fn cached_plan_reuse_across_noop_epochs_all_policies() {
+    let specs = assign_ids(
+        catalog_subset(30)
+            .into_iter()
+            .filter(|m| !m.is_tp() && m.params < 4_000_000_000)
+            .take(10)
+            .collect(),
+    );
+    let trace = generate(&TraceGenConfig::novita_like(10, 240.0, 99));
+    for name in registry().names() {
+        let mut cfg = SimConfig::new(name, 4);
+        cfg.slo_scale = 8.0;
+        cfg.control_epoch = 2.0;
+        assert_shard_identity(&cfg, &specs, &trace, name);
+    }
+}
+
+/// Fast path 3 — LPT dealing: a skewed-popularity fleet (Zipf-ish trace at
+/// 1.5x on 6 GPUs) where per-component loads differ sharply, so the
+/// longest-processing-time-first deal diverges from the historical
+/// round-robin. Metrics must be invariant to the dealing — shards only
+/// group independent components.
+#[test]
+fn lpt_dealing_skewed_load_all_policies() {
+    let specs = assign_ids(
+        catalog_subset(30)
+            .into_iter()
+            .filter(|m| !m.is_tp() && m.params < 4_000_000_000)
+            .take(12)
+            .collect(),
+    );
+    let trace = generate(&TraceGenConfig::novita_like(12, 240.0, 5)).scale_rate(1.5);
+    for name in registry().names() {
+        let mut cfg = SimConfig::new(name, 6);
+        cfg.slo_scale = 8.0;
         assert_shard_identity(&cfg, &specs, &trace, name);
     }
 }
