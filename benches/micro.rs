@@ -1,6 +1,8 @@
 //! Microbenchmarks over the hot paths (custom harness; see DESIGN.md SSPerf):
 //! kvcached page/block operations, Moore-Hodgson arbitration, Algorithm 1
 //! placement, trace generation, and simulator event throughput.
+// Printing is the point of this target (see Cargo.toml lints.clippy).
+#![allow(clippy::print_stdout, clippy::print_stderr)]
 
 use prism::bench::harness::{black_box, run};
 use prism::kvcached::Kvcached;

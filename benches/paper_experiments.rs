@@ -7,6 +7,8 @@
 //!   --jobs N    sweep worker count (default: auto; 1 = sequential)
 //!   --shards N  intra-run event-loop shard count applied to every
 //!               experiment config (default: 1 = sequential; 0 = auto)
+// Printing is the point of this target (see Cargo.toml lints.clippy).
+#![allow(clippy::print_stdout, clippy::print_stderr)]
 
 use std::time::Instant;
 

@@ -41,6 +41,8 @@
 //!   --scenario <name>    only run scenarios whose name contains <name>
 //!   --shards N           override every scenario's intra-run shard count
 //!                        (0 = auto, 1 = sequential; default: per-scenario)
+// Printing is the point of this target (see Cargo.toml lints.clippy).
+#![allow(clippy::print_stdout, clippy::print_stderr)]
 
 use std::collections::BTreeMap;
 use std::time::Instant;

@@ -3,6 +3,8 @@
 //! balloon to fund another, and watch the pool accounting stay conserved.
 //!
 //! Run: `cargo run --release --example balloon_demo`
+// Printing is the point of this target (see Cargo.toml lints.clippy).
+#![allow(clippy::print_stdout, clippy::print_stderr)]
 
 use prism::kvcached::{Kvcached, KvError};
 use prism::model::spec::ModelId;

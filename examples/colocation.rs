@@ -6,6 +6,8 @@
 //! The busy model's achievable batch - and therefore throughput - grows.
 //!
 //! Run: `make artifacts && cargo run --release --example colocation`
+// Printing is the point of this target (see Cargo.toml lints.clippy).
+#![allow(clippy::print_stdout, clippy::print_stderr)]
 
 use prism::serve::{RealServer, ServeRequest, ServerConfig};
 use prism::util::rng::Rng;

@@ -7,6 +7,8 @@
 //! forward pass on the PJRT CPU client, and reports TTFT/TPOT/throughput.
 //!
 //! Run: `make artifacts && cargo run --release --example quickstart`
+// Printing is the point of this target (see Cargo.toml lints.clippy).
+#![allow(clippy::print_stdout, clippy::print_stderr)]
 
 use prism::serve::{RealServer, ServeRequest, ServerConfig};
 use prism::util::rng::Rng;

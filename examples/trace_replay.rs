@@ -7,6 +7,8 @@
 //! printing the attainment table.
 //!
 //! Run: `cargo run --release --example trace_replay`
+// Printing is the point of this target (see Cargo.toml lints.clippy).
+#![allow(clippy::print_stdout, clippy::print_stderr)]
 
 use prism::bench::harness::Table;
 use prism::experiments::e2e::assign_ids;

@@ -601,6 +601,9 @@ impl Cluster {
         now: f64,
         nvlink: bool,
     ) -> Result<(Vec<crate::request::Request>, f64), crate::kvcached::KvError> {
+        // INVARIANT: callers (policy migration hooks) only migrate models they
+        // just observed in `residency`, and nothing runs between observation
+        // and this call (crash events are separate heap events).
         let res = self.residency.get(&spec.id).expect("model resident").clone();
         assert_eq!(spec.tp, 1, "migration modelled for single-GPU models");
         let kv_bytes = self.engines[res.engine_idx].active_kv_bytes();
@@ -619,6 +622,8 @@ impl Cluster {
                     spec.weight_bytes() + kv_bytes,
                     nvlink,
                 );
+                // INVARIANT: `activate_inner` just re-inserted this model's
+                // residency entry on the Ok path.
                 let r = self.residency.get_mut(&spec.id).unwrap();
                 r.ready_at = now + sw;
                 self.migrations += 1;
@@ -693,6 +698,8 @@ impl<'a> crate::engine::engine::KvAlloc for GroupAlloc<'a> {
         let width = self.group.len();
         for (i, &r) in refs.iter().enumerate() {
             let g = self.group[i % width];
+            // INVARIANT: refs come from this group's own alloc_n in
+            // block-major order, so ref i maps back to the GPU that issued it.
             self.gpus[g.0 as usize].kvc.free_block(r).expect("group free");
         }
     }

@@ -268,6 +268,8 @@ impl SimEngine {
         if requester_idx + 1 >= self.running.len() {
             return false; // requester is the youngest: it must wait instead
         }
+        // INVARIANT: the bound above guarantees a victim behind the
+        // requester, and running_slots is maintained parallel to running.
         let mut r = self.running.pop().expect("younger victim exists");
         let s = self.running_slots.pop().expect("slot parallel to running");
         self.sync_from_slot(&mut r, s);
@@ -290,6 +292,8 @@ impl SimEngine {
             .find(|(_, r)| r.id != protect && r.kv_slot != NO_KV_SLOT)
             .map(|(i, _)| i);
         if let Some(i) = qv {
+            // INVARIANT: `i` came from enumerate() over this same queue, with
+            // no mutation in between.
             let mut r = self.queue.remove(i).expect("victim index in range");
             release_blocks(&mut self.table, kv, &mut r);
             r.preemptions += 1;
@@ -510,6 +514,7 @@ impl SimEngine {
             if self.queue[i].prefill_done_tokens >= total_prefill
                 && (self.running.len() as u32) < self.max_batch
             {
+                // INVARIANT: the while condition bounds `i < queue.len()`.
                 let mut r = self.queue.remove(i).expect("promotion index in range");
                 if r.first_token_time.is_none() {
                     r.first_token_time = Some(end);

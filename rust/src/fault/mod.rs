@@ -21,6 +21,11 @@
 //! bitwise-identical to runs from before this module existed (guarded by
 //! the `policy_identity` A/B tests).
 //!
+//! The faults-are-data contract is machine-checked by `prism lint` (see
+//! ROADMAP "Static analysis"): rule D1 bans in-loop randomness and clock
+//! reads here, and rule D3 requires an INVARIANT: comment at every
+//! unwrap/expect in this module.
+//!
 //! # Spec grammar
 //!
 //! Plans parse from compact `;`-separated clause strings:

@@ -103,6 +103,8 @@ impl ElasticTensor {
             return Err(e);
         }
         for b in blocks {
+            // INVARIANT: the free_slots.len() >= n guard above still holds —
+            // nothing pops free_slots between the check and this loop.
             let slot = self.free_slots.pop().expect("count checked above");
             self.backing[slot as usize] = Some(b);
             out.push(slot);

@@ -180,6 +180,8 @@ fn alloc_block_in(
 ) -> Result<(BlockRef, f64), KvError> {
     // Partial-page priority (D3): top of the partial stack.
     if let Some(&pi) = mk.partial.last() {
+        // INVARIANT: the partial list only ever holds live pages with at
+        // least one free slot (entries are removed the moment they fill).
         let page = mk.pages[pi as usize].as_mut().expect("partial page exists");
         debug_assert!(page.used_count < mk.slots_per_page, "full page in partial list");
         let slot = page.bits.first_free(mk.slots_per_page).expect("slot free");

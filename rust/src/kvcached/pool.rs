@@ -120,6 +120,7 @@ impl PagePool {
         }
         let from_buf = (n as usize).min(self.prealloc.len());
         for _ in 0..from_buf {
+            // INVARIANT: from_buf <= prealloc.len() by the min() above.
             out.push(PhysPage(self.prealloc.pop().unwrap()));
         }
         self.counters.prealloc_hits += from_buf as u64;
@@ -130,6 +131,8 @@ impl PagePool {
             self.counters.map_batches += 1;
             cost = MAP_US_BATCH + MAP_US_PER_PAGE * remaining as f64;
             for _ in 0..remaining {
+                // INVARIANT: free_pages() >= n was checked on entry, and
+                // from_buf pages came off prealloc, not free.
                 out.push(PhysPage(self.free.pop().unwrap()));
             }
         }

@@ -6,6 +6,10 @@
 //! Layer 2/1 (JAX model + Pallas kernels) live under python/ and are AOT
 //! compiled to HLO-text artifacts that `runtime` loads via PJRT.
 
+// The print lints (Cargo.toml `lints.clippy`) keep stdout/stderr noise out
+// of the deterministic core; the modules allowed below are the reporting /
+// serving shell, where printing is the job.
+#[allow(clippy::print_stdout, clippy::print_stderr)]
 pub mod bench;
 pub mod util;
 
@@ -21,12 +25,16 @@ pub mod sched;
 
 pub mod trace;
 
+pub mod lint;
 pub mod metrics;
 pub mod sim;
 pub mod sweep;
 
+#[allow(clippy::print_stdout, clippy::print_stderr)]
 pub mod runtime;
 
+#[allow(clippy::print_stdout, clippy::print_stderr)]
 pub mod serve;
 
+#[allow(clippy::print_stdout, clippy::print_stderr)]
 pub mod experiments;

@@ -1,0 +1,129 @@
+//! D4 hot-path allocation inventory: allowlist parsing and diffing.
+//!
+//! The allowlist (`rust/src/lint/hot_alloc_allowlist.txt`) is the checked-in
+//! budget: one `<module> <token> <count>` line per allocation token per
+//! budgeted module. The diff is two-sided — a live count above its line is a
+//! new allocation site that needs review, and a live count below (or a line
+//! whose token vanished) is a stale budget that must be ratcheted down so
+//! the headroom cannot be silently reclaimed later.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fs;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::lint::{Finding, Rule};
+
+/// `(module relpath, token) -> budgeted count`.
+pub type Allowlist = BTreeMap<(String, String), usize>;
+
+/// Live counts per budgeted module: `relpath -> token -> count`.
+pub type D4Counts = BTreeMap<String, BTreeMap<&'static str, usize>>;
+
+/// Parse allowlist text: `#`-comments and blank lines are skipped; any
+/// other line must be `<relpath> <token> <count>` (unparseable lines are
+/// ignored, matching a missing entry, so they surface as inventory drift).
+pub fn parse_allowlist(text: &str) -> Allowlist {
+    let mut allow = Allowlist::new();
+    for ln in text.lines() {
+        let ln = ln.trim();
+        if ln.is_empty() || ln.starts_with('#') {
+            continue;
+        }
+        let parts: Vec<&str> = ln.split_whitespace().collect();
+        if parts.len() == 3 {
+            if let Ok(count) = parts[2].parse::<usize>() {
+                allow.insert((parts[0].to_string(), parts[1].to_string()), count);
+            }
+        }
+    }
+    allow
+}
+
+/// Load the allowlist from disk; a missing file is an empty budget (every
+/// counted token then reads as a new allocation site).
+pub fn parse_allowlist_file(path: &Path) -> Result<Allowlist> {
+    if !path.is_file() {
+        return Ok(Allowlist::new());
+    }
+    let text =
+        fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
+    Ok(parse_allowlist(&text))
+}
+
+/// Diff live counts against the allowlist. D4 findings carry line 0 (they
+/// are file-level facts), which sorts them ahead of per-line findings.
+pub fn diff(allow: &Allowlist, counts: &D4Counts) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let mut seen: BTreeSet<(String, String)> = BTreeSet::new();
+    for (rel, per_tok) in counts {
+        for (pat, &c) in per_tok {
+            let key = (rel.clone(), (*pat).to_string());
+            let want = allow.get(&key).copied().unwrap_or(0);
+            seen.insert(key);
+            if c > want {
+                findings.push(Finding {
+                    path: rel.clone(),
+                    line: 0,
+                    rule: Rule::D4,
+                    message: format!("allocation inventory `{pat}` = {c}, allowlist {want}"),
+                });
+            } else if c < want {
+                findings.push(Finding {
+                    path: rel.clone(),
+                    line: 0,
+                    rule: Rule::D4,
+                    message: format!("stale allowlist: `{pat}` = {c}, allowlist {want}"),
+                });
+            }
+        }
+    }
+    for ((rel, pat), &want) in allow {
+        if want > 0 && !seen.contains(&(rel.clone(), pat.clone())) {
+            findings.push(Finding {
+                path: rel.clone(),
+                line: 0,
+                rule: Rule::D4,
+                message: format!("stale allowlist: `{pat}` absent, allowlist {want}"),
+            });
+        }
+    }
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_and_skips_comments() {
+        let a = parse_allowlist("# header\n\nsim/shard.rs Vec::new 12\nsim/shard.rs vec![ 2\n");
+        assert_eq!(a.len(), 2);
+        assert_eq!(a[&("sim/shard.rs".to_string(), "Vec::new".to_string())], 12);
+    }
+
+    #[test]
+    fn diff_flags_exceed_stale_and_absent() {
+        let a = parse_allowlist("m.rs Vec::new 2\nm.rs format! 3\nm.rs Box::new 1\n");
+        let mut counts = D4Counts::new();
+        let mut per = BTreeMap::new();
+        per.insert("Vec::new", 4usize); // exceeds 2
+        per.insert("format!", 1usize); // below 3: stale
+        counts.insert("m.rs".to_string(), per); // Box::new absent: stale
+        let f = diff(&a, &counts);
+        assert_eq!(f.len(), 3);
+        assert!(f.iter().all(|x| x.rule == Rule::D4 && x.line == 0));
+        assert!(f.iter().any(|x| x.message.contains("`Vec::new` = 4, allowlist 2")));
+        assert!(f.iter().any(|x| x.message.contains("stale allowlist: `format!` = 1")));
+        assert!(f.iter().any(|x| x.message.contains("`Box::new` absent")));
+    }
+
+    #[test]
+    fn matching_counts_are_silent() {
+        let a = parse_allowlist("m.rs Vec::new 2\n");
+        let mut counts = D4Counts::new();
+        counts.insert("m.rs".to_string(), BTreeMap::from([("Vec::new", 2usize)]));
+        assert!(diff(&a, &counts).is_empty());
+    }
+}

@@ -1,0 +1,362 @@
+//! Comment/string/char-literal-aware lexer over one Rust source file.
+//!
+//! Splits a file into per-line *code text* and per-line *comment text*. In
+//! the code view, the interiors of string literals, raw strings, byte
+//! strings, char literals, and comments are masked with spaces (delimiters
+//! are kept), so rule matching never fires on a banned token that only
+//! appears inside a literal or a comment — which is what lets the lint
+//! module lint itself, pattern tables and all. In the comment view, each
+//! line carries the text of any comment on it, which is the only place the
+//! waiver grammar is recognized.
+//!
+//! The state machine understands nested block comments, `r"…"`/`r#"…"#` raw
+//! strings with arbitrary hash counts, `b"…"`/`br#"…"#` byte strings,
+//! `b'x'` byte chars, and the char-literal vs. lifetime ambiguity (two
+//! characters of lookahead: `'a'` is a char, `'a ` is a lifetime).
+
+/// Per-line views of one source file produced by [`lex`].
+#[derive(Debug)]
+pub struct Lexed {
+    /// Code with literal/comment interiors masked to spaces.
+    pub code: Vec<String>,
+    /// Comment text per line (empty when the line has no comment).
+    pub comments: Vec<String>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum St {
+    Normal,
+    Line,
+    Block,
+    Str,
+    RawStr,
+    Char,
+}
+
+fn flush(out: &mut Lexed, code: &mut String, comment: &mut String, st: &mut St) {
+    out.code.push(code.trim_end_matches('\r').to_string());
+    out.comments.push(std::mem::take(comment));
+    code.clear();
+    if *st == St::Line {
+        *st = St::Normal;
+    }
+}
+
+/// Lex `text` into masked code lines and comment lines (same line count).
+pub fn lex(text: &str) -> Lexed {
+    let chars: Vec<char> = text.chars().collect();
+    let n = chars.len();
+    let mut out = Lexed { code: Vec::new(), comments: Vec::new() };
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut st = St::Normal;
+    let mut depth = 0usize;
+    let mut hashes = 0usize;
+    let mut i = 0usize;
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            flush(&mut out, &mut code, &mut comment, &mut st);
+            i += 1;
+            continue;
+        }
+        match st {
+            St::Normal => {
+                let nxt = if i + 1 < n { chars[i + 1] } else { '\0' };
+                if c == '/' && nxt == '/' {
+                    st = St::Line;
+                    code.push_str("  ");
+                    i += 2;
+                } else if c == '/' && nxt == '*' {
+                    st = St::Block;
+                    depth = 1;
+                    code.push_str("  ");
+                    i += 2;
+                } else if c == '"' {
+                    st = St::Str;
+                    code.push('"');
+                    i += 1;
+                } else if c == 'r' || c == 'b' {
+                    // Raw strings r".."/r#".."#, byte strings b"..",
+                    // br#".."#, and byte char literals b'x'.
+                    let mut j = i + 1;
+                    let mut raw = c == 'r';
+                    if c == 'b' && j < n && chars[j] == 'r' {
+                        raw = true;
+                        j += 1;
+                    }
+                    let mut handled = false;
+                    if raw {
+                        let mut k = j;
+                        while k < n && chars[k] == '#' {
+                            k += 1;
+                        }
+                        if k < n && chars[k] == '"' {
+                            hashes = k - j;
+                            for &ch in &chars[i..=k] {
+                                code.push(ch);
+                            }
+                            i = k + 1;
+                            st = St::RawStr;
+                            handled = true;
+                        }
+                    }
+                    if !handled && c == 'b' && i + 1 < n && chars[i + 1] == '"' {
+                        code.push_str("b\"");
+                        i += 2;
+                        st = St::Str;
+                        handled = true;
+                    }
+                    if !handled && c == 'b' && i + 1 < n && chars[i + 1] == '\'' {
+                        // Byte char literal b'x': emit the prefix, then let
+                        // the quote arm below classify the rest next round.
+                        code.push('b');
+                        i += 1;
+                        handled = true;
+                    }
+                    if !handled {
+                        code.push(c);
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    let nxt2 = if i + 2 < n { chars[i + 2] } else { '\0' };
+                    if nxt == '\\' || (nxt2 == '\'' && nxt != '\'') {
+                        st = St::Char;
+                    }
+                    code.push('\'');
+                    i += 1;
+                } else {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+            St::Line => {
+                comment.push(c);
+                code.push(' ');
+                i += 1;
+            }
+            St::Block => {
+                let nxt = if i + 1 < n { chars[i + 1] } else { '\0' };
+                if c == '/' && nxt == '*' {
+                    depth += 1;
+                    comment.push_str("  ");
+                    code.push_str("  ");
+                    i += 2;
+                } else if c == '*' && nxt == '/' {
+                    depth -= 1;
+                    code.push_str("  ");
+                    i += 2;
+                    if depth == 0 {
+                        st = St::Normal;
+                    } else {
+                        comment.push_str("  ");
+                    }
+                } else {
+                    comment.push(c);
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == '\\' {
+                    code.push_str("  ");
+                    i += 2;
+                } else if c == '"' {
+                    code.push('"');
+                    st = St::Normal;
+                    i += 1;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            St::RawStr => {
+                let mut closed = false;
+                if c == '"' {
+                    let mut k = i + 1;
+                    let mut m = 0usize;
+                    while k < n && chars[k] == '#' && m < hashes {
+                        k += 1;
+                        m += 1;
+                    }
+                    if m == hashes {
+                        code.push('"');
+                        for _ in 0..m {
+                            code.push('#');
+                        }
+                        i = k;
+                        st = St::Normal;
+                        closed = true;
+                    }
+                }
+                if !closed {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            St::Char => {
+                if c == '\\' {
+                    code.push_str("  ");
+                    i += 2;
+                } else if c == '\'' {
+                    code.push('\'');
+                    st = St::Normal;
+                    i += 1;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !code.is_empty() || !comment.is_empty() {
+        flush(&mut out, &mut code, &mut comment, &mut st);
+    }
+    out
+}
+
+/// One flag per line: true when the line sits inside a `#[cfg(test)]` item.
+///
+/// Walks from just after each attribute to the end of the annotated item by
+/// brace matching (a `;` before the first `{` ends an item-less form, e.g. a
+/// cfg-gated `use`). Test-only code is exempt from every rule family.
+pub fn test_lines(code: &[String]) -> Vec<bool> {
+    const ATTR: &str = "#[cfg(test)]";
+    let mut out = vec![false; code.len()];
+    let mut li = 0usize;
+    while li < code.len() {
+        let col = match code[li].find(ATTR) {
+            Some(c) => c,
+            None => {
+                li += 1;
+                continue;
+            }
+        };
+        let mut depth = 0i64;
+        let mut started = false;
+        let mut end = code.len() - 1;
+        let mut done = false;
+        let mut j = li;
+        while j < code.len() && !done {
+            let line = code[j].as_bytes();
+            let mut k = if j == li { col + ATTR.len() } else { 0 };
+            while k < line.len() {
+                match line[k] {
+                    b'{' => {
+                        depth += 1;
+                        started = true;
+                    }
+                    b'}' => {
+                        depth -= 1;
+                        if started && depth == 0 {
+                            end = j;
+                            done = true;
+                            break;
+                        }
+                    }
+                    b';' if !started => {
+                        end = j;
+                        done = true;
+                        break;
+                    }
+                    _ => {}
+                }
+                k += 1;
+            }
+            if !done {
+                j += 1;
+            }
+        }
+        if !done {
+            end = code.len() - 1;
+        }
+        out[li..=end].fill(true);
+        li = end + 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masks_line_comments() {
+        let l = lex("let x = 1; // Instant::now() here\n");
+        assert_eq!(l.code[0], "let x = 1;                       ");
+        assert_eq!(l.comments[0], " Instant::now() here");
+    }
+
+    #[test]
+    fn masks_string_interiors_keeps_delimiters() {
+        let l = lex("let s = \"Instant::now\";\n");
+        assert_eq!(l.code[0], "let s = \"            \";");
+        assert!(l.comments[0].is_empty());
+    }
+
+    #[test]
+    fn escaped_quote_does_not_end_string() {
+        let l = lex("let s = \"a\\\"b\"; let t = 1;\n");
+        assert_eq!(l.code[0], "let s = \"    \"; let t = 1;");
+    }
+
+    #[test]
+    fn raw_strings_with_hashes() {
+        let l = lex("let s = r#\"x \" y\"#; let u = 2;\n");
+        assert_eq!(l.code[0], "let s = r#\"     \"#; let u = 2;");
+        let l = lex("let s = br##\"q\"##;\n");
+        assert_eq!(l.code[0], "let s = br##\" \"##;");
+    }
+
+    #[test]
+    fn byte_strings_and_byte_chars() {
+        let l = lex("let s = b\"abc\"; let c = b'x';\n");
+        assert_eq!(l.code[0], "let s = b\"   \"; let c = b' ';");
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let l = lex("fn f<'a>(x: &'a str) -> &'a str { x }\n");
+        assert_eq!(l.code[0], "fn f<'a>(x: &'a str) -> &'a str { x }");
+        let l = lex("let c = 'z'; let d = '\\n';\n");
+        assert_eq!(l.code[0], "let c = ' '; let d = '  ';");
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let l = lex("a /* one /* two */ still */ b\n");
+        assert_eq!(l.code[0].replace(' ', ""), "ab");
+        assert!(l.comments[0].contains("still"));
+    }
+
+    #[test]
+    fn multiline_block_comment_spans_lines() {
+        let l = lex("x /* c1\nc2 */ y\n");
+        assert_eq!(l.comments[0], " c1");
+        assert!(l.code[1].contains('y'));
+        assert_eq!(l.comments[1], "c2 ");
+    }
+
+    #[test]
+    fn last_line_without_newline_is_kept() {
+        let l = lex("let a = 1;");
+        assert_eq!(l.code.len(), 1);
+        assert_eq!(l.code[0], "let a = 1;");
+    }
+
+    #[test]
+    fn cfg_test_items_are_marked() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n  fn t() {}\n}\nfn live2() {}\n";
+        let l = lex(src);
+        let t = test_lines(&l.code);
+        assert_eq!(t, vec![false, true, true, true, true, false]);
+    }
+
+    #[test]
+    fn cfg_test_use_item_ends_at_semicolon() {
+        let src = "#[cfg(test)]\nuse foo::bar;\nfn live() {}\n";
+        let l = lex(src);
+        let t = test_lines(&l.code);
+        assert_eq!(t, vec![true, true, false]);
+    }
+}

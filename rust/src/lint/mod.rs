@@ -1,0 +1,215 @@
+//! `prism lint` — a contract-enforcing static-analysis pass over the
+//! crate's own sources.
+//!
+//! The simulator's determinism guarantees (byte-stable experiment tables,
+//! shard-count-invariant metric fingerprints, seeded fault plans) are
+//! contracts that ordinary tests probe only pointwise. This pass enforces
+//! their *preconditions* syntactically, on every build, with no external
+//! tooling: a comment/string-aware lexer (see `lexer`), five rule families
+//! with stable IDs (see `rules`), an in-source waiver syntax with mandatory
+//! justifications (see `waivers`), and a two-sided allocation budget for
+//! the hot-path modules (see `inventory`).
+//!
+//! Three enforcement points share this module: the `prism lint` subcommand
+//! (human + `--json` CI output), the `lint_self` integration test (plain
+//! `cargo test` fails on a violation), and the `static-analysis` CI leg
+//! (uploads the JSON report as an artifact). All three call [`run`].
+//!
+//! Diagnostic paths are normalized relative to the enclosing Cargo package
+//! root regardless of the process working directory, so reports are
+//! byte-identical wherever the binary is invoked from.
+
+pub mod inventory;
+pub mod lexer;
+pub mod report;
+pub mod rules;
+pub mod waivers;
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+pub use rules::Rule;
+
+/// One diagnostic: `path:line rule: message`. D4 findings use line 0 (the
+/// inventory is a file-level fact).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Repo-root-relative path after [`run`] (scan-root-relative inside
+    /// `rules::scan_file`).
+    pub path: String,
+    /// 1-based line number; 0 for file-level findings.
+    pub line: usize,
+    pub rule: Rule,
+    pub message: String,
+}
+
+/// Which paths (relative to the scan root, `/`-separated, directories with
+/// a trailing `/`) each rule family applies to. [`LintConfig::prism`] is
+/// the crate's own contract surface; fixture tests build their own.
+#[derive(Debug)]
+pub struct LintConfig {
+    /// Modules allowed to touch wall clocks / env / OS randomness: the
+    /// I/O shell, not the deterministic core.
+    pub d1_exempt: &'static [&'static str],
+    /// Fingerprinted modules where hash-order must not leak into results.
+    pub d2_surface: &'static [&'static str],
+    /// Contract surface where every unwrap/expect needs an INVARIANT:.
+    pub d3_surface: &'static [&'static str],
+    /// Per-token hot-path modules with a checked-in allocation budget.
+    pub d4_budgeted: &'static [&'static str],
+    /// Placement-policy modules that must stay pure.
+    pub d5_surface: &'static [&'static str],
+    /// D4 allowlist path, relative to the scan root.
+    pub allowlist_file: &'static str,
+}
+
+impl LintConfig {
+    /// The crate's own rule surfaces (scan root: `rust/src`).
+    pub fn prism() -> LintConfig {
+        LintConfig {
+            d1_exempt: &["util/logger.rs", "bench/", "serve/", "runtime/", "main.rs"],
+            d2_surface: &[
+                "sim/",
+                "sweep/",
+                "metrics/",
+                "fault/",
+                "engine/",
+                "kvcached/",
+                "cluster/",
+                "sched/",
+            ],
+            d3_surface: &[
+                "sim/",
+                "engine/",
+                "kvcached/",
+                "cluster/",
+                "fault/",
+                "sched/",
+                "metrics/",
+                "sweep/",
+                "trace/",
+                "model/",
+                "request.rs",
+            ],
+            d4_budgeted: &[
+                "engine/engine.rs",
+                "kvcached/manager.rs",
+                "kvcached/pool.rs",
+                "sim/simulator.rs",
+                "sim/shard.rs",
+            ],
+            d5_surface: &["sim/policies/"],
+            allowlist_file: "lint/hot_alloc_allowlist.txt",
+        }
+    }
+}
+
+/// The full result of one lint pass.
+#[derive(Debug)]
+pub struct LintReport {
+    /// Sorted by (path, line, rule); empty means the tree is clean.
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+}
+
+/// Scan every `.rs` file under `root` (recursively, sorted), apply the
+/// rule surfaces in `cfg`, diff the D4 inventory, and return the findings
+/// sorted by (path, line, rule) with display-normalized paths.
+pub fn run(root: &Path, cfg: &LintConfig) -> Result<LintReport> {
+    let files = walk(root)?;
+    let allow = inventory::parse_allowlist_file(&root.join(cfg.allowlist_file))?;
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut d4_counts = inventory::D4Counts::new();
+    for rel in &files {
+        let path = root.join(rel);
+        let text =
+            fs::read_to_string(&path).with_context(|| format!("reading {}", path.display()))?;
+        let out = rules::scan_file(rel, &text, cfg);
+        findings.extend(out.findings);
+        if let Some(counts) = out.d4_counts {
+            d4_counts.insert(rel.clone(), counts);
+        }
+    }
+    findings.extend(inventory::diff(&allow, &d4_counts));
+    findings
+        .sort_by(|a, b| (a.path.as_str(), a.line, a.rule).cmp(&(b.path.as_str(), b.line, b.rule)));
+    let prefix = display_prefix(root);
+    if !prefix.is_empty() {
+        for f in &mut findings {
+            f.path = format!("{prefix}/{}", f.path);
+        }
+    }
+    Ok(LintReport { findings, files_scanned: files.len() })
+}
+
+/// All `.rs` files under `root` as sorted `/`-separated relative paths.
+fn walk(root: &Path) -> Result<Vec<String>> {
+    let mut out = Vec::new();
+    walk_into(root, root, &mut out)?;
+    out.sort();
+    Ok(out)
+}
+
+fn walk_into(dir: &Path, root: &Path, out: &mut Vec<String>) -> Result<()> {
+    for entry in fs::read_dir(dir).with_context(|| format!("reading {}", dir.display()))? {
+        let path = entry.with_context(|| format!("reading {}", dir.display()))?.path();
+        if path.is_dir() {
+            walk_into(&path, root, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(rel_slashed(&path, root));
+        }
+    }
+    Ok(())
+}
+
+/// `path` relative to `base`, joined with `/` (falls back to the full path
+/// when `path` is not under `base`).
+fn rel_slashed(path: &Path, base: &Path) -> String {
+    let rel = path.strip_prefix(base).unwrap_or(path);
+    rel.components()
+        .map(|c| c.as_os_str().to_string_lossy().into_owned())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+/// Display prefix for findings: the scan root rewritten relative to the
+/// nearest ancestor directory holding a Cargo.toml, so `prism lint` prints
+/// `rust/src/...` no matter where it is invoked from. Falls back to the
+/// canonical root when no package root encloses it.
+fn display_prefix(root: &Path) -> String {
+    let canon = root.canonicalize().unwrap_or_else(|_| root.to_path_buf());
+    let mut anc = canon.parent();
+    while let Some(a) = anc {
+        if a.join("Cargo.toml").is_file() {
+            return rel_slashed(&canon, a);
+        }
+        anc = a.parent();
+    }
+    canon.to_string_lossy().into_owned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prism_config_covers_all_budgeted_modules_with_d3() {
+        // Every D4-budgeted module sits inside the D3 surface too: a module
+        // hot enough to budget allocations is hot enough to audit panics.
+        let cfg = LintConfig::prism();
+        for m in cfg.d4_budgeted {
+            assert!(
+                cfg.d3_surface.iter().any(|p| m.starts_with(p)),
+                "budgeted module {m} escapes the D3 surface"
+            );
+        }
+    }
+
+    #[test]
+    fn scan_root_is_self_describing() {
+        let cfg = LintConfig::prism();
+        assert!(cfg.allowlist_file.starts_with("lint/"));
+    }
+}

@@ -1,0 +1,79 @@
+//! Rendering: one-line-per-finding text and the stable JSON report.
+
+use std::fmt::Write as _;
+
+use crate::lint::LintReport;
+use crate::util::json::Json;
+
+/// One line per finding: `<path>:<line> <rule>: <message>`. Findings are
+/// already sorted by (path, line, rule) with repo-root-relative paths, so
+/// the output is byte-stable across machines and working directories.
+pub fn render_text(report: &LintReport) -> String {
+    let mut out = String::new();
+    for f in &report.findings {
+        let _ = writeln!(out, "{}:{} {}: {}", f.path, f.line, f.rule.as_str(), f.message);
+    }
+    out
+}
+
+/// Stable JSON form for the CI artifact: findings in the same sorted order,
+/// object keys sorted (BTreeMap), plus summary counts.
+pub fn to_json(report: &LintReport) -> Json {
+    let findings: Vec<Json> = report
+        .findings
+        .iter()
+        .map(|f| {
+            let mut o = Json::obj();
+            o.set("path", Json::Str(f.path.clone()));
+            o.set("line", Json::Num(f.line as f64));
+            o.set("rule", Json::Str(f.rule.as_str().to_string()));
+            o.set("message", Json::Str(f.message.clone()));
+            o
+        })
+        .collect();
+    let mut root = Json::obj();
+    root.set("count", Json::Num(report.findings.len() as f64));
+    root.set("files_scanned", Json::Num(report.files_scanned as f64));
+    root.set("findings", Json::Arr(findings));
+    root
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::{Finding, LintReport, Rule};
+
+    fn report() -> LintReport {
+        LintReport {
+            findings: vec![Finding {
+                path: "rust/src/sim/x.rs".to_string(),
+                line: 7,
+                rule: Rule::D1,
+                message: "nondeterminism source `SystemTime` in contract-surface module"
+                    .to_string(),
+            }],
+            files_scanned: 3,
+        }
+    }
+
+    #[test]
+    fn text_format_is_path_line_rule_message() {
+        let t = render_text(&report());
+        assert_eq!(
+            t,
+            "rust/src/sim/x.rs:7 D1: nondeterminism source `SystemTime` \
+             in contract-surface module\n"
+        );
+    }
+
+    #[test]
+    fn json_round_trips_and_keeps_counts() {
+        let j = to_json(&report());
+        let parsed = crate::util::json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(parsed.get("count").as_usize(), Some(1));
+        assert_eq!(parsed.get("files_scanned").as_usize(), Some(3));
+        let arr = parsed.get("findings").as_arr().unwrap();
+        assert_eq!(arr[0].get("rule").as_str(), Some("D1"));
+        assert_eq!(arr[0].get("line").as_usize(), Some(7));
+    }
+}

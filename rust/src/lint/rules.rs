@@ -1,0 +1,446 @@
+//! The five rule families and the per-file scanner.
+//!
+//! Every matcher runs on the masked code view from [`crate::lint::lexer`],
+//! so tokens inside string literals or comments never fire (D1's own
+//! pattern table below is the proof: this module passes its own scan).
+//! Rule IDs are stable and documented in ROADMAP.md:
+//!
+//! - D1 no-nondeterminism: wall clocks, OS randomness, and environment
+//!   reads are banned outside the exempt shell modules.
+//! - D2 ordered-iteration: iterating a HashMap/HashSet in a fingerprinted
+//!   module needs a waiver; lookup-only maps pass.
+//! - D3 panic-audit: every unwrap/expect in the contract surface needs an
+//!   INVARIANT: comment within 3 lines (or on its contiguous comment run).
+//! - D4 hot-path allocation inventory: allocation tokens in the budgeted
+//!   modules are counted and diffed against the checked-in allowlist.
+//! - D5 policy purity: placement policies hold no interior mutability or
+//!   global state.
+//!
+//! W0 (malformed waiver) and W1 (unused waiver) guard the waiver syntax
+//! itself in every scanned file.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::lint::lexer::{lex, test_lines};
+use crate::lint::waivers::{parse_waivers, ParsedWaivers};
+use crate::lint::{Finding, LintConfig};
+
+/// Stable rule identifier. Variant order matches the lexicographic order of
+/// the ID strings, so sorting by `Rule` equals sorting by rendered ID.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    /// Nondeterminism source in a contract-surface module.
+    D1,
+    /// Unordered hash-container iteration in a fingerprinted module.
+    D2,
+    /// unwrap/expect without a nearby INVARIANT: comment.
+    D3,
+    /// Hot-path allocation inventory drift against the allowlist.
+    D4,
+    /// Interior mutability / global state in a policy module.
+    D5,
+    /// Malformed waiver comment.
+    W0,
+    /// Waiver that matched no finding.
+    W1,
+}
+
+impl Rule {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Rule::D1 => "D1",
+            Rule::D2 => "D2",
+            Rule::D3 => "D3",
+            Rule::D4 => "D4",
+            Rule::D5 => "D5",
+            Rule::W0 => "W0",
+            Rule::W1 => "W1",
+        }
+    }
+
+    /// Parse a waivable rule ID (only the five D-rules can be waived).
+    pub fn waivable(s: &str) -> Option<Rule> {
+        match s {
+            "D1" => Some(Rule::D1),
+            "D2" => Some(Rule::D2),
+            "D3" => Some(Rule::D3),
+            "D4" => Some(Rule::D4),
+            "D5" => Some(Rule::D5),
+            _ => None,
+        }
+    }
+}
+
+/// Pattern table entry: (token, check-boundary-before, check-boundary-after).
+type Pat = (&'static str, bool, bool);
+
+const D1_PATTERNS: &[Pat] = &[
+    ("Instant::now", true, false),
+    ("SystemTime", true, true),
+    ("thread_rng", true, true),
+    ("RandomState", true, true),
+    ("rand::", true, false),
+    ("env::var", true, false),
+    ("Utc::now", true, false),
+    ("Local::now", true, false),
+];
+
+const D5_PATTERNS: &[Pat] = &[
+    ("&mut Simulator", false, true),
+    ("static mut", true, true),
+    ("thread_local!", true, false),
+    ("OnceLock", true, true),
+    ("Lazy", true, true),
+    ("RefCell", true, true),
+    ("UnsafeCell", true, true),
+    ("Cell<", true, false),
+    ("Mutex", true, true),
+    ("RwLock", true, true),
+    ("Atomic", true, false),
+    ("sync::atomic", true, false),
+];
+
+const ALLOC_PATTERNS: &[Pat] = &[
+    ("Vec::new", true, false),
+    ("vec![", true, false),
+    ("Box::new", true, false),
+    (".collect", false, true),
+    (".to_vec", false, true),
+    ("String::from", true, false),
+    ("format!", true, false),
+];
+
+const D2_METHODS: &[&str] = &[
+    ".iter()",
+    ".iter_mut()",
+    ".keys()",
+    ".values()",
+    ".values_mut()",
+    ".drain(",
+    ".into_iter()",
+    ".retain(",
+];
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+fn find_sub(hay: &[u8], needle: &[u8]) -> Option<usize> {
+    if needle.len() > hay.len() {
+        return None;
+    }
+    hay.windows(needle.len()).position(|w| w == needle)
+}
+
+/// All match offsets of `pat` in `line`, with identifier-boundary checks on
+/// the requested sides (so `rand::` does not fire inside `operand::`).
+pub(crate) fn find_bounded(line: &str, pat: &str, before: bool, after: bool) -> Vec<usize> {
+    let lb = line.as_bytes();
+    let pb = pat.as_bytes();
+    let mut out = Vec::new();
+    let mut start = 0usize;
+    while let Some(off) = find_sub(&lb[start..], pb) {
+        let p = start + off;
+        let okb = !before || p == 0 || !is_ident(lb[p - 1]);
+        let q = p + pb.len();
+        let oka = !after || q >= lb.len() || !is_ident(lb[q]);
+        if okb && oka {
+            out.push(p);
+        }
+        start = p + 1;
+    }
+    out
+}
+
+/// Names bound to HashMap/HashSet values in non-test code: `name: HashMap`
+/// struct fields / fn params (nearest `ident:` left of the match) and
+/// `let [mut] name = HashMap::new()` locals. D2 only flags iteration calls
+/// on these names, so lookup-only maps pass without a waiver.
+fn collect_hash_names(code: &[String], is_test: &[bool]) -> BTreeSet<String> {
+    let mut names = BTreeSet::new();
+    for (idx, line) in code.iter().enumerate() {
+        if is_test[idx] {
+            continue;
+        }
+        for kind in ["HashMap", "HashSet"] {
+            for p in find_bounded(line, kind, true, true) {
+                let head = &line.as_bytes()[..p];
+                let mut best: Option<String> = None;
+                for q in (0..head.len()).rev() {
+                    let lone_colon = head[q] == b':'
+                        && (q == 0 || head[q - 1] != b':')
+                        && (q + 1 >= head.len() || head[q + 1] != b':');
+                    if !lone_colon {
+                        continue;
+                    }
+                    let mut r = q as i64 - 1;
+                    while r >= 0 && head[r as usize] == b' ' {
+                        r -= 1;
+                    }
+                    let e = r;
+                    while r >= 0 && is_ident(head[r as usize]) {
+                        r -= 1;
+                    }
+                    if r < e {
+                        let s = &head[(r + 1) as usize..=e as usize];
+                        best = Some(String::from_utf8_lossy(s).into_owned());
+                    }
+                    break;
+                }
+                if let Some(name) = best {
+                    names.insert(name);
+                    continue;
+                }
+                let head_str = &line[..p];
+                if let Some(lp) = head_str.find("let ") {
+                    let mut tail = head_str[lp + 4..].trim();
+                    if let Some(t) = tail.strip_prefix("mut ") {
+                        tail = t.trim();
+                    }
+                    let name: String =
+                        tail.bytes().take_while(|&b| is_ident(b)).map(char::from).collect();
+                    if !name.is_empty() {
+                        names.insert(name);
+                    }
+                }
+            }
+        }
+    }
+    names
+}
+
+/// Result of scanning one file: findings (with `path` = the relative path)
+/// plus, for D4-budgeted modules, the allocation-token counts the caller
+/// diffs against the allowlist.
+pub struct ScanOutput {
+    pub findings: Vec<Finding>,
+    pub d4_counts: Option<BTreeMap<&'static str, usize>>,
+}
+
+/// Scan one file's text. `rel` is the path relative to the scan root with
+/// `/` separators; it selects which rule surfaces apply.
+pub fn scan_file(rel: &str, text: &str, cfg: &LintConfig) -> ScanOutput {
+    let lexed = lex(text);
+    let is_test = test_lines(&lexed.code);
+    let ParsedWaivers { waivers, malformed } = parse_waivers(&lexed.comments);
+    let mut findings: Vec<Finding> = Vec::new();
+    for (idx, com) in &malformed {
+        let shown: String = com.chars().take(60).collect();
+        findings.push(Finding {
+            path: rel.to_string(),
+            line: idx + 1,
+            rule: Rule::W0,
+            message: format!("malformed waiver `{shown}` (want lint:allow(<rule>): <why>)"),
+        });
+    }
+
+    // A waiver covers its own line plus the 3 lines below; the first waiver
+    // to claim a (rule, line) cell wins, and claims are tracked so unused
+    // waivers surface as W1.
+    let mut cover: BTreeMap<(Rule, usize), (usize, Rule)> = BTreeMap::new();
+    for w in &waivers {
+        for &r in &w.rules {
+            for l in w.line..w.line + 4 {
+                cover.entry((r, l)).or_insert((w.line, r));
+            }
+        }
+    }
+    let mut used: BTreeSet<(usize, Rule)> = BTreeSet::new();
+    let mut emitted: BTreeSet<(usize, Rule)> = BTreeSet::new();
+    let mut emit = |idx: usize, rule: Rule, message: String| {
+        if emitted.contains(&(idx, rule)) {
+            return;
+        }
+        if let Some(&w) = cover.get(&(rule, idx)) {
+            used.insert(w);
+            return;
+        }
+        emitted.insert((idx, rule));
+        findings.push(Finding { path: rel.to_string(), line: idx + 1, rule, message });
+    };
+    let in_surface = |prefixes: &[&str]| prefixes.iter().any(|p| rel.starts_with(p));
+
+    // D1: nondeterminism sources.
+    if !in_surface(cfg.d1_exempt) {
+        for (idx, line) in lexed.code.iter().enumerate() {
+            if is_test[idx] {
+                continue;
+            }
+            for &(pat, b, a) in D1_PATTERNS {
+                for _ in find_bounded(line, pat, b, a) {
+                    emit(
+                        idx,
+                        Rule::D1,
+                        format!("nondeterminism source `{pat}` in contract-surface module"),
+                    );
+                }
+            }
+        }
+    }
+
+    // D2: unordered iteration over hash containers.
+    if in_surface(cfg.d2_surface) {
+        let names = collect_hash_names(&lexed.code, &is_test);
+        for (idx, line) in lexed.code.iter().enumerate() {
+            if is_test[idx] {
+                continue;
+            }
+            for name in &names {
+                for m in D2_METHODS {
+                    let pat = format!("{name}{m}");
+                    for _ in find_bounded(line, &pat, true, false) {
+                        emit(
+                            idx,
+                            Rule::D2,
+                            format!("unordered iteration `{pat}` over a hash container"),
+                        );
+                    }
+                }
+                let loops =
+                    [format!("in &{name}"), format!("in &mut {name}"), format!("in {name}")];
+                for fpat in loops {
+                    for _ in find_bounded(line, &fpat, true, true) {
+                        emit(
+                            idx,
+                            Rule::D2,
+                            format!("unordered iteration `for .. {fpat}` over a hash container"),
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    // D3: panic audit. A contiguous run of comment lines containing
+    // INVARIANT: blesses every line of the run, so a multi-line invariant
+    // comment (or one placed inside a method chain) satisfies the window.
+    if in_surface(cfg.d3_surface) {
+        let n = lexed.comments.len();
+        let mut blessed = vec![false; n];
+        let mut i = 0usize;
+        while i < n {
+            if lexed.comments[i].trim().is_empty() {
+                i += 1;
+                continue;
+            }
+            let mut j = i;
+            while j < n && !lexed.comments[j].trim().is_empty() {
+                j += 1;
+            }
+            if lexed.comments[i..j].iter().any(|c| c.contains("INVARIANT:")) {
+                blessed[i..j].fill(true);
+            }
+            i = j;
+        }
+        for (idx, line) in lexed.code.iter().enumerate() {
+            if is_test[idx] {
+                continue;
+            }
+            let hits = find_bounded(line, ".unwrap()", false, true).len()
+                + find_bounded(line, ".expect(", false, false).len();
+            if hits == 0 {
+                continue;
+            }
+            let lo = idx.saturating_sub(3);
+            if blessed[lo..=idx].iter().any(|&b| b) {
+                continue;
+            }
+            emit(
+                idx,
+                Rule::D3,
+                "unwrap/expect without an INVARIANT: comment within 3 lines".to_string(),
+            );
+        }
+    }
+
+    // D4: count allocation tokens in budgeted modules (diffed by the caller).
+    let d4_counts = if cfg.d4_budgeted.iter().any(|p| *p == rel) {
+        let mut counts: BTreeMap<&'static str, usize> = BTreeMap::new();
+        for (idx, line) in lexed.code.iter().enumerate() {
+            if is_test[idx] {
+                continue;
+            }
+            for &(pat, b, _) in ALLOC_PATTERNS {
+                for q in find_bounded(line, pat, b, false) {
+                    let tail = &line.as_bytes()[q + pat.len()..];
+                    if pat == ".collect" && !(tail.starts_with(b"(") || tail.starts_with(b"::")) {
+                        continue;
+                    }
+                    if pat == ".to_vec" && !tail.starts_with(b"(") {
+                        continue;
+                    }
+                    *counts.entry(pat).or_insert(0) += 1;
+                }
+            }
+        }
+        Some(counts)
+    } else {
+        None
+    };
+
+    // D5: policy purity.
+    if in_surface(cfg.d5_surface) {
+        for (idx, line) in lexed.code.iter().enumerate() {
+            if is_test[idx] {
+                continue;
+            }
+            for &(pat, b, a) in D5_PATTERNS {
+                for _ in find_bounded(line, pat, b, a) {
+                    emit(
+                        idx,
+                        Rule::D5,
+                        format!("interior mutability / global state `{pat}` in a policy module"),
+                    );
+                }
+            }
+        }
+    }
+
+    // W1: waivers that matched nothing.
+    for w in &waivers {
+        for &r in &w.rules {
+            if !used.contains(&(w.line, r)) {
+                findings.push(Finding {
+                    path: rel.to_string(),
+                    line: w.line + 1,
+                    rule: Rule::W1,
+                    message: format!("unused waiver for {}", r.as_str()),
+                });
+            }
+        }
+    }
+    ScanOutput { findings, d4_counts }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounded_matching_respects_ident_edges() {
+        assert_eq!(find_bounded("x = rand::foo()", "rand::", true, false), vec![4]);
+        assert!(find_bounded("x = operand::foo()", "rand::", true, false).is_empty());
+        assert_eq!(find_bounded("a.unwrap()", ".unwrap()", false, true), vec![1]);
+        assert!(find_bounded("a.unwrap()x", ".unwrap()", false, true).is_empty());
+    }
+
+    #[test]
+    fn hash_names_from_fields_and_lets() {
+        let code = vec![
+            "struct S { by_id: HashMap<u32, u32> }".to_string(),
+            "let mut seen = HashSet::new();".to_string(),
+        ];
+        let names = collect_hash_names(&code, &[false, false]);
+        assert!(names.contains("by_id"));
+        assert!(names.contains("seen"));
+    }
+
+    #[test]
+    fn rule_order_matches_string_order() {
+        let rules = [Rule::D1, Rule::D2, Rule::D3, Rule::D4, Rule::D5, Rule::W0, Rule::W1];
+        for w in rules.windows(2) {
+            assert!(w[0] < w[1]);
+            assert!(w[0].as_str() < w[1].as_str());
+        }
+    }
+}

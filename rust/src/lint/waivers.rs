@@ -1,0 +1,116 @@
+//! In-source waiver syntax.
+//!
+//! A waiver is a comment whose trimmed text *starts with* the token
+//! `lint:allow` followed by a parenthesized rule list, a colon, and a
+//! non-empty justification — e.g.
+//! `// lint:allow(D1): ablation switch, read once at config build.`
+//! It silences those rules on its own line and the 3 lines below. The
+//! start-anchor means prose that merely mentions the syntax mid-sentence
+//! (like this paragraph) is not a waiver. Anything that starts like a
+//! waiver but fails to parse is reported as W0, and a waiver that silences
+//! nothing is reported as W1 — waivers must carry their weight.
+
+use crate::lint::rules::Rule;
+
+/// One well-formed waiver comment.
+#[derive(Debug)]
+pub struct Waiver {
+    /// 0-based line index of the comment.
+    pub line: usize,
+    /// The rules it waives (only D1..D5 are waivable).
+    pub rules: Vec<Rule>,
+}
+
+/// Output of [`parse_waivers`]: the well-formed waivers plus the comments
+/// that start like a waiver but fail the grammar (reported as W0).
+#[derive(Debug)]
+pub struct ParsedWaivers {
+    pub waivers: Vec<Waiver>,
+    /// (0-based line index, trimmed comment text).
+    pub malformed: Vec<(usize, String)>,
+}
+
+const MARK: &str = "lint:allow";
+
+/// Parse every comment line of one file for waivers.
+pub fn parse_waivers(comments: &[String]) -> ParsedWaivers {
+    let mut waivers = Vec::new();
+    let mut malformed = Vec::new();
+    for (idx, com) in comments.iter().enumerate() {
+        let stripped = com.trim();
+        let rest = match stripped.strip_prefix(MARK) {
+            Some(r) => r,
+            None => continue,
+        };
+        let mut ok = false;
+        if let Some(body) = rest.strip_prefix('(') {
+            if let Some(close) = body.find(')') {
+                let ids: Option<Vec<Rule>> =
+                    body[..close].split(',').map(|r| Rule::waivable(r.trim())).collect();
+                let tail = body[close + 1..].trim_start();
+                if let (Some(rules), Some(just)) = (ids, tail.strip_prefix(':')) {
+                    if !rules.is_empty() && !just.trim().is_empty() {
+                        waivers.push(Waiver { line: idx, rules });
+                        ok = true;
+                    }
+                }
+            }
+        }
+        if !ok {
+            malformed.push((idx, stripped.to_string()));
+        }
+    }
+    ParsedWaivers { waivers, malformed }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn com(lines: &[&str]) -> Vec<String> {
+        lines.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn well_formed_single_and_multi_rule() {
+        let p = parse_waivers(&com(&[
+            " lint:allow(D1): reads a worker-count knob.",
+            " lint:allow(D2, D3): justified twice over.",
+        ]));
+        assert!(p.malformed.is_empty());
+        assert_eq!(p.waivers.len(), 2);
+        assert_eq!(p.waivers[0].rules, vec![Rule::D1]);
+        assert_eq!(p.waivers[1].rules, vec![Rule::D2, Rule::D3]);
+        assert_eq!(p.waivers[1].line, 1);
+    }
+
+    #[test]
+    fn malformed_variants_are_rejected() {
+        let bad = [
+            " lint:allow(D9): unknown rule.",
+            " lint:allow(D1) missing colon",
+            " lint:allow(D1):",
+            " lint:allow D1: no parens",
+            " lint:allow(): empty list.",
+        ];
+        for b in bad {
+            let p = parse_waivers(&com(&[b]));
+            assert!(p.waivers.is_empty(), "accepted: {b}");
+            assert_eq!(p.malformed.len(), 1, "not flagged: {b}");
+        }
+    }
+
+    #[test]
+    fn mid_sentence_mentions_are_not_waivers() {
+        let p = parse_waivers(&com(&[" the lint:allow(D1): syntax is described here"]));
+        assert!(p.waivers.is_empty());
+        assert!(p.malformed.is_empty());
+    }
+
+    #[test]
+    fn non_comment_lines_are_ignored() {
+        let p = parse_waivers(&com(&["", "   ", " plain comment"]));
+        assert!(p.waivers.is_empty());
+        assert!(p.malformed.is_empty());
+    }
+}

@@ -6,6 +6,10 @@
 //!   trace      - generate a synthetic trace and print its SS3 statistics
 //!   exp <id>   - regenerate a paper table/figure (tab1, fig1..fig15, all)
 //!   models     - print the Table-3 model catalog
+//!   lint       - contract-enforcing static analysis over rust/src
+
+// The CLI's entire job is printing; the print lints guard the library.
+#![allow(clippy::print_stdout, clippy::print_stderr)]
 
 use anyhow::Result;
 use prism::bench::harness::Table;
@@ -25,10 +29,11 @@ fn main() {
         "trace" => cmd_trace(),
         "exp" => cmd_exp(),
         "models" => cmd_models(),
+        "lint" => cmd_lint(),
         _ => {
             eprintln!(
                 "prism - cost-efficient multi-LLM serving via GPU memory ballooning\n\n\
-                 usage: prism <serve|sim|trace|exp|models> [options]\n\
+                 usage: prism <serve|sim|trace|exp|models|lint> [options]\n\
                  \n  prism serve --models prism-nano,prism-micro --requests 12\
                  \n  prism sim --policy prism --gpus 4 --trace novita --minutes 10\
                  \n  prism sim --policy prism --gpus 4 --faults churn:7\
@@ -36,7 +41,8 @@ fn main() {
                  \n  prism sim --gpus 32 --models 100 --shards 4\
                  \n  prism trace --kind novita --hours 2\
                  \n  prism exp fig5 [--quick] [--jobs N] [--shards N]\
-                 \n  prism exp all --quick --jobs 8\n"
+                 \n  prism exp all --quick --jobs 8\
+                 \n  prism lint [--src rust/src] [--json]\n"
             );
             Ok(())
         }
@@ -343,6 +349,26 @@ fn parse_shards(v: &str) -> Result<u32> {
     v.parse().map_err(|_| {
         anyhow::anyhow!("--shards expects a non-negative integer (0 = auto), got {v}")
     })
+}
+
+fn cmd_lint() -> Result<()> {
+    let cli = Cli::new("prism lint", "contract-enforcing static analysis over the crate sources")
+        .opt("src", "rust/src", "scan root")
+        .flag("json", "emit the stable JSON report on stdout");
+    let a = cli.parse_env(1).map_err(anyhow::Error::msg)?;
+    let root = std::path::PathBuf::from(a.get_or("src", "rust/src"));
+    let rep = prism::lint::run(&root, &prism::lint::LintConfig::prism())?;
+    if a.has_flag("json") {
+        println!("{}", prism::lint::report::to_json(&rep).to_string_pretty());
+    } else {
+        print!("{}", prism::lint::report::render_text(&rep));
+    }
+    if rep.findings.is_empty() {
+        eprintln!("prism lint: clean ({} files scanned)", rep.files_scanned);
+        Ok(())
+    } else {
+        anyhow::bail!("{} lint finding(s)", rep.findings.len())
+    }
 }
 
 fn cmd_models() -> Result<()> {

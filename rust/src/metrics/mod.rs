@@ -282,6 +282,8 @@ impl SortedCache {
             .filter(|c| c.finish.is_finite())
             .map(|c| c.finish - c.arrival)
             .collect();
+        // INVARIANT: every vec was filtered to finite values just above, so
+        // partial_cmp is total here.
         ttft.sort_by(|a, b| a.partial_cmp(b).unwrap());
         tpot.sort_by(|a, b| a.partial_cmp(b).unwrap());
         e2e.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -431,6 +433,7 @@ impl RunMetrics {
         if stale {
             *cache = Some(SortedCache::build(&self.completions));
         }
+        // INVARIANT: the stale arm above filled the None case.
         f(cache.as_ref().expect("cache just built"))
     }
 

@@ -36,9 +36,12 @@ pub fn moore_hodgson(now: f64, candidates: &[Candidate]) -> Schedule {
     let mut sorted: Vec<&Candidate> = candidates.iter().collect();
     // Line 1: ascending deadlines (EDF), stable tie-break by arrival then id.
     sorted.sort_by(|a, b| {
+        // INVARIANT: deadlines are finite by construction (derived from
+        // trace timestamps and SLO scales), so partial_cmp is total.
         a.deadline
             .partial_cmp(&b.deadline)
             .unwrap()
+            // INVARIANT: arrivals are finite too (same construction).
             .then(a.arrival.partial_cmp(&b.arrival).unwrap())
             .then(a.id.cmp(&b.id))
     });
@@ -56,6 +59,8 @@ pub fn moore_hodgson(now: f64, candidates: &[Candidate]) -> Schedule {
             let (imax, _) = schedule
                 .iter()
                 .enumerate()
+                // INVARIANT: schedule is non-empty (c was just pushed) and
+                // finite exec times keep partial_cmp total.
                 .max_by(|(_, a), (_, b)| a.exec.partial_cmp(&b.exec).unwrap())
                 .unwrap();
             let evicted = schedule.remove(imax);
@@ -75,6 +80,8 @@ pub fn on_time_count(now: f64, order: &[RequestId], candidates: &[Candidate]) ->
     let mut t = now;
     let mut ok = 0;
     for id in order {
+        // INVARIANT: `order` is a permutation of candidate ids (it came from
+        // a Schedule built over the same set).
         let c = candidates.iter().find(|c| c.id == *id).unwrap();
         t += c.exec;
         if t <= c.deadline + 1e-12 {

@@ -71,6 +71,8 @@ pub fn place(
         }
     }
     parts.sort_by(|a, b| {
+        // INVARIANT: w_rate is finite (tp >= 1 and demand rates come from
+        // finite trace/SLO inputs), so partial_cmp is total.
         b.w_rate
             .partial_cmp(&a.w_rate)
             .unwrap()
@@ -101,6 +103,8 @@ pub fn place(
                 best = Some((r, g));
             }
         }
+        // INVARIANT: callers validate tp <= n, so at least one GPU is not in
+        // `taken` and the loop above always sets `best`.
         let (best_r, best_idx) = best.expect("more GPUs than TP degree required");
 
         // Line 7-8: keep the current GPU unless improvement exceeds tau.
@@ -117,6 +121,8 @@ pub fn place(
         };
 
         // Lines 9-11: assign and update state.
+        // INVARIANT: the entry() call at the top of this loop iteration
+        // created the key if it was missing.
         assigned.get_mut(&p.input_idx).unwrap().push(target);
         w_rate[target] += p.w_rate;
         shared_kv[target] -= p.weight;

@@ -82,6 +82,8 @@ enum CostOrder {
 fn sort_by_cost(ctx: &PolicyCtx<'_>, gpus: &mut [usize], order: CostOrder) {
     gpus.sort_by(|&a, &b| {
         let (ca, cb) = (ctx.gpu_cost_per_hour(a), ctx.gpu_cost_per_hour(b));
+        // INVARIANT: fleet costs are finite by FleetSpec validation, so
+        // partial_cmp is total on both arms.
         let by_cost = match order {
             CostOrder::CheapFirst => ca.partial_cmp(&cb).unwrap(),
             CostOrder::ExpensiveFirst => cb.partial_cmp(&ca).unwrap(),
@@ -195,6 +197,7 @@ fn cost_rebalance(ctx: &mut PolicyCtx<'_>, now: f64) {
             ctx.put_gpu_queue(from.0 as usize, rest);
             if !mine.is_empty() {
                 ctx.extend_gpu_queue(to.0 as usize, mine);
+                // INVARIANT: migrate() returned true, so `m` is resident.
                 let ready = ctx.residency_of(m).unwrap().ready_at;
                 ctx.schedule_step(m, ready.max(now));
             }

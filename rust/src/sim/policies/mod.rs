@@ -31,6 +31,12 @@
 //! and across sweep worker threads. Per-run state belongs in the simulator
 //! (extend `PolicyCtx` if a new policy needs a view of it).
 //!
+//! Both rules are machine-checked by `prism lint` (see ROADMAP "Static
+//! analysis"): rule D5 bans interior mutability and global state under
+//! `sim/policies/` (the registry's write-once cell carries the one
+//! justified waiver), and rules D1/D2 keep clocks, randomness, and
+//! hash-order iteration out of policy hooks.
+//!
 //! # Registry
 //!
 //! [`registry()`] is the process-wide instance holding the seven built-ins
@@ -50,6 +56,8 @@ mod s_partition;
 mod seallm;
 mod serverlessllm;
 
+// lint:allow(D5): OnceLock backs the immutable built-in policy registry —
+// written once at first use, read-only afterwards, so policy purity holds.
 use std::sync::{Arc, OnceLock};
 
 use crate::cluster::GpuId;
@@ -201,6 +209,8 @@ impl PolicyRegistry {
             Arc::new(Melange),
         ];
         for p in builtins {
+            // INVARIANT: the seven built-in names are distinct string
+            // literals, so register() cannot see a duplicate here.
             r.register(p).expect("built-in policy names are unique");
         }
         r
@@ -246,6 +256,7 @@ impl PolicyRegistry {
 /// The process-wide registry holding the seven built-in policies, built
 /// once on first use.
 pub fn registry() -> &'static PolicyRegistry {
+    // lint:allow(D5): write-once registry cell; policies read it immutably.
     static REG: OnceLock<PolicyRegistry> = OnceLock::new();
     REG.get_or_init(PolicyRegistry::with_builtins)
 }

@@ -78,6 +78,7 @@ fn kvpr_placement(ctx: &mut PolicyCtx<'_>, now: f64) {
         .iter()
         .map(|&m| PlacementInput {
             demand: ctx.demand_of(m, now),
+            // INVARIANT: `m` came from the resident set captured above.
             current: ctx.residency_of(m).unwrap().gpus.iter().map(|g| g.0 as usize).collect(),
         })
         .collect();
@@ -97,6 +98,8 @@ fn kvpr_placement(ctx: &mut PolicyCtx<'_>, now: f64) {
             continue;
         }
         let to = GpuId(p.gpus[0] as u32);
+        // INVARIANT: this placement input was built from the resident set,
+        // and nothing evicted `spec.id` since (migrations happen below).
         let from = ctx.residency_of(spec.id).unwrap().gpus[0];
         // Migration is only worth its disruption when the source GPU is
         // actually pressured (paper SS6.1: avoid migrations with marginal
@@ -114,6 +117,8 @@ fn kvpr_placement(ctx: &mut PolicyCtx<'_>, now: f64) {
             ctx.put_gpu_queue(from.0 as usize, rest);
             if !mine.is_empty() {
                 ctx.extend_gpu_queue(to.0 as usize, mine);
+                // INVARIANT: migrate() returned true, so the model is
+                // resident on `to` with a fresh ready_at.
                 let ready = ctx.residency_of(spec.id).unwrap().ready_at;
                 ctx.schedule_step(spec.id, ready.max(now));
             }

@@ -47,6 +47,8 @@ fn dispatch_groups(ctx: &mut PolicyCtx<'_>, now: f64) {
         let head = ctx
             .pending()
             .iter()
+            // INVARIANT: deadlines are finite (arrival + SLO scale), so
+            // partial_cmp is total.
             .min_by(|a, b| a.ttft_deadline().partial_cmp(&b.ttft_deadline()).unwrap())
             .map(|r| r.model);
         let Some(m) = head else { break };

@@ -9,6 +9,13 @@
 //! disjoint `&mut` borrows of the simulator state, and re-merges at every
 //! barrier before the control event runs globally on the master.
 //!
+//! The fingerprint-identity contract below is machine-checked by
+//! `prism lint` (see ROADMAP "Static analysis"): rules D1/D2 keep
+//! nondeterminism and hash-order out of this module, D3 audits every
+//! panic site, and D4 budgets its steady-state allocations against
+//! `lint/hot_alloc_allowlist.txt` (the persistent-scratch design is what
+//! keeps that budget flat).
+//!
 //! # Barrier classes
 //!
 //! Control events are classified by what they can actually mutate:
@@ -463,6 +470,8 @@ impl<'s, 'a> ShardAlloc<'s, 'a> {
     }
 
     fn dev(&mut self, g: usize) -> &mut GpuDevice {
+        // INVARIANT: the dealer hands each shard exactly the devices of its
+        // groups, and `g` comes from this alloc's own `group` slice.
         self.gpus[g].as_deref_mut().expect("group GPU owned by this shard")
     }
 }
@@ -504,6 +513,8 @@ impl<'s, 'a> KvAlloc for ShardAlloc<'s, 'a> {
         let width = self.group.len();
         for (i, &r) in refs.iter().enumerate() {
             let g = self.group[i % width].0 as usize;
+            // INVARIANT: refs come from this group's own alloc_n in
+            // block-major order, so ref i maps back to its issuing GPU.
             self.dev(g).kvc.free_block(r).expect("group free");
         }
     }
@@ -559,6 +570,8 @@ struct ShardOut {
 /// `tests/shard_identity.rs`.
 struct ShardCtx<'a> {
     specs: &'a [ModelSpec],
+    /// Lookup-only (never iterated): hash order cannot reach the metric
+    /// fingerprint, so this stays D2-clean without a waiver.
     model_index: &'a HashMap<ModelId, usize>,
     gpu_perfs: &'a [GpuPerf],
     slack_aware: bool,
@@ -615,9 +628,12 @@ impl<'a> ShardCtx<'a> {
             // this event (pause keys `(t, 1, master seq)` sort below every
             // local push at equal times — master seqs predate the window's
             // seq snapshot — and against seeds in exact heap pop order).
+            // INVARIANT: the match above only sets take_local when the
+            // corresponding key is Some.
             let next_key = if take_local { local_key.unwrap() } else { seed_key.unwrap() };
             self.fire_pauses_before(next_key);
             if take_local {
+                // INVARIANT: local_key was Some, and nothing popped between.
                 let &Reverse((Time(t), _, mid)) = self.scratch.local.peek().expect("peeked");
                 let past = if inclusive { t > limit } else { t >= limit };
                 if past {
@@ -631,6 +647,7 @@ impl<'a> ShardCtx<'a> {
                 self.last_t = t;
                 self.on_step(ModelId(mid), t);
             } else {
+                // INVARIANT: seed_key was Some, and nothing popped between.
                 match self.scratch.seeds.pop_front().expect("peeked") {
                     SeedEv::Arrival { model_idx, raw_prompt_tokens, req } => {
                         self.sim_events += 1;
@@ -714,6 +731,7 @@ impl<'a> ShardCtx<'a> {
                 }
                 for r in self.residency.values() {
                     let lead = r.gpus[0].0 as usize;
+                    // INVARIANT: engines are dealt alongside their residency.
                     let eng = self.engines[r.engine_idx].as_deref().expect("engine owned");
                     part.queue_lens[lead] += eng.queue_len() + eng.running_len();
                 }
@@ -738,31 +756,38 @@ impl<'a> ShardCtx<'a> {
     /// master's unconditional invalidation at recompose.
     fn on_arrival(&mut self, model_idx: usize, raw_prompt_tokens: u32, req: Request) {
         let now = req.arrival;
+        // INVARIANT: the window plan deals every arrival model's monitor
+        // slot to this shard.
         self.monitors[model_idx]
             .as_deref_mut()
             .expect("arrival model's monitor owned by this shard")
             .record(now, raw_prompt_tokens as u64);
+        // INVARIANT: same dealing as the monitor above.
         *self.last_request_at[model_idx]
             .as_deref_mut()
             .expect("arrival model's last_request_at owned by this shard") = now;
         if let Some(r) = self.residency.get_mut(&req.model) {
             r.last_active = now;
         }
-        // enqueue_on_gpu: seeded arrivals were resident at window build and
-        // residency is frozen until the barrier.
+        // INVARIANT: seeded arrivals were resident at window build and
+        // residency is frozen until the barrier (enqueue_on_gpu replica).
         let res = self.residency.get(&req.model).expect("resident");
         let lead = res.gpus[0].0 as usize;
         let ready = res.ready_at;
         let m = req.model;
+        // INVARIANT: the plan deals each resident model's lead queue here.
         self.queues[lead].as_deref_mut().expect("lead queue owned by this shard").push(req);
         self.schedule_step(m, now.max(ready));
     }
 
     /// Replica of `Simulator::admit_gpu`.
     fn admit_gpu(&mut self, g: usize, now: f64) {
+        // INVARIANT: admit_gpu runs only for GPUs in this shard's groups,
+        // whose queues the plan dealt to this worker.
         if self.queues[g].as_deref().expect("queue owned by this shard").is_empty() {
             return;
         }
+        // INVARIANT: same queue ownership as the emptiness check above.
         let queue = std::mem::take(self.queues[g].as_deref_mut().expect("queue owned"));
         let (mut admit, mut keep): (Vec<Request>, Vec<Request>) = if self.slack_aware {
             let gpu_perf = &self.gpu_perfs[g];
@@ -810,11 +835,14 @@ impl<'a> ShardCtx<'a> {
             match self.residency.get(&req.model) {
                 Some(res) if res.ready_at <= now + 1e-9 => {
                     let eidx = res.engine_idx;
+                    // INVARIANT: every resident model's engine is dealt to
+                    // the shard owning its lead GPU — this one.
                     let eng = self.engines[eidx].as_deref().expect("engine owned");
                     let cap = eng.max_batch as usize * 2;
                     let load = eng.queue_len() + eng.running_len();
                     if load < cap {
                         let m = req.model;
+                        // INVARIANT: engine ownership as above.
                         self.engines[eidx].as_deref_mut().expect("engine owned").admit(req);
                         self.schedule_step(m, now);
                     } else {
@@ -831,6 +859,8 @@ impl<'a> ShardCtx<'a> {
             }
         }
         keep.extend(still);
+        // INVARIANT: queue ownership as checked at entry; moved requests'
+        // lead queues are dealt alongside their residency links.
         *self.queues[g].as_deref_mut().expect("queue owned") = keep;
         for (lead, req) in moved {
             self.queues[lead].as_deref_mut().expect("lead queue owned").push(req);
@@ -856,6 +886,7 @@ impl<'a> ShardCtx<'a> {
         };
         let eidx = res.engine_idx;
         let group = res.gpus.clone();
+        // INVARIANT: a resident model's engine is dealt with its lead GPU.
         if !self.engines[eidx].as_deref().expect("engine owned").has_work() {
             return;
         }
@@ -864,6 +895,7 @@ impl<'a> ShardCtx<'a> {
             // copy (updated in place by `Slow` pauses mid-window).
             let scale =
                 group.iter().map(|g| self.scratch.slow[g.0 as usize]).fold(1.0, f64::max);
+            // INVARIANT: engine ownership as above.
             self.engines[eidx].as_deref_mut().expect("engine owned").time_scale = scale;
         }
         let outcome = {
@@ -871,6 +903,7 @@ impl<'a> ShardCtx<'a> {
             let (engines, gpus, alloc) =
                 (&mut self.engines, &mut self.gpus, &mut self.scratch.alloc);
             let mut ga = ShardAlloc::new(gpus, &group, m, alloc);
+            // INVARIANT: engine ownership as above.
             engines[eidx].as_deref_mut().expect("engine owned").step(now, lead_perf, &mut ga)
         };
         for c in outcome.completions {
@@ -879,6 +912,8 @@ impl<'a> ShardCtx<'a> {
             }
             self.tokens += (c.prompt_tokens + c.output_tokens) as u64;
             let idx = self.model_index[&c.model];
+            // INVARIANT: completions come from this shard's own engines, so
+            // their models' monitors were dealt here.
             self.monitors[idx]
                 .as_deref_mut()
                 .expect("completion model's monitor owned by this shard")
@@ -888,6 +923,7 @@ impl<'a> ShardCtx<'a> {
         if let Some(r) = self.residency.get_mut(&m) {
             r.last_active = now;
         }
+        // INVARIANT: engine ownership as above.
         if outcome.duration > 0.0 {
             self.schedule_step(m, now + outcome.duration);
         } else if self.engines[eidx].as_deref().expect("engine owned").has_work() {
@@ -966,11 +1002,15 @@ impl Simulator {
                     (None, _) => false,
                 };
                 if take_arrival {
+                    // INVARIANT: take_arrival is only true in match arms
+                    // where arrival_head is Some.
                     let at = arrival_head.expect("take_arrival implies a head");
                     if at > tail_limit {
                         break Boundary::End;
                     }
                     let e = match &mut scaled {
+                        // INVARIANT: peek_t() returned Some above, and
+                        // nothing advanced the cursor since.
                         Some(c) => c.next_event().expect("peeked event exists"),
                         None => {
                             let i = next_arrival;
@@ -1145,17 +1185,22 @@ impl Simulator {
                             gpu_perfs,
                             slack_aware,
                             faults_enabled,
+                            // INVARIANT: every dealt iterator yields exactly
+                            // n_shards entries (built just above).
                             engines: eng_it.next().expect("one per shard"),
                             gpus: gpu_it.next().expect("one per shard"),
                             queues: q_it.next().expect("one per shard"),
+                            // INVARIANT: one entry per shard, as above.
                             monitors: mon_it.next().expect("one per shard"),
                             last_request_at: lra_it.next().expect("one per shard"),
                             residency: res_it.next().expect("one per shard"),
+                            // INVARIANT: one entry per shard, as above.
                             metrics: sink_it.next().expect("one per shard"),
                             step_scheduled: ss_it.next().expect("one per shard"),
                             pauses,
                             pause_idx: 0,
                             sample_no: 0,
+                            // INVARIANT: one entry per shard, as above.
                             scratch: std::mem::take(scratch_it.next().expect("one per shard")),
                             seq: seq_snapshot,
                             sim_events: 0,
@@ -1186,6 +1231,8 @@ impl Simulator {
                             handles
                                 .into_iter()
                                 .map(|h| match h {
+                                    // INVARIANT: propagating a worker panic
+                                    // is the intended failure mode.
                                     Ok(j) => j.join().expect("shard worker panicked"),
                                     Err(o) => o,
                                 })

@@ -154,6 +154,7 @@ impl SimConfig {
             eviction: EvictionPolicy::default(),
             slo_scale: 5.0,
             sample_dt: 0.0,
+            // lint:allow(D1): ablation switches, read once at config build.
             no_evict: std::env::var("PRISM_NO_EVICT").is_ok(),
             no_migrate: std::env::var("PRISM_NO_MIGRATE").is_ok(),
             slack_aware: policy.slack_aware() && std::env::var("PRISM_NO_MH").is_err(),
@@ -286,10 +287,10 @@ impl PartialOrd for Time {
 
 impl Ord for Time {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        // Invariant (documented panic): every event time is derived from
-        // finite trace timestamps, finite perf-model durations, and finite
-        // validated fault times (`FaultPlan::validate` rejects non-finite
-        // input), so a NaN here is a construction bug, not a runtime state.
+        // INVARIANT: every event time is derived from finite trace
+        // timestamps, finite perf-model durations, and finite validated
+        // fault times (`FaultPlan::validate` rejects non-finite input), so
+        // a NaN here is a construction bug, not a runtime state.
         self.0.partial_cmp(&other.0).expect("no NaN times")
     }
 }
@@ -308,7 +309,8 @@ pub(crate) enum Ev {
 pub struct Simulator {
     pub cfg: SimConfig,
     pub specs: Vec<ModelSpec>,
-    /// ModelId -> index into `specs`: O(1) hot-path lookups.
+    /// ModelId -> index into `specs`: O(1) hot-path lookups. Lookup-only
+    /// (never iterated), so hash order cannot leak into results — D2-clean.
     /// (Fields below are `pub(crate)` for the sharded event loop in
     /// `sim::shard`, which distributes disjoint `&mut` borrows of them to
     /// worker threads between barriers; everything else stays private.)
@@ -497,6 +499,8 @@ impl Simulator {
                 (kvpr(w, shared), g)
             })
             .collect();
+        // INVARIANT: kvpr() maps empty supply to +inf, never NaN, and
+        // demand rates are finite — partial_cmp is total.
         scored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
         scored.iter().take(spec.tp as usize).map(|&(_, g)| GpuId(g as u32)).collect()
     }
@@ -539,15 +543,15 @@ impl Simulator {
                 }
                 Err(KvError::OutOfPages(_)) => {
                     // Evict the least-recently-active other idle resident,
-                    // then retry with freshly re-picked GPUs. Invariant
-                    // (documented panic): `last_active` holds finite event
-                    // times, so the comparison cannot hit NaN.
+                    // then retry with freshly re-picked GPUs.
                     let victim = self
                         .cluster
                         .residency
                         .values()
                         .filter(|r| r.model != spec.id)
                         .filter(|r| !self.cluster.engines[r.engine_idx].has_work())
+                        // INVARIANT: `last_active` holds finite event times,
+                        // so the comparison cannot hit NaN.
                         .min_by(|a, b| a.last_active.partial_cmp(&b.last_active).unwrap())
                         .map(|r| r.model);
                     match victim {
@@ -680,11 +684,11 @@ impl Simulator {
     }
 
     fn enqueue_on_gpu(&mut self, req: Request, now: f64) {
-        // Invariant (documented panic): callers route here only after
-        // observing residency (`route` checks `is_resident`; policies use
-        // `enqueue_resident` under the same contract), and nothing between
-        // that check and this call can evict - crash events are separate
-        // heap events, never concurrent with routing.
+        // INVARIANT: callers route here only after observing residency
+        // (`route` checks `is_resident`; policies use `enqueue_resident`
+        // under the same contract), and nothing between that check and
+        // this call can evict - crash events are separate heap events,
+        // never concurrent with routing.
         let res = self.cluster.residency.get(&req.model).expect("resident");
         let lead = res.gpus[0].0 as usize;
         let ready = res.ready_at;
@@ -980,6 +984,7 @@ impl Simulator {
         let stream = self.cfg.stream_arrivals;
         let order: Option<Vec<usize>> = if scaled.is_none() && stream && !trace.is_sorted() {
             let mut idx: Vec<usize> = (0..trace.events.len()).collect();
+            // INVARIANT: trace event times are finite by generation.
             idx.sort_by(|&a, &b| trace.events[a].t.partial_cmp(&trace.events[b].t).unwrap());
             Some(idx)
         } else {
@@ -1038,11 +1043,15 @@ impl Simulator {
                 (None, _) => false,
             };
             if take_arrival {
+                // INVARIANT: take_arrival is only true in match arms where
+                // arrival_head is Some.
                 let now = arrival_head.expect("take_arrival implies a head");
                 if now > tail_limit {
                     break;
                 }
                 let e = match &mut scaled {
+                    // INVARIANT: peek_time() returned Some above, and
+                    // nothing advanced the cursor since.
                     Some(c) => c.next_event().expect("peeked event exists"),
                     None => {
                         let i = arrival_at(next_arrival);
@@ -1205,6 +1214,8 @@ impl<'a> PolicyCtx<'a> {
     /// Panics if `m` is not resident (mirrors the policies' invariant that
     /// they only ask about models they just observed in `residency()`).
     pub fn engine_has_work(&self, m: ModelId) -> bool {
+        // INVARIANT: documented panic (see doc comment above) — callers
+        // only ask about models they just observed in residency().
         let r = self.sim.cluster.residency.get(&m).expect("model resident");
         self.sim.cluster.engines[r.engine_idx].has_work()
     }

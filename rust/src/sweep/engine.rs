@@ -36,6 +36,8 @@ pub fn parse_jobs_flag(args: &[String]) -> usize {
             args.iter().find_map(|a| a.strip_prefix("--jobs=").map(str::to_string))
         });
     match val {
+        // INVARIANT: documented panic — this is the bench/CLI-facing parser
+        // and a bad --jobs value must abort with the message below.
         Some(v) => v.parse().expect("--jobs expects a non-negative integer (0 = auto)"),
         None => 0,
     }
@@ -68,6 +70,8 @@ where
                     break;
                 }
                 let r = f(i, &points[i]);
+                // INVARIANT: a poisoned slot means another worker panicked;
+                // propagating the panic is exactly what we want.
                 *slots_ref[i].lock().expect("result slot poisoned") = Some(r);
             });
         }
@@ -75,6 +79,8 @@ where
     slots
         .into_iter()
         .map(|m| {
+            // INVARIANT: the scope above joined every worker, so each slot
+            // was filled exactly once and no lock is poisoned.
             m.into_inner()
                 .expect("result slot poisoned")
                 .expect("every point produces exactly one result")

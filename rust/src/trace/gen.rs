@@ -209,6 +209,8 @@ pub fn generate(cfg: &TraceGenConfig) -> Trace {
         }
     }
 
+    // INVARIANT: event times are finite sums of finite inter-arrival and
+    // idle samples, so partial_cmp is total.
     events.sort_by(|a, b| a.t.partial_cmp(&b.t).unwrap());
     Trace { name: cfg.name.clone(), n_models: cfg.n_models, events, duration: cfg.duration }
 }

@@ -48,6 +48,8 @@ impl Trace {
                 events.push(e2);
             }
         }
+        // INVARIANT: event times plus bounded jitter stay finite, so
+        // partial_cmp is total.
         events.sort_by(|a, b| a.t.partial_cmp(&b.t).unwrap());
         Trace {
             name: format!("{}-x{:.2}", self.name, factor),
@@ -131,6 +133,8 @@ impl PartialOrd for PendingReplica {
 }
 impl Ord for PendingReplica {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // INVARIANT: replica times are trace times plus bounded jitter —
+        // never NaN — so partial_cmp is total.
         self.t.partial_cmp(&other.t).expect("no NaN event times").then(self.seq.cmp(&other.seq))
     }
 }

@@ -10,6 +10,8 @@
 /// `PRISM_JOBS` env var if set to a positive integer, else the machine's
 /// available parallelism (1 if that cannot be determined).
 pub fn parallelism() -> usize {
+    // lint:allow(D1): PRISM_JOBS only picks worker counts; results are
+    // worker-count-invariant by the sweep determinism contract.
     std::env::var("PRISM_JOBS")
         .ok()
         .and_then(|s| s.parse::<usize>().ok())

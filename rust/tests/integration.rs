@@ -1,6 +1,8 @@
 //! Cross-module integration tests: trace -> simulator -> metrics under every
 //! policy, the paper's qualitative orderings, the real PJRT serving path,
 //! and experiment-driver smoke coverage.
+// Printing is the point of this target (see Cargo.toml lints.clippy).
+#![allow(clippy::print_stdout, clippy::print_stderr)]
 
 use prism::experiments::e2e::assign_ids;
 use prism::model::spec::{table3_catalog, ModelId};

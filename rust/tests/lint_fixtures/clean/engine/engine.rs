@@ -1,0 +1,11 @@
+//! Clean D4 fixture: allocation counts match the allowlist exactly.
+
+pub fn build() -> Vec<u32> {
+    let mut v = Vec::new();
+    v.push(7);
+    v
+}
+
+pub fn label(n: u32) -> String {
+    format!("engine-{n}")
+}

@@ -1,0 +1,6 @@
+//! Clean D1 fixture: the env read is waived with a justification.
+
+pub fn jobs() -> usize {
+    // lint:allow(D1): worker-count knob only; results are count-invariant.
+    std::env::var("JOBS").ok().and_then(|s| s.parse().ok()).unwrap_or(1)
+}

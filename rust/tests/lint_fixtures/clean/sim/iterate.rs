@@ -1,0 +1,14 @@
+//! Clean D2 fixture: lookup-only maps pass; an ordered drain is waived.
+
+use std::collections::HashMap;
+
+pub fn lookup(by_id: &HashMap<u32, u64>, id: u32) -> u64 {
+    by_id.get(&id).copied().unwrap_or(0)
+}
+
+pub fn drain_sorted(by_id: &mut HashMap<u32, u64>) -> Vec<(u32, u64)> {
+    // lint:allow(D2): drained pairs are key-sorted before any use.
+    let mut pairs: Vec<(u32, u64)> = by_id.drain().collect();
+    pairs.sort_unstable();
+    pairs
+}

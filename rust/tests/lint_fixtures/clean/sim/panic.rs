@@ -1,0 +1,16 @@
+//! Clean D3 fixture: every panic site carries a justification, once via a
+//! multi-line blessed comment run and once inside a method chain.
+
+pub fn head(xs: &[u32]) -> u32 {
+    // INVARIANT: callers only pass non-empty slices (checked at intake),
+    // so the first element always exists.
+    *xs.first().unwrap()
+}
+
+pub fn max_digit(s: &str) -> u32 {
+    s.chars()
+        .filter_map(|c| c.to_digit(10))
+        // INVARIANT: the caller guarantees at least one digit.
+        .max()
+        .expect("digit present")
+}

@@ -1,0 +1,5 @@
+//! Clean D5 fixture: a pure scoring policy - no cells, locks, or globals.
+
+pub fn score(load: u64, capacity: u64) -> u64 {
+    capacity.saturating_sub(load)
+}

@@ -1,0 +1,16 @@
+//! D4 fixture: allocation inventory drift against the allowlist.
+
+pub fn build() -> Vec<u32> {
+    let mut v = Vec::new();
+    v.push(1);
+    v
+}
+
+pub fn rebuild() -> Vec<u32> {
+    let w: Vec<u32> = Vec::new();
+    w
+}
+
+pub fn label(n: u32) -> String {
+    format!("engine-{n}")
+}

@@ -1,0 +1,10 @@
+//! D1 fixture: nondeterminism sources in a fingerprinted module.
+
+pub fn now_ms() -> u128 {
+    let t = std::time::SystemTime::now();
+    t.duration_since(std::time::UNIX_EPOCH).map(|d| d.as_millis()).unwrap_or(0)
+}
+
+pub fn jobs() -> usize {
+    std::env::var("JOBS").ok().and_then(|s| s.parse().ok()).unwrap_or(1)
+}

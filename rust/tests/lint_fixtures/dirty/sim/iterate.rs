@@ -1,0 +1,11 @@
+//! D2 fixture: unordered iteration over a hash container.
+
+use std::collections::HashMap;
+
+pub fn total(by_id: &HashMap<u32, u64>) -> u64 {
+    let mut sum = 0;
+    for (_, v) in by_id.iter() {
+        sum += v;
+    }
+    sum
+}

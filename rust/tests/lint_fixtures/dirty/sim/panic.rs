@@ -1,0 +1,9 @@
+//! D3 fixture: panic sites without a nearby justification.
+
+pub fn head(xs: &[u32]) -> u32 {
+    *xs.first().unwrap()
+}
+
+pub fn parse(s: &str) -> u32 {
+    s.parse().expect("numeric")
+}

@@ -1,0 +1,9 @@
+//! D5 fixture: interior mutability and global state in a policy module.
+
+use std::cell::RefCell;
+
+pub struct CachingPolicy {
+    memo: RefCell<Vec<u64>>,
+}
+
+pub static mut LAST_SCORE: u64 = 0;

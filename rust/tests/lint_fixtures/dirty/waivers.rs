@@ -1,0 +1,7 @@
+//! W0/W1 fixture: malformed and unused waivers.
+
+// lint:allow(D7): not a real rule id.
+pub fn a() {}
+
+// lint:allow(D1): nothing nondeterministic within reach.
+pub fn b() {}

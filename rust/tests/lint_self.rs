@@ -1,0 +1,117 @@
+//! Self-enforcement and fixture coverage for `prism lint`.
+//!
+//! `committed_tree_is_lint_clean` is the teeth: plain `cargo test` fails on
+//! any D1-D5/W0/W1 violation in rust/src, with the same diagnostics the
+//! `prism lint` subcommand prints. The fixture tests pin every rule family
+//! both ways against the corpus under rust/tests/lint_fixtures/ (data-only
+//! trees, never compiled as Rust targets).
+
+use std::path::{Path, PathBuf};
+
+use prism::lint::report::render_text;
+use prism::lint::{run, LintConfig, LintReport, Rule};
+
+fn repo_path(rel: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join(rel)
+}
+
+fn lint(rel: &str) -> LintReport {
+    run(&repo_path(rel), &LintConfig::prism()).expect("lint run")
+}
+
+#[test]
+fn committed_tree_is_lint_clean() {
+    let rep = lint("rust/src");
+    assert!(
+        rep.findings.is_empty(),
+        "prism lint found {} violation(s) in rust/src:\n{}",
+        rep.findings.len(),
+        render_text(&rep)
+    );
+    assert!(rep.files_scanned >= 60, "suspiciously few files scanned: {}", rep.files_scanned);
+}
+
+#[test]
+fn dirty_fixtures_fail_exactly_as_pinned() {
+    let rep = lint("rust/tests/lint_fixtures/dirty");
+    let got: Vec<(&str, usize, Rule)> = rep
+        .findings
+        .iter()
+        .map(|f| {
+            let rel = f
+                .path
+                .strip_prefix("rust/tests/lint_fixtures/dirty/")
+                .unwrap_or(f.path.as_str());
+            (rel, f.line, f.rule)
+        })
+        .collect();
+    // Line 0 = file-level (D4 inventory). Order is the report order:
+    // sorted by (path, line, rule).
+    let want: Vec<(&str, usize, Rule)> = vec![
+        ("engine/engine.rs", 0, Rule::D4),
+        ("engine/engine.rs", 0, Rule::D4),
+        ("engine/engine.rs", 0, Rule::D4),
+        ("sim/clock.rs", 4, Rule::D1),
+        ("sim/clock.rs", 9, Rule::D1),
+        ("sim/iterate.rs", 7, Rule::D2),
+        ("sim/panic.rs", 4, Rule::D3),
+        ("sim/panic.rs", 8, Rule::D3),
+        ("sim/policies/cell.rs", 3, Rule::D5),
+        ("sim/policies/cell.rs", 6, Rule::D5),
+        ("sim/policies/cell.rs", 9, Rule::D5),
+        ("waivers.rs", 3, Rule::W0),
+        ("waivers.rs", 6, Rule::W1),
+    ];
+    assert_eq!(got, want, "full report:\n{}", render_text(&rep));
+    // The three D4 findings cover both drift directions.
+    let d4: Vec<&str> = rep
+        .findings
+        .iter()
+        .filter(|f| f.rule == Rule::D4)
+        .map(|f| f.message.as_str())
+        .collect();
+    assert!(d4[0].contains("allocation inventory `Vec::new` = 2, allowlist 1"));
+    assert!(d4[1].contains("stale allowlist: `format!` = 1, allowlist 3"));
+    assert!(d4[2].contains("stale allowlist: `Box::new` absent, allowlist 2"));
+}
+
+#[test]
+fn clean_fixtures_pass() {
+    let rep = lint("rust/tests/lint_fixtures/clean");
+    assert!(
+        rep.findings.is_empty(),
+        "clean fixtures must produce zero findings:\n{}",
+        render_text(&rep)
+    );
+    assert_eq!(rep.files_scanned, 6);
+}
+
+#[test]
+fn finding_paths_are_repo_root_relative() {
+    // Paths are normalized against the enclosing Cargo package root, so the
+    // report is identical no matter where the process was started.
+    let rep = lint("rust/tests/lint_fixtures/dirty");
+    assert!(!rep.findings.is_empty());
+    for f in &rep.findings {
+        assert!(
+            f.path.starts_with("rust/tests/lint_fixtures/dirty/"),
+            "path not repo-root-relative: {}",
+            f.path
+        );
+    }
+}
+
+#[test]
+fn report_is_sorted_and_text_matches_findings() {
+    let rep = lint("rust/tests/lint_fixtures/dirty");
+    let keys: Vec<(&str, usize, Rule)> =
+        rep.findings.iter().map(|f| (f.path.as_str(), f.line, f.rule)).collect();
+    let mut sorted = keys.clone();
+    sorted.sort();
+    assert_eq!(keys, sorted, "findings must be sorted by (path, line, rule)");
+    let text = render_text(&rep);
+    assert_eq!(text.lines().count(), rep.findings.len());
+    for f in &rep.findings {
+        assert!(text.contains(&format!("{}:{} {}:", f.path, f.line, f.rule.as_str())));
+    }
+}
